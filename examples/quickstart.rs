@@ -1,0 +1,56 @@
+//! Quickstart: the minimal Bullet API tour.
+//!
+//! Builds the serving system on the simulated A100, runs the offline
+//! profiling pass, serves a small ShareGPT-like trace, and prints the
+//! headline metrics.
+//!
+//! ```bash
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use bullet::config::ServingConfig;
+use bullet::coordinator::{BuildOptions, BulletServer};
+use bullet::metrics::summarize;
+use bullet::workload::Dataset;
+
+fn main() {
+    // 1. Configure: A100 + Llama-3.1-8B defaults, ShareGPT SLOs.
+    let cfg = ServingConfig::default();
+    println!(
+        "GPU: {} SMs | model: {} ({:.1}B params) | KV capacity: {} tokens",
+        cfg.gpu.num_sms,
+        cfg.model.name,
+        cfg.model.param_count() as f64 / 1e9,
+        cfg.kv_capacity_tokens
+    );
+
+    // 2. Build: constructs the simulated GPU and runs the §3.2.2
+    //    offline profiling pass to fit the performance estimator.
+    let t0 = std::time::Instant::now();
+    let mut server = BulletServer::build(cfg.clone(), BuildOptions::with_coarse_profiling(&cfg));
+    println!(
+        "built in {:.2}s (contention factors: p_c={:.3}, p_b={:.3})",
+        t0.elapsed().as_secs_f64(),
+        server.perf().p_c,
+        server.perf().p_b
+    );
+
+    // 3. Serve: 100 requests at 10 req/s, concurrent prefill/decode with
+    //    dynamic SM partitioning.
+    server.record_timeline(true);
+    let out = server.serve_dataset(&Dataset::sharegpt(), 10.0, 100, 42);
+
+    // 4. Inspect.
+    let s = summarize(&out.records, &server.cfg().slo, Some(out.virtual_duration));
+    println!("\nserved {} requests in {:.1}s (virtual):", s.n_requests, s.duration);
+    println!("  mean TTFT       {:>8.1} ms (P90 {:.1} ms)", s.mean_ttft * 1e3, s.p90_ttft * 1e3);
+    println!("  mean TPOT       {:>8.1} ms (P90 {:.1} ms)", s.mean_tpot * 1e3, s.p90_tpot * 1e3);
+    println!("  throughput      {:>8.1} tok/s", s.throughput_tok_s);
+    println!("  SLO attainment  {:>8.1} %", s.slo_attainment * 100.0);
+    println!("  SM re-configs   {:>8}", out.reconfigs);
+    println!("  decode pauses   {:>8}", out.decode_pauses);
+
+    // 5. The dynamic partition at a glance: mean prefill share over time.
+    let mean_pm = out.timeline.mean_of(|s| s.prefill_sms as f64);
+    println!("  mean prefill SM {:>8.1} / {}", mean_pm, cfg.gpu.num_sms);
+}

@@ -1,0 +1,54 @@
+//! Workload sweep: all systems × all datasets × request rates — the
+//! interactive version of the Fig. 11 bench, sized to finish quickly.
+//!
+//! ```bash
+//! cargo run --release --offline --example workload_sweep [-- --requests 80]
+//! ```
+
+use bullet::baselines::{run_system, System};
+use bullet::config::{ServingConfig, SloSpec};
+use bullet::coordinator::{BuildOptions, BulletServer};
+use bullet::metrics::summarize;
+use bullet::util::cli::Args;
+use bullet::util::tbl::{f, ms, Table};
+use bullet::workload::{generate_n_requests, Dataset};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let n = args.get_usize("requests", 80);
+    let seed = args.get_u64("seed", 42);
+
+    for ds in Dataset::all() {
+        let slo = match ds.name {
+            "azure-code" => SloSpec::azure_code(),
+            "arxiv-summary" => SloSpec::arxiv_summary(),
+            _ => SloSpec::sharegpt(),
+        };
+        let cfg = ServingConfig { slo, ..ServingConfig::default() };
+        let server = BulletServer::build(cfg.clone(), BuildOptions::with_coarse_profiling(&cfg));
+        let rates: &[f64] = match ds.name {
+            "sharegpt" => &[10.0, 20.0],
+            "azure-code" => &[4.0, 8.0],
+            _ => &[1.0, 2.0],
+        };
+        for &rate in rates {
+            let trace = generate_n_requests(&ds, rate, n, seed);
+            let mut t = Table::new(&format!("{} @ {} req/s ({} requests)", ds.name, rate, n))
+                .header(&["system", "TTFT ms", "P90 TTFT", "TPOT ms", "tok/s", "SLO %"]);
+            for sys in System::evaluation_set() {
+                let recs = run_system(sys, &cfg, server.perf(), server.ground_truth(), &trace, seed);
+                let s = summarize(&recs, &cfg.slo, None);
+                t.row(&[
+                    sys.label(),
+                    ms(s.mean_ttft),
+                    ms(s.p90_ttft),
+                    ms(s.mean_tpot),
+                    f(s.throughput_tok_s, 0),
+                    f(s.slo_attainment * 100.0, 1),
+                ]);
+            }
+            t.print();
+            println!();
+        }
+    }
+}

@@ -1,0 +1,152 @@
+"""AOT lowering: JAX model -> HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids so text round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Emits, per shape bucket:
+  artifacts/prefill_{seq}.hlo.txt    (w0..wN, tokens[seq] i32, true_len i32)
+      -> (first_token i32, k_cache [L,kv,seq,hd] f32, v_cache f32)
+  artifacts/decode_{bs}.hlo.txt      (w0..wN, tokens[bs] i32, ctx_lens[bs] i32,
+                                      k_cache [L,bs,kv,ctx,hd] f32, v_cache f32)
+      -> (next_tokens [bs] i32, k_new [L,bs,kv,hd] f32, v_new f32)
+plus artifacts/meta.json (config, weight ABI, bucket lists).
+
+Run via `make artifacts` (no-op when inputs are unchanged).  Python never
+runs on the request path: these files are everything Rust needs.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import ModelConfig, param_order, prefill_fn_flat, decode_fn_flat
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax computation -> XLA HLO text (return_tuple=True ABI)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def weight_specs(cfg: ModelConfig):
+    return [jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in param_order(cfg)]
+
+
+def lower_prefill(cfg: ModelConfig, seq: int) -> str:
+    fn, _ = prefill_fn_flat(cfg)
+    specs = weight_specs(cfg) + [
+        jax.ShapeDtypeStruct((seq,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_decode(cfg: ModelConfig, bs: int) -> str:
+    fn, _ = decode_fn_flat(cfg)
+    cache = jax.ShapeDtypeStruct(
+        (cfg.n_layers, bs, cfg.n_kv_heads, cfg.max_ctx, cfg.head_dim), jnp.float32
+    )
+    specs = weight_specs(cfg) + [
+        jax.ShapeDtypeStruct((bs,), jnp.int32),
+        jax.ShapeDtypeStruct((bs,), jnp.int32),
+        cache,
+        cache,
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def build_meta(cfg: ModelConfig) -> dict:
+    return {
+        "config": {
+            "vocab_size": cfg.vocab_size,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads,
+            "ffn_dim": cfg.ffn_dim,
+            "head_dim": cfg.head_dim,
+            "max_ctx": cfg.max_ctx,
+            "rope_theta": cfg.rope_theta,
+            "norm_eps": cfg.norm_eps,
+        },
+        "weights": [
+            {"name": name, "shape": list(shape)} for name, shape in param_order(cfg)
+        ],
+        "prefill_buckets": list(cfg.prefill_buckets),
+        "decode_buckets": list(cfg.decode_buckets),
+        "prefill_artifacts": {
+            str(s): f"prefill_{s}.hlo.txt" for s in cfg.prefill_buckets
+        },
+        "decode_artifacts": {str(b): f"decode_{b}.hlo.txt" for b in cfg.decode_buckets},
+    }
+
+
+def source_fingerprint() -> str:
+    """Hash of the compile-path sources, for the no-op rebuild check."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=None, help="artifacts directory")
+    ap.add_argument("--force", action="store_true", help="rebuild even if fresh")
+    args = ap.parse_args()
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    out_dir = args.out_dir or os.path.join(here, "..", "..", "artifacts")
+    out_dir = os.path.abspath(out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    fp = source_fingerprint()
+    stamp = os.path.join(out_dir, ".stamp")
+    if not args.force and os.path.exists(stamp):
+        with open(stamp) as f:
+            if f.read().strip() == fp:
+                print(f"artifacts up to date in {out_dir} (fingerprint {fp[:12]})")
+                return
+
+    cfg = ModelConfig()
+    meta = build_meta(cfg)
+
+    for seq in cfg.prefill_buckets:
+        text = lower_prefill(cfg, seq)
+        path = os.path.join(out_dir, meta["prefill_artifacts"][str(seq)])
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for bs in cfg.decode_buckets:
+        text = lower_decode(cfg, bs)
+        path = os.path.join(out_dir, meta["decode_artifacts"][str(bs)])
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    with open(stamp, "w") as f:
+        f.write(fp)
+    print(f"wrote {out_dir}/meta.json; done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""L1 Pallas attention kernels — the compute hot-spot of the served model.
+
+Two kernels, mirroring the paper's two phases:
+
+- :func:`flash_prefill_attention` — FlashAttention-style causal attention
+  for the compute-bound prefill phase.  Tiled with ``BlockSpec`` so each
+  grid step holds one (block_q x head_dim) query tile plus the K/V stripe
+  of its KV head in VMEM, accumulating with online softmax.  The grid is
+  (n_heads, n_q_blocks): the TPU analog of the threadblock decomposition
+  the paper analyses for wave quantization (the L3 simulator applies
+  Eq. 1 to exactly this grid).
+- :func:`decode_attention` — single-token attention over a padded KV
+  cache for the memory-bound decode phase, one grid step per
+  (batch element, KV head), GQA query heads packed per step.
+
+Both run under ``interpret=True``: the CPU PJRT client cannot execute
+Mosaic custom-calls, and interpret mode lowers to plain HLO that the Rust
+runtime loads.  Correctness is pinned to ``ref.py`` by the pytest +
+hypothesis suite.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+# Default tile sizes.  For the tiny served model (head_dim 32, seq <= 192)
+# a (16 x 32)-float32 Q tile plus a (32 x 32) K/V tile is ~6 KiB of VMEM
+# per step — far under the ~16 MiB/core budget; on a real TPU these would
+# be raised to multiples of 128 to fill the MXU (see DESIGN.md
+# §Hardware-Adaptation).
+DEFAULT_BLOCK_Q = 16
+DEFAULT_BLOCK_K = 32
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, seq, scale):
+    """One grid step: queries [block_q, hd] of one head vs all K/V chunks."""
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)  # [block_q, hd]
+    k_all = k_ref[0].astype(jnp.float32)  # [seq, hd] — VMEM-resident stripe
+    v_all = v_ref[0].astype(jnp.float32)
+
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        k_chunk = jax.lax.dynamic_slice_in_dim(k_all, j * block_k, block_k, axis=0)
+        v_chunk = jax.lax.dynamic_slice_in_dim(v_all, j * block_k, block_k, axis=0)
+        s = jnp.dot(q, k_chunk.T) * scale  # [block_q, block_k]
+        k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+        causal = q_pos[:, None] >= k_pos[None, :]
+        s = jnp.where(causal, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+        correction = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * correction + p.sum(axis=-1)
+        acc = acc * correction[:, None] + jnp.dot(p, v_chunk)
+        return m_cur, l_cur, acc
+
+    n_chunks = seq // block_k
+    m0 = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, q.shape[-1]), dtype=jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_chunks, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_prefill_attention(q, k, v, block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K):
+    """Causal GQA attention for the prefill phase.
+
+    q: [n_heads, seq, head_dim]; k, v: [n_kv_heads, seq, head_dim].
+    Returns [n_heads, seq, head_dim].  ``seq`` must be divisible by both
+    block sizes (the AOT buckets guarantee this).
+    """
+    n_heads, seq, head_dim = q.shape
+    n_kv = k.shape[0]
+    assert n_heads % n_kv == 0, "query heads must be a multiple of KV heads"
+    n_rep = n_heads // n_kv
+    block_q = min(block_q, seq)
+    block_k = min(block_k, seq)
+    assert seq % block_q == 0 and seq % block_k == 0
+    scale = 1.0 / (head_dim ** 0.5)
+
+    grid = (n_heads, seq // block_q)
+    kernel = functools.partial(
+        _prefill_kernel, block_q=block_q, block_k=block_k, seq=seq, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, head_dim), lambda h, qi: (h, qi, 0)),
+            pl.BlockSpec((1, seq, head_dim), lambda h, qi: (h // n_rep, 0, 0)),
+            pl.BlockSpec((1, seq, head_dim), lambda h, qi: (h // n_rep, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, head_dim), lambda h, qi: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def _decode_kernel(ctx_ref, q_ref, kc_ref, vc_ref, kn_ref, vn_ref, o_ref, *, max_ctx, scale):
+    """One grid step: all GQA query heads of one (batch, kv_head) pair."""
+    ctx = ctx_ref[0]
+    q = q_ref[0].astype(jnp.float32)  # [n_rep, hd]
+    kc = kc_ref[0, 0].astype(jnp.float32)  # [max_ctx, hd]
+    vc = vc_ref[0, 0].astype(jnp.float32)
+    kn = kn_ref[0, 0].astype(jnp.float32)  # [hd]
+    vn = vn_ref[0, 0].astype(jnp.float32)
+
+    s = jnp.dot(q, kc.T) * scale  # [n_rep, max_ctx]
+    pos = jax.lax.iota(jnp.int32, max_ctx)
+    s = jnp.where((pos < ctx)[None, :], s, NEG_INF)
+    s_self = jnp.sum(q * kn[None, :], axis=-1) * scale  # [n_rep]
+
+    m = jnp.maximum(s.max(axis=-1), s_self)
+    p = jnp.exp(s - m[:, None])
+    p_self = jnp.exp(s_self - m)
+    denom = p.sum(axis=-1) + p_self
+    out = (jnp.dot(p, vc) + p_self[:, None] * vn[None, :]) / denom[:, None]
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, k_new, v_new, ctx_lens):
+    """Single-token GQA decode attention (see ``ref.decode_attention_ref``).
+
+    q:        [batch, n_heads, head_dim]
+    k_cache:  [batch, n_kv_heads, max_ctx, head_dim] (padded; positions >=
+              ctx_lens[b] are ignored)
+    k_new/v_new: [batch, n_kv_heads, head_dim] — current token's K/V, kept
+              separate so the Rust KV manager appends them host-side.
+    ctx_lens: [batch] int32.
+    Returns [batch, n_heads, head_dim].
+    """
+    batch, n_heads, head_dim = q.shape
+    n_kv, max_ctx = k_cache.shape[1], k_cache.shape[2]
+    n_rep = n_heads // n_kv
+    scale = 1.0 / (head_dim ** 0.5)
+
+    grid = (batch, n_kv)
+    kernel = functools.partial(_decode_kernel, max_ctx=max_ctx, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, kh: (b,)),
+            pl.BlockSpec((1, n_rep, head_dim), lambda b, kh: (b, kh, 0)),
+            pl.BlockSpec((1, 1, max_ctx, head_dim), lambda b, kh: (b, kh, 0, 0)),
+            pl.BlockSpec((1, 1, max_ctx, head_dim), lambda b, kh: (b, kh, 0, 0)),
+            pl.BlockSpec((1, 1, head_dim), lambda b, kh: (b, kh, 0)),
+            pl.BlockSpec((1, 1, head_dim), lambda b, kh: (b, kh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n_rep, head_dim), lambda b, kh: (b, kh, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=True,
+    )(ctx_lens, q, k_cache, v_cache, k_new, v_new)

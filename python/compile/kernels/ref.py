@@ -1,0 +1,79 @@
+"""Pure-jnp reference oracles for the Pallas attention kernels.
+
+These are the ground truth the L1 kernels are validated against (pytest +
+hypothesis in ``python/tests/``).  They are deliberately written in the
+most direct way possible — full score matrices, explicit masks — so that a
+mismatch always indicts the kernel, not the oracle.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def repeat_kv(x: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """Expand KV heads to query heads for grouped-query attention.
+
+    x: [n_kv_heads, seq, head_dim] -> [n_kv_heads * n_rep, seq, head_dim]
+    """
+    if n_rep == 1:
+        return x
+    nk, s, d = x.shape
+    return jnp.broadcast_to(x[:, None, :, :], (nk, n_rep, s, d)).reshape(nk * n_rep, s, d)
+
+
+def prefill_attention_ref(q, k, v):
+    """Causal self-attention over a full sequence (one request).
+
+    q: [n_heads, seq, head_dim]; k, v: [n_kv_heads, seq, head_dim].
+    Returns [n_heads, seq, head_dim].
+    """
+    n_heads, seq, head_dim = q.shape
+    n_kv = k.shape[0]
+    k = repeat_kv(k, n_heads // n_kv)
+    v = repeat_kv(v, n_heads // n_kv)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(head_dim, dtype=q.dtype))
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    causal = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+    scores = jnp.where(causal[None, :, :], scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", probs, v)
+
+
+def decode_attention_ref(q, k_cache, v_cache, k_new, v_new, ctx_lens):
+    """Single-token decode attention over a padded KV cache plus the
+    current token's own K/V.
+
+    q:        [batch, n_heads, head_dim]   — current-token queries
+    k_cache:  [batch, n_kv_heads, max_ctx, head_dim] (positions >= ctx_lens
+              are padding and must be masked out)
+    v_cache:  same shape as k_cache
+    k_new:    [batch, n_kv_heads, head_dim] — current token's key
+    v_new:    [batch, n_kv_heads, head_dim]
+    ctx_lens: [batch] int32 — number of valid cache positions per request
+    Returns   [batch, n_heads, head_dim].
+    """
+    b, n_heads, head_dim = q.shape
+    n_kv = k_cache.shape[1]
+    max_ctx = k_cache.shape[2]
+    n_rep = n_heads // n_kv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(head_dim, dtype=q.dtype))
+
+    # [batch, n_heads, max_ctx, head_dim]
+    kc = jnp.repeat(k_cache, n_rep, axis=1)
+    vc = jnp.repeat(v_cache, n_rep, axis=1)
+    kn = jnp.repeat(k_new, n_rep, axis=1)  # [batch, n_heads, head_dim]
+    vn = jnp.repeat(v_new, n_rep, axis=1)
+
+    scores = jnp.einsum("bhd,bhkd->bhk", q, kc) * scale
+    pos = jnp.arange(max_ctx)[None, None, :]
+    valid = pos < ctx_lens[:, None, None]
+    scores = jnp.where(valid, scores, NEG_INF)
+    score_self = jnp.einsum("bhd,bhd->bh", q, kn)[..., None] * scale  # [b,h,1]
+    all_scores = jnp.concatenate([scores, score_self], axis=-1)
+    m = all_scores.max(axis=-1, keepdims=True)
+    p = jnp.exp(all_scores - m)
+    denom = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhk,bhkd->bhd", p[..., :-1], vc) + p[..., -1:] * vn
+    return out / denom

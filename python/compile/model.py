@@ -1,0 +1,237 @@
+"""L2: the served model — a Llama-style transformer in JAX.
+
+Defines the two phase functions the Rust coordinator executes via PJRT:
+
+- :func:`prefill_step` — process one (padded) prompt, return the first
+  generated token plus the post-RoPE KV cache for every layer.
+- :func:`decode_step`  — one iteration for a (padded) decode batch over a
+  padded KV cache, returning the next tokens plus each layer's new K/V
+  vectors (appended host-side by the Rust KV manager).
+
+Architecture: RMSNorm, rotary embeddings, grouped-query attention (via the
+L1 Pallas kernels), SwiGLU MLP, untied LM head — i.e. the Llama-3 block
+structure at toy scale.  Both functions are pure (weights are arguments),
+so AOT lowering fixes only shapes, and Rust owns the weights.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import flash_prefill_attention, decode_attention
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Hyper-parameters of the served model.
+
+    The default is the "tiny" config used by the end-to-end example
+    (~4.4M parameters).  The analytical Llama-3.1-8B descriptor used by the
+    GPU simulator lives on the Rust side (`model::llama`); this config only
+    shapes the real, PJRT-executed model.
+    """
+
+    vocab_size: int = 2048
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    n_kv_heads: int = 4
+    ffn_dim: int = 704
+    max_ctx: int = 192  # decode KV-cache capacity (prefill bucket + output budget)
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    prefill_buckets: tuple = (16, 32, 64, 128)
+    decode_buckets: tuple = (1, 2, 4, 8)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+
+def param_order(cfg: ModelConfig):
+    """The canonical flattened weight list: (name, shape) pairs.
+
+    This exact order is recorded in artifacts/meta.json and is the ABI
+    between aot.py and the Rust weight generator (`runtime::weights`).
+    """
+    d, hd = cfg.d_model, cfg.head_dim
+    out = [("embed", (cfg.vocab_size, d))]
+    for i in range(cfg.n_layers):
+        out += [
+            (f"layer{i}.attn_norm", (d,)),
+            (f"layer{i}.wq", (d, cfg.n_heads * hd)),
+            (f"layer{i}.wk", (d, cfg.kv_dim)),
+            (f"layer{i}.wv", (d, cfg.kv_dim)),
+            (f"layer{i}.wo", (cfg.n_heads * hd, d)),
+            (f"layer{i}.mlp_norm", (d,)),
+            (f"layer{i}.w_gate", (d, cfg.ffn_dim)),
+            (f"layer{i}.w_up", (d, cfg.ffn_dim)),
+            (f"layer{i}.w_down", (cfg.ffn_dim, d)),
+        ]
+    out += [("out_norm", (d,)), ("lm_head", (d, cfg.vocab_size))]
+    return out
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Random-normal weights (test/demo use; Rust generates its own)."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in param_order(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            params[name] = 0.05 * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def params_to_flat(cfg: ModelConfig, params: dict):
+    return [params[name] for name, _ in param_order(cfg)]
+
+
+def flat_to_params(cfg: ModelConfig, flat):
+    return {name: w for (name, _), w in zip(param_order(cfg), flat)}
+
+
+def rms_norm(x, w, eps):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope_freqs(cfg: ModelConfig):
+    hd = cfg.head_dim
+    return cfg.rope_theta ** (-jnp.arange(0, hd // 2, dtype=jnp.float32) / (hd // 2))
+
+
+def apply_rope(x, positions, cfg: ModelConfig):
+    """Rotate-half rotary embedding.
+
+    x: [..., seq, head_dim]; positions: [seq] (broadcast over leading dims).
+    """
+    freqs = rope_freqs(cfg)  # [hd/2]
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [seq, hd/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _qkv(cfg, params, i, x):
+    """Project x [n, d] -> q [heads, n, hd], k/v [kv_heads, n, hd]."""
+    n = x.shape[0]
+    q = (x @ params[f"layer{i}.wq"]).reshape(n, cfg.n_heads, cfg.head_dim)
+    k = (x @ params[f"layer{i}.wk"]).reshape(n, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ params[f"layer{i}.wv"]).reshape(n, cfg.n_kv_heads, cfg.head_dim)
+    return (
+        jnp.transpose(q, (1, 0, 2)),
+        jnp.transpose(k, (1, 0, 2)),
+        jnp.transpose(v, (1, 0, 2)),
+    )
+
+
+def _mlp(cfg, params, i, x):
+    gate = jax.nn.silu(x @ params[f"layer{i}.w_gate"])
+    up = x @ params[f"layer{i}.w_up"]
+    return (gate * up) @ params[f"layer{i}.w_down"]
+
+
+def prefill_step(cfg: ModelConfig, params: dict, tokens, true_len):
+    """Prefill one request.
+
+    tokens:   [seq] int32, padded to the bucket size (pad ids arbitrary —
+              causal masking keeps them from influencing real positions).
+    true_len: scalar int32, number of real tokens.
+    Returns (first_token i32, k_cache [L, n_kv, seq, hd], v_cache same).
+    Cache entries beyond true_len are garbage; the Rust KV manager only
+    copies the first true_len positions into its paged pool.
+    """
+    seq = tokens.shape[0]
+    positions = jnp.arange(seq, dtype=jnp.int32)
+    h = jnp.take(params["embed"], tokens, axis=0)  # [seq, d]
+
+    k_layers, v_layers = [], []
+    for i in range(cfg.n_layers):
+        x = rms_norm(h, params[f"layer{i}.attn_norm"], cfg.norm_eps)
+        q, k, v = _qkv(cfg, params, i, x)
+        q = apply_rope(q, positions, cfg)
+        k = apply_rope(k, positions, cfg)
+        attn = flash_prefill_attention(q, k, v)  # [heads, seq, hd]
+        attn = jnp.transpose(attn, (1, 0, 2)).reshape(seq, -1)
+        h = h + attn @ params[f"layer{i}.wo"]
+        x = rms_norm(h, params[f"layer{i}.mlp_norm"], cfg.norm_eps)
+        h = h + _mlp(cfg, params, i, x)
+        k_layers.append(k)
+        v_layers.append(v)
+
+    h = rms_norm(h, params["out_norm"], cfg.norm_eps)
+    last = jax.lax.dynamic_index_in_dim(h, true_len - 1, axis=0, keepdims=False)
+    logits = last @ params["lm_head"]
+    first_token = jnp.argmax(logits).astype(jnp.int32)
+    return first_token, jnp.stack(k_layers), jnp.stack(v_layers)
+
+
+def decode_step(cfg: ModelConfig, params: dict, tokens, ctx_lens, k_cache, v_cache):
+    """One decode iteration for a padded batch.
+
+    tokens:   [batch] int32 — the most recent token of each request.
+    ctx_lens: [batch] int32 — valid KV positions per request (0 for padding
+              slots; their outputs are discarded by the coordinator).
+    k_cache:  [L, batch, n_kv, max_ctx, hd] padded post-RoPE keys.
+    v_cache:  same shape, values.
+    Returns (next_tokens [batch] i32,
+             k_new [L, batch, n_kv, hd], v_new same) — the current token's
+    K/V per layer, which Rust appends to its paged pool.
+    """
+    batch = tokens.shape[0]
+    h = jnp.take(params["embed"], tokens, axis=0)  # [batch, d]
+
+    k_news, v_news = [], []
+    for i in range(cfg.n_layers):
+        x = rms_norm(h, params[f"layer{i}.attn_norm"], cfg.norm_eps)
+        q, k, v = _qkv(cfg, params, i, x)  # q: [heads, batch, hd]
+        # Each batch element sits at its own position: rope indexed per
+        # element (the "seq" axis of apply_rope is the batch here).
+        q = apply_rope(q, ctx_lens, cfg)
+        k = apply_rope(k, ctx_lens, cfg)
+        q_b = jnp.transpose(q, (1, 0, 2))  # [batch, heads, hd]
+        k_b = jnp.transpose(k, (1, 0, 2))  # [batch, kv, hd]
+        v_b = jnp.transpose(v, (1, 0, 2))
+        attn = decode_attention(q_b, k_cache[i], v_cache[i], k_b, v_b, ctx_lens)
+        h = h + attn.reshape(batch, -1) @ params[f"layer{i}.wo"]
+        x = rms_norm(h, params[f"layer{i}.mlp_norm"], cfg.norm_eps)
+        h = h + _mlp(cfg, params, i, x)
+        k_news.append(k_b)
+        v_news.append(v_b)
+
+    h = rms_norm(h, params["out_norm"], cfg.norm_eps)
+    logits = h @ params["lm_head"]  # [batch, vocab]
+    next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_tokens, jnp.stack(k_news), jnp.stack(v_news)
+
+
+def prefill_fn_flat(cfg: ModelConfig):
+    """Positional-args wrapper for AOT lowering: (w0..wN, tokens, true_len)."""
+    n_w = len(param_order(cfg))
+
+    def fn(*args):
+        params = flat_to_params(cfg, args[:n_w])
+        tokens, true_len = args[n_w], args[n_w + 1]
+        return prefill_step(cfg, params, tokens, true_len)
+
+    return fn, n_w
+
+
+def decode_fn_flat(cfg: ModelConfig):
+    """Positional-args wrapper: (w0..wN, tokens, ctx_lens, k_cache, v_cache)."""
+    n_w = len(param_order(cfg))
+
+    def fn(*args):
+        params = flat_to_params(cfg, args[:n_w])
+        tokens, ctx_lens, k_cache, v_cache = args[n_w : n_w + 4]
+        return decode_step(cfg, params, tokens, ctx_lens, k_cache, v_cache)
+
+    return fn, n_w

@@ -1,0 +1,119 @@
+"""AOT pipeline tests: artifacts are well-formed and the ABI is honest.
+
+These tests lower small bucket shapes in-process (not the full artifact
+set, which `make artifacts` owns) and verify the HLO text has the
+parameter/result signature the Rust runtime (`runtime::pjrt`) relies on.
+"""
+
+import json
+import os
+import re
+
+import jax.numpy as jnp
+import pytest
+
+from compile.aot import build_meta, lower_decode, lower_prefill, source_fingerprint
+from compile.model import ModelConfig, param_order
+
+SMALL = ModelConfig(
+    vocab_size=64,
+    d_model=16,
+    n_layers=1,
+    n_heads=2,
+    n_kv_heads=1,
+    ffn_dim=24,
+    max_ctx=32,
+    prefill_buckets=(16,),
+    decode_buckets=(1, 2),
+)
+
+
+@pytest.fixture(scope="module")
+def prefill_hlo():
+    return lower_prefill(SMALL, 16)
+
+
+@pytest.fixture(scope="module")
+def decode_hlo():
+    return lower_decode(SMALL, 2)
+
+
+def test_prefill_hlo_is_text_module(prefill_hlo):
+    assert prefill_hlo.startswith("HloModule")
+    assert "ENTRY" in prefill_hlo
+
+
+def test_prefill_param_count(prefill_hlo):
+    """weights + tokens + true_len parameters must all appear."""
+    n_expected = len(param_order(SMALL)) + 2
+    params = set(re.findall(r"parameter\((\d+)\)", prefill_hlo))
+    assert len(params) == n_expected
+
+
+def test_prefill_result_is_tuple_of_three(prefill_hlo):
+    # return_tuple=True: result shape is (s32[], f32[...], f32[...]),
+    # recorded in the entry_computation_layout header.
+    m = re.search(r"->\((.*?)\)\}", prefill_hlo.splitlines()[0])
+    assert m, "entry signature not found"
+    result = m.group(1)
+    assert result.startswith("s32[]") and result.count("f32[") == 2
+
+
+def test_decode_param_count(decode_hlo):
+    n_expected = len(param_order(SMALL)) + 4
+    params = set(re.findall(r"parameter\((\d+)\)", decode_hlo))
+    assert len(params) == n_expected
+
+
+def test_decode_cache_shape_in_signature(decode_hlo):
+    # k_cache shape [L=1, bs=2, kv=1, ctx=32, hd=8]
+    assert "f32[1,2,1,32,8]" in decode_hlo
+
+
+def test_meta_weights_match_param_order():
+    meta = build_meta(SMALL)
+    assert [w["name"] for w in meta["weights"]] == [n for n, _ in param_order(SMALL)]
+    assert [tuple(w["shape"]) for w in meta["weights"]] == [
+        s for _, s in param_order(SMALL)
+    ]
+
+
+def test_meta_json_serializable():
+    meta = build_meta(SMALL)
+    text = json.dumps(meta)
+    assert json.loads(text) == meta
+
+
+def test_meta_config_fields():
+    meta = build_meta(SMALL)
+    cfg = meta["config"]
+    for key in (
+        "vocab_size", "d_model", "n_layers", "n_heads", "n_kv_heads",
+        "ffn_dim", "head_dim", "max_ctx", "rope_theta", "norm_eps",
+    ):
+        assert key in cfg
+    assert cfg["head_dim"] == SMALL.head_dim
+
+
+def test_fingerprint_stable():
+    assert source_fingerprint() == source_fingerprint()
+    assert len(source_fingerprint()) == 64
+
+
+def test_repo_artifacts_exist_if_built():
+    """If `make artifacts` has run, the artifact set must be complete."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    art = os.path.abspath(os.path.join(here, "..", "..", "artifacts"))
+    meta_path = os.path.join(art, "meta.json")
+    if not os.path.exists(meta_path):
+        pytest.skip("artifacts not built")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    for rel in list(meta["prefill_artifacts"].values()) + list(
+        meta["decode_artifacts"].values()
+    ):
+        path = os.path.join(art, rel)
+        assert os.path.exists(path), f"missing artifact {rel}"
+        with open(path) as fh:
+            head = fh.read(64)
+        assert head.startswith("HloModule")

@@ -1,0 +1,217 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Fixed cases pin exact behaviours (masking, GQA, numerical stability);
+hypothesis sweeps shapes and distributions.  This is the core correctness
+signal for the compile path — if these pass, the HLO the Rust runtime
+executes contains a correct attention.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import flash_prefill_attention, decode_attention
+from compile.kernels.ref import prefill_attention_ref, decode_attention_ref, repeat_kv
+
+RTOL, ATOL = 1e-4, 1e-5
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------- prefill
+
+
+class TestPrefillFixed:
+    def test_matches_ref_basic(self):
+        rng = np.random.default_rng(1)
+        q, k, v = rand(rng, 8, 64, 32), rand(rng, 4, 64, 32), rand(rng, 4, 64, 32)
+        np.testing.assert_allclose(
+            flash_prefill_attention(q, k, v), prefill_attention_ref(q, k, v),
+            rtol=RTOL, atol=ATOL,
+        )
+
+    def test_mha_no_gqa(self):
+        rng = np.random.default_rng(2)
+        q, k, v = rand(rng, 4, 32, 16), rand(rng, 4, 32, 16), rand(rng, 4, 32, 16)
+        np.testing.assert_allclose(
+            flash_prefill_attention(q, k, v), prefill_attention_ref(q, k, v),
+            rtol=RTOL, atol=ATOL,
+        )
+
+    def test_seq_equals_block(self):
+        rng = np.random.default_rng(3)
+        q, k, v = rand(rng, 2, 16, 8), rand(rng, 2, 16, 8), rand(rng, 2, 16, 8)
+        np.testing.assert_allclose(
+            flash_prefill_attention(q, k, v), prefill_attention_ref(q, k, v),
+            rtol=RTOL, atol=ATOL,
+        )
+
+    def test_first_position_attends_only_self(self):
+        """Causality: output at position 0 must equal v normalized by itself."""
+        rng = np.random.default_rng(4)
+        q, k, v = rand(rng, 2, 32, 8), rand(rng, 2, 32, 8), rand(rng, 2, 32, 8)
+        out = flash_prefill_attention(q, k, v)
+        # softmax over a single (self) score is 1 -> output == v[0]
+        np.testing.assert_allclose(out[:, 0, :], v[:, 0, :], rtol=RTOL, atol=ATOL)
+
+    def test_causality_future_perturbation_invisible(self):
+        """Changing K/V at position p must not change outputs before p."""
+        rng = np.random.default_rng(5)
+        q, k, v = rand(rng, 2, 64, 8), rand(rng, 2, 64, 8), rand(rng, 2, 64, 8)
+        base = flash_prefill_attention(q, k, v)
+        k2 = k.at[:, 48:, :].set(99.0)
+        v2 = v.at[:, 48:, :].set(-99.0)
+        pert = flash_prefill_attention(q, k2, v2)
+        np.testing.assert_allclose(base[:, :48, :], pert[:, :48, :], rtol=RTOL, atol=ATOL)
+
+    def test_large_magnitude_stability(self):
+        rng = np.random.default_rng(6)
+        q = 30.0 * rand(rng, 2, 32, 8)
+        k = 30.0 * rand(rng, 2, 32, 8)
+        v = rand(rng, 2, 32, 8)
+        out = flash_prefill_attention(q, k, v)
+        assert bool(jnp.isfinite(out).all())
+        np.testing.assert_allclose(out, prefill_attention_ref(q, k, v), rtol=1e-3, atol=1e-4)
+
+    def test_block_size_invariance(self):
+        rng = np.random.default_rng(7)
+        q, k, v = rand(rng, 4, 64, 16), rand(rng, 2, 64, 16), rand(rng, 2, 64, 16)
+        a = flash_prefill_attention(q, k, v, block_q=16, block_k=32)
+        b = flash_prefill_attention(q, k, v, block_q=32, block_k=16)
+        c = flash_prefill_attention(q, k, v, block_q=64, block_k=64)
+        np.testing.assert_allclose(a, b, rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(a, c, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seq_pow=st.integers(4, 7),
+    heads=st.sampled_from([2, 4, 8]),
+    rep=st.sampled_from([1, 2, 4]),
+    hd=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([0.1, 1.0, 5.0]),
+)
+def test_prefill_hypothesis(seq_pow, heads, rep, hd, seed, scale):
+    seq = 2 ** seq_pow
+    n_kv = max(1, heads // rep)
+    rng = np.random.default_rng(seed)
+    q = scale * rand(rng, n_kv * rep, seq, hd)
+    k = scale * rand(rng, n_kv, seq, hd)
+    v = rand(rng, n_kv, seq, hd)
+    np.testing.assert_allclose(
+        flash_prefill_attention(q, k, v), prefill_attention_ref(q, k, v),
+        rtol=5e-4, atol=5e-5,
+    )
+
+
+# ----------------------------------------------------------------- decode
+
+
+class TestDecodeFixed:
+    def test_matches_ref_basic(self):
+        rng = np.random.default_rng(11)
+        b, H, KV, D, CTX = 4, 8, 4, 32, 48
+        args = (
+            rand(rng, b, H, D),
+            rand(rng, b, KV, CTX, D),
+            rand(rng, b, KV, CTX, D),
+            rand(rng, b, KV, D),
+            rand(rng, b, KV, D),
+            jnp.asarray([5, 48, 0, 17], jnp.int32),
+        )
+        np.testing.assert_allclose(
+            decode_attention(*args), decode_attention_ref(*args), rtol=RTOL, atol=ATOL
+        )
+
+    def test_zero_context_attends_only_self(self):
+        """ctx_len == 0: output must be exactly v_new (softmax over self)."""
+        rng = np.random.default_rng(12)
+        b, H, KV, D, CTX = 2, 4, 2, 16, 32
+        q = rand(rng, b, H, D)
+        kc, vc = rand(rng, b, KV, CTX, D), rand(rng, b, KV, CTX, D)
+        kn, vn = rand(rng, b, KV, D), rand(rng, b, KV, D)
+        cl = jnp.zeros((b,), jnp.int32)
+        out = decode_attention(q, kc, vc, kn, vn, cl)
+        expect = jnp.repeat(vn, H // KV, axis=1)
+        np.testing.assert_allclose(out, expect, rtol=RTOL, atol=ATOL)
+
+    def test_padding_garbage_is_masked(self):
+        """Values beyond ctx_len must not affect the output at all."""
+        rng = np.random.default_rng(13)
+        b, H, KV, D, CTX = 2, 4, 4, 8, 64
+        q = rand(rng, b, H, D)
+        kc, vc = rand(rng, b, KV, CTX, D), rand(rng, b, KV, CTX, D)
+        kn, vn = rand(rng, b, KV, D), rand(rng, b, KV, D)
+        cl = jnp.asarray([10, 30], jnp.int32)
+        base = decode_attention(q, kc, vc, kn, vn, cl)
+        kc2 = kc.at[0, :, 10:, :].set(1e4).at[1, :, 30:, :].set(-1e4)
+        vc2 = vc.at[0, :, 10:, :].set(-1e4).at[1, :, 30:, :].set(1e4)
+        pert = decode_attention(q, kc2, vc2, kn, vn, cl)
+        np.testing.assert_allclose(base, pert, rtol=RTOL, atol=ATOL)
+
+    def test_batch_one(self):
+        rng = np.random.default_rng(14)
+        args = (
+            rand(rng, 1, 8, 32),
+            rand(rng, 1, 4, 192, 32),
+            rand(rng, 1, 4, 192, 32),
+            rand(rng, 1, 4, 32),
+            rand(rng, 1, 4, 32),
+            jnp.asarray([100], jnp.int32),
+        )
+        np.testing.assert_allclose(
+            decode_attention(*args), decode_attention_ref(*args), rtol=RTOL, atol=ATOL
+        )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    rep=st.sampled_from([1, 2, 4]),
+    n_kv=st.sampled_from([1, 2, 4]),
+    hd=st.sampled_from([8, 16, 32]),
+    ctx_cap=st.sampled_from([16, 48, 192]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_hypothesis(b, rep, n_kv, hd, ctx_cap, seed):
+    rng = np.random.default_rng(seed)
+    H = n_kv * rep
+    q = rand(rng, b, H, hd)
+    kc, vc = rand(rng, b, n_kv, ctx_cap, hd), rand(rng, b, n_kv, ctx_cap, hd)
+    kn, vn = rand(rng, b, n_kv, hd), rand(rng, b, n_kv, hd)
+    cl = jnp.asarray(rng.integers(0, ctx_cap + 1, size=b), jnp.int32)
+    np.testing.assert_allclose(
+        decode_attention(q, kc, vc, kn, vn, cl),
+        decode_attention_ref(q, kc, vc, kn, vn, cl),
+        rtol=5e-4, atol=5e-5,
+    )
+
+
+# ------------------------------------------------------------------ misc
+
+
+def test_repeat_kv_identity():
+    rng = np.random.default_rng(20)
+    x = rand(rng, 4, 8, 16)
+    assert repeat_kv(x, 1) is x
+
+
+def test_repeat_kv_layout():
+    """Head h of the expanded tensor must be kv head h // n_rep."""
+    rng = np.random.default_rng(21)
+    x = rand(rng, 2, 4, 8)
+    y = repeat_kv(x, 3)
+    assert y.shape == (6, 4, 8)
+    for h in range(6):
+        np.testing.assert_array_equal(y[h], x[h // 3])
+
+
+def test_prefill_rejects_bad_gqa():
+    rng = np.random.default_rng(22)
+    q, k, v = rand(rng, 6, 16, 8), rand(rng, 4, 16, 8), rand(rng, 4, 16, 8)
+    with pytest.raises(AssertionError):
+        flash_prefill_attention(q, k, v)

@@ -1,0 +1,75 @@
+//! Fig. 12: system state over time on Azure-Code @ 5 req/s — dynamic
+//! prefill-SM allocation tracking load (top), concurrent tokens/batch
+//! (middle), waiting queue (bottom) — plus the SGLang-2048 comparison.
+//!
+//! Paper anchors: on bursts Bullet sets prefill SMs to (near-)full GPU
+//! and may delay decodes, then returns to a balance point; SGLang-2048
+//! suffers 4.17× longer queuing; Bullet cuts TTFT 9.15× and TPOT 1.33×.
+
+use bullet::baselines::{run_system, System};
+use bullet::config::{ServingConfig, SloSpec};
+use bullet::coordinator::{BuildOptions, BulletServer};
+use bullet::metrics::summarize;
+use bullet::util::tbl::bar;
+use bullet::workload::{generate_bursty_trace, Dataset};
+
+fn main() {
+    let cfg = ServingConfig {
+        slo: SloSpec::azure_code(),
+        ..ServingConfig::default()
+    };
+    let mut server = BulletServer::build(cfg.clone(), BuildOptions::with_coarse_profiling(&cfg));
+    server.record_timeline(true);
+
+    // Azure-Code at 5 req/s with a brief heavier window — the paper's
+    // trace is plain Poisson at 5 req/s whose natural clustering makes
+    // the "request rate bursts"; we add a short 8 req/s window so the
+    // burst lands deterministically in the plotted span.
+    let trace = generate_bursty_trace(&Dataset::azure_code(), 5.0, 8.0, 40.0, 15.0, 6.0, 11);
+    println!(
+        "Fig. 12 — Azure-Code @ 5 req/s (8 req/s window at t=15..21s, {} requests)\n",
+        trace.len()
+    );
+    let out = server.serve(&trace);
+
+    println!("t(s)   prefill-SM allocation     tokens  batch  waiting");
+    for s in out.timeline.resample(1.0) {
+        println!(
+            "{:5.1}  [{}] {:>3}   {:>6}  {:>5}  {:>3} {}",
+            s.t,
+            bar(s.prefill_sms as f64 / cfg.gpu.num_sms as f64, 20),
+            s.prefill_sms,
+            s.prefill_tokens,
+            s.decode_batch,
+            s.waiting,
+            if s.waiting > 5 { "<- burst" } else { "" },
+        );
+    }
+
+    let bullet = summarize(&out.records, &cfg.slo, None);
+    let sg = summarize(
+        &run_system(System::Sglang2048, &cfg, server.perf(), server.ground_truth(), &trace, 11),
+        &cfg.slo,
+        None,
+    );
+    println!(
+        "\n                 Bullet     SGLang-2048   ratio (paper)\n\
+         mean TTFT (ms)  {:>8.0}  {:>10.0}   {:>5.2}x (9.15x)\n\
+         mean TPOT (ms)  {:>8.1}  {:>10.1}   {:>5.2}x (1.33x)\n\
+         queueing (ms)   {:>8.0}  {:>10.0}   {:>5.2}x (4.17x)",
+        bullet.mean_ttft * 1e3,
+        sg.mean_ttft * 1e3,
+        sg.mean_ttft / bullet.mean_ttft,
+        bullet.mean_tpot * 1e3,
+        sg.mean_tpot * 1e3,
+        sg.mean_tpot / bullet.mean_tpot,
+        bullet.mean_queueing * 1e3,
+        sg.mean_queueing * 1e3,
+        sg.mean_queueing / bullet.mean_queueing.max(1e-6),
+    );
+    println!(
+        "\nShape check: prefill-SM allocation spikes to (near) full GPU during the burst and\n\
+         relaxes to a balance point afterwards; the waiting queue never builds up the way the\n\
+         budget-limited chunked system's does."
+    );
+}

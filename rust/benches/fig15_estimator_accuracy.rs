@@ -1,0 +1,143 @@
+//! Fig. 15: performance-estimator accuracy — SLO-compliance
+//! classification accuracy (left panel) and predicted-vs-actual duration
+//! error (right panel).
+//!
+//! Paper anchors: ~88% compliance-classification accuracy; ~19.1% mean
+//! relative duration error — "the absolute error is inconsequential for
+//! scheduling; only violation detection matters".
+//!
+//! Methodology note (DESIGN.md §6): the estimator and the simulated
+//! hardware are deliberately different models — the estimator only knows
+//! the Eq. 2 form and what the §3.2.2 profiling grid showed it; the
+//! ground truth has hidden nonlinear scaling curves, graded bandwidth
+//! interference and per-launch noise.
+
+use bullet::config::{GpuSpec, ModelSpec, ServingConfig, SloSpec};
+use bullet::gpu::roofline::GroundTruth;
+use bullet::gpu::simulator::Simulator;
+use bullet::gpu::stream::SmMask;
+use bullet::model::phases::{decode_all_layers, prefill_layer_kernels, PhaseShape};
+use bullet::perf::{profile, ProfileSpec};
+use bullet::util::rng::Rng;
+use bullet::util::stats;
+use bullet::util::tbl::{f, Table};
+
+fn main() {
+    let cfg = ServingConfig::default();
+    let model = ModelSpec::llama31_8b();
+    let gt = GroundTruth::new(GpuSpec::a100()); // WITH noise — real conditions
+    eprintln!("profiling (paper grid)...");
+    let pm = profile(&GroundTruth::noiseless(GpuSpec::a100()), &model, &ProfileSpec::paper(&cfg.gpu));
+
+    let mut rng = Rng::new(15);
+    let mut rel_err_prefill = Vec::new();
+    let mut rel_err_decode = Vec::new();
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    // Boundary cases — actual within 2x of the budget — are the ones the
+    // scheduler actually sweats over; far-from-budget cases are trivially
+    // classified by any model.
+    let mut agree_boundary = 0usize;
+    let mut total_boundary = 0usize;
+    let slo = SloSpec::azure_code();
+
+    // Probes replicate SERVING conditions: prefill and decode co-located
+    // on complementary masks (the state the scheduler actually predicts
+    // under).  The estimator models contention with the two fitted
+    // constants p_c/p_b; the ground truth's contention depends on the
+    // actual kernel mix + noise — that gap is the paper's ~19% MRE.
+    for _ in 0..300 {
+        let sl = rng.range_u64(200, 16000) as usize;
+        let bs = rng.range_u64(1, 200) as usize;
+        let cl = rng.range_u64(100, 8000) as usize;
+        let pmx = (24 + 2 * rng.below(37) as usize).min(96);
+        let dm = 108 - pmx;
+
+        let mut sim = Simulator::new(gt.clone(), rng.next_u64());
+        let ps = sim.create_stream(SmMask::first(pmx), "p");
+        let ds = sim.create_stream(SmMask::last(dm, 108), "d");
+        // one full prefill pass co-running with repeated decode steps
+        for _ in 0..model.n_layers {
+            sim.submit_all(ps, prefill_layer_kernels(&model, PhaseShape { tokens: sl, context: 0 }));
+        }
+        let decode_kernels = decode_all_layers(&model, PhaseShape { tokens: bs, context: cl });
+        let n_dec = 4usize;
+        for _ in 0..n_dec {
+            sim.submit_all(ds, decode_kernels.clone());
+        }
+        sim.run_until_stream_idle(ps);
+        let actual_prefill = sim.now();
+        sim.run_until_idle();
+        // average decode-iteration time from completions on the decode stream
+        let comps = sim.take_completions();
+        let dec_end = comps
+            .iter()
+            .filter(|c| c.stream == ds)
+            .map(|c| c.end)
+            .fold(0.0f64, f64::max);
+        let actual_decode_iter = dec_end / n_dec as f64;
+
+        let predicted_prefill =
+            pm.predict_prefill_layer(sl, 0, pmx, true) * model.n_layers as f64;
+        let predicted_decode = pm.predict_decode_step(bs, cl, dm, true);
+
+        rel_err_prefill.push(((predicted_prefill - actual_prefill) / actual_prefill).abs());
+        rel_err_decode.push(((predicted_decode - actual_decode_iter) / actual_decode_iter).abs());
+
+        for (pred, act, budget) in [
+            (predicted_prefill, actual_prefill, slo.ttft_budget(sl)),
+            (predicted_decode, actual_decode_iter, slo.tpot_budget()),
+        ] {
+            let ok = (pred <= budget) == (act <= budget);
+            agree += ok as usize;
+            total += 1;
+            if act > budget * 0.5 && act < budget * 2.0 {
+                agree_boundary += ok as usize;
+                total_boundary += 1;
+            }
+        }
+    }
+
+    let all_err: Vec<f64> = rel_err_prefill
+        .iter()
+        .chain(&rel_err_decode)
+        .copied()
+        .collect();
+    let mut t = Table::new("Fig. 15 — estimator accuracy (ours vs paper)")
+        .header(&["metric", "ours", "paper"]);
+    t.row(&[
+        "SLO classification accuracy %".to_string(),
+        f(100.0 * agree as f64 / total as f64, 1),
+        "88".to_string(),
+    ]);
+    t.row(&[
+        "  near-boundary accuracy %".to_string(),
+        f(100.0 * agree_boundary as f64 / total_boundary.max(1) as f64, 1),
+        "-".to_string(),
+    ]);
+    t.row(&[
+        "mean relative duration error %".to_string(),
+        f(100.0 * stats::mean(&all_err), 1),
+        "19.1".to_string(),
+    ]);
+    t.row(&[
+        "  prefill-only MRE %".to_string(),
+        f(100.0 * stats::mean(&rel_err_prefill), 1),
+        "-".to_string(),
+    ]);
+    t.row(&[
+        "  decode-only MRE %".to_string(),
+        f(100.0 * stats::mean(&rel_err_decode), 1),
+        "-".to_string(),
+    ]);
+    t.row(&[
+        "P90 relative error %".to_string(),
+        f(100.0 * stats::percentile(&all_err, 90.0), 1),
+        "-".to_string(),
+    ]);
+    t.print();
+    println!(
+        "\nShape check: classification accuracy near the paper's ~88% while the duration error\n\
+         stays in the tens of percent — sufficient for violation detection, as claimed."
+    );
+}

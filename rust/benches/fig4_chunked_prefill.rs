@@ -1,0 +1,78 @@
+//! Fig. 4: per-chunk GPU utilization and latency for a 16k-token prefill
+//! under chunk sizes 1k and 2k (no hybrid batching).
+//!
+//! Paper anchors @ cs=1k: utilization decays ~71% → ~61% across chunks;
+//! the final chunk takes ~1.9× the first; total prefill 1.13× unchunked.
+//! @ cs=2k: util drop shrinks (−18% → −7%) but per-chunk latency is
+//! ~1.86× the 1k chunks.
+
+use bullet::config::{GpuSpec, ModelSpec};
+use bullet::gpu::roofline::GroundTruth;
+use bullet::gpu::simulator::Simulator;
+use bullet::gpu::stream::SmMask;
+use bullet::model::phases::{prefill_all_layers, PhaseShape};
+use bullet::util::tbl::{f, Table};
+
+const TOTAL_TOKENS: usize = 16384;
+
+fn run_chunked(gt: &GroundTruth, model: &ModelSpec, cs: usize) -> Vec<(f64, f64)> {
+    // returns per-chunk (latency, compute utilization)
+    let mut out = Vec::new();
+    let mut ctx = 0usize;
+    while ctx < TOTAL_TOKENS {
+        let chunk = cs.min(TOTAL_TOKENS - ctx);
+        let mut sim = Simulator::new(gt.clone(), 1);
+        let st = sim.create_stream(SmMask::first(gt.gpu.num_sms), "prefill");
+        sim.submit_all(st, prefill_all_layers(model, PhaseShape { tokens: chunk, context: ctx }));
+        sim.run_until_idle();
+        let u = sim.total_util();
+        out.push((sim.now(), u.compute_util(&gt.gpu)));
+        ctx += chunk;
+    }
+    out
+}
+
+fn main() {
+    let model = ModelSpec::llama31_8b();
+    let gt = GroundTruth::noiseless(GpuSpec::a100());
+
+    // unchunked reference
+    let unchunked = run_chunked(&gt, &model, TOTAL_TOKENS);
+    let t_unchunked = unchunked[0].0;
+
+    for &cs in &[1024usize, 2048] {
+        let chunks = run_chunked(&gt, &model, cs);
+        let mut t = Table::new(&format!("Fig. 4 — 16k-token prefill, chunk size {cs}"))
+            .header(&["chunk#", "latency ms", "compute util %"]);
+        for (i, (lat, cu)) in chunks.iter().enumerate() {
+            if i < 4 || i + 2 > chunks.len() || i % 4 == 3 {
+                t.row(&[
+                    (i + 1).to_string(),
+                    f(lat * 1e3, 1),
+                    f(cu * 100.0, 1),
+                ]);
+            }
+        }
+        t.print();
+        let total: f64 = chunks.iter().map(|c| c.0).sum();
+        let first = chunks[0].0;
+        let last = chunks.last().unwrap().0;
+        let u_first = chunks[0].1 * 100.0;
+        let u_last = chunks.last().unwrap().1 * 100.0;
+        println!(
+            "summary cs={cs}: util {:.1}% -> {:.1}% | last/first chunk latency {:.2}x | \
+             total {:.2}s = {:.2}x unchunked ({:.2}s)\n",
+            u_first,
+            u_last,
+            last / first,
+            total,
+            total / t_unchunked,
+            t_unchunked
+        );
+    }
+    println!(
+        "Shape check (paper): utilization decays across chunks from KV reloads; the final 1k\n\
+         chunk runs ~1.9x the first; chunked total exceeds unchunked (1.13x at cs=1k); doubling\n\
+         the chunk halves the relative util drop but ~doubles per-chunk latency (TPOT cost)."
+    );
+}

@@ -1,0 +1,45 @@
+//! Fig. 7: kernel speedup on m SMs normalized to the full GPU, against
+//! the linear-scaling reference — compute-bound prefill kernels scale
+//! SUB-linearly, memory-bound decode kernels SUPER-linearly.
+
+use bullet::config::{GpuSpec, ModelSpec};
+use bullet::gpu::roofline::GroundTruth;
+use bullet::model::phases::{decode_layer_kernels, prefill_layer_kernels, PhaseShape};
+use bullet::util::tbl::{f, Table};
+
+fn main() {
+    let model = ModelSpec::llama31_8b();
+    let gpu = GpuSpec::a100();
+    let gt = GroundTruth::noiseless(gpu.clone());
+
+    let prefill = prefill_layer_kernels(&model, PhaseShape { tokens: 4096, context: 0 });
+    let gemm = prefill[3].clone(); // MLP GEMM — compute bound
+    let attn_p = prefill[1].clone(); // prefill attention
+    let decode = decode_layer_kernels(&model, PhaseShape { tokens: 64, context: 2048 });
+    let dec_attn = decode[1].clone(); // decode attention — memory bound
+    let dec_gemm = decode[3].clone(); // weight-streaming GEMM
+
+    let mut t = Table::new(
+        "Fig. 7 — speedup at m SMs normalized to 108 SMs (linear reference = m/108)",
+    )
+    .header(&["SMs", "linear", "MLP GEMM", "PrefillAttn", "DecodeAttn", "DecodeGEMM"]);
+
+    for m in (6..=108).step_by(6) {
+        let rel = |k: &bullet::gpu::KernelDesc| gt.solo_time(k, 108) / gt.solo_time(k, m);
+        t.row(&[
+            m.to_string(),
+            f(m as f64 / 108.0, 3),
+            f(rel(&gemm), 3),
+            f(rel(&attn_p), 3),
+            f(rel(&dec_attn), 3),
+            f(rel(&dec_gemm), 3),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nShape check (paper): compute-intensive prefill columns sit BELOW the linear column\n\
+         (susceptible to SM restriction); memory-bound decode columns sit ABOVE it (super-linear\n\
+         — a small partition still draws most of the HBM bandwidth). This asymmetry is exactly\n\
+         why giving decode few SMs and prefill many maximizes aggregate utilization."
+    );
+}

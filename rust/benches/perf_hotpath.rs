@@ -1,0 +1,101 @@
+//! §Perf hot-path benchmarks (not a paper figure): the three L3 paths
+//! that bound serving overhead and simulation turnaround —
+//!   1. scheduler decision latency (paper budget: predict 10.2 µs +
+//!      re-config 4.1 µs per cycle),
+//!   2. simulator event throughput,
+//!   3. end-to-end simulated serving wall time (Fig. 11-sized run).
+//! EXPERIMENTS.md §Perf records before/after for each optimization.
+
+use bullet::config::{GpuSpec, ModelSpec, ServingConfig};
+use bullet::coordinator::{BuildOptions, BulletServer};
+use bullet::gpu::roofline::GroundTruth;
+use bullet::gpu::simulator::Simulator;
+use bullet::gpu::stream::SmMask;
+use bullet::gpu::{KernelDesc, OpClass};
+use bullet::perf::PerfModel;
+use bullet::resource::Partition;
+use bullet::sched::{DecodeReqState, PrefillBatch, PrefillReq, SloScheduler, SystemState};
+use bullet::testing::bench::{bench, black_box};
+use bullet::workload::{generate_n_requests, Dataset};
+use std::time::Instant;
+
+fn loaded_state() -> SystemState {
+    let decode: Vec<DecodeReqState> = (0..128)
+        .map(|i| DecodeReqState {
+            id: i,
+            input_len: 1024,
+            ctx_len: 1024 + (i as usize * 13) % 4096,
+            tokens_out: 10 + (i as usize % 50),
+            output_len: 200,
+            decode_elapsed: 0.5,
+        })
+        .collect();
+    let waiting: Vec<PrefillReq> = (0..16)
+        .map(|i| PrefillReq {
+            id: 500 + i,
+            arrival: i as f64 * 0.01,
+            input_len: 512 + (i as usize * 731) % 8192,
+            output_len: 128,
+        })
+        .collect();
+    SystemState {
+        now: 5.0,
+        prefill: Some(PrefillBatch {
+            reqs: vec![PrefillReq { id: 1, arrival: 4.0, input_len: 6000, output_len: 100 }],
+            n_tokens: 6000,
+            layers_done: 10,
+            started_at: 4.5,
+        }),
+        decode,
+        waiting,
+        partition: Partition::split(&GpuSpec::a100(), 72),
+        total_layers: 32,
+    }
+}
+
+fn main() {
+    // 1. scheduler decision latency under a heavy state
+    let cfg = ServingConfig::default();
+    let perf = PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b());
+    let sched = SloScheduler::new(cfg.clone(), perf);
+    let st = loaded_state();
+    let r = bench("scheduler decision (128-req decode, 16 waiting)", 200, || {
+        let mut s = st.clone();
+        black_box(sched.schedule(&mut s));
+    });
+    println!("{}", r.report());
+
+    // 2. simulator event throughput
+    let gt = GroundTruth::new(GpuSpec::a100());
+    let t0 = Instant::now();
+    let mut events = 0usize;
+    let mut sim = Simulator::new(gt.clone(), 1);
+    let a = sim.create_stream(SmMask::first(72), "a");
+    let b = sim.create_stream(SmMask::last(36, 108), "b");
+    for _ in 0..20_000 {
+        sim.submit(a, KernelDesc::new(OpClass::GemmMlp, 1e11, 1e8, 512));
+        sim.submit(b, KernelDesc::new(OpClass::AttnDecode, 1e9, 5e8, 64));
+    }
+    while sim.step() {
+        events += 1;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "simulator: {events} kernel completions in {:.2}s = {:.0} events/s",
+        dt,
+        events as f64 / dt
+    );
+
+    // 3. end-to-end simulated serving (Fig. 11-sized single cell)
+    let server = BulletServer::build(cfg.clone(), BuildOptions::default());
+    let trace = generate_n_requests(&Dataset::sharegpt(), 15.0, 120, 42);
+    let t0 = Instant::now();
+    let out = server.serve(&trace);
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "serve_bullet: 120 sharegpt reqs ({} virtual s) in {:.2}s wall = {:.1}x realtime",
+        out.virtual_duration as u64,
+        dt,
+        out.virtual_duration / dt
+    );
+}

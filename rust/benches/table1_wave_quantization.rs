@@ -1,0 +1,62 @@
+//! Table 1: theoretical SM idle ratio (%) from wave quantization,
+//! per operator, normalized to the layer's execution time — Eq. 1 over
+//! Llama-3.1-8B's per-operator grids on a 108-SM A100.
+
+use bullet::config::{GpuSpec, ModelSpec};
+use bullet::gpu::roofline::GroundTruth;
+use bullet::gpu::wave_quantization_idle_ratio;
+use bullet::model::phases::{prefill_layer_kernels, PhaseShape};
+use bullet::util::tbl::{f, Table};
+
+fn main() {
+    let model = ModelSpec::llama31_8b();
+    let gpu = GpuSpec::a100();
+    let gt = GroundTruth::noiseless(gpu.clone());
+
+    // paper's reported rows for side-by-side comparison
+    let paper: &[(usize, [f64; 5])] = &[
+        (1024, [11.1, 21.0, 40.7, 13.0, 19.4]),
+        (2048, [11.1, 5.2, 21.0, 7.6, 10.4]),
+        (4096, [11.1, 5.2, 5.2, 7.6, 9.1]),
+        (16384, [1.9, 0.2, 0.2, 0.4, 0.5]),
+    ];
+
+    let mut t = Table::new(
+        "Table 1 — SM idle ratio (%) from wave quantization (ours vs paper in parens)",
+    )
+    .header(&["SeqLen", "QKV", "Attn", "OProj", "MLP", "Total"]);
+
+    for &(sl, pap) in paper {
+        let ks = prefill_layer_kernels(&model, PhaseShape { tokens: sl, context: 0 });
+        let times: Vec<f64> = ks.iter().map(|k| gt.solo_time(k, gpu.num_sms)).collect();
+        // time-weighted idle ratio over a set of kernel indices
+        let weighted = |idx: &[usize]| -> f64 {
+            let tt: f64 = idx.iter().map(|&i| times[i]).sum();
+            idx.iter()
+                .map(|&i| {
+                    100.0 * wave_quantization_idle_ratio(ks[i].grid, gpu.num_sms) * times[i] / tt
+                })
+                .sum()
+        };
+        // layout: 0 QKV, 1 Attn, 2 OProj, 3+4 MLP (gate/up + down), 5 elemwise
+        let qkv = weighted(&[0]);
+        let attn = weighted(&[1]);
+        let oproj = weighted(&[2]);
+        let mlp = weighted(&[3, 4]);
+        let total = weighted(&[0, 1, 2, 3, 4]);
+        t.row(&[
+            sl.to_string(),
+            format!("{} ({})", f(qkv, 1), pap[0]),
+            format!("{} ({})", f(attn, 1), pap[1]),
+            format!("{} ({})", f(oproj, 1), pap[2]),
+            format!("{} ({})", f(mlp, 1), pap[3]),
+            format!("{} ({})", f(total, 1), pap[4]),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nShape check: idle ratio decays with sequence length (19%-class at 1k -> <2% at 16k),\n\
+         QKV flat at 11.1% through 1k-4k, attention worst at 1k. Grid heuristics: 128x128 GEMM\n\
+         tiles, 128-row FlashAttention query blocks (see model::phases)."
+    );
+}

@@ -1,0 +1,19 @@
+//! Baseline serving systems the paper compares against (§4.1), all
+//! running on the same simulated GPU:
+//!
+//! - [`chunked`]: chunked-prefill hybrid batching — vLLM-1024,
+//!   SGLang-1024, SGLang-2048 (token-budget lock-step execution with
+//!   KV-reload costs);
+//! - [`nanoflow`]: NanoFlow-style nano-batch overlap on top of chunked
+//!   prefill;
+//! - fixed-quota spatial sharing (MuxServe-like) and the Fig. 14
+//!   ablations are expressed through [`crate::engine::sim_engine::Features`]
+//!   (see [`systems`]).
+
+pub mod chunked;
+pub mod nanoflow;
+pub mod systems;
+
+pub use chunked::{serve_chunked, ChunkedConfig};
+pub use nanoflow::serve_nanoflow;
+pub use systems::{run_system, System};

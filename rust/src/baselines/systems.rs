@@ -1,0 +1,171 @@
+//! Unified runner over every evaluated system — the x-axis of Figs. 11,
+//! 13 and 14.
+
+use crate::baselines::chunked::{serve_chunked, ChunkedConfig};
+use crate::baselines::nanoflow::serve_nanoflow;
+use crate::config::ServingConfig;
+use crate::engine::sim_engine::{serve_bullet, Features, SimEngineOptions};
+use crate::gpu::roofline::GroundTruth;
+use crate::metrics::RequestRecord;
+use crate::perf::PerfModel;
+use crate::workload::Request;
+
+/// Every serving system the evaluation compares.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum System {
+    Bullet,
+    Vllm1024,
+    Sglang1024,
+    Sglang2048,
+    Nanoflow,
+    /// Fixed prefill SM quota, decode on the whole GPU (Fig. 13 / MuxServe-like).
+    FixedSm(usize),
+    /// Ablations (Fig. 14).
+    Naive,
+    WithPartition,
+    WithScheduler,
+}
+
+impl System {
+    pub fn label(&self) -> String {
+        match self {
+            System::Bullet => "Bullet".into(),
+            System::Vllm1024 => "vLLM-1024".into(),
+            System::Sglang1024 => "SGLang-1024".into(),
+            System::Sglang2048 => "SGLang-2048".into(),
+            System::Nanoflow => "NanoFlow".into(),
+            System::FixedSm(n) => format!("SM-{n}"),
+            System::Naive => "Naive".into(),
+            System::WithPartition => "w/Partition".into(),
+            System::WithScheduler => "w/Scheduler".into(),
+        }
+    }
+
+    /// The paper's Fig. 11 comparison set.
+    pub fn evaluation_set() -> Vec<System> {
+        vec![
+            System::Vllm1024,
+            System::Sglang1024,
+            System::Sglang2048,
+            System::Nanoflow,
+            System::Bullet,
+        ]
+    }
+
+    /// The Fig. 14 ablation set.
+    pub fn ablation_set() -> Vec<System> {
+        vec![
+            System::Naive,
+            System::WithPartition,
+            System::WithScheduler,
+            System::Bullet,
+        ]
+    }
+}
+
+/// Run a system over a trace and return per-request records.
+pub fn run_system(
+    system: System,
+    cfg: &ServingConfig,
+    perf: &PerfModel,
+    gt: &GroundTruth,
+    trace: &[Request],
+    seed: u64,
+) -> Vec<RequestRecord> {
+    let bullet_opts = |features: Features| SimEngineOptions {
+        seed,
+        features,
+        ..Default::default()
+    };
+    match system {
+        System::Bullet => {
+            serve_bullet(cfg, perf, gt, trace, &bullet_opts(Features::default())).records
+        }
+        System::Naive => serve_bullet(cfg, perf, gt, trace, &bullet_opts(Features::naive())).records,
+        System::WithPartition => {
+            serve_bullet(cfg, perf, gt, trace, &bullet_opts(Features::partition_only())).records
+        }
+        System::WithScheduler => {
+            serve_bullet(cfg, perf, gt, trace, &bullet_opts(Features::scheduler_only())).records
+        }
+        System::FixedSm(n) => {
+            serve_bullet(cfg, perf, gt, trace, &bullet_opts(Features::fixed(n))).records
+        }
+        System::Vllm1024 => serve_chunked(cfg, &ChunkedConfig::vllm_1024(), gt, trace, seed),
+        System::Sglang1024 => serve_chunked(cfg, &ChunkedConfig::sglang_1024(), gt, trace, seed),
+        System::Sglang2048 => serve_chunked(cfg, &ChunkedConfig::sglang_2048(), gt, trace, seed),
+        System::Nanoflow => serve_nanoflow(cfg, &ChunkedConfig::sglang_1024(), gt, trace, seed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuSpec, ModelSpec};
+    use crate::metrics::summarize;
+    use crate::workload::{generate_n_requests, Dataset};
+
+    fn setup() -> (ServingConfig, PerfModel, GroundTruth) {
+        let cfg = ServingConfig::default();
+        let perf = PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b());
+        let gt = GroundTruth::new(GpuSpec::a100());
+        (cfg, perf, gt)
+    }
+
+    #[test]
+    fn all_systems_complete_the_trace() {
+        let (cfg, perf, gt) = setup();
+        let trace = generate_n_requests(&Dataset::sharegpt(), 4.0, 12, 81);
+        for sys in [
+            System::Bullet,
+            System::Vllm1024,
+            System::Sglang1024,
+            System::Sglang2048,
+            System::Nanoflow,
+            System::FixedSm(84),
+            System::Naive,
+            System::WithPartition,
+            System::WithScheduler,
+        ] {
+            let recs = run_system(sys, &cfg, &perf, &gt, &trace, 1);
+            assert_eq!(recs.len(), 12, "{}", sys.label());
+        }
+    }
+
+    #[test]
+    fn bullet_beats_chunked_on_ttft() {
+        // The paper's headline: Bullet's TTFT is far below chunked
+        // prefill's because prefill is never budget-starved.
+        let (cfg, perf, gt) = setup();
+        let trace = generate_n_requests(&Dataset::azure_code(), 4.0, 30, 91);
+        let b = summarize(
+            &run_system(System::Bullet, &cfg, &perf, &gt, &trace, 2),
+            &cfg.slo,
+            None,
+        );
+        let s = summarize(
+            &run_system(System::Sglang1024, &cfg, &perf, &gt, &trace, 2),
+            &cfg.slo,
+            None,
+        );
+        assert!(
+            b.mean_ttft < s.mean_ttft,
+            "bullet {} sglang {}",
+            b.mean_ttft,
+            s.mean_ttft
+        );
+    }
+
+    #[test]
+    fn labels_unique() {
+        let mut labels: Vec<String> = System::evaluation_set()
+            .into_iter()
+            .chain(System::ablation_set())
+            .map(|s| s.label())
+            .collect();
+        labels.sort();
+        let before = labels.len();
+        labels.dedup();
+        assert_eq!(labels.len(), before - 1); // Bullet appears in both sets
+    }
+}

@@ -1,0 +1,351 @@
+//! Configuration: GPU spec, analytical model spec, serving/scheduler
+//! parameters and SLO targets.  All configs are plain structs with
+//! sensible defaults matching the paper's testbed (A100-PCIe-80GB serving
+//! Llama-3.1-8B), and can be overridden from JSON files via
+//! [`ServingConfig::from_json`].
+
+use crate::util::json::Value;
+
+/// Physical GPU description (defaults: NVIDIA A100-PCIe-80GB as in §4.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    /// Number of streaming multiprocessors (108 on A100).
+    pub num_sms: usize,
+    /// SM-mask allocation granularity (libsmctrl masks pairs of SMs — §3.4.1).
+    pub sm_granularity: usize,
+    /// Peak dense f16/bf16 tensor-core throughput, FLOP/s.
+    pub peak_flops: f64,
+    /// Peak HBM bandwidth, bytes/s.
+    pub peak_bandwidth: f64,
+    /// Fraction of peak compute sustainable by real GEMMs ("peak
+    /// sustainable capacity", the red line in Fig. 2 — §2.2.3 measures
+    /// MLP at 92%).
+    pub sustainable_frac: f64,
+    /// HBM capacity in bytes (80 GB).
+    pub hbm_bytes: u64,
+    /// Fixed per-kernel launch overhead, seconds.
+    pub launch_overhead: f64,
+    /// CPU-side scheduling synchronization overhead per layer group, seconds.
+    pub sync_overhead: f64,
+}
+
+impl Default for GpuSpec {
+    fn default() -> Self {
+        GpuSpec {
+            num_sms: 108,
+            sm_granularity: 2,
+            peak_flops: 312e12,      // A100 BF16 tensor core peak
+            peak_bandwidth: 2.0e12,  // paper: "2TB/s of HBM bandwidth"
+            sustainable_frac: 0.92,
+            hbm_bytes: 80 * (1 << 30),
+            launch_overhead: 4e-6,
+            sync_overhead: 8e-6,
+        }
+    }
+}
+
+impl GpuSpec {
+    /// A100 (the paper's testbed).
+    pub fn a100() -> GpuSpec {
+        GpuSpec::default()
+    }
+
+    /// H100-like (132 SMs) — used by tests to check nothing hardcodes 108.
+    pub fn h100() -> GpuSpec {
+        GpuSpec {
+            num_sms: 132,
+            peak_flops: 989e12,
+            peak_bandwidth: 3.35e12,
+            hbm_bytes: 80 * (1 << 30),
+            ..GpuSpec::default()
+        }
+    }
+
+    /// Round an SM count down to the mask granularity (min one group).
+    pub fn quantize_sms(&self, sms: usize) -> usize {
+        let g = self.sm_granularity;
+        ((sms.max(g) / g) * g).min(self.num_sms)
+    }
+}
+
+/// Analytical transformer descriptor (defaults: Llama-3.1-8B).
+///
+/// Drives the simulator's flops/bytes/grid accounting — distinct from the
+/// PJRT-executed tiny model, whose config lives in artifacts/meta.json.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn_dim: usize,
+    pub vocab_size: usize,
+    /// Bytes per parameter/activation element (fp16 = 2).
+    pub dtype_bytes: usize,
+}
+
+impl Default for ModelSpec {
+    fn default() -> Self {
+        ModelSpec::llama31_8b()
+    }
+}
+
+impl ModelSpec {
+    /// Llama-3.1-8B (the paper's served model).
+    pub fn llama31_8b() -> ModelSpec {
+        ModelSpec {
+            name: "llama-3.1-8b".into(),
+            n_layers: 32,
+            d_model: 4096,
+            n_heads: 32,
+            n_kv_heads: 8,
+            head_dim: 128,
+            ffn_dim: 14336,
+            vocab_size: 128256,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// The tiny PJRT-served model (mirrors python ModelConfig defaults).
+    pub fn tiny() -> ModelSpec {
+        ModelSpec {
+            name: "tiny-llama".into(),
+            n_layers: 4,
+            d_model: 256,
+            n_heads: 8,
+            n_kv_heads: 4,
+            head_dim: 32,
+            ffn_dim: 704,
+            vocab_size: 2048,
+            dtype_bytes: 4,
+        }
+    }
+
+    /// KV-cache bytes per token (all layers, K+V).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        (2 * self.n_layers * self.n_kv_heads * self.head_dim * self.dtype_bytes) as u64
+    }
+
+    /// Total parameter count (approximate, embeddings included).
+    pub fn param_count(&self) -> u64 {
+        let d = self.d_model as u64;
+        let attn = d * (self.n_heads * self.head_dim) as u64 * 2
+            + d * (self.n_kv_heads * self.head_dim) as u64 * 2;
+        let mlp = 3 * d * self.ffn_dim as u64;
+        let per_layer = attn + mlp + 2 * d;
+        self.n_layers as u64 * per_layer + 2 * (self.vocab_size as u64 * d)
+    }
+}
+
+/// Latency targets for a workload (Table 2 of the paper).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    /// Normalized TTFT budget: seconds per input token (paper: ms/token).
+    pub norm_ttft_ms_per_token: f64,
+    /// TPOT budget in milliseconds.
+    pub tpot_ms: f64,
+}
+
+impl SloSpec {
+    pub fn sharegpt() -> SloSpec {
+        SloSpec {
+            norm_ttft_ms_per_token: 3.0,
+            tpot_ms: 150.0,
+        }
+    }
+
+    pub fn azure_code() -> SloSpec {
+        SloSpec {
+            norm_ttft_ms_per_token: 1.5,
+            tpot_ms: 200.0,
+        }
+    }
+
+    pub fn arxiv_summary() -> SloSpec {
+        SloSpec {
+            norm_ttft_ms_per_token: 1.5,
+            tpot_ms: 175.0,
+        }
+    }
+
+    /// Absolute TTFT budget for an `input_len`-token request, seconds.
+    pub fn ttft_budget(&self, input_len: usize) -> f64 {
+        self.norm_ttft_ms_per_token * input_len as f64 * 1e-3
+    }
+
+    /// TPOT budget in seconds.
+    pub fn tpot_budget(&self) -> f64 {
+        self.tpot_ms * 1e-3
+    }
+}
+
+/// Scheduler/engine knobs (§3.3–§3.5).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingConfig {
+    pub gpu: GpuSpec,
+    pub model: ModelSpec,
+    pub slo: SloSpec,
+    /// Layers launched per prefill scheduling cycle (§3.3.1 "fixed number
+    /// of layers", 1 in the paper's example).
+    pub prefill_layer_group: usize,
+    /// Minimum SMs the decode phase may be squeezed to before pausing.
+    pub min_decode_sms: usize,
+    /// Minimum SMs for prefill when decode pressure dominates.
+    pub min_prefill_sms: usize,
+    /// Max decode batch size.
+    pub max_decode_batch: usize,
+    /// Max tokens admitted to one prefill batch.
+    pub max_prefill_tokens: usize,
+    /// Small-prompt batching threshold: requests are prefilled one at a
+    /// time (lowest TTFT) unless several short prompts fit under this
+    /// many tokens, in which case they share one batch to amortize
+    /// launches.
+    pub prefill_batch_tokens: usize,
+    /// KV cache capacity in tokens (derived from HBM minus weights if 0).
+    pub kv_capacity_tokens: usize,
+    /// Percentile used for SLO checks in Algorithm 1 (paper: P90).
+    pub slo_percentile: f64,
+    /// Allow intentional SM overlap between phases during transitions (§3.4.2).
+    pub allow_sm_overlap: bool,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        let gpu = GpuSpec::default();
+        let model = ModelSpec::default();
+        let kv_capacity_tokens = derive_kv_capacity(&gpu, &model);
+        ServingConfig {
+            gpu,
+            model,
+            slo: SloSpec::sharegpt(),
+            prefill_layer_group: 1,
+            min_decode_sms: 12,
+            min_prefill_sms: 24,
+            max_decode_batch: 256,
+            max_prefill_tokens: 16384,
+            prefill_batch_tokens: 512,
+            kv_capacity_tokens,
+            slo_percentile: 90.0,
+            allow_sm_overlap: true,
+        }
+    }
+}
+
+/// Tokens of KV cache that fit in HBM after weights + activation slack.
+pub fn derive_kv_capacity(gpu: &GpuSpec, model: &ModelSpec) -> usize {
+    let weights = model.param_count() * model.dtype_bytes as u64;
+    let slack = 6 * (1u64 << 30); // activations, fragmentation, cuda context
+    let avail = gpu.hbm_bytes.saturating_sub(weights + slack);
+    (avail / model.kv_bytes_per_token().max(1)) as usize
+}
+
+impl ServingConfig {
+    /// Load overrides from a JSON object; missing keys keep defaults.
+    pub fn from_json(v: &Value) -> ServingConfig {
+        let mut cfg = ServingConfig::default();
+        if let Some(g) = v.get("gpu") {
+            if let Some(x) = g.get("num_sms").and_then(Value::as_usize) {
+                cfg.gpu.num_sms = x;
+            }
+            if let Some(x) = g.get("peak_flops").and_then(Value::as_f64) {
+                cfg.gpu.peak_flops = x;
+            }
+            if let Some(x) = g.get("peak_bandwidth").and_then(Value::as_f64) {
+                cfg.gpu.peak_bandwidth = x;
+            }
+        }
+        if let Some(s) = v.get("slo") {
+            if let Some(x) = s.get("norm_ttft_ms_per_token").and_then(Value::as_f64) {
+                cfg.slo.norm_ttft_ms_per_token = x;
+            }
+            if let Some(x) = s.get("tpot_ms").and_then(Value::as_f64) {
+                cfg.slo.tpot_ms = x;
+            }
+        }
+        if let Some(x) = v.get("prefill_layer_group").and_then(Value::as_usize) {
+            cfg.prefill_layer_group = x;
+        }
+        if let Some(x) = v.get("max_decode_batch").and_then(Value::as_usize) {
+            cfg.max_decode_batch = x;
+        }
+        if let Some(x) = v.get("kv_capacity_tokens").and_then(Value::as_usize) {
+            cfg.kv_capacity_tokens = x;
+        }
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn a100_defaults_match_paper() {
+        let g = GpuSpec::a100();
+        assert_eq!(g.num_sms, 108);
+        assert_eq!(g.sm_granularity, 2);
+        assert!((g.peak_bandwidth - 2e12).abs() < 1e9);
+    }
+
+    #[test]
+    fn quantize_sms_granularity() {
+        let g = GpuSpec::a100();
+        assert_eq!(g.quantize_sms(7), 6);
+        assert_eq!(g.quantize_sms(8), 8);
+        assert_eq!(g.quantize_sms(1), 2);
+        assert_eq!(g.quantize_sms(200), 108);
+    }
+
+    #[test]
+    fn llama8b_param_count_plausible() {
+        let m = ModelSpec::llama31_8b();
+        let p = m.param_count();
+        assert!(p > 7_000_000_000 && p < 9_000_000_000, "params {p}");
+    }
+
+    #[test]
+    fn kv_bytes_per_token_llama8b() {
+        // 2 * 32 layers * 8 kv heads * 128 dim * 2 bytes = 131072 B/token
+        assert_eq!(ModelSpec::llama31_8b().kv_bytes_per_token(), 131072);
+    }
+
+    #[test]
+    fn kv_capacity_positive_and_bounded() {
+        let cfg = ServingConfig::default();
+        assert!(cfg.kv_capacity_tokens > 50_000, "{}", cfg.kv_capacity_tokens);
+        assert!(cfg.kv_capacity_tokens < 1_000_000);
+    }
+
+    #[test]
+    fn slo_budgets() {
+        let s = SloSpec::sharegpt();
+        assert!((s.ttft_budget(1000) - 3.0).abs() < 1e-9);
+        assert!((s.tpot_budget() - 0.150).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_json_overrides() {
+        let v = json::parse(
+            r#"{"gpu": {"num_sms": 132}, "slo": {"tpot_ms": 99.0},
+                "max_decode_batch": 64}"#,
+        )
+        .unwrap();
+        let cfg = ServingConfig::from_json(&v);
+        assert_eq!(cfg.gpu.num_sms, 132);
+        assert_eq!(cfg.slo.tpot_ms, 99.0);
+        assert_eq!(cfg.max_decode_batch, 64);
+        // untouched default
+        assert_eq!(cfg.prefill_layer_group, 1);
+    }
+
+    #[test]
+    fn tiny_model_matches_python_abi() {
+        let t = ModelSpec::tiny();
+        assert_eq!(t.n_layers, 4);
+        assert_eq!(t.d_model, 256);
+        assert_eq!(t.head_dim, 32);
+    }
+}

@@ -1,0 +1,149 @@
+//! The top-level coordinator: what a downstream user instantiates.
+//!
+//! [`BulletServer`] bundles configuration, the offline profiling pass
+//! (§3.2.2) and the serving engines behind one facade:
+//!
+//! ```ignore
+//! let server = BulletServer::build(ServingConfig::default(), BuildOptions::default());
+//! let out = server.serve(&trace);
+//! println!("{}", summarize(&out.records, &server.cfg().slo, None).throughput_tok_s);
+//! ```
+
+pub mod tokenizer;
+
+use crate::config::ServingConfig;
+use crate::engine::sim_engine::{serve_bullet, EngineOutput, SimEngineOptions};
+use crate::gpu::roofline::GroundTruth;
+use crate::perf::{profile, PerfModel, ProfileSpec};
+use crate::workload::{Dataset, Request};
+
+pub use tokenizer::Tokenizer;
+
+/// Build-time options.
+#[derive(Debug, Clone)]
+pub struct BuildOptions {
+    /// Profiling grid; `None` = analytical model only (no profiling).
+    pub profile: Option<ProfileSpec>,
+    /// Ground-truth noise sigma for the simulated GPU.
+    pub noise_sigma: f64,
+    pub seed: u64,
+}
+
+impl Default for BuildOptions {
+    fn default() -> Self {
+        BuildOptions {
+            profile: None,
+            noise_sigma: 0.03,
+            seed: 0xB17,
+        }
+    }
+}
+
+impl BuildOptions {
+    /// Paper-fidelity profiling (the §3.2.2 offline pass).
+    pub fn with_paper_profiling(cfg: &ServingConfig) -> BuildOptions {
+        BuildOptions {
+            profile: Some(ProfileSpec::paper(&cfg.gpu)),
+            ..Default::default()
+        }
+    }
+
+    /// Coarse profiling for quick runs and tests.
+    pub fn with_coarse_profiling(cfg: &ServingConfig) -> BuildOptions {
+        BuildOptions {
+            profile: Some(ProfileSpec::coarse(&cfg.gpu)),
+            ..Default::default()
+        }
+    }
+}
+
+/// The assembled serving system (simulation mode).
+pub struct BulletServer {
+    cfg: ServingConfig,
+    perf: PerfModel,
+    gt: GroundTruth,
+    opts: SimEngineOptions,
+}
+
+impl BulletServer {
+    /// Assemble the system: construct the simulated GPU, optionally run
+    /// the offline profiling pass, and wire the scheduler.
+    pub fn build(cfg: ServingConfig, build: BuildOptions) -> BulletServer {
+        let mut gt = GroundTruth::new(cfg.gpu.clone());
+        gt.noise_sigma = build.noise_sigma;
+        let perf = match &build.profile {
+            Some(spec) => profile(&gt, &cfg.model, spec),
+            None => PerfModel::analytical(cfg.gpu.clone(), cfg.model.clone()),
+        };
+        BulletServer {
+            cfg,
+            perf,
+            gt,
+            opts: SimEngineOptions {
+                seed: build.seed,
+                ..Default::default()
+            },
+        }
+    }
+
+    pub fn cfg(&self) -> &ServingConfig {
+        &self.cfg
+    }
+
+    pub fn perf(&self) -> &PerfModel {
+        &self.perf
+    }
+
+    pub fn ground_truth(&self) -> &GroundTruth {
+        &self.gt
+    }
+
+    /// Enable timeline recording on subsequent serves.
+    pub fn record_timeline(&mut self, on: bool) {
+        self.opts.record_timeline = on;
+    }
+
+    /// Serve a prepared trace.
+    pub fn serve(&self, trace: &[Request]) -> EngineOutput {
+        serve_bullet(&self.cfg, &self.perf, &self.gt, trace, &self.opts)
+    }
+
+    /// Convenience: generate a Poisson trace from a dataset and serve it.
+    pub fn serve_dataset(&self, dataset: &Dataset, rate: f64, n: usize, seed: u64) -> EngineOutput {
+        let trace = crate::workload::generate_n_requests(dataset, rate, n, seed);
+        self.serve(&trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::summarize;
+
+    #[test]
+    fn build_and_serve_analytical() {
+        let server = BulletServer::build(ServingConfig::default(), BuildOptions::default());
+        let out = server.serve_dataset(&Dataset::sharegpt(), 5.0, 15, 1);
+        assert_eq!(out.records.len(), 15);
+        let s = summarize(&out.records, &server.cfg().slo, None);
+        assert!(s.throughput_tok_s > 0.0);
+    }
+
+    #[test]
+    fn build_with_profiling_improves_or_matches() {
+        let cfg = ServingConfig::default();
+        let profiled = BulletServer::build(cfg.clone(), BuildOptions::with_coarse_profiling(&cfg));
+        // the profiled model carries non-trivial correction data
+        assert!(profiled.perf().p_b >= 1.0);
+        let out = profiled.serve_dataset(&Dataset::sharegpt(), 5.0, 10, 2);
+        assert_eq!(out.records.len(), 10);
+    }
+
+    #[test]
+    fn timeline_toggle() {
+        let mut server = BulletServer::build(ServingConfig::default(), BuildOptions::default());
+        server.record_timeline(true);
+        let out = server.serve_dataset(&Dataset::sharegpt(), 5.0, 8, 3);
+        assert!(!out.timeline.is_empty());
+    }
+}

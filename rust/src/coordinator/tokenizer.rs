@@ -1,0 +1,93 @@
+//! Byte-level tokenizer stand-in.
+//!
+//! The paper plugs into SGLang's tokenizer; serving text through the tiny
+//! PJRT model only needs *a* stable invertible mapping, so we use byte
+//! tokens with a small reserved-id prefix (pad/bos/eos).  Ids stay below
+//! the tiny model's vocab (2048).
+
+/// Reserved ids.
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+/// First byte token id.
+pub const BYTE_BASE: i32 = 3;
+
+/// Tokenizer with a fixed vocab cap (ids >= cap are folded).
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    pub vocab_size: usize,
+}
+
+impl Tokenizer {
+    pub fn new(vocab_size: usize) -> Tokenizer {
+        assert!(vocab_size > BYTE_BASE as usize + 256, "vocab too small for byte tokens");
+        Tokenizer { vocab_size }
+    }
+
+    /// Encode text to ids (BOS-prefixed).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = Vec::with_capacity(text.len() + 1);
+        out.push(BOS);
+        for b in text.bytes() {
+            out.push(BYTE_BASE + b as i32);
+        }
+        out
+    }
+
+    /// Decode ids back to text (reserved ids skipped; non-byte ids become
+    /// U+FFFD — the tiny random-weight model emits arbitrary ids).
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut bytes = Vec::with_capacity(ids.len());
+        for &id in ids {
+            if id < BYTE_BASE {
+                continue;
+            }
+            let b = id - BYTE_BASE;
+            if (0..256).contains(&b) {
+                bytes.push(b as u8);
+            } else {
+                bytes.extend_from_slice("\u{FFFD}".as_bytes());
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = Tokenizer::new(2048);
+        let ids = t.encode("hello bullet");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(t.decode(&ids), "hello bullet");
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = Tokenizer::new(2048);
+        let s = "héllo — 世界";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn reserved_ids_skipped_in_decode() {
+        let t = Tokenizer::new(2048);
+        assert_eq!(t.decode(&[BOS, PAD, EOS]), "");
+    }
+
+    #[test]
+    fn out_of_byte_ids_become_replacement() {
+        let t = Tokenizer::new(2048);
+        let s = t.decode(&[BYTE_BASE + 300]);
+        assert_eq!(s, "\u{FFFD}");
+    }
+
+    #[test]
+    #[should_panic(expected = "vocab too small")]
+    fn rejects_tiny_vocab() {
+        Tokenizer::new(100);
+    }
+}

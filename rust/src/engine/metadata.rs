@@ -1,0 +1,163 @@
+//! Shared metadata buffer (§3.5.2): the decentralized status board the
+//! prefill and decode engines read/write instead of synchronizing through
+//! a central controller.
+//!
+//! The paper implements this as OS shared memory between two processes
+//! plus control bits for availability.  Here the engines are threads, so
+//! the buffer is a lock-minimal `Arc<MetadataBuffer>`: hot counters are
+//! atomics; the request-handoff queue (prefill → decode migration) is a
+//! short mutex-protected ring.  Every write is wait-free for readers of
+//! the atomic fields.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A request handed from the prefill engine to the decode engine —
+/// copy-free: KV stays in the shared pool, only indices travel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Handoff {
+    pub req_id: u64,
+    pub seq_id: u64,
+    pub input_len: usize,
+    pub output_len: usize,
+    pub first_token: i32,
+    /// Absolute time the first token was produced.
+    pub first_token_time: f64,
+    pub arrival: f64,
+    pub prefill_start: f64,
+}
+
+/// The shared status board.
+#[derive(Debug, Default)]
+pub struct MetadataBuffer {
+    /// Decode engine's current batch size (read by the prefill scheduler).
+    pub decode_batch: AtomicUsize,
+    /// Sum of context lengths in the decode batch.
+    pub decode_ctx_sum: AtomicUsize,
+    /// Most recent decode iteration latency, microseconds.
+    pub decode_iter_us: AtomicU64,
+    /// Requests waiting for prefill (read by the decode scheduler).
+    pub waiting: AtomicUsize,
+    /// Tokens in the active prefill batch (0 = prefill idle).
+    pub prefill_tokens: AtomicUsize,
+    /// Prefill layers completed on the active batch.
+    pub prefill_layers_done: AtomicUsize,
+    /// Engines set this to request shutdown.
+    pub shutdown: AtomicBool,
+    /// Prefill→decode migration queue ("request metadata sent to buffer").
+    handoffs: Mutex<VecDeque<Handoff>>,
+}
+
+impl MetadataBuffer {
+    pub fn new() -> MetadataBuffer {
+        MetadataBuffer::default()
+    }
+
+    /// Prefill side: publish a finished request for the decode engine.
+    pub fn push_handoff(&self, h: Handoff) {
+        self.handoffs.lock().unwrap().push_back(h);
+    }
+
+    /// Decode side: drain pending migrations (called at iteration
+    /// boundaries, like the paper's step-2 metadata fetch).
+    pub fn drain_handoffs(&self, max: usize) -> Vec<Handoff> {
+        let mut q = self.handoffs.lock().unwrap();
+        let n = q.len().min(max);
+        q.drain(..n).collect()
+    }
+
+    pub fn pending_handoffs(&self) -> usize {
+        self.handoffs.lock().unwrap().len()
+    }
+
+    /// Decode engine heartbeat: publish batch status.
+    pub fn publish_decode(&self, batch: usize, ctx_sum: usize, iter_s: f64) {
+        self.decode_batch.store(batch, Ordering::Release);
+        self.decode_ctx_sum.store(ctx_sum, Ordering::Release);
+        self.decode_iter_us
+            .store((iter_s * 1e6) as u64, Ordering::Release);
+    }
+
+    /// Prefill engine heartbeat.
+    pub fn publish_prefill(&self, tokens: usize, layers_done: usize, waiting: usize) {
+        self.prefill_tokens.store(tokens, Ordering::Release);
+        self.prefill_layers_done.store(layers_done, Ordering::Release);
+        self.waiting.store(waiting, Ordering::Release);
+    }
+
+    pub fn snapshot_decode(&self) -> (usize, usize, f64) {
+        (
+            self.decode_batch.load(Ordering::Acquire),
+            self.decode_ctx_sum.load(Ordering::Acquire),
+            self.decode_iter_us.load(Ordering::Acquire) as f64 * 1e-6,
+        )
+    }
+
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn handoff(id: u64) -> Handoff {
+        Handoff {
+            req_id: id,
+            seq_id: id,
+            input_len: 8,
+            output_len: 4,
+            first_token: 42,
+            first_token_time: 1.0,
+            arrival: 0.0,
+            prefill_start: 0.5,
+        }
+    }
+
+    #[test]
+    fn handoff_fifo() {
+        let m = MetadataBuffer::new();
+        m.push_handoff(handoff(1));
+        m.push_handoff(handoff(2));
+        m.push_handoff(handoff(3));
+        let got = m.drain_handoffs(2);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].req_id, 1);
+        assert_eq!(m.pending_handoffs(), 1);
+    }
+
+    #[test]
+    fn publish_snapshot_roundtrip() {
+        let m = MetadataBuffer::new();
+        m.publish_decode(17, 3400, 0.015);
+        let (b, c, t) = m.snapshot_decode();
+        assert_eq!(b, 17);
+        assert_eq!(c, 3400);
+        assert!((t - 0.015).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cross_thread_visibility() {
+        let m = Arc::new(MetadataBuffer::new());
+        let m2 = m.clone();
+        let th = std::thread::spawn(move || {
+            for i in 0..100 {
+                m2.push_handoff(handoff(i));
+            }
+            m2.publish_prefill(128, 7, 3);
+            m2.request_shutdown();
+        });
+        th.join().unwrap();
+        assert!(m.is_shutdown());
+        assert_eq!(m.pending_handoffs(), 100);
+        assert_eq!(m.prefill_tokens.load(Ordering::Acquire), 128);
+        assert_eq!(m.prefill_layers_done.load(Ordering::Acquire), 7);
+    }
+}

@@ -1,0 +1,17 @@
+//! Concurrent execution engines (§3.5).
+//!
+//! Two modes share the scheduling logic:
+//! - **sim** (`sim_engine`): a virtual-clock event loop over the GPU
+//!   simulator — deterministic, used for every paper experiment at
+//!   A100/Llama-8B scale.
+//! - **live** (`live_engine`): real prefill/decode threads over the PJRT
+//!   runtime with a shared metadata buffer (`metadata`) and the shared KV
+//!   pool — proves the decentralized-engines design composes end-to-end
+//!   on real compute (examples/serve_real_model.rs).
+
+pub mod live_engine;
+pub mod metadata;
+pub mod sim_engine;
+
+pub use live_engine::{serve_live, LiveRequest, LiveStats};
+pub use sim_engine::{serve_bullet, EngineOutput, SimEngineOptions};

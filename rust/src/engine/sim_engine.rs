@@ -1,0 +1,610 @@
+//! Bullet's serving loop on the simulated GPU: concurrent prefill and
+//! decode with dynamic SM partitioning, driven by a virtual-clock event
+//! loop.
+//!
+//! Fidelity notes vs the paper's live system:
+//! - the prefill engine launches one *layer group* at a time and makes a
+//!   scheduling decision at every group boundary (§3.3.1);
+//! - the decode engine launches whole iterations (CUDA-graph analog) and
+//!   decides before each one;
+//! - a decode *pause* skips the next decode iteration, waking at the next
+//!   prefill group boundary (§3.4.2-②);
+//! - prefill→decode migration is copy-free through the shared KV pool;
+//!   requests join the decode batch at the next iteration boundary;
+//! - KV capacity is reserved for input+output at prefill admission, so a
+//!   running request can never deadlock the pool mid-decode (documented
+//!   deviation: the paper allocates decode blocks on demand).
+
+use crate::config::ServingConfig;
+use crate::gpu::roofline::GroundTruth;
+use crate::gpu::simulator::Simulator;
+use crate::kvcache::KvPool;
+use crate::metrics::timeline::{Timeline, TimelineSample};
+use crate::metrics::RequestRecord;
+use crate::model::phases::{decode_all_layers, prefill_layer_kernels, PhaseShape};
+use crate::perf::PerfModel;
+use crate::resource::{Partition, ResourceManager};
+use crate::sched::{Decision, DecodeReqState, PrefillBatch, PrefillReq, SloScheduler, SystemState};
+use crate::workload::Request;
+
+/// Feature switches: the full system runs with everything on; the
+/// Fig. 13/14 baselines disable individual mechanisms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Features {
+    /// Dynamic SM partitioning (off ⇒ both phases use fixed masks).
+    pub dynamic_partition: bool,
+    /// SLO-slack reordering of the waiting queue.
+    pub reorder: bool,
+    /// Temporary decode pausing under TTFT pressure.
+    pub pause: bool,
+    /// With `dynamic_partition = false`: prefill's fixed SM count
+    /// (`None` ⇒ whole GPU).  Decode always gets the whole GPU in the
+    /// fixed configurations, as in the paper's sensitivity study (§4.4).
+    pub fixed_prefill_sms: Option<usize>,
+}
+
+impl Default for Features {
+    fn default() -> Self {
+        Features {
+            dynamic_partition: true,
+            reorder: true,
+            pause: true,
+            fixed_prefill_sms: None,
+        }
+    }
+}
+
+impl Features {
+    /// The "Naive" ablation: concurrency only.
+    pub fn naive() -> Features {
+        Features {
+            dynamic_partition: false,
+            reorder: false,
+            pause: false,
+            fixed_prefill_sms: None,
+        }
+    }
+
+    /// "w/Partition": resource provisioning without the SLO scheduler.
+    pub fn partition_only() -> Features {
+        Features {
+            dynamic_partition: true,
+            reorder: false,
+            pause: false,
+            fixed_prefill_sms: None,
+        }
+    }
+
+    /// "w/Scheduler": reordering + delayed decode, no partitioning.
+    pub fn scheduler_only() -> Features {
+        Features {
+            dynamic_partition: false,
+            reorder: true,
+            pause: true,
+            fixed_prefill_sms: None,
+        }
+    }
+
+    /// Fixed prefill quota (MuxServe-style / Fig. 13 sensitivity points).
+    pub fn fixed(prefill_sms: usize) -> Features {
+        Features {
+            dynamic_partition: false,
+            reorder: false,
+            pause: false,
+            fixed_prefill_sms: Some(prefill_sms),
+        }
+    }
+}
+
+/// Engine options.
+#[derive(Debug, Clone)]
+pub struct SimEngineOptions {
+    pub seed: u64,
+    /// Record a timeline sample at every scheduling decision.
+    pub record_timeline: bool,
+    /// Hard cap on virtual time (safety against pathological configs).
+    pub max_virtual_time: f64,
+    pub features: Features,
+}
+
+impl Default for SimEngineOptions {
+    fn default() -> Self {
+        SimEngineOptions {
+            seed: 0xB17,
+            record_timeline: false,
+            max_virtual_time: 50_000.0,
+            features: Features::default(),
+        }
+    }
+}
+
+/// Everything a serving run produces.
+#[derive(Debug, Clone)]
+pub struct EngineOutput {
+    pub records: Vec<RequestRecord>,
+    pub timeline: Timeline,
+    pub reconfigs: u64,
+    pub decode_pauses: u64,
+    /// Total achieved FLOPs / bytes / SM-seconds (whole run).
+    pub total_flops: f64,
+    pub total_bytes: f64,
+    pub virtual_duration: f64,
+    pub peak_kv_blocks: usize,
+}
+
+struct ActiveDecode {
+    st: DecodeReqState,
+    arrival: f64,
+    prefill_start: f64,
+    first_token_time: f64,
+    /// Virtual time of this request's latest token — TPOT accounting
+    /// charges the FULL gap between tokens (queueing, pauses, contention),
+    /// as the paper's d_i does, so the scheduler cannot hide stalls.
+    last_token_time: f64,
+}
+
+/// Serve `trace` with the full Bullet engine; returns per-request records.
+pub fn serve_bullet(
+    cfg: &ServingConfig,
+    perf: &PerfModel,
+    gt: &GroundTruth,
+    trace: &[Request],
+    opts: &SimEngineOptions,
+) -> EngineOutput {
+    let mut sim = Simulator::new(gt.clone(), opts.seed);
+    let mut rm = ResourceManager::new(&mut sim, &cfg.gpu);
+    let sched = SloScheduler::new(cfg.clone(), perf.clone());
+    let mut kv = KvPool::new(cfg.kv_capacity_tokens);
+    let mut timeline = Timeline::new();
+
+    let total_layers = cfg.model.n_layers;
+    let mut waiting: Vec<PrefillReq> = Vec::new();
+    let mut active_prefill: Option<PrefillBatch> = None;
+    let mut prefill_inflight = 0usize; // kernels outstanding in current group
+    let mut group_size = 0usize; // layers in the current group
+    let mut decode: Vec<ActiveDecode> = Vec::new();
+    let mut decode_inflight = 0usize;
+    let mut decode_iter_start = 0.0f64;
+    let mut decode_iter_bs = 0usize;
+    let mut pending_join: Vec<ActiveDecode> = Vec::new();
+    let mut paused_decode = false;
+    let mut decode_pauses = 0u64;
+    let mut records: Vec<RequestRecord> = Vec::new();
+    let mut next_arrival = 0usize;
+    let expected = trace.len();
+
+    // request id -> output_len lookup for active prefill batch
+    let out_len = |id: u64, trace: &[Request]| trace[id as usize].output_len;
+
+    while records.len() < expected {
+        let now = sim.now();
+        if now > opts.max_virtual_time {
+            panic!(
+                "virtual time cap exceeded: {} records of {} done at t={now}",
+                records.len(),
+                expected
+            );
+        }
+
+        // 1. Admit arrivals.
+        while next_arrival < trace.len() && trace[next_arrival].arrival <= now {
+            let r = &trace[next_arrival];
+            waiting.push(PrefillReq {
+                id: r.id,
+                arrival: r.arrival,
+                input_len: r.input_len,
+                output_len: r.output_len,
+            });
+            next_arrival += 1;
+        }
+
+        // 2. Prefill engine cycle (only at group boundaries).
+        if prefill_inflight == 0 {
+            // 2a. Complete a finished batch.
+            let finished = active_prefill
+                .as_ref()
+                .map(|b| b.layers_done >= total_layers)
+                .unwrap_or(false);
+            if finished {
+                let b = active_prefill.take().unwrap();
+                for r in &b.reqs {
+                    if r.output_len <= 1 {
+                        // single-token request: done at prefill.
+                        records.push(RequestRecord {
+                            id: r.id,
+                            arrival: r.arrival,
+                            input_len: r.input_len,
+                            output_len: r.output_len,
+                            first_token_time: now,
+                            finish_time: now,
+                            prefill_start: b.started_at,
+                        });
+                        kv.release(r.id).expect("kv release");
+                    } else {
+                        pending_join.push(ActiveDecode {
+                            st: DecodeReqState {
+                                id: r.id,
+                                input_len: r.input_len,
+                                ctx_len: r.input_len,
+                                tokens_out: 1,
+                                output_len: r.output_len,
+                                decode_elapsed: 0.0,
+                            },
+                            arrival: r.arrival,
+                            prefill_start: b.started_at,
+                            first_token_time: now,
+                            last_token_time: now,
+                        });
+                    }
+                }
+            }
+
+            // 2b. Form a new batch if idle.
+            if active_prefill.is_none() && !waiting.is_empty() {
+                // urgency order (Algorithm 1 line 7)
+                if opts.features.reorder {
+                    let mut st = snapshot(
+                        now,
+                        &active_prefill,
+                        &decode,
+                        &waiting,
+                        rm.partition(),
+                        total_layers,
+                    );
+                    sched.reorder_waiting(&mut st);
+                    waiting = st.waiting.clone();
+                }
+                let mut batch_reqs: Vec<PrefillReq> = Vec::new();
+                let mut tokens = 0usize;
+                let mut i = 0;
+                while i < waiting.len() {
+                    let r = &waiting[i];
+                    let reserve = r.input_len + r.output_len;
+                    // TTFT-first admission: a prompt runs alone unless it
+                    // and its batch-mates all fit under the small-prompt
+                    // threshold (batching only to amortize launches).
+                    let fits_policy = batch_reqs.is_empty()
+                        || tokens + r.input_len <= cfg.prefill_batch_tokens;
+                    if fits_policy
+                        && tokens + r.input_len <= cfg.max_prefill_tokens
+                        && kv.can_grow(r.id, reserve)
+                    {
+                        kv.grow(r.id, reserve).expect("kv reserve");
+                        tokens += r.input_len;
+                        batch_reqs.push(waiting.remove(i));
+                    } else if batch_reqs.is_empty() && decode.is_empty() && pending_join.is_empty()
+                    {
+                        // nothing running that could free memory: the
+                        // request can never fit — fail it loudly.
+                        panic!(
+                            "request {} needs {} KV tokens but pool holds {}",
+                            r.id,
+                            reserve,
+                            kv.capacity_tokens()
+                        );
+                    } else {
+                        i += 1;
+                    }
+                }
+                if !batch_reqs.is_empty() {
+                    active_prefill = Some(PrefillBatch::new(batch_reqs, now));
+                }
+            }
+
+            // 2c. Launch the next layer group under a fresh decision.
+            if let Some(b) = &active_prefill {
+                let mut st = snapshot(now, &active_prefill, &decode, &waiting, rm.partition(), total_layers);
+                let d = decide(&sched, &mut st, &opts.features, &cfg);
+                apply_decision(&mut rm, &d, &mut paused_decode, &mut decode_pauses);
+                if opts.record_timeline {
+                    push_sample(&mut timeline, &mut sim, &rm, b.n_tokens, decode.len(), waiting.len());
+                }
+                let layers = cfg
+                    .prefill_layer_group
+                    .max(1)
+                    .min(total_layers - b.layers_done);
+                let shape = PhaseShape { tokens: b.n_tokens, context: 0 };
+                let stream = rm.prefill_stream();
+                let mut n = 0;
+                for _ in 0..layers {
+                    for k in prefill_layer_kernels(&cfg.model, shape) {
+                        sim.submit(stream, k);
+                        n += 1;
+                    }
+                }
+                prefill_inflight = n;
+                group_size = layers;
+            }
+        }
+
+        // 3. Decode engine cycle (only at iteration boundaries).
+        if decode_inflight == 0 {
+            // 3a. Join migrated requests.
+            while decode.len() < cfg.max_decode_batch && !pending_join.is_empty() {
+                decode.push(pending_join.remove(0));
+            }
+            // 3b. Launch an iteration.
+            if !decode.is_empty() && !paused_decode {
+                if active_prefill.is_none() {
+                    // decode-only: take the whole GPU.
+                    let mut st = snapshot(now, &active_prefill, &decode, &waiting, rm.partition(), total_layers);
+                    let d = decide(&sched, &mut st, &opts.features, &cfg);
+                    apply_decision(&mut rm, &d, &mut paused_decode, &mut decode_pauses);
+                }
+                let bs = decode.len();
+                let cl = (decode.iter().map(|d| d.st.ctx_len).sum::<usize>() / bs).max(1);
+                let stream = rm.decode_stream();
+                let mut n = 0;
+                for k in decode_all_layers(&cfg.model, PhaseShape { tokens: bs, context: cl }) {
+                    sim.submit(stream, k);
+                    n += 1;
+                }
+                decode_inflight = n;
+                decode_iter_start = now;
+                decode_iter_bs = bs;
+            }
+        }
+
+        // 4. Advance virtual time.
+        if sim.idle() {
+            if next_arrival < trace.len() {
+                let dt = (trace[next_arrival].arrival - now).max(0.0) + 1e-9;
+                sim.run_for(dt);
+                continue;
+            } else if records.len() < expected
+                && active_prefill.is_none()
+                && decode.is_empty()
+                && pending_join.is_empty()
+                && waiting.is_empty()
+            {
+                unreachable!("no work left but {} records missing", expected - records.len());
+            } else if paused_decode {
+                // nothing in flight because decode is paused and prefill
+                // just finished — unpause and loop.
+                paused_decode = false;
+                continue;
+            } else {
+                continue;
+            }
+        }
+        sim.step();
+
+        // 5. Process completions.
+        for c in sim.take_completions() {
+            if rm.is_prefill_stream(c.stream) {
+                prefill_inflight -= 1;
+                if prefill_inflight == 0 {
+                    if let Some(b) = &mut active_prefill {
+                        b.layers_done += group_size;
+                    }
+                    // prefill group boundary wakes a paused decode.
+                    paused_decode = false;
+                }
+            } else {
+                decode_inflight -= 1;
+                if decode_inflight == 0 {
+                    let _ = decode_iter_start;
+                    debug_assert_eq!(decode_iter_bs, decode.len());
+                    let token_time = sim.now();
+                    let mut i = 0;
+                    while i < decode.len() {
+                        let d = &mut decode[i];
+                        d.st.tokens_out += 1;
+                        d.st.ctx_len += 1;
+                        d.st.decode_elapsed += token_time - d.last_token_time;
+                        d.last_token_time = token_time;
+                        if d.st.finished() {
+                            let d = decode.remove(i);
+                            records.push(RequestRecord {
+                                id: d.st.id,
+                                arrival: d.arrival,
+                                input_len: d.st.input_len,
+                                output_len: out_len(d.st.id, trace),
+                                first_token_time: d.first_token_time,
+                                finish_time: sim.now(),
+                                prefill_start: d.prefill_start,
+                            });
+                            kv.release(d.st.id).expect("kv release at finish");
+                        } else {
+                            i += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    let util = sim.total_util();
+    EngineOutput {
+        records,
+        timeline,
+        reconfigs: rm.reconfig_count(),
+        decode_pauses,
+        total_flops: util.flops,
+        total_bytes: util.bytes,
+        virtual_duration: sim.now(),
+        peak_kv_blocks: kv.peak_used_blocks(),
+    }
+}
+
+/// Run the scheduler, then apply the feature mask: fixed partitions
+/// override the searched one; disabled pausing clears pause requests.
+fn decide(
+    sched: &SloScheduler,
+    st: &mut SystemState,
+    features: &Features,
+    cfg: &ServingConfig,
+) -> Decision {
+    let mut d = sched.schedule(st);
+    if !features.dynamic_partition {
+        let pm = features
+            .fixed_prefill_sms
+            .unwrap_or(cfg.gpu.num_sms)
+            .min(cfg.gpu.num_sms);
+        // §4.4: fixed configurations pin prefill's quota and let decode
+        // use the whole GPU (overlapping masks).
+        d.partition = Partition {
+            prefill_sms: pm,
+            decode_sms: cfg.gpu.num_sms,
+        };
+    }
+    if !features.pause {
+        d.pause_decode = false;
+    }
+    d
+}
+
+fn snapshot(
+    now: f64,
+    prefill: &Option<PrefillBatch>,
+    decode: &[ActiveDecode],
+    waiting: &[PrefillReq],
+    partition: Partition,
+    total_layers: usize,
+) -> SystemState {
+    SystemState {
+        now,
+        prefill: prefill.clone(),
+        decode: decode.iter().map(|d| d.st.clone()).collect(),
+        waiting: waiting.to_vec(),
+        partition,
+        total_layers,
+    }
+}
+
+fn apply_decision(
+    rm: &mut ResourceManager,
+    d: &Decision,
+    paused: &mut bool,
+    pauses: &mut u64,
+) {
+    rm.reconfigure(d.partition);
+    if d.pause_decode && !*paused {
+        *paused = true;
+        *pauses += 1;
+    } else if !d.pause_decode {
+        *paused = false;
+    }
+}
+
+fn push_sample(
+    timeline: &mut Timeline,
+    sim: &mut Simulator,
+    rm: &ResourceManager,
+    prefill_tokens: usize,
+    decode_batch: usize,
+    waiting: usize,
+) {
+    let w = sim.take_util_window();
+    let gpu = sim.gpu().clone();
+    timeline.push(TimelineSample {
+        t: sim.now(),
+        prefill_sms: rm.partition().prefill_sms,
+        decode_sms: rm.partition().decode_sms,
+        prefill_tokens,
+        decode_batch,
+        waiting,
+        compute_util: w.compute_util(&gpu),
+        bandwidth_util: w.bandwidth_util(&gpu),
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuSpec, ModelSpec, SloSpec};
+    use crate::metrics::summarize;
+    use crate::workload::{generate_n_requests, Dataset};
+
+    fn quick_setup() -> (ServingConfig, PerfModel, GroundTruth) {
+        let cfg = ServingConfig {
+            slo: SloSpec::sharegpt(),
+            ..ServingConfig::default()
+        };
+        let gt = GroundTruth::new(GpuSpec::a100());
+        // analytical model is enough for engine-mechanics tests
+        let perf = PerfModel::analytical(cfg.gpu.clone(), ModelSpec::llama31_8b());
+        (cfg, perf, gt)
+    }
+
+    #[test]
+    fn serves_all_requests() {
+        let (cfg, perf, gt) = quick_setup();
+        let trace = generate_n_requests(&Dataset::sharegpt(), 5.0, 30, 42);
+        let out = serve_bullet(&cfg, &perf, &gt, &trace, &SimEngineOptions::default());
+        assert_eq!(out.records.len(), 30);
+        // every record is causally consistent
+        for r in &out.records {
+            assert!(r.prefill_start >= r.arrival - 1e-9, "req {}", r.id);
+            assert!(r.first_token_time >= r.prefill_start);
+            assert!(r.finish_time >= r.first_token_time);
+        }
+    }
+
+    #[test]
+    fn unique_ids_and_kv_drained() {
+        let (cfg, perf, gt) = quick_setup();
+        let trace = generate_n_requests(&Dataset::sharegpt(), 8.0, 40, 7);
+        let out = serve_bullet(&cfg, &perf, &gt, &trace, &SimEngineOptions::default());
+        let mut ids: Vec<u64> = out.records.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 40);
+        assert!(out.peak_kv_blocks > 0);
+    }
+
+    #[test]
+    fn throughput_and_latency_sane() {
+        let (cfg, perf, gt) = quick_setup();
+        let trace = generate_n_requests(&Dataset::sharegpt(), 10.0, 60, 3);
+        let out = serve_bullet(&cfg, &perf, &gt, &trace, &SimEngineOptions::default());
+        let s = summarize(&out.records, &cfg.slo, Some(out.virtual_duration));
+        assert!(s.mean_ttft > 0.0 && s.mean_ttft < 10.0, "ttft {}", s.mean_ttft);
+        assert!(s.mean_tpot > 0.001 && s.mean_tpot < 0.5, "tpot {}", s.mean_tpot);
+        assert!(s.throughput_tok_s > 10.0, "thpt {}", s.throughput_tok_s);
+    }
+
+    #[test]
+    fn reconfigures_under_load() {
+        let (cfg, perf, gt) = quick_setup();
+        let trace = generate_n_requests(&Dataset::azure_code(), 6.0, 40, 11);
+        let out = serve_bullet(&cfg, &perf, &gt, &trace, &SimEngineOptions::default());
+        assert!(out.reconfigs > 2, "reconfigs {}", out.reconfigs);
+    }
+
+    #[test]
+    fn timeline_recorded_when_enabled() {
+        let (cfg, perf, gt) = quick_setup();
+        let trace = generate_n_requests(&Dataset::sharegpt(), 5.0, 15, 5);
+        let opts = SimEngineOptions {
+            record_timeline: true,
+            ..Default::default()
+        };
+        let out = serve_bullet(&cfg, &perf, &gt, &trace, &opts);
+        assert!(out.timeline.len() > 10);
+        // monotone in time
+        let ts = out.timeline.samples();
+        for w in ts.windows(2) {
+            assert!(w[0].t <= w[1].t);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (cfg, perf, gt) = quick_setup();
+        let trace = generate_n_requests(&Dataset::sharegpt(), 5.0, 20, 9);
+        let a = serve_bullet(&cfg, &perf, &gt, &trace, &SimEngineOptions::default());
+        let b = serve_bullet(&cfg, &perf, &gt, &trace, &SimEngineOptions::default());
+        assert_eq!(a.records, b.records);
+        assert_eq!(a.reconfigs, b.reconfigs);
+    }
+
+    #[test]
+    fn single_token_outputs_finish_at_prefill() {
+        let (cfg, perf, gt) = quick_setup();
+        let trace = vec![Request { id: 0, arrival: 0.0, input_len: 512, output_len: 1 }];
+        let out = serve_bullet(&cfg, &perf, &gt, &trace, &SimEngineOptions::default());
+        assert_eq!(out.records.len(), 1);
+        assert_eq!(out.records[0].first_token_time, out.records[0].finish_time);
+    }
+}

@@ -1,0 +1,113 @@
+//! Kernel descriptors: the unit of work the simulator executes.
+
+/// Operator class — determines partial-SM scaling behaviour and which
+/// contention bucket a kernel falls into (compute-ish vs memory-ish).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    /// QKV projection GEMM (prefill).
+    GemmQkv,
+    /// Prefill self-attention (FlashAttention-style).
+    AttnPrefill,
+    /// Output-projection GEMM.
+    GemmOProj,
+    /// MLP GEMMs (gate/up/down fused accounting).
+    GemmMlp,
+    /// Decode attention (memory-bound KV sweep).
+    AttnDecode,
+    /// Decode-phase GEMMs (skinny, memory-bound at small batch).
+    GemmDecode,
+    /// Elementwise / norm / rope operators.
+    Elementwise,
+}
+
+impl OpClass {
+    /// Short label for tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            OpClass::GemmQkv => "QKV",
+            OpClass::AttnPrefill => "Attn",
+            OpClass::GemmOProj => "OProj",
+            OpClass::GemmMlp => "MLP",
+            OpClass::AttnDecode => "DecAttn",
+            OpClass::GemmDecode => "DecGemm",
+            OpClass::Elementwise => "Elemwise",
+        }
+    }
+
+    /// Whether this class belongs to the decode phase.
+    pub fn is_decode(&self) -> bool {
+        matches!(self, OpClass::AttnDecode | OpClass::GemmDecode)
+    }
+}
+
+/// A kernel: pure work descriptor (no data).  The simulator turns this
+/// into time; the PJRT runtime is the one that does real math.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelDesc {
+    pub op: OpClass,
+    /// Floating-point operations.
+    pub flops: f64,
+    /// Bytes moved to/from HBM.
+    pub bytes: f64,
+    /// Grid size in thread blocks (for wave quantization).
+    pub grid: usize,
+    /// Arbitrary tag for tracing (e.g. layer index).
+    pub tag: u32,
+}
+
+impl KernelDesc {
+    pub fn new(op: OpClass, flops: f64, bytes: f64, grid: usize) -> KernelDesc {
+        KernelDesc {
+            op,
+            flops,
+            bytes,
+            grid,
+            tag: 0,
+        }
+    }
+
+    pub fn with_tag(mut self, tag: u32) -> KernelDesc {
+        self.tag = tag;
+        self
+    }
+
+    /// Arithmetic intensity, FLOP/byte.
+    pub fn intensity(&self) -> f64 {
+        if self.bytes <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.flops / self.bytes
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intensity() {
+        let k = KernelDesc::new(OpClass::GemmMlp, 2e12, 1e9, 512);
+        assert!((k.intensity() - 2000.0).abs() < 1e-9);
+        let z = KernelDesc::new(OpClass::Elementwise, 1.0, 0.0, 1);
+        assert!(z.intensity().is_infinite());
+    }
+
+    #[test]
+    fn labels_unique() {
+        use OpClass::*;
+        let all = [
+            GemmQkv, AttnPrefill, GemmOProj, GemmMlp, AttnDecode, GemmDecode, Elementwise,
+        ];
+        let labels: std::collections::HashSet<_> = all.iter().map(|o| o.label()).collect();
+        assert_eq!(labels.len(), all.len());
+    }
+
+    #[test]
+    fn decode_classification() {
+        assert!(OpClass::AttnDecode.is_decode());
+        assert!(OpClass::GemmDecode.is_decode());
+        assert!(!OpClass::GemmQkv.is_decode());
+        assert!(!OpClass::Elementwise.is_decode());
+    }
+}

@@ -1,0 +1,25 @@
+//! GPU substrate: an A100-like simulator with SM-masked streams.
+//!
+//! The paper's testbed — an A100 with MPS plus `libsmctrl` SM masking —
+//! does not exist in this environment, so we build it: a fluid
+//! discrete-event simulator in which kernels are (flops, bytes, grid)
+//! descriptors, streams serialize their kernels, SM masks restrict where
+//! a kernel's thread blocks may run, wave quantization (Eq. 1) idles tail
+//! SMs, partial-SM scaling follows the saturating curves of Fig. 7, and
+//! co-resident kernels contend for HBM bandwidth and shared SMs.
+//!
+//! Everything the Bullet scheduler observes (per-layer latencies under a
+//! given partition, utilization counters) comes out of this module; the
+//! performance *estimator* (`perf::`) never reads the simulator's ground
+//! truth constants — it must fit them by profiling, exactly as §3.2.2.
+
+pub mod kernel;
+pub mod roofline;
+pub mod simulator;
+pub mod stream;
+pub mod wave;
+
+pub use kernel::{KernelDesc, OpClass};
+pub use simulator::{Simulator, UtilSample};
+pub use stream::{SmMask, StreamId};
+pub use wave::wave_quantization_idle_ratio;

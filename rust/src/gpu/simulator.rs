@@ -1,0 +1,608 @@
+//! Fluid discrete-event GPU simulator with concurrent SM-masked streams.
+//!
+//! Physics:
+//! - each stream runs at most one kernel at a time (head-of-line), kernels
+//!   across streams co-run;
+//! - a kernel's *exclusive* SMs are its stream mask minus other running
+//!   streams' masks; SMs shared by `n` running kernels contribute `1/n`
+//!   each (hardware CKE shares SMs round-robin — §2.2.2's unpredictability
+//!   is exactly why Bullet prefers disjoint masks);
+//! - co-running kernels contend for HBM bandwidth: if aggregate demand
+//!   exceeds the peak, every kernel's memory term stretches by the
+//!   oversubscription ratio;
+//! - event boundaries (kernel start/finish, mask reconfiguration) trigger
+//!   a rate recomputation; between events progress is linear.
+//!
+//! The simulator integrates achieved FLOPs and bytes over time, giving the
+//! utilization counters behind Figs. 2, 4 and 12.
+
+use crate::config::GpuSpec;
+use crate::gpu::kernel::KernelDesc;
+use crate::gpu::roofline::GroundTruth;
+use crate::gpu::stream::{SmMask, Stream, StreamId};
+use crate::util::rng::Rng;
+use std::collections::VecDeque;
+
+/// A completed-kernel record.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub stream: StreamId,
+    pub kernel: KernelDesc,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Utilization integrated over a window.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct UtilSample {
+    /// Window length, seconds.
+    pub dt: f64,
+    /// FLOPs executed in the window.
+    pub flops: f64,
+    /// Bytes moved in the window.
+    pub bytes: f64,
+    /// Integral of busy-SM count over time (SM·s).
+    pub sm_busy: f64,
+}
+
+impl UtilSample {
+    /// Achieved compute utilization vs whole-GPU peak.
+    pub fn compute_util(&self, gpu: &GpuSpec) -> f64 {
+        if self.dt <= 0.0 {
+            return 0.0;
+        }
+        self.flops / self.dt / gpu.peak_flops
+    }
+
+    /// Achieved bandwidth utilization vs peak.
+    pub fn bandwidth_util(&self, gpu: &GpuSpec) -> f64 {
+        if self.dt <= 0.0 {
+            return 0.0;
+        }
+        self.bytes / self.dt / gpu.peak_bandwidth
+    }
+
+    /// Mean fraction of SMs occupied.
+    pub fn sm_occupancy(&self, gpu: &GpuSpec) -> f64 {
+        if self.dt <= 0.0 {
+            return 0.0;
+        }
+        self.sm_busy / self.dt / gpu.num_sms as f64
+    }
+
+    pub fn merge(&mut self, other: &UtilSample) {
+        self.dt += other.dt;
+        self.flops += other.flops;
+        self.bytes += other.bytes;
+        self.sm_busy += other.sm_busy;
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Running {
+    kernel: KernelDesc,
+    start: f64,
+    /// Remaining fraction of the kernel's work in [0,1].
+    remaining: f64,
+    /// Noise factor sampled at launch.
+    noise: f64,
+}
+
+#[derive(Debug)]
+struct StreamState {
+    stream: Stream,
+    queue: VecDeque<KernelDesc>,
+    running: Option<Running>,
+}
+
+/// The simulator.
+pub struct Simulator {
+    pub gt: GroundTruth,
+    clock: f64,
+    streams: Vec<StreamState>,
+    rng: Rng,
+    /// Run-correlated slowdown factor (see GroundTruth::run_noise_sigma).
+    run_noise: f64,
+    completions: Vec<Completion>,
+    window: UtilSample,
+    total: UtilSample,
+}
+
+impl Simulator {
+    pub fn new(gt: GroundTruth, seed: u64) -> Simulator {
+        let mut rng = Rng::new(seed);
+        let run_noise = if gt.run_noise_sigma > 0.0 {
+            rng.lognormal(0.0, gt.run_noise_sigma)
+        } else {
+            1.0
+        };
+        Simulator {
+            gt,
+            clock: 0.0,
+            streams: Vec::new(),
+            rng,
+            run_noise,
+            completions: Vec::new(),
+            window: UtilSample::default(),
+            total: UtilSample::default(),
+        }
+    }
+
+    pub fn gpu(&self) -> &GpuSpec {
+        &self.gt.gpu
+    }
+
+    pub fn now(&self) -> f64 {
+        self.clock
+    }
+
+    /// Create a stream bound to an SM mask; returns its handle.
+    pub fn create_stream(&mut self, mask: SmMask, label: &str) -> StreamId {
+        let id = StreamId(self.streams.len());
+        self.streams.push(StreamState {
+            stream: Stream::new(id, mask, label),
+            queue: VecDeque::new(),
+            running: None,
+        });
+        id
+    }
+
+    /// Re-mask a stream (pre-configured stream switching is modeled at the
+    /// resource-manager level; this supports MPS-quota-style baselines).
+    /// Applies to kernels *not yet started*.
+    pub fn set_stream_mask(&mut self, id: StreamId, mask: SmMask) {
+        self.streams[id.0].stream.mask = mask;
+    }
+
+    pub fn stream_mask(&self, id: StreamId) -> SmMask {
+        self.streams[id.0].stream.mask
+    }
+
+    /// Enqueue a kernel.
+    pub fn submit(&mut self, id: StreamId, kernel: KernelDesc) {
+        self.streams[id.0].queue.push_back(kernel);
+        self.try_start(id.0);
+    }
+
+    pub fn submit_all(&mut self, id: StreamId, kernels: impl IntoIterator<Item = KernelDesc>) {
+        for k in kernels {
+            self.submit(id, k);
+        }
+    }
+
+    /// Is the stream fully drained (no queue, nothing running)?
+    pub fn stream_idle(&self, id: StreamId) -> bool {
+        let s = &self.streams[id.0];
+        s.queue.is_empty() && s.running.is_none()
+    }
+
+    pub fn queue_len(&self, id: StreamId) -> usize {
+        let s = &self.streams[id.0];
+        s.queue.len() + s.running.is_some() as usize
+    }
+
+    /// Whether any work exists anywhere.
+    pub fn idle(&self) -> bool {
+        self.streams
+            .iter()
+            .all(|s| s.queue.is_empty() && s.running.is_none())
+    }
+
+    /// Drain accumulated completion records.
+    pub fn take_completions(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.completions)
+    }
+
+    /// Utilization accumulated since the last call (windowed counter).
+    pub fn take_util_window(&mut self) -> UtilSample {
+        std::mem::replace(&mut self.window, UtilSample::default())
+    }
+
+    /// Utilization since simulator creation.
+    pub fn total_util(&self) -> UtilSample {
+        self.total
+    }
+
+    fn try_start(&mut self, idx: usize) {
+        if self.streams[idx].running.is_none() {
+            if let Some(k) = self.streams[idx].queue.pop_front() {
+                let noise = if self.gt.noise_sigma > 0.0 {
+                    self.rng.lognormal(0.0, self.gt.noise_sigma)
+                } else {
+                    1.0
+                };
+                self.streams[idx].running = Some(Running {
+                    kernel: k,
+                    start: self.clock,
+                    remaining: 1.0,
+                    noise,
+                });
+            }
+        }
+    }
+
+    /// Effective SM count for each running kernel given mask overlaps.
+    fn effective_sms(&self) -> Vec<(usize, f64)> {
+        // (stream index, effective SMs)
+        let running: Vec<usize> = self
+            .streams
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.running.is_some())
+            .map(|(i, _)| i)
+            .collect();
+        let mut out = Vec::with_capacity(running.len());
+        for &i in &running {
+            let mi = self.streams[i].stream.mask;
+            // count sharers per SM: exclusive SMs count 1, shared count 1/n.
+            let mut eff = mi.count() as f64;
+            for &j in &running {
+                if j == i {
+                    continue;
+                }
+                let shared = mi.overlap(&self.streams[j].stream.mask) as f64;
+                // each shared SM is split; subtract the lost half (pairwise
+                // approximation — exact for the two-phase case we model).
+                eff -= shared * 0.5;
+            }
+            out.push((i, eff.max(1.0)));
+        }
+        out
+    }
+
+    /// Per-running-kernel progress rates (fraction of kernel work per
+    /// second) under the current contention state.
+    fn rates(&self) -> Vec<(usize, f64, f64, f64)> {
+        // (stream idx, rate, flops_rate, bytes_rate)
+        let eff = self.effective_sms();
+        if eff.is_empty() {
+            return Vec::new();
+        }
+        // First pass: solo times on effective SMs.
+        struct Tmp {
+            idx: usize,
+            tc: f64,
+            tb: f64,
+            noise: f64,
+            flops: f64,
+            bytes: f64,
+            sms: f64,
+        }
+        let mut tmp = Vec::with_capacity(eff.len());
+        for &(i, sms) in &eff {
+            let r = self.streams[i].running.as_ref().unwrap();
+            let sms_i = sms.round().max(1.0) as usize;
+            let tc = self.gt.compute_time(&r.kernel, sms_i) + self.gt.gpu.launch_overhead;
+            let tb = self.gt.memory_time(&r.kernel, sms_i);
+            tmp.push(Tmp {
+                idx: i,
+                tc,
+                tb,
+                noise: r.noise,
+                flops: r.kernel.flops,
+                bytes: r.kernel.bytes,
+                sms,
+            });
+        }
+        // Bandwidth contention: (a) hard cap — if aggregate demand exceeds
+        // peak, everyone's memory term stretches by the oversubscription
+        // ratio; (b) graded interference — even below the cap, concurrent
+        // HBM/L2 traffic degrades each other (row-buffer conflicts,
+        // partition camping): the memory term inflates by
+        // `1 + GAMMA * other_demand / peak`.
+        const GAMMA: f64 = 0.35;
+        let demands: Vec<f64> = tmp
+            .iter()
+            .map(|t| {
+                let solo = t.tc.max(t.tb);
+                if solo > 0.0 {
+                    t.bytes / solo
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let total_demand: f64 = demands.iter().sum();
+        let bw_scale = if total_demand > self.gt.gpu.peak_bandwidth {
+            self.gt.gpu.peak_bandwidth / total_demand
+        } else {
+            1.0
+        };
+        tmp.iter()
+            .zip(&demands)
+            .map(|(t, &demand)| {
+                let other = (total_demand - demand).max(0.0);
+                let interference = 1.0 + GAMMA * other / self.gt.gpu.peak_bandwidth;
+                let tb = t.tb * interference / bw_scale;
+                let t_eff = (t.tc.max(tb)) * t.noise * self.run_noise;
+                let rate = if t_eff > 0.0 { 1.0 / t_eff } else { f64::INFINITY };
+                (
+                    t.idx,
+                    rate,
+                    t.flops * rate,
+                    t.bytes * rate,
+                )
+            })
+            .map(|(i, r, fr, br)| (i, r, fr, br))
+            .collect()
+    }
+
+    fn busy_sms(&self) -> f64 {
+        self.effective_sms().iter().map(|(_, s)| s).sum()
+    }
+
+    /// Advance to the next kernel completion (or return false if idle).
+    pub fn step(&mut self) -> bool {
+        let rates = self.rates();
+        if rates.is_empty() {
+            return false;
+        }
+        // Time until first completion.
+        let mut dt = f64::INFINITY;
+        for &(i, rate, _, _) in &rates {
+            let rem = self.streams[i].running.as_ref().unwrap().remaining;
+            if rate > 0.0 {
+                dt = dt.min(rem / rate);
+            }
+        }
+        assert!(dt.is_finite() && dt >= 0.0, "simulator stuck: dt={dt}");
+        self.advance_by(dt, &rates);
+        true
+    }
+
+    /// Advance virtual time by exactly `dt_target` seconds (capped at the
+    /// next completion repeatedly), processing completions on the way.
+    pub fn run_for(&mut self, dt_target: f64) {
+        let deadline = self.clock + dt_target;
+        while self.clock < deadline - 1e-15 {
+            let rates = self.rates();
+            if rates.is_empty() {
+                // idle: jump straight to deadline
+                self.clock = deadline;
+                self.window.dt += 0.0;
+                return;
+            }
+            let mut dt = deadline - self.clock;
+            for &(i, rate, _, _) in &rates {
+                let rem = self.streams[i].running.as_ref().unwrap().remaining;
+                if rate > 0.0 {
+                    dt = dt.min(rem / rate);
+                }
+            }
+            self.advance_by(dt, &rates);
+        }
+    }
+
+    /// Run until a specific stream is fully drained.
+    pub fn run_until_stream_idle(&mut self, id: StreamId) {
+        while !self.stream_idle(id) {
+            if !self.step() {
+                break;
+            }
+        }
+    }
+
+    /// Run until every stream is drained.
+    pub fn run_until_idle(&mut self) {
+        while self.step() {}
+    }
+
+    fn advance_by(&mut self, dt: f64, rates: &[(usize, f64, f64, f64)]) {
+        let busy = self.busy_sms();
+        let mut flops = 0.0;
+        let mut bytes = 0.0;
+        let mut finished: Vec<usize> = Vec::new();
+        for &(i, rate, frate, brate) in rates {
+            let r = self.streams[i].running.as_mut().unwrap();
+            let progress = rate * dt;
+            flops += frate * dt;
+            bytes += brate * dt;
+            r.remaining -= progress;
+            if r.remaining <= 1e-12 {
+                finished.push(i);
+            }
+        }
+        self.clock += dt;
+        let sample = UtilSample {
+            dt,
+            flops,
+            bytes,
+            sm_busy: busy * dt,
+        };
+        self.window.merge(&sample);
+        self.total.merge(&sample);
+        for i in finished {
+            let r = self.streams[i].running.take().unwrap();
+            self.completions.push(Completion {
+                stream: StreamId(i),
+                kernel: r.kernel,
+                start: r.start,
+                end: self.clock,
+            });
+            self.try_start(i);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::kernel::OpClass;
+
+    fn sim() -> Simulator {
+        Simulator::new(GroundTruth::noiseless(GpuSpec::a100()), 1)
+    }
+
+    fn gemm(flops: f64) -> KernelDesc {
+        KernelDesc::new(OpClass::GemmMlp, flops, flops / 300.0, 1080)
+    }
+
+    fn mem_kernel(bytes: f64) -> KernelDesc {
+        KernelDesc::new(OpClass::AttnDecode, bytes, bytes, 108)
+    }
+
+    #[test]
+    fn single_kernel_duration_matches_roofline() {
+        let mut s = sim();
+        let st = s.create_stream(SmMask::first(108), "full");
+        let k = gemm(4e12);
+        let expect = s.gt.solo_time(&k, 108);
+        s.submit(st, k);
+        s.run_until_idle();
+        let done = s.take_completions();
+        assert_eq!(done.len(), 1);
+        let dur = done[0].end - done[0].start;
+        assert!((dur - expect).abs() / expect < 1e-9, "dur {dur} expect {expect}");
+    }
+
+    #[test]
+    fn stream_serializes() {
+        let mut s = sim();
+        let st = s.create_stream(SmMask::first(108), "full");
+        s.submit(st, gemm(1e12));
+        s.submit(st, gemm(1e12));
+        s.run_until_idle();
+        let done = s.take_completions();
+        assert_eq!(done.len(), 2);
+        assert!(done[1].start >= done[0].end - 1e-12);
+    }
+
+    #[test]
+    fn disjoint_streams_overlap() {
+        let mut s = sim();
+        let a = s.create_stream(SmMask::first(54), "a");
+        let b = s.create_stream(SmMask::last(54, 108), "b");
+        s.submit(a, gemm(2e12));
+        s.submit(b, gemm(2e12));
+        s.run_until_idle();
+        let done = s.take_completions();
+        assert_eq!(done.len(), 2);
+        // Both started at t=0 (concurrent), rather than serialized.
+        assert!(done[0].start == 0.0 && done[1].start == 0.0);
+    }
+
+    #[test]
+    fn compute_kernels_on_disjoint_masks_dont_contend() {
+        // High-intensity GEMMs barely touch bandwidth: co-running on
+        // disjoint halves should cost ~= solo-on-half time.
+        let mut s = sim();
+        let a = s.create_stream(SmMask::first(54), "a");
+        let b = s.create_stream(SmMask::last(54, 108), "b");
+        let k = gemm(2e12);
+        let solo_half = s.gt.solo_time(&k, 54);
+        s.submit(a, k.clone());
+        s.submit(b, k.clone());
+        s.run_until_idle();
+        let done = s.take_completions();
+        for c in &done {
+            let dur = c.end - c.start;
+            assert!((dur - solo_half).abs() / solo_half < 0.05, "dur {dur} vs {solo_half}");
+        }
+    }
+
+    #[test]
+    fn bandwidth_contention_slows_memory_kernels() {
+        let mut s = sim();
+        let a = s.create_stream(SmMask::first(54), "a");
+        let b = s.create_stream(SmMask::last(54, 108), "b");
+        let k = mem_kernel(4e9);
+        let solo_half = s.gt.solo_time(&k, 54);
+        s.submit(a, k.clone());
+        s.submit(b, k.clone());
+        s.run_until_idle();
+        let done = s.take_completions();
+        for c in &done {
+            let dur = c.end - c.start;
+            assert!(dur > solo_half * 1.1, "expected contention: {dur} vs {solo_half}");
+        }
+    }
+
+    #[test]
+    fn shared_sms_halve_throughput() {
+        // Two compute kernels on the SAME full mask co-run at ~half speed.
+        let mut s = sim();
+        let a = s.create_stream(SmMask::first(108), "a");
+        let b = s.create_stream(SmMask::first(108), "b");
+        let k = gemm(2e12);
+        let solo_full = s.gt.solo_time(&k, 108);
+        s.submit(a, k.clone());
+        s.submit(b, k.clone());
+        s.run_until_idle();
+        for c in s.take_completions() {
+            let dur = c.end - c.start;
+            // each sees ~54 effective SMs → roughly solo(54)
+            let expect = s.gt.solo_time(&k, 54);
+            assert!((dur - expect).abs() / expect < 0.1, "dur {dur} expect {expect}");
+            assert!(dur > solo_full * 1.5);
+        }
+    }
+
+    #[test]
+    fn run_for_advances_clock_when_idle() {
+        let mut s = sim();
+        s.run_for(0.5);
+        assert!((s.now() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_accounting_conserves_work() {
+        let mut s = sim();
+        let st = s.create_stream(SmMask::first(108), "full");
+        let k = gemm(4e12);
+        let flops = k.flops;
+        let bytes = k.bytes;
+        s.submit(st, k);
+        s.run_until_idle();
+        let u = s.total_util();
+        assert!((u.flops - flops).abs() / flops < 1e-6);
+        assert!((u.bytes - bytes).abs() / bytes < 1e-6);
+        assert!(u.compute_util(s.gpu()) <= 0.92 + 1e-9);
+    }
+
+    #[test]
+    fn window_counter_resets() {
+        let mut s = sim();
+        let st = s.create_stream(SmMask::first(108), "full");
+        s.submit(st, gemm(1e12));
+        s.run_until_idle();
+        let w1 = s.take_util_window();
+        assert!(w1.flops > 0.0);
+        let w2 = s.take_util_window();
+        assert_eq!(w2.flops, 0.0);
+        assert_eq!(w2.dt, 0.0);
+    }
+
+    #[test]
+    fn remask_applies_to_next_kernel() {
+        let mut s = sim();
+        let st = s.create_stream(SmMask::first(108), "x");
+        let k = gemm(2e12);
+        let t_full = s.gt.solo_time(&k, 108);
+        let t_half = s.gt.solo_time(&k, 54);
+        s.submit(st, k.clone());
+        s.run_until_idle();
+        s.set_stream_mask(st, SmMask::first(54));
+        s.submit(st, k.clone());
+        s.run_until_idle();
+        let done = s.take_completions();
+        let d0 = done[0].end - done[0].start;
+        let d1 = done[1].end - done[1].start;
+        assert!((d0 - t_full).abs() / t_full < 1e-9);
+        assert!((d1 - t_half).abs() / t_half < 1e-9);
+    }
+
+    #[test]
+    fn noise_reproducible_by_seed() {
+        let gt = GroundTruth::new(GpuSpec::a100());
+        let mut s1 = Simulator::new(gt.clone(), 99);
+        let mut s2 = Simulator::new(gt, 99);
+        for s in [&mut s1, &mut s2] {
+            let st = s.create_stream(SmMask::first(108), "x");
+            s.submit(st, gemm(1e12));
+            s.run_until_idle();
+        }
+        let a = s1.take_completions()[0].end;
+        let b = s2.take_completions()[0].end;
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,170 @@
+//! SM-masked task queues — the simulator analog of CUDA streams tagged
+//! with `libsmctrl_set_stream_mask` masks (§3.4.1).
+//!
+//! A mask is a bitset over SM indices with 2-SM allocation granularity.
+//! The resource manager pre-builds a palette of masked streams and the
+//! schedulers launch kernels onto them; kernels in one stream serialize,
+//! kernels in different streams may overlap (concurrent kernel execution).
+
+/// Bitmask over SMs (supports up to 192 SMs — A100's 108 and H100's 132 fit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SmMask {
+    bits: [u64; 3],
+}
+
+impl SmMask {
+    /// Empty mask (no SMs — kernels on it can never run).
+    pub fn empty() -> SmMask {
+        SmMask { bits: [0; 3] }
+    }
+
+    /// Mask of SMs `[lo, hi)`.
+    pub fn range(lo: usize, hi: usize) -> SmMask {
+        assert!(lo <= hi && hi <= 192, "SmMask::range({lo},{hi})");
+        let mut m = SmMask::empty();
+        for i in lo..hi {
+            m.set(i);
+        }
+        m
+    }
+
+    /// First `n` SMs.
+    pub fn first(n: usize) -> SmMask {
+        SmMask::range(0, n)
+    }
+
+    /// Last `n` of `total` SMs.
+    pub fn last(n: usize, total: usize) -> SmMask {
+        assert!(n <= total);
+        SmMask::range(total - n, total)
+    }
+
+    pub fn set(&mut self, i: usize) {
+        assert!(i < 192);
+        self.bits[i / 64] |= 1 << (i % 64);
+    }
+
+    pub fn contains(&self, i: usize) -> bool {
+        if i >= 192 {
+            return false;
+        }
+        self.bits[i / 64] & (1 << (i % 64)) != 0
+    }
+
+    /// Number of SMs in the mask.
+    pub fn count(&self) -> usize {
+        self.bits.iter().map(|b| b.count_ones() as usize).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bits.iter().all(|&b| b == 0)
+    }
+
+    pub fn intersect(&self, other: &SmMask) -> SmMask {
+        SmMask {
+            bits: [
+                self.bits[0] & other.bits[0],
+                self.bits[1] & other.bits[1],
+                self.bits[2] & other.bits[2],
+            ],
+        }
+    }
+
+    pub fn union(&self, other: &SmMask) -> SmMask {
+        SmMask {
+            bits: [
+                self.bits[0] | other.bits[0],
+                self.bits[1] | other.bits[1],
+                self.bits[2] | other.bits[2],
+            ],
+        }
+    }
+
+    /// SMs in self but not other.
+    pub fn minus(&self, other: &SmMask) -> SmMask {
+        SmMask {
+            bits: [
+                self.bits[0] & !other.bits[0],
+                self.bits[1] & !other.bits[1],
+                self.bits[2] & !other.bits[2],
+            ],
+        }
+    }
+
+    /// Number of SMs shared with `other`.
+    pub fn overlap(&self, other: &SmMask) -> usize {
+        self.intersect(other).count()
+    }
+}
+
+/// Opaque stream handle issued by the simulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StreamId(pub usize);
+
+/// A stream: an ordered queue of kernels bound to an SM mask.
+#[derive(Debug, Clone)]
+pub struct Stream {
+    pub id: StreamId,
+    pub mask: SmMask,
+    /// Human label ("prefill-54sm" etc.) for traces.
+    pub label: String,
+}
+
+impl Stream {
+    pub fn new(id: StreamId, mask: SmMask, label: &str) -> Stream {
+        Stream {
+            id,
+            mask,
+            label: label.to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn range_count() {
+        assert_eq!(SmMask::range(0, 108).count(), 108);
+        assert_eq!(SmMask::range(10, 20).count(), 10);
+        assert_eq!(SmMask::empty().count(), 0);
+        assert!(SmMask::empty().is_empty());
+    }
+
+    #[test]
+    fn first_last_disjoint_cover() {
+        let total = 108;
+        let p = SmMask::first(60);
+        let d = SmMask::last(48, total);
+        assert_eq!(p.overlap(&d), 0);
+        assert_eq!(p.union(&d).count(), 108);
+    }
+
+    #[test]
+    fn contains_boundaries() {
+        let m = SmMask::range(64, 70); // crosses the u64 word boundary
+        assert!(!m.contains(63));
+        assert!(m.contains(64));
+        assert!(m.contains(69));
+        assert!(!m.contains(70));
+        assert!(!m.contains(500));
+    }
+
+    #[test]
+    fn set_operations() {
+        let a = SmMask::range(0, 10);
+        let b = SmMask::range(5, 15);
+        assert_eq!(a.intersect(&b).count(), 5);
+        assert_eq!(a.union(&b).count(), 15);
+        assert_eq!(a.minus(&b).count(), 5);
+        assert_eq!(a.overlap(&b), 5);
+    }
+
+    #[test]
+    fn word_boundary_128() {
+        let m = SmMask::range(120, 136);
+        assert_eq!(m.count(), 16);
+        assert!(m.contains(127) && m.contains(128) && m.contains(135));
+    }
+}

@@ -1,0 +1,270 @@
+//! Paged KV-cache manager (PagedAttention-style, §3.5.2).
+//!
+//! A single pool of fixed-size token blocks is shared by the prefill and
+//! decode engines — the simulator analog of the paper's CUDA-IPC-shared
+//! GPU memory pool.  Prefill allocates a block table for a request;
+//! migration to decode is copy-free (the block table handle moves, the
+//! data stays).  The live PJRT runtime uses the same manager with an
+//! actual `Vec<f32>` backing store per block (see `runtime::executor`).
+
+use std::collections::BTreeMap;
+
+/// Tokens per KV block (vLLM uses 16).
+pub const BLOCK_TOKENS: usize = 16;
+
+/// Errors from the pool.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum KvError {
+    /// Not enough free blocks for the allocation.
+    OutOfMemory { requested_blocks: usize, free_blocks: usize },
+    /// Unknown sequence handle.
+    UnknownSeq(u64),
+}
+
+impl std::fmt::Display for KvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvError::OutOfMemory {
+                requested_blocks,
+                free_blocks,
+            } => write!(f, "KV OOM: need {requested_blocks} blocks, {free_blocks} free"),
+            KvError::UnknownSeq(id) => write!(f, "unknown KV sequence {id}"),
+        }
+    }
+}
+
+impl std::error::Error for KvError {}
+
+/// Block table of one sequence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SeqCache {
+    pub seq_id: u64,
+    /// Physical block indices, in token order.
+    pub blocks: Vec<usize>,
+    /// Valid tokens stored.
+    pub len: usize,
+}
+
+impl SeqCache {
+    /// Physical (block, offset) location of token `i`.
+    pub fn locate(&self, i: usize) -> Option<(usize, usize)> {
+        if i >= self.len {
+            return None;
+        }
+        Some((self.blocks[i / BLOCK_TOKENS], i % BLOCK_TOKENS))
+    }
+}
+
+/// The shared paged pool.
+#[derive(Debug)]
+pub struct KvPool {
+    capacity_blocks: usize,
+    free: Vec<usize>,
+    seqs: BTreeMap<u64, SeqCache>,
+    /// High-water mark of allocated blocks (for reporting).
+    peak_used: usize,
+}
+
+impl KvPool {
+    /// Pool sized in tokens (rounded down to whole blocks).
+    pub fn new(capacity_tokens: usize) -> KvPool {
+        let blocks = capacity_tokens / BLOCK_TOKENS;
+        KvPool {
+            capacity_blocks: blocks,
+            free: (0..blocks).rev().collect(),
+            seqs: BTreeMap::new(),
+            peak_used: 0,
+        }
+    }
+
+    pub fn capacity_tokens(&self) -> usize {
+        self.capacity_blocks * BLOCK_TOKENS
+    }
+
+    pub fn free_tokens(&self) -> usize {
+        self.free.len() * BLOCK_TOKENS
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.capacity_blocks - self.free.len()
+    }
+
+    pub fn peak_used_blocks(&self) -> usize {
+        self.peak_used
+    }
+
+    /// Tokens cached across all live sequences.
+    pub fn cached_tokens(&self) -> usize {
+        self.seqs.values().map(|s| s.len).sum()
+    }
+
+    pub fn num_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn contains(&self, seq_id: u64) -> bool {
+        self.seqs.contains_key(&seq_id)
+    }
+
+    pub fn get(&self, seq_id: u64) -> Option<&SeqCache> {
+        self.seqs.get(&seq_id)
+    }
+
+    /// Can `tokens` more tokens be stored for (possibly new) `seq_id`?
+    pub fn can_grow(&self, seq_id: u64, tokens: usize) -> bool {
+        let cur = self.seqs.get(&seq_id);
+        let cur_len = cur.map(|s| s.len).unwrap_or(0);
+        let cur_blocks = cur.map(|s| s.blocks.len()).unwrap_or(0);
+        let need_blocks = (cur_len + tokens).div_ceil(BLOCK_TOKENS) - cur_blocks;
+        need_blocks <= self.free.len()
+    }
+
+    /// Allocate (or extend) a sequence by `tokens` tokens.
+    pub fn grow(&mut self, seq_id: u64, tokens: usize) -> Result<(), KvError> {
+        let (cur_len, cur_blocks) = match self.seqs.get(&seq_id) {
+            Some(s) => (s.len, s.blocks.len()),
+            None => (0, 0),
+        };
+        let need_blocks = (cur_len + tokens).div_ceil(BLOCK_TOKENS) - cur_blocks;
+        if need_blocks > self.free.len() {
+            return Err(KvError::OutOfMemory {
+                requested_blocks: need_blocks,
+                free_blocks: self.free.len(),
+            });
+        }
+        let entry = self.seqs.entry(seq_id).or_insert(SeqCache {
+            seq_id,
+            blocks: Vec::new(),
+            len: 0,
+        });
+        for _ in 0..need_blocks {
+            entry.blocks.push(self.free.pop().unwrap());
+        }
+        entry.len += tokens;
+        self.peak_used = self.peak_used.max(self.capacity_blocks - self.free.len());
+        Ok(())
+    }
+
+    /// Release a sequence, returning its blocks to the pool.
+    pub fn release(&mut self, seq_id: u64) -> Result<(), KvError> {
+        let s = self.seqs.remove(&seq_id).ok_or(KvError::UnknownSeq(seq_id))?;
+        self.free.extend(s.blocks);
+        Ok(())
+    }
+
+    /// Copy-free migration marker: the paper moves a finished prefill to
+    /// the decode engine by handing over indices (§3.5.1).  In this
+    /// manager both engines share the pool, so migration is a no-op
+    /// lookup that simply validates the handle exists.
+    pub fn migrate(&self, seq_id: u64) -> Result<&SeqCache, KvError> {
+        self.seqs.get(&seq_id).ok_or(KvError::UnknownSeq(seq_id))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grow_and_release_roundtrip() {
+        let mut p = KvPool::new(16 * 10); // 10 blocks
+        p.grow(1, 40).unwrap(); // 3 blocks (ceil 40/16)
+        assert_eq!(p.used_blocks(), 3);
+        assert_eq!(p.get(1).unwrap().len, 40);
+        p.release(1).unwrap();
+        assert_eq!(p.used_blocks(), 0);
+        assert_eq!(p.free_tokens(), 160);
+    }
+
+    #[test]
+    fn incremental_growth_reuses_partial_block() {
+        let mut p = KvPool::new(16 * 10);
+        p.grow(1, 10).unwrap(); // 1 block
+        assert_eq!(p.used_blocks(), 1);
+        p.grow(1, 6).unwrap(); // fills to exactly 16 — still 1 block
+        assert_eq!(p.used_blocks(), 1);
+        p.grow(1, 1).unwrap(); // spills into block 2
+        assert_eq!(p.used_blocks(), 2);
+        assert_eq!(p.get(1).unwrap().len, 17);
+    }
+
+    #[test]
+    fn oom_detected_and_state_unchanged() {
+        let mut p = KvPool::new(16 * 2);
+        p.grow(1, 16).unwrap();
+        let err = p.grow(2, 32).unwrap_err();
+        assert!(matches!(err, KvError::OutOfMemory { requested_blocks: 2, free_blocks: 1 }));
+        // failed grow must not leak/alter state
+        assert_eq!(p.used_blocks(), 1);
+        assert!(!p.contains(2));
+    }
+
+    #[test]
+    fn can_grow_matches_grow() {
+        let mut p = KvPool::new(16 * 4);
+        assert!(p.can_grow(1, 64));
+        assert!(!p.can_grow(1, 65));
+        p.grow(1, 60).unwrap();
+        assert!(p.can_grow(1, 4)); // block 4 has 4 slots left
+        assert!(!p.can_grow(1, 5));
+    }
+
+    #[test]
+    fn locate_token() {
+        let mut p = KvPool::new(16 * 4);
+        p.grow(7, 20).unwrap();
+        let s = p.get(7).unwrap();
+        let (b0, o0) = s.locate(0).unwrap();
+        let (b1, o1) = s.locate(17).unwrap();
+        assert_eq!(o0, 0);
+        assert_eq!(o1, 1);
+        assert_ne!(b0, b1);
+        assert!(s.locate(20).is_none());
+    }
+
+    #[test]
+    fn release_unknown_errors() {
+        let mut p = KvPool::new(160);
+        assert_eq!(p.release(9), Err(KvError::UnknownSeq(9)));
+    }
+
+    #[test]
+    fn migrate_is_copy_free_lookup() {
+        let mut p = KvPool::new(160);
+        p.grow(3, 5).unwrap();
+        let blocks_before = p.get(3).unwrap().blocks.clone();
+        let m = p.migrate(3).unwrap();
+        assert_eq!(m.blocks, blocks_before);
+        assert!(p.migrate(4).is_err());
+    }
+
+    #[test]
+    fn no_block_double_allocation() {
+        let mut p = KvPool::new(16 * 8);
+        p.grow(1, 64).unwrap();
+        p.grow(2, 64).unwrap();
+        let b1 = &p.get(1).unwrap().blocks;
+        let b2 = &p.get(2).unwrap().blocks;
+        for b in b1 {
+            assert!(!b2.contains(b), "block {b} allocated twice");
+        }
+    }
+
+    #[test]
+    fn peak_tracking() {
+        let mut p = KvPool::new(16 * 8);
+        p.grow(1, 64).unwrap();
+        p.release(1).unwrap();
+        p.grow(2, 16).unwrap();
+        assert_eq!(p.peak_used_blocks(), 4);
+    }
+
+    #[test]
+    fn cached_tokens_sum() {
+        let mut p = KvPool::new(16 * 8);
+        p.grow(1, 10).unwrap();
+        p.grow(2, 30).unwrap();
+        assert_eq!(p.cached_tokens(), 40);
+        assert_eq!(p.num_seqs(), 2);
+    }
+}

@@ -1,0 +1,30 @@
+//! Bullet: boosting GPU utilization for LLM serving via dynamic
+//! spatial-temporal orchestration — a full reproduction of the paper's
+//! system as a three-layer Rust + JAX + Pallas stack.
+//!
+//! Layers:
+//! - **L3 (this crate)**: the serving coordinator — SLO-aware scheduler,
+//!   computational resource manager, concurrent prefill/decode engines —
+//!   plus every substrate the paper depends on (an A100-like GPU simulator
+//!   with SM-masked streams, paged KV cache, workload generators, and the
+//!   chunked-prefill / NanoFlow / static-partition baselines).
+//! - **L2 (python/compile/model.py)**: a Llama-style transformer in JAX,
+//!   AOT-lowered to HLO text artifacts executed here via PJRT.
+//! - **L1 (python/compile/kernels/)**: Pallas attention kernels called by
+//!   L2, validated against a pure-jnp oracle.
+
+pub mod util;
+pub mod config;
+pub mod gpu;
+pub mod model;
+pub mod perf;
+pub mod kvcache;
+pub mod sched;
+pub mod resource;
+pub mod engine;
+pub mod coordinator;
+pub mod baselines;
+pub mod workload;
+pub mod metrics;
+pub mod runtime;
+pub mod testing;

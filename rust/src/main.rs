@@ -1,0 +1,198 @@
+//! Bullet CLI — launcher for the serving system.
+//!
+//! ```text
+//! bullet serve   [--workload sharegpt|azure-code|arxiv-summary] [--rate R]
+//!                [--requests N] [--system bullet|vllm-1024|sglang-1024|
+//!                 sglang-2048|nanoflow] [--profile coarse|paper] [--seed S]
+//! bullet live    [--requests N] [--artifacts DIR]   # real model via PJRT
+//! bullet profile [--grid coarse|paper]              # offline §3.2.2 pass
+//! bullet info                                        # config + artifact info
+//! ```
+
+use bullet::baselines::{run_system, System};
+use bullet::config::{ServingConfig, SloSpec};
+use bullet::coordinator::{BuildOptions, BulletServer, Tokenizer};
+use bullet::engine::live_engine::{serve_live, LiveRequest};
+use bullet::metrics::summarize;
+use bullet::runtime::{ModelMeta, ModelRuntime};
+use bullet::util::cli::Args;
+use bullet::util::tbl::{f, ms, Table};
+use bullet::workload::{generate_n_requests, Dataset};
+use std::path::PathBuf;
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("serve") => serve(&args),
+        Some("live") => live(&args),
+        Some("profile") => profile_cmd(&args),
+        Some("info") => info(),
+        _ => {
+            eprintln!("{}", HELP);
+            std::process::exit(2);
+        }
+    }
+}
+
+const HELP: &str = "bullet — spatial-temporal LLM serving (paper reproduction)
+
+subcommands:
+  serve    run a simulated serving experiment (A100 + Llama-3.1-8B scale)
+  live     serve the real tiny model via PJRT (requires `make artifacts`)
+  profile  run the offline profiling pass and report estimator accuracy
+  info     print configuration and artifact status
+
+common flags: --workload NAME --rate R --requests N --seed S
+serve flags:  --system bullet|vllm-1024|sglang-1024|sglang-2048|nanoflow
+              --profile coarse|paper";
+
+fn dataset_and_slo(args: &Args) -> (Dataset, SloSpec) {
+    let name = args.get_or("workload", "sharegpt");
+    let ds = Dataset::by_name(name).unwrap_or_else(|| {
+        eprintln!("unknown workload '{name}'");
+        std::process::exit(2);
+    });
+    let slo = match name {
+        "azure-code" => SloSpec::azure_code(),
+        "arxiv-summary" => SloSpec::arxiv_summary(),
+        _ => SloSpec::sharegpt(),
+    };
+    (ds, slo)
+}
+
+fn serve(args: &Args) {
+    let (ds, slo) = dataset_and_slo(args);
+    let rate = args.get_f64("rate", 10.0);
+    let n = args.get_usize("requests", 200);
+    let seed = args.get_u64("seed", 42);
+    let cfg = ServingConfig { slo, ..ServingConfig::default() };
+
+    let build = match args.get_or("profile", "coarse") {
+        "paper" => BuildOptions::with_paper_profiling(&cfg),
+        "none" => BuildOptions::default(),
+        _ => BuildOptions::with_coarse_profiling(&cfg),
+    };
+    eprintln!("building server (profiling: {})...", args.get_or("profile", "coarse"));
+    let server = BulletServer::build(cfg.clone(), build);
+    let trace = generate_n_requests(&ds, rate, n, seed);
+
+    let sys = match args.get_or("system", "bullet") {
+        "bullet" => System::Bullet,
+        "vllm-1024" => System::Vllm1024,
+        "sglang-1024" => System::Sglang1024,
+        "sglang-2048" => System::Sglang2048,
+        "nanoflow" => System::Nanoflow,
+        other => {
+            eprintln!("unknown system '{other}'");
+            std::process::exit(2);
+        }
+    };
+    eprintln!("serving {} requests of {} at {} req/s with {}...", n, ds.name, rate, sys.label());
+    let records = run_system(sys, &cfg, server.perf(), server.ground_truth(), &trace, seed);
+    let s = summarize(&records, &cfg.slo, None);
+
+    let mut t = Table::new(&format!("{} on {} @ {} req/s", sys.label(), ds.name, rate))
+        .header(&["metric", "value"]);
+    t.row(&["requests".to_string(), s.n_requests.to_string()]);
+    t.row(&["mean TTFT (ms)".to_string(), ms(s.mean_ttft)]);
+    t.row(&["P90 TTFT (ms)".to_string(), ms(s.p90_ttft)]);
+    t.row(&["mean TPOT (ms)".to_string(), ms(s.mean_tpot)]);
+    t.row(&["P90 TPOT (ms)".to_string(), ms(s.p90_tpot)]);
+    t.row(&["throughput (tok/s)".to_string(), f(s.throughput_tok_s, 1)]);
+    t.row(&["SLO attainment".to_string(), f(s.slo_attainment * 100.0, 1) + "%"]);
+    t.print();
+}
+
+fn live(args: &Args) {
+    let n = args.get_usize("requests", 8);
+    let seed = args.get_u64("seed", 7);
+    let dir = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(ModelMeta::default_dir);
+    eprintln!("loading artifacts from {} ...", dir.display());
+    let rt = ModelRuntime::load(&dir, seed).unwrap_or_else(|e| {
+        eprintln!("failed to load runtime: {e:#}");
+        std::process::exit(1);
+    });
+    let vocab = rt.engine.meta.vocab_size;
+    let tok = Tokenizer::new(vocab);
+    let prompts = [
+        "Explain spatial-temporal GPU sharing.",
+        "Write a haiku about SM masks.",
+        "What limits chunked prefill?",
+        "How do prefill and decode differ?",
+    ];
+    let trace: Vec<LiveRequest> = (0..n as u64)
+        .map(|i| LiveRequest {
+            id: i,
+            arrival: i as f64 * 0.05,
+            prompt: tok.encode(prompts[i as usize % prompts.len()]),
+            output_len: 12,
+        })
+        .collect();
+    let (records, stats) = serve_live(rt, trace).unwrap();
+    let slo = SloSpec::sharegpt();
+    let s = summarize(&records, &slo, None);
+    let mut t = Table::new("live serving (tiny model, PJRT CPU)").header(&["metric", "value"]);
+    t.row(&["requests".to_string(), s.n_requests.to_string()]);
+    t.row(&["mean TTFT (ms)".to_string(), ms(s.mean_ttft)]);
+    t.row(&["mean TPOT (ms)".to_string(), ms(s.mean_tpot)]);
+    t.row(&["throughput (tok/s)".to_string(), f(s.throughput_tok_s, 1)]);
+    t.row(&["decode iterations".to_string(), stats.decode_iterations.to_string()]);
+    t.row(&["max decode batch".to_string(), stats.max_batch_seen.to_string()]);
+    t.print();
+}
+
+fn profile_cmd(args: &Args) {
+    let cfg = ServingConfig::default();
+    let build = match args.get_or("grid", "coarse") {
+        "paper" => BuildOptions::with_paper_profiling(&cfg),
+        _ => BuildOptions::with_coarse_profiling(&cfg),
+    };
+    eprintln!("profiling ({})...", args.get_or("grid", "coarse"));
+    let t0 = std::time::Instant::now();
+    let server = BulletServer::build(cfg, build);
+    let dt = t0.elapsed().as_secs_f64();
+    let pm = server.perf();
+    let mut t = Table::new("offline profiling (§3.2.2)").header(&["quantity", "value"]);
+    t.row(&["wall time (s)".to_string(), f(dt, 2)]);
+    t.row(&["contention p_c".to_string(), f(pm.p_c, 3)]);
+    t.row(&["contention p_b".to_string(), f(pm.p_b, 3)]);
+    t.print();
+}
+
+fn info() {
+    let cfg = ServingConfig::default();
+    let mut t = Table::new("bullet configuration").header(&["key", "value"]);
+    t.row(&[
+        "GPU".to_string(),
+        format!(
+            "{} SMs, {:.0} TFLOPS, {:.1} TB/s",
+            cfg.gpu.num_sms,
+            cfg.gpu.peak_flops / 1e12,
+            cfg.gpu.peak_bandwidth / 1e12
+        ),
+    ]);
+    t.row(&["model".to_string(), cfg.model.name.clone()]);
+    t.row(&[
+        "params".to_string(),
+        format!("{:.2} B", cfg.model.param_count() as f64 / 1e9),
+    ]);
+    t.row(&[
+        "KV capacity (tokens)".to_string(),
+        cfg.kv_capacity_tokens.to_string(),
+    ]);
+    let dir = ModelMeta::default_dir();
+    let status = match ModelMeta::load(&dir) {
+        Ok(m) => format!(
+            "ok: {} weights, prefill {:?}, decode {:?}",
+            m.weights.len(),
+            m.prefill_buckets,
+            m.decode_buckets
+        ),
+        Err(_) => "missing (run `make artifacts`)".to_string(),
+    };
+    t.row(&["artifacts".to_string(), status]);
+    t.print();
+}

@@ -1,0 +1,198 @@
+//! Serving metrics: TTFT, TPOT, normalized TTFT, throughput, goodput /
+//! SLO attainment, plus the timeline recorder behind Fig. 12.
+
+pub mod timeline;
+
+use crate::config::SloSpec;
+use crate::util::stats;
+
+/// Final per-request measurements.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub arrival: f64,
+    pub input_len: usize,
+    pub output_len: usize,
+    /// Time the first output token was produced (absolute).
+    pub first_token_time: f64,
+    /// Time the final token was produced (absolute).
+    pub finish_time: f64,
+    /// Time the prefill started executing (for queueing-delay analysis).
+    pub prefill_start: f64,
+}
+
+impl RequestRecord {
+    pub fn ttft(&self) -> f64 {
+        self.first_token_time - self.arrival
+    }
+
+    /// TTFT per input token (paper's "normalized input latency"), seconds.
+    pub fn norm_ttft(&self) -> f64 {
+        self.ttft() / self.input_len.max(1) as f64
+    }
+
+    /// Mean time per output token after the first, seconds.
+    pub fn tpot(&self) -> f64 {
+        if self.output_len <= 1 {
+            return 0.0;
+        }
+        (self.finish_time - self.first_token_time) / (self.output_len - 1) as f64
+    }
+
+    pub fn queueing_delay(&self) -> f64 {
+        self.prefill_start - self.arrival
+    }
+
+    pub fn e2e_latency(&self) -> f64 {
+        self.finish_time - self.arrival
+    }
+
+    /// Both phase SLOs met (goodput definition, §4.1).
+    pub fn meets_slo(&self, slo: &SloSpec) -> bool {
+        self.ttft() <= slo.ttft_budget(self.input_len) && self.tpot() <= slo.tpot_budget()
+    }
+}
+
+/// Aggregated results for one serving run.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub n_requests: usize,
+    pub duration: f64,
+    pub mean_ttft: f64,
+    pub p90_ttft: f64,
+    pub p99_ttft: f64,
+    pub mean_norm_ttft: f64,
+    pub mean_tpot: f64,
+    pub p90_tpot: f64,
+    pub mean_queueing: f64,
+    /// Output tokens per second over the run.
+    pub throughput_tok_s: f64,
+    /// Requests per second completed.
+    pub throughput_req_s: f64,
+    /// Fraction of requests meeting both SLOs.
+    pub slo_attainment: f64,
+    pub mean_e2e: f64,
+}
+
+/// Summarize a completed run.  `duration` defaults to the span from first
+/// arrival to last finish when `None`.
+pub fn summarize(records: &[RequestRecord], slo: &SloSpec, duration: Option<f64>) -> RunSummary {
+    assert!(!records.is_empty(), "summarize() on empty run");
+    let ttfts: Vec<f64> = records.iter().map(|r| r.ttft()).collect();
+    let norm_ttfts: Vec<f64> = records.iter().map(|r| r.norm_ttft()).collect();
+    let tpots: Vec<f64> = records
+        .iter()
+        .filter(|r| r.output_len > 1)
+        .map(|r| r.tpot())
+        .collect();
+    let queueing: Vec<f64> = records.iter().map(|r| r.queueing_delay()).collect();
+    let e2e: Vec<f64> = records.iter().map(|r| r.e2e_latency()).collect();
+    let total_tokens: usize = records.iter().map(|r| r.output_len).sum();
+    let start = records
+        .iter()
+        .map(|r| r.arrival)
+        .fold(f64::INFINITY, f64::min);
+    let end = records
+        .iter()
+        .map(|r| r.finish_time)
+        .fold(f64::NEG_INFINITY, f64::max);
+    let duration = duration.unwrap_or(end - start).max(1e-9);
+    let met = records.iter().filter(|r| r.meets_slo(slo)).count();
+    RunSummary {
+        n_requests: records.len(),
+        duration,
+        mean_ttft: stats::mean(&ttfts),
+        p90_ttft: stats::percentile(&ttfts, 90.0),
+        p99_ttft: stats::percentile(&ttfts, 99.0),
+        mean_norm_ttft: stats::mean(&norm_ttfts),
+        mean_tpot: if tpots.is_empty() { 0.0 } else { stats::mean(&tpots) },
+        p90_tpot: if tpots.is_empty() { 0.0 } else { stats::percentile(&tpots, 90.0) },
+        mean_queueing: stats::mean(&queueing),
+        throughput_tok_s: total_tokens as f64 / duration,
+        throughput_req_s: records.len() as f64 / duration,
+        slo_attainment: met as f64 / records.len() as f64,
+        mean_e2e: stats::mean(&e2e),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(arrival: f64, prefill_start: f64, first: f64, finish: f64, il: usize, ol: usize) -> RequestRecord {
+        RequestRecord {
+            id: 0,
+            arrival,
+            input_len: il,
+            output_len: ol,
+            first_token_time: first,
+            finish_time: finish,
+            prefill_start,
+        }
+    }
+
+    #[test]
+    fn ttft_tpot_basic() {
+        let r = rec(1.0, 1.2, 1.5, 2.5, 100, 11);
+        assert!((r.ttft() - 0.5).abs() < 1e-12);
+        assert!((r.tpot() - 0.1).abs() < 1e-12);
+        assert!((r.norm_ttft() - 0.005).abs() < 1e-12);
+        assert!((r.queueing_delay() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_token_output_tpot_zero() {
+        let r = rec(0.0, 0.0, 0.2, 0.2, 10, 1);
+        assert_eq!(r.tpot(), 0.0);
+    }
+
+    #[test]
+    fn slo_check() {
+        let slo = SloSpec {
+            norm_ttft_ms_per_token: 2.0,
+            tpot_ms: 100.0,
+        };
+        // budget for 100 tokens: 0.2 s TTFT, 0.1 s TPOT
+        let ok = rec(0.0, 0.0, 0.15, 1.0, 100, 11); // tpot 0.085
+        let bad_ttft = rec(0.0, 0.0, 0.5, 1.0, 100, 11);
+        let bad_tpot = rec(0.0, 0.0, 0.1, 3.0, 100, 11);
+        assert!(ok.meets_slo(&slo));
+        assert!(!bad_ttft.meets_slo(&slo));
+        assert!(!bad_tpot.meets_slo(&slo));
+    }
+
+    #[test]
+    fn summary_throughput() {
+        let slo = SloSpec::sharegpt();
+        let records = vec![
+            rec(0.0, 0.0, 0.1, 1.0, 50, 10),
+            rec(0.5, 0.6, 0.7, 2.0, 50, 30),
+        ];
+        let s = summarize(&records, &slo, Some(2.0));
+        assert_eq!(s.n_requests, 2);
+        assert!((s.throughput_tok_s - 20.0).abs() < 1e-9);
+        assert!((s.throughput_req_s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_duration_inferred() {
+        let slo = SloSpec::sharegpt();
+        let records = vec![rec(1.0, 1.0, 1.5, 3.0, 10, 5)];
+        let s = summarize(&records, &slo, None);
+        assert!((s.duration - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn attainment_fraction() {
+        let slo = SloSpec {
+            norm_ttft_ms_per_token: 2.0,
+            tpot_ms: 100.0,
+        };
+        let records = vec![
+            rec(0.0, 0.0, 0.1, 0.5, 100, 5),  // ok
+            rec(0.0, 0.0, 5.0, 9.0, 100, 5),  // ttft violated
+        ];
+        let s = summarize(&records, &slo, None);
+        assert!((s.slo_attainment - 0.5).abs() < 1e-12);
+    }
+}

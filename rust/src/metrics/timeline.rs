@@ -1,0 +1,152 @@
+//! Timeline recording: time-bucketed samples of system state (prefill SM
+//! allocation, concurrent tokens, waiting queue depth, utilization) —
+//! the raw data behind the paper's Fig. 12.
+
+/// One sampled instant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimelineSample {
+    pub t: f64,
+    /// SMs currently provisioned to prefill.
+    pub prefill_sms: usize,
+    /// SMs currently provisioned to decode.
+    pub decode_sms: usize,
+    /// Tokens being prefilled this instant (0 when no active prefill).
+    pub prefill_tokens: usize,
+    /// Active decode batch size.
+    pub decode_batch: usize,
+    /// Requests waiting for prefill.
+    pub waiting: usize,
+    /// Whole-GPU compute utilization over the last window.
+    pub compute_util: f64,
+    /// Bandwidth utilization over the last window.
+    pub bandwidth_util: f64,
+}
+
+/// Append-only timeline.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    samples: Vec<TimelineSample>,
+}
+
+impl Timeline {
+    pub fn new() -> Timeline {
+        Timeline::default()
+    }
+
+    pub fn push(&mut self, s: TimelineSample) {
+        debug_assert!(
+            self.samples.last().map(|p| p.t <= s.t).unwrap_or(true),
+            "timeline must be monotone"
+        );
+        self.samples.push(s);
+    }
+
+    pub fn samples(&self) -> &[TimelineSample] {
+        &self.samples
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Resample onto a uniform grid (nearest previous sample), for plotting.
+    pub fn resample(&self, dt: f64) -> Vec<TimelineSample> {
+        if self.samples.is_empty() {
+            return Vec::new();
+        }
+        let t0 = self.samples[0].t;
+        let t1 = self.samples.last().unwrap().t;
+        let mut out = Vec::new();
+        let mut idx = 0;
+        let mut t = t0;
+        while t <= t1 {
+            while idx + 1 < self.samples.len() && self.samples[idx + 1].t <= t {
+                idx += 1;
+            }
+            let mut s = self.samples[idx];
+            s.t = t;
+            out.push(s);
+            t += dt;
+        }
+        out
+    }
+
+    /// Mean of a field over the recorded span (duration-weighted).
+    pub fn mean_of(&self, f: impl Fn(&TimelineSample) -> f64) -> f64 {
+        if self.samples.len() < 2 {
+            return self.samples.first().map(|s| f(s)).unwrap_or(f64::NAN);
+        }
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for w in self.samples.windows(2) {
+            let dt = w[1].t - w[0].t;
+            num += f(&w[0]) * dt;
+            den += dt;
+        }
+        if den <= 0.0 {
+            f(&self.samples[0])
+        } else {
+            num / den
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(t: f64, sms: usize, waiting: usize) -> TimelineSample {
+        TimelineSample {
+            t,
+            prefill_sms: sms,
+            decode_sms: 108 - sms,
+            prefill_tokens: 0,
+            decode_batch: 0,
+            waiting,
+            compute_util: 0.0,
+            bandwidth_util: 0.0,
+        }
+    }
+
+    #[test]
+    fn push_and_len() {
+        let mut tl = Timeline::new();
+        assert!(tl.is_empty());
+        tl.push(s(0.0, 54, 0));
+        tl.push(s(1.0, 84, 2));
+        assert_eq!(tl.len(), 2);
+    }
+
+    #[test]
+    fn resample_uniform() {
+        let mut tl = Timeline::new();
+        tl.push(s(0.0, 10, 0));
+        tl.push(s(1.0, 20, 1));
+        tl.push(s(3.0, 30, 2));
+        let r = tl.resample(1.0);
+        assert_eq!(r.len(), 4);
+        assert_eq!(r[0].prefill_sms, 10);
+        assert_eq!(r[1].prefill_sms, 20);
+        assert_eq!(r[2].prefill_sms, 20); // holds previous value at t=2
+        assert_eq!(r[3].prefill_sms, 30);
+    }
+
+    #[test]
+    fn weighted_mean() {
+        let mut tl = Timeline::new();
+        tl.push(s(0.0, 100, 0));
+        tl.push(s(1.0, 0, 0)); // value 100 held for 1s
+        tl.push(s(3.0, 0, 0)); // value 0 held for 2s
+        let m = tl.mean_of(|x| x.prefill_sms as f64);
+        assert!((m - 100.0 / 3.0).abs() < 1e-9, "{m}");
+    }
+
+    #[test]
+    fn empty_resample() {
+        assert!(Timeline::new().resample(0.5).is_empty());
+    }
+}

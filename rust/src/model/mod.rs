@@ -1,0 +1,6 @@
+//! Analytical transformer cost model: turns (phase, shape) into the
+//! kernel descriptors the GPU simulator executes.
+
+pub mod phases;
+
+pub use phases::{decode_layer_kernels, prefill_layer_kernels, LayerCosts, PhaseShape};

@@ -1,0 +1,177 @@
+//! The profile-augmented analytical performance model (Eq. 2).
+
+use crate::config::{GpuSpec, ModelSpec};
+use crate::gpu::kernel::KernelDesc;
+use crate::gpu::wave::wave_slowdown;
+use crate::model::phases::{decode_layer_kernels, prefill_layer_kernels, PhaseShape};
+use crate::perf::grid::{Grid2, Grid3};
+
+/// Analytical ceilings the estimator *assumes* before profiling (Eq. 2's
+/// C and B with a generic achieved-fraction guess).  Profiling ratios
+/// absorb the per-class reality.
+pub const ASSUMED_COMPUTE_CEIL: f64 = 0.85;
+pub const ASSUMED_BANDWIDTH_CEIL: f64 = 0.85;
+
+/// Profile-augmented model: analytical Eq. 2 times interpolated
+/// measured/analytic correction ratios, plus contention factors.
+#[derive(Debug, Clone)]
+pub struct PerfModel {
+    pub gpu: GpuSpec,
+    pub model: ModelSpec,
+    /// Correction ratio grid for a prefill layer: (sl, pm) -> ratio.
+    pub prefill_ratio: Grid2,
+    /// Correction for a decode step: (bs, cl, dm) -> ratio.
+    pub decode_ratio: Grid3,
+    /// Contention decay on co-located prefill (multiplies time, >= 1).
+    pub p_c: f64,
+    /// Contention decay on co-located decode (multiplies time, >= 1).
+    pub p_b: f64,
+}
+
+impl PerfModel {
+    /// Purely analytical model (ratios = 1, no contention): what the
+    /// estimator predicts before profiling.
+    pub fn analytical(gpu: GpuSpec, model: ModelSpec) -> PerfModel {
+        PerfModel {
+            gpu,
+            model,
+            prefill_ratio: Grid2::new(vec![1.0], vec![1.0], 1.0),
+            decode_ratio: Grid3::new(vec![1.0], vec![1.0], vec![1.0], 1.0),
+            p_c: 1.0,
+            p_b: 1.0,
+        }
+    }
+
+    /// Eq. 2 for one kernel on `m` SMs (linear scaling + wave term).
+    pub fn analytic_kernel(&self, k: &KernelDesc, m: usize) -> f64 {
+        if m == 0 {
+            return f64::INFINITY;
+        }
+        let scale = self.gpu.num_sms as f64 / m as f64;
+        let tc = k.flops / (self.gpu.peak_flops * ASSUMED_COMPUTE_CEIL) * scale
+            * wave_slowdown(k.grid, m);
+        // Eq. 2 scales both terms linearly in M/m; the profiled ratio
+        // grids absorb the true (saturating) bandwidth curve.  A clamp
+        // here would bias the scheduler into over-squeezing decode at
+        // small partitions (predicting cheap TPOT that reality denies).
+        let tb = k.bytes / (self.gpu.peak_bandwidth * ASSUMED_BANDWIDTH_CEIL) * scale;
+        tc.max(tb) + self.gpu.launch_overhead
+    }
+
+    /// Analytical time of one prefill layer (chunk `sl` tokens over
+    /// `ctx` cached tokens) on `pm` SMs.
+    pub fn analytic_prefill_layer(&self, sl: usize, ctx: usize, pm: usize) -> f64 {
+        prefill_layer_kernels(&self.model, PhaseShape { tokens: sl, context: ctx })
+            .iter()
+            .map(|k| self.analytic_kernel(k, pm))
+            .sum()
+    }
+
+    /// Analytical time of one full decode step (all layers) on `dm` SMs.
+    pub fn analytic_decode_step(&self, bs: usize, cl: usize, dm: usize) -> f64 {
+        let per_layer: f64 = decode_layer_kernels(&self.model, PhaseShape { tokens: bs, context: cl })
+            .iter()
+            .map(|k| self.analytic_kernel(k, dm))
+            .sum();
+        per_layer * self.model.n_layers as f64
+    }
+
+    /// Predicted time of one prefill LAYER under the current partition.
+    /// `contended` = a decode step co-runs.
+    pub fn predict_prefill_layer(&self, sl: usize, ctx: usize, pm: usize, contended: bool) -> f64 {
+        let base = self.analytic_prefill_layer(sl, ctx, pm)
+            * self.prefill_ratio.interp(sl as f64, pm as f64);
+        if contended {
+            base * self.p_c
+        } else {
+            base
+        }
+    }
+
+    /// Predicted remaining prefill time for `layers_left` layers.
+    pub fn predict_prefill_remaining(
+        &self,
+        sl: usize,
+        ctx: usize,
+        pm: usize,
+        layers_left: usize,
+        contended: bool,
+    ) -> f64 {
+        self.predict_prefill_layer(sl, ctx, pm, contended) * layers_left as f64
+    }
+
+    /// Predicted time of one decode ITERATION (all layers, compound
+    /// launch) under the current partition.
+    pub fn predict_decode_step(&self, bs: usize, cl: usize, dm: usize, contended: bool) -> f64 {
+        if bs == 0 {
+            return 0.0;
+        }
+        let base = self.analytic_decode_step(bs, cl, dm)
+            * self
+                .decode_ratio
+                .interp(bs as f64, cl as f64, dm as f64);
+        if contended {
+            base * self.p_b
+        } else {
+            base
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn analytical() -> PerfModel {
+        PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b())
+    }
+
+    #[test]
+    fn prefill_layer_scales_with_tokens() {
+        let m = analytical();
+        let t1 = m.analytic_prefill_layer(1024, 0, 108);
+        let t4 = m.analytic_prefill_layer(4096, 0, 108);
+        assert!(t4 > 3.0 * t1 && t4 < 8.0 * t1, "t1={t1} t4={t4}");
+    }
+
+    #[test]
+    fn fewer_sms_slower() {
+        let m = analytical();
+        let full = m.analytic_prefill_layer(2048, 0, 108);
+        let half = m.analytic_prefill_layer(2048, 0, 54);
+        assert!(half > 1.5 * full);
+    }
+
+    #[test]
+    fn decode_step_is_bandwidth_dominated_plausible() {
+        let m = analytical();
+        // 32 layers streaming ~16 GB of weights at ~1.7 TB/s → ~10 ms.
+        let t = m.analytic_decode_step(32, 2048, 108);
+        assert!(t > 5e-3 && t < 40e-3, "t={t}");
+    }
+
+    #[test]
+    fn contention_factors_apply() {
+        let mut m = analytical();
+        m.p_c = 1.3;
+        m.p_b = 1.5;
+        let solo = m.predict_prefill_layer(1024, 0, 54, false);
+        let cont = m.predict_prefill_layer(1024, 0, 54, true);
+        assert!((cont / solo - 1.3).abs() < 1e-9);
+        let dsolo = m.predict_decode_step(16, 1024, 54, false);
+        let dcont = m.predict_decode_step(16, 1024, 54, true);
+        assert!((dcont / dsolo - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_batch_costs_nothing() {
+        let m = analytical();
+        assert_eq!(m.predict_decode_step(0, 1024, 54, true), 0.0);
+    }
+
+    #[test]
+    fn zero_sms_infinite() {
+        let m = analytical();
+        assert!(m.analytic_prefill_layer(1024, 0, 0).is_infinite());
+    }
+}

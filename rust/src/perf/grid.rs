@@ -1,0 +1,173 @@
+//! Small n-linear interpolation grids over irregular sorted axes.
+
+/// Locate `x` on a sorted axis: returns (i, frac) such that the value is
+/// between axis[i] and axis[i+1] at fraction `frac` (clamped at the ends).
+fn locate(axis: &[f64], x: f64) -> (usize, f64) {
+    assert!(!axis.is_empty());
+    if axis.len() == 1 || x <= axis[0] {
+        return (0, 0.0);
+    }
+    let last = axis.len() - 1;
+    if x >= axis[last] {
+        return (last - 1, 1.0);
+    }
+    let mut i = 0;
+    while i + 1 < axis.len() && axis[i + 1] < x {
+        i += 1;
+    }
+    let span = axis[i + 1] - axis[i];
+    let frac = if span <= 0.0 { 0.0 } else { (x - axis[i]) / span };
+    (i, frac)
+}
+
+/// Bilinear grid over two axes.
+#[derive(Debug, Clone)]
+pub struct Grid2 {
+    pub ax0: Vec<f64>,
+    pub ax1: Vec<f64>,
+    /// Row-major: data[i0 * ax1.len() + i1].
+    pub data: Vec<f64>,
+}
+
+impl Grid2 {
+    pub fn new(ax0: Vec<f64>, ax1: Vec<f64>, fill: f64) -> Grid2 {
+        let n = ax0.len() * ax1.len();
+        Grid2 {
+            ax0,
+            ax1,
+            data: vec![fill; n],
+        }
+    }
+
+    pub fn set(&mut self, i0: usize, i1: usize, v: f64) {
+        let n1 = self.ax1.len();
+        self.data[i0 * n1 + i1] = v;
+    }
+
+    pub fn at(&self, i0: usize, i1: usize) -> f64 {
+        self.data[i0 * self.ax1.len() + i1]
+    }
+
+    /// Bilinear interpolation (clamped outside the grid).
+    pub fn interp(&self, x0: f64, x1: f64) -> f64 {
+        let (i0, f0) = locate(&self.ax0, x0);
+        let (i1, f1) = locate(&self.ax1, x1);
+        let j0 = (i0 + 1).min(self.ax0.len() - 1);
+        let j1 = (i1 + 1).min(self.ax1.len() - 1);
+        let a = self.at(i0, i1) * (1.0 - f1) + self.at(i0, j1) * f1;
+        let b = self.at(j0, i1) * (1.0 - f1) + self.at(j0, j1) * f1;
+        a * (1.0 - f0) + b * f0
+    }
+}
+
+/// Trilinear grid.
+#[derive(Debug, Clone)]
+pub struct Grid3 {
+    pub ax0: Vec<f64>,
+    pub ax1: Vec<f64>,
+    pub ax2: Vec<f64>,
+    pub data: Vec<f64>,
+}
+
+impl Grid3 {
+    pub fn new(ax0: Vec<f64>, ax1: Vec<f64>, ax2: Vec<f64>, fill: f64) -> Grid3 {
+        let n = ax0.len() * ax1.len() * ax2.len();
+        Grid3 {
+            ax0,
+            ax1,
+            ax2,
+            data: vec![fill; n],
+        }
+    }
+
+    fn idx(&self, i0: usize, i1: usize, i2: usize) -> usize {
+        (i0 * self.ax1.len() + i1) * self.ax2.len() + i2
+    }
+
+    pub fn set(&mut self, i0: usize, i1: usize, i2: usize, v: f64) {
+        let i = self.idx(i0, i1, i2);
+        self.data[i] = v;
+    }
+
+    pub fn at(&self, i0: usize, i1: usize, i2: usize) -> f64 {
+        self.data[self.idx(i0, i1, i2)]
+    }
+
+    /// Trilinear interpolation (clamped).
+    pub fn interp(&self, x0: f64, x1: f64, x2: f64) -> f64 {
+        let (i0, f0) = locate(&self.ax0, x0);
+        let (i1, f1) = locate(&self.ax1, x1);
+        let (i2, f2) = locate(&self.ax2, x2);
+        let j0 = (i0 + 1).min(self.ax0.len() - 1);
+        let j1 = (i1 + 1).min(self.ax1.len() - 1);
+        let j2 = (i2 + 1).min(self.ax2.len() - 1);
+        let mut acc = 0.0;
+        for (a, wa) in [(i0, 1.0 - f0), (j0, f0)] {
+            for (b, wb) in [(i1, 1.0 - f1), (j1, f1)] {
+                for (c, wc) in [(i2, 1.0 - f2), (j2, f2)] {
+                    acc += self.at(a, b, c) * wa * wb * wc;
+                }
+            }
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn locate_clamps() {
+        let ax = [1.0, 2.0, 4.0];
+        assert_eq!(locate(&ax, 0.5), (0, 0.0));
+        assert_eq!(locate(&ax, 5.0), (1, 1.0));
+        let (i, f) = locate(&ax, 3.0);
+        assert_eq!(i, 1);
+        assert!((f - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grid2_exact_at_nodes() {
+        let mut g = Grid2::new(vec![0.0, 1.0], vec![0.0, 1.0], 0.0);
+        g.set(0, 0, 1.0);
+        g.set(0, 1, 2.0);
+        g.set(1, 0, 3.0);
+        g.set(1, 1, 4.0);
+        assert_eq!(g.interp(0.0, 0.0), 1.0);
+        assert_eq!(g.interp(1.0, 1.0), 4.0);
+        assert!((g.interp(0.5, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grid2_clamp_outside() {
+        let mut g = Grid2::new(vec![0.0, 1.0], vec![0.0, 1.0], 0.0);
+        g.set(1, 1, 4.0);
+        assert_eq!(g.interp(9.0, 9.0), 4.0);
+        assert_eq!(g.interp(-9.0, -9.0), 0.0);
+    }
+
+    #[test]
+    fn grid3_linear_function_reproduced() {
+        // f(x,y,z) = x + 2y + 3z is reproduced exactly by trilinear interp.
+        let ax: Vec<f64> = vec![0.0, 1.0, 2.0];
+        let mut g = Grid3::new(ax.clone(), ax.clone(), ax.clone(), 0.0);
+        for (i, &x) in ax.iter().enumerate() {
+            for (j, &y) in ax.iter().enumerate() {
+                for (k, &z) in ax.iter().enumerate() {
+                    g.set(i, j, k, x + 2.0 * y + 3.0 * z);
+                }
+            }
+        }
+        for (x, y, z) in [(0.5, 1.5, 0.25), (1.9, 0.1, 1.0), (0.0, 2.0, 2.0)] {
+            let v = g.interp(x, y, z);
+            assert!((v - (x + 2.0 * y + 3.0 * z)).abs() < 1e-12, "{v}");
+        }
+    }
+
+    #[test]
+    fn single_point_axis() {
+        let g = Grid2::new(vec![5.0], vec![1.0, 2.0], 7.0);
+        assert_eq!(g.interp(100.0, 1.5), 7.0);
+    }
+}

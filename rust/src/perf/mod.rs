@@ -1,0 +1,17 @@
+//! Performance estimator (§3.2): a profile-augmented analytical model.
+//!
+//! The analytical core is Eq. 2 — roofline with linear SM scaling and the
+//! wave-quantization correction of Eq. 1.  Because the real hardware
+//! (here: the `gpu::` simulator's hidden ground truth) scales
+//! *non*-linearly with the SM fraction and exhibits inter-phase
+//! contention, the analytical estimate alone is biased; offline profiling
+//! (§3.2.2) measures a grid of configurations and the estimator stores
+//! measured/analytic *ratios*, interpolated at prediction time, plus
+//! fitted contention decay factors `p_c`/`p_b`.
+
+pub mod estimator;
+pub mod grid;
+pub mod profiler;
+
+pub use estimator::PerfModel;
+pub use profiler::{profile, ProfileSpec};

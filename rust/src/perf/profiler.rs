@@ -1,0 +1,288 @@
+//! Offline profiling (§3.2.2): sample the simulated GPU over the
+//! (sl, bs, cl, pm, dm) space, fit correction ratios and contention
+//! factors, and return the augmented [`PerfModel`].
+//!
+//! The paper samples sl/bs/cl at steps of 1024/8/1024 and SM counts at a
+//! step of 6, keeping ~12k trials within a two-hour budget.  We expose
+//! the step sizes in [`ProfileSpec`] so tests can profile coarsely while
+//! the benches use paper-fidelity grids (the simulated "two hours" passes
+//! in a second or two of CPU).
+
+use crate::config::{GpuSpec, ModelSpec};
+use crate::gpu::roofline::GroundTruth;
+use crate::gpu::simulator::Simulator;
+use crate::gpu::stream::SmMask;
+use crate::model::phases::{decode_all_layers, prefill_layer_kernels, PhaseShape};
+use crate::perf::estimator::PerfModel;
+use crate::perf::grid::{Grid2, Grid3};
+
+/// Sampling plan.
+#[derive(Debug, Clone)]
+pub struct ProfileSpec {
+    pub sl_points: Vec<usize>,
+    pub bs_points: Vec<usize>,
+    pub cl_points: Vec<usize>,
+    pub sm_points: Vec<usize>,
+    /// Co-located (contention) probe pairs per phase pair.
+    pub contention_probes: usize,
+    /// Simulator seed (noise realization).
+    pub seed: u64,
+}
+
+impl ProfileSpec {
+    /// Paper-like grid (§3.2.2): ~12k samples, still fast in simulation.
+    pub fn paper(gpu: &GpuSpec) -> ProfileSpec {
+        let sl: Vec<usize> = (1..=16).map(|i| i * 1024).collect();
+        let bs: Vec<usize> = (1..=16).map(|i| i * 8).collect();
+        let cl: Vec<usize> = (1..=8).map(|i| i * 1024).collect();
+        let sm: Vec<usize> = (1..=(gpu.num_sms / 6)).map(|i| i * 6).collect();
+        ProfileSpec {
+            sl_points: sl,
+            bs_points: bs,
+            cl_points: cl,
+            sm_points: sm,
+            contention_probes: 200,
+            seed: 0xB011E7,
+        }
+    }
+
+    /// Coarse grid for unit tests.
+    pub fn coarse(gpu: &GpuSpec) -> ProfileSpec {
+        ProfileSpec {
+            sl_points: vec![512, 2048, 8192],
+            bs_points: vec![8, 64, 192],
+            cl_points: vec![1024, 4096],
+            sm_points: vec![24, 54, gpu.num_sms],
+            contention_probes: 24,
+            seed: 0xB011E7,
+        }
+    }
+
+    pub fn sample_count(&self) -> usize {
+        self.sl_points.len() * self.sm_points.len()
+            + self.bs_points.len() * self.cl_points.len() * self.sm_points.len()
+            + self.contention_probes * 2
+    }
+}
+
+/// Measure one prefill layer solo on `pm` SMs.
+fn measure_prefill_layer(gt: &GroundTruth, seed: u64, model: &ModelSpec, sl: usize, pm: usize) -> f64 {
+    let mut sim = Simulator::new(gt.clone(), seed);
+    let st = sim.create_stream(SmMask::first(pm), "probe-prefill");
+    sim.submit_all(
+        st,
+        prefill_layer_kernels(model, PhaseShape { tokens: sl, context: 0 }),
+    );
+    sim.run_until_idle();
+    sim.now()
+}
+
+/// Measure one full decode step solo on `dm` SMs.
+fn measure_decode_step(
+    gt: &GroundTruth,
+    seed: u64,
+    model: &ModelSpec,
+    bs: usize,
+    cl: usize,
+    dm: usize,
+) -> f64 {
+    let mut sim = Simulator::new(gt.clone(), seed);
+    let st = sim.create_stream(SmMask::first(dm), "probe-decode");
+    sim.submit_all(st, decode_all_layers(model, PhaseShape { tokens: bs, context: cl }));
+    sim.run_until_idle();
+    sim.now()
+}
+
+/// Measure co-located prefill layer + decode step on complementary masks;
+/// returns (prefill slowdown vs solo, decode slowdown vs solo).
+#[allow(clippy::too_many_arguments)]
+fn measure_contention(
+    gt: &GroundTruth,
+    seed: u64,
+    model: &ModelSpec,
+    sl: usize,
+    bs: usize,
+    cl: usize,
+    pm: usize,
+    dm: usize,
+) -> (f64, f64) {
+    let solo_p = measure_prefill_layer(gt, seed, model, sl, pm);
+    let solo_d = measure_decode_step(gt, seed.wrapping_add(1), model, bs, cl, dm);
+
+    let mut sim = Simulator::new(gt.clone(), seed.wrapping_add(2));
+    let total = gt.gpu.num_sms;
+    let ps = sim.create_stream(SmMask::first(pm), "co-prefill");
+    let ds = sim.create_stream(SmMask::last(dm.min(total - 1).max(1), total), "co-decode");
+    // Loop the prefill layer so the decode step is contended throughout.
+    for _ in 0..4 {
+        sim.submit_all(
+            ps,
+            prefill_layer_kernels(model, PhaseShape { tokens: sl, context: 0 }),
+        );
+    }
+    sim.submit_all(ds, decode_all_layers(model, PhaseShape { tokens: bs, context: cl }));
+    // decode completion time:
+    sim.run_until_stream_idle(ds);
+    let co_d = sim.now();
+    // time per prefill layer while contended: count completed prefill kernels
+    let completions = sim.take_completions();
+    let prefill_done: Vec<&crate::gpu::simulator::Completion> = completions
+        .iter()
+        .filter(|c| c.stream == ps)
+        .collect();
+    let co_p = if prefill_done.is_empty() {
+        solo_p
+    } else {
+        // average per-layer time from kernel spans
+        let kernels_per_layer =
+            prefill_layer_kernels(model, PhaseShape { tokens: sl, context: 0 }).len() as f64;
+        let span = prefill_done.last().unwrap().end - prefill_done[0].start;
+        let layers = prefill_done.len() as f64 / kernels_per_layer;
+        span / layers.max(1.0)
+    };
+    ((co_p / solo_p).max(1.0), (co_d / solo_d).max(1.0))
+}
+
+/// Run the offline profiling pass and return the augmented model.
+pub fn profile(gt: &GroundTruth, model: &ModelSpec, spec: &ProfileSpec) -> PerfModel {
+    let analytic = PerfModel::analytical(gt.gpu.clone(), model.clone());
+    let mut seed = spec.seed;
+    let mut next_seed = || {
+        seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        seed
+    };
+
+    // --- prefill correction grid ---
+    let ax_sl: Vec<f64> = spec.sl_points.iter().map(|&x| x as f64).collect();
+    let ax_sm: Vec<f64> = spec.sm_points.iter().map(|&x| x as f64).collect();
+    let mut prefill_ratio = Grid2::new(ax_sl, ax_sm.clone(), 1.0);
+    for (i, &sl) in spec.sl_points.iter().enumerate() {
+        for (j, &pm) in spec.sm_points.iter().enumerate() {
+            let measured = measure_prefill_layer(gt, next_seed(), model, sl, pm);
+            let predicted = analytic.analytic_prefill_layer(sl, 0, pm);
+            prefill_ratio.set(i, j, measured / predicted);
+        }
+    }
+
+    // --- decode correction grid ---
+    let ax_bs: Vec<f64> = spec.bs_points.iter().map(|&x| x as f64).collect();
+    let ax_cl: Vec<f64> = spec.cl_points.iter().map(|&x| x as f64).collect();
+    let mut decode_ratio = Grid3::new(ax_bs, ax_cl, ax_sm, 1.0);
+    for (i, &bs) in spec.bs_points.iter().enumerate() {
+        for (j, &cl) in spec.cl_points.iter().enumerate() {
+            for (k, &dm) in spec.sm_points.iter().enumerate() {
+                let measured = measure_decode_step(gt, next_seed(), model, bs, cl, dm);
+                let predicted = analytic.analytic_decode_step(bs, cl, dm);
+                decode_ratio.set(i, j, k, measured / predicted);
+            }
+        }
+    }
+
+    // --- contention factors ---
+    let mut pc_acc = 0.0;
+    let mut pb_acc = 0.0;
+    let mut n = 0usize;
+    let total = gt.gpu.num_sms;
+    for probe in 0..spec.contention_probes {
+        let sl = spec.sl_points[probe % spec.sl_points.len()];
+        let bs = spec.bs_points[(probe / 2) % spec.bs_points.len()];
+        let cl = spec.cl_points[probe % spec.cl_points.len()];
+        // split the GPU at varying points
+        let k = spec.sm_points.len();
+        let pm = spec.sm_points[probe % k].clamp(6, total - 6);
+        let dm = total - pm;
+        let (pc, pb) = measure_contention(gt, next_seed(), model, sl, bs, cl, pm, dm);
+        pc_acc += pc;
+        pb_acc += pb;
+        n += 1;
+    }
+    let p_c = if n > 0 { pc_acc / n as f64 } else { 1.0 };
+    let p_b = if n > 0 { pb_acc / n as f64 } else { 1.0 };
+
+    PerfModel {
+        gpu: gt.gpu.clone(),
+        model: model.clone(),
+        prefill_ratio,
+        decode_ratio,
+        p_c,
+        p_b,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuSpec;
+    use crate::util::stats;
+
+    fn setup() -> (GroundTruth, ModelSpec, PerfModel) {
+        let gt = GroundTruth::noiseless(GpuSpec::a100());
+        let model = ModelSpec::llama31_8b();
+        let spec = ProfileSpec::coarse(&gt.gpu);
+        let pm = profile(&gt, &model, &spec);
+        (gt, model, pm)
+    }
+
+    #[test]
+    fn profiled_model_accurate_on_grid_points() {
+        let (gt, model, pm) = setup();
+        // On a profiled point, prediction should be near-exact (noiseless).
+        let measured = measure_prefill_layer(&gt, 1, &model, 2048, 54);
+        let predicted = pm.predict_prefill_layer(2048, 0, 54, false);
+        let err = ((predicted - measured) / measured).abs();
+        assert!(err < 0.02, "err {err}");
+    }
+
+    #[test]
+    fn profiled_model_reasonable_off_grid() {
+        let (gt, model, pm) = setup();
+        // Off-grid interpolation should be within ~30%.
+        let mut errs = Vec::new();
+        for (sl, sm) in [(1024usize, 36usize), (3072, 84), (6144, 48)] {
+            let measured = measure_prefill_layer(&gt, 2, &model, sl, sm);
+            let predicted = pm.predict_prefill_layer(sl, 0, sm, false);
+            errs.push(((predicted - measured) / measured).abs());
+        }
+        let mre = stats::mean(&errs);
+        assert!(mre < 0.30, "mre {mre} errs {errs:?}");
+    }
+
+    #[test]
+    fn pure_analytical_is_worse_than_profiled() {
+        let (gt, model, pm) = setup();
+        let analytic = PerfModel::analytical(gt.gpu.clone(), model.clone());
+        let mut an_err = 0.0;
+        let mut pr_err = 0.0;
+        for (sl, sm) in [(1024usize, 24usize), (2048, 54), (8192, 108)] {
+            let measured = measure_prefill_layer(&gt, 3, &model, sl, sm);
+            an_err += ((analytic.predict_prefill_layer(sl, 0, sm, false) - measured) / measured).abs();
+            pr_err += ((pm.predict_prefill_layer(sl, 0, sm, false) - measured) / measured).abs();
+        }
+        assert!(pr_err < an_err, "profiled {pr_err} analytic {an_err}");
+    }
+
+    #[test]
+    fn contention_factors_exceed_one() {
+        let (_, _, pm) = setup();
+        assert!(pm.p_c >= 1.0, "p_c {}", pm.p_c);
+        assert!(pm.p_b >= 1.0, "p_b {}", pm.p_b);
+        // decode is bandwidth-hungry; co-location must slow something.
+        assert!(pm.p_b > 1.01 || pm.p_c > 1.01);
+    }
+
+    #[test]
+    fn decode_prediction_tracks_measurement() {
+        let (gt, model, pm) = setup();
+        let measured = measure_decode_step(&gt, 5, &model, 64, 2048, 54);
+        let predicted = pm.predict_decode_step(64, 2048, 54, false);
+        let err = ((predicted - measured) / measured).abs();
+        assert!(err < 0.25, "err {err}");
+    }
+
+    #[test]
+    fn paper_spec_sample_count_near_12k() {
+        let spec = ProfileSpec::paper(&GpuSpec::a100());
+        let n = spec.sample_count();
+        assert!(n > 2000 && n < 20000, "samples {n}");
+    }
+}

@@ -1,0 +1,230 @@
+//! Computational resource manager (§3.4): SM partitioning via
+//! pre-configured masked streams with instant switching.
+//!
+//! The paper layers an SM-mask API (`libsmctrl_set_stream_mask`) on top of
+//! MPS: a palette of CUDA streams is created up front, each masked to a
+//! different SM subset (2-SM granularity), and re-configuration is just
+//! launching onto a different pre-built stream — a few microseconds
+//! (Table 3) instead of an MPS context update.
+//!
+//! Here the palette maps one-to-one onto simulator streams: the prefill
+//! engine owns streams masked to SM prefixes `[0, pm)`, the decode engine
+//! owns suffixes `[M-dm, M)`.  Choosing `pm + dm > M` intentionally
+//! overlaps the middle SMs (non-strict isolation, §3.4.2).
+
+use crate::config::GpuSpec;
+use crate::gpu::simulator::Simulator;
+use crate::gpu::stream::{SmMask, StreamId};
+
+/// An SM partition decision: (prefill SMs, decode SMs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Partition {
+    pub prefill_sms: usize,
+    pub decode_sms: usize,
+}
+
+impl Partition {
+    /// Disjoint split of the whole GPU at `prefill_sms`.
+    pub fn split(gpu: &GpuSpec, prefill_sms: usize) -> Partition {
+        let p = gpu.quantize_sms(prefill_sms);
+        Partition {
+            prefill_sms: p,
+            decode_sms: gpu.num_sms - p,
+        }
+    }
+
+    /// Both phases see the full GPU (the "Naive" ablation / MPS default).
+    pub fn full_overlap(gpu: &GpuSpec) -> Partition {
+        Partition {
+            prefill_sms: gpu.num_sms,
+            decode_sms: gpu.num_sms,
+        }
+    }
+
+    pub fn overlap_sms(&self, gpu: &GpuSpec) -> usize {
+        (self.prefill_sms + self.decode_sms).saturating_sub(gpu.num_sms)
+    }
+}
+
+/// Pre-configured stream palette + switch bookkeeping.
+pub struct ResourceManager {
+    gpu: GpuSpec,
+    /// prefill stream for each SM count (index = sms / granularity; 0 unused).
+    prefill_streams: Vec<StreamId>,
+    /// decode stream for each SM count.
+    decode_streams: Vec<StreamId>,
+    /// Current partition.
+    current: Partition,
+    /// Number of re-configurations performed (Table 3 bookkeeping).
+    reconfig_count: u64,
+}
+
+impl ResourceManager {
+    /// Build the palette inside `sim`: one stream per SM count per phase.
+    pub fn new(sim: &mut Simulator, gpu: &GpuSpec) -> ResourceManager {
+        let g = gpu.sm_granularity;
+        let steps = gpu.num_sms / g;
+        let mut prefill_streams = Vec::with_capacity(steps + 1);
+        let mut decode_streams = Vec::with_capacity(steps + 1);
+        // index 0 = a 0-SM placeholder (never launched on); keep indices aligned.
+        prefill_streams.push(sim.create_stream(SmMask::empty(), "prefill-0sm"));
+        decode_streams.push(sim.create_stream(SmMask::empty(), "decode-0sm"));
+        for i in 1..=steps {
+            let sms = i * g;
+            prefill_streams.push(sim.create_stream(
+                SmMask::first(sms),
+                &format!("prefill-{sms}sm"),
+            ));
+            decode_streams.push(sim.create_stream(
+                SmMask::last(sms, gpu.num_sms),
+                &format!("decode-{sms}sm"),
+            ));
+        }
+        ResourceManager {
+            gpu: gpu.clone(),
+            prefill_streams,
+            decode_streams,
+            current: Partition::split(gpu, gpu.num_sms / 2),
+            reconfig_count: 0,
+        }
+    }
+
+    pub fn gpu(&self) -> &GpuSpec {
+        &self.gpu
+    }
+
+    pub fn partition(&self) -> Partition {
+        self.current
+    }
+
+    pub fn reconfig_count(&self) -> u64 {
+        self.reconfig_count
+    }
+
+    /// Number of pre-configured SM steps per phase.
+    pub fn palette_size(&self) -> usize {
+        self.prefill_streams.len() - 1
+    }
+
+    /// Switch the active partition — O(1): just records which pre-built
+    /// streams subsequent launches use.
+    pub fn reconfigure(&mut self, p: Partition) {
+        let q = Partition {
+            prefill_sms: self.gpu.quantize_sms(p.prefill_sms),
+            decode_sms: self.gpu.quantize_sms(p.decode_sms),
+        };
+        if q != self.current {
+            self.current = q;
+            self.reconfig_count += 1;
+        }
+    }
+
+    /// Stream to launch prefill kernels on under the current partition.
+    pub fn prefill_stream(&self) -> StreamId {
+        self.prefill_streams[self.current.prefill_sms / self.gpu.sm_granularity]
+    }
+
+    /// Stream to launch decode kernels on under the current partition.
+    pub fn decode_stream(&self) -> StreamId {
+        self.decode_streams[self.current.decode_sms / self.gpu.sm_granularity]
+    }
+
+    /// Stream for an explicit SM count (baselines, probes).
+    pub fn prefill_stream_for(&self, sms: usize) -> StreamId {
+        self.prefill_streams[self.gpu.quantize_sms(sms) / self.gpu.sm_granularity]
+    }
+
+    pub fn decode_stream_for(&self, sms: usize) -> StreamId {
+        self.decode_streams[self.gpu.quantize_sms(sms) / self.gpu.sm_granularity]
+    }
+
+    /// Which phase owns a stream from this palette?
+    pub fn is_prefill_stream(&self, id: StreamId) -> bool {
+        self.prefill_streams.contains(&id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::roofline::GroundTruth;
+
+    fn setup() -> (Simulator, ResourceManager) {
+        let gpu = GpuSpec::a100();
+        let mut sim = Simulator::new(GroundTruth::noiseless(gpu.clone()), 0);
+        let rm = ResourceManager::new(&mut sim, &gpu);
+        (sim, rm)
+    }
+
+    #[test]
+    fn palette_covers_all_steps() {
+        let (_, rm) = setup();
+        assert_eq!(rm.palette_size(), 54); // 108 / 2
+    }
+
+    #[test]
+    fn partition_split_quantizes() {
+        let gpu = GpuSpec::a100();
+        let p = Partition::split(&gpu, 55);
+        assert_eq!(p.prefill_sms, 54);
+        assert_eq!(p.decode_sms, 54);
+        assert_eq!(p.overlap_sms(&gpu), 0);
+    }
+
+    #[test]
+    fn full_overlap_partition() {
+        let gpu = GpuSpec::a100();
+        let p = Partition::full_overlap(&gpu);
+        assert_eq!(p.overlap_sms(&gpu), 108);
+    }
+
+    #[test]
+    fn streams_have_expected_masks() {
+        let (sim, rm) = setup();
+        let ps = rm.prefill_stream_for(30);
+        let ds = rm.decode_stream_for(30);
+        let pmask = sim.stream_mask(ps);
+        let dmask = sim.stream_mask(ds);
+        assert_eq!(pmask.count(), 30);
+        assert_eq!(dmask.count(), 30);
+        assert!(pmask.contains(0) && !pmask.contains(30));
+        assert!(dmask.contains(107) && !dmask.contains(77));
+        assert_eq!(pmask.overlap(&dmask), 0);
+    }
+
+    #[test]
+    fn complementary_partitions_disjoint_overlapping_share() {
+        let (sim, mut rm) = setup();
+        rm.reconfigure(Partition { prefill_sms: 60, decode_sms: 48 });
+        let pm = sim.stream_mask(rm.prefill_stream());
+        let dm = sim.stream_mask(rm.decode_stream());
+        assert_eq!(pm.overlap(&dm), 0);
+        rm.reconfigure(Partition { prefill_sms: 80, decode_sms: 48 });
+        let pm = sim.stream_mask(rm.prefill_stream());
+        let dm = sim.stream_mask(rm.decode_stream());
+        assert_eq!(pm.overlap(&dm), 20); // intentional non-strict isolation
+    }
+
+    #[test]
+    fn reconfigure_counts_only_changes() {
+        let (_, mut rm) = setup();
+        let p = Partition { prefill_sms: 60, decode_sms: 48 };
+        rm.reconfigure(p);
+        rm.reconfigure(p);
+        rm.reconfigure(Partition { prefill_sms: 54, decode_sms: 54 });
+        assert_eq!(rm.reconfig_count(), 2);
+    }
+
+    #[test]
+    fn reconfigure_is_fast() {
+        // Table 3: re-config must be O(1) pointer swap, ~microseconds.
+        let (_, mut rm) = setup();
+        let t0 = std::time::Instant::now();
+        for i in 0..10_000u64 {
+            let sms = 6 + (i as usize % 50) * 2;
+            rm.reconfigure(Partition { prefill_sms: sms, decode_sms: 108 - sms });
+        }
+        let per = t0.elapsed().as_secs_f64() / 10_000.0;
+        assert!(per < 5e-6, "reconfig {per}s");
+    }
+}

@@ -1,0 +1,168 @@
+//! Model runtime: the PJRT engine plus a host-side paged KV store —
+//! prefill a prompt once, then decode batches over gathered caches.
+//!
+//! Layout choice: per sequence, K/V are stored token-major
+//! (`[token][layer][kv_head][head_dim]`) so appending a decode step's new
+//! vectors is a contiguous push; the gather into the engine's
+//! `[layer][slot][kv_head][ctx][head_dim]` batch layout happens at
+//! decode-call time (cheap at tiny-model scale, and exactly the job the
+//! paper's KV manager does with block tables).
+
+use crate::kvcache::KvPool;
+use crate::runtime::pjrt::PjrtEngine;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Per-sequence host KV cache.
+#[derive(Debug, Clone, Default)]
+struct SeqKv {
+    /// tokens cached
+    len: usize,
+    /// [token][layer][kv][hd] appended contiguously
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// The serving-side model runtime.
+pub struct ModelRuntime {
+    pub engine: PjrtEngine,
+    /// Block-accounting pool (capacity tracking, shared-pool semantics).
+    pub pool: KvPool,
+    store: HashMap<u64, SeqKv>,
+}
+
+impl ModelRuntime {
+    pub fn load(dir: &Path, weight_seed: u64) -> Result<ModelRuntime> {
+        let engine = PjrtEngine::load(dir, weight_seed)?;
+        // capacity: enough blocks for ~64 concurrent max-context sequences
+        let capacity_tokens = engine.meta.max_ctx * 64;
+        Ok(ModelRuntime {
+            engine,
+            pool: KvPool::new(capacity_tokens),
+            store: HashMap::new(),
+        })
+    }
+
+    /// Max prompt length servable.
+    pub fn max_prompt(&self) -> usize {
+        *self.engine.meta.prefill_buckets.last().unwrap()
+    }
+
+    pub fn max_batch(&self) -> usize {
+        *self.engine.meta.decode_buckets.last().unwrap()
+    }
+
+    pub fn ctx_len(&self, seq: u64) -> Option<usize> {
+        self.store.get(&seq).map(|s| s.len)
+    }
+
+    /// Prefill a prompt, store its KV, return the first generated token.
+    pub fn prefill(&mut self, seq: u64, tokens: &[i32]) -> Result<i32> {
+        let m_layers = self.engine.meta.n_layers;
+        let kvh = self.engine.meta.n_kv_heads;
+        let hd = self.engine.meta.head_dim;
+        let true_len = tokens.len();
+        if true_len > self.max_prompt() {
+            return Err(anyhow!("prompt too long: {true_len}"));
+        }
+        self.pool.grow(seq, true_len).map_err(|e| anyhow!("{e}"))?;
+        let out = self.engine.prefill(tokens)?;
+        // engine layout: [layer][kv][bucket][hd] -> ours [token][layer][kv][hd]
+        let bucket = out.bucket;
+        let mut kv = SeqKv {
+            len: true_len,
+            k: Vec::with_capacity(true_len * m_layers * kvh * hd),
+            v: Vec::with_capacity(true_len * m_layers * kvh * hd),
+        };
+        for t in 0..true_len {
+            for l in 0..m_layers {
+                for h in 0..kvh {
+                    let base = ((l * kvh + h) * bucket + t) * hd;
+                    kv.k.extend_from_slice(&out.k_cache[base..base + hd]);
+                    kv.v.extend_from_slice(&out.v_cache[base..base + hd]);
+                }
+            }
+        }
+        self.store.insert(seq, kv);
+        Ok(out.first_token)
+    }
+
+    /// One decode iteration for `seqs` (each with its latest token).
+    /// Returns the next token per sequence and appends KV.
+    pub fn decode(&mut self, seqs: &[u64], tokens: &[i32]) -> Result<Vec<i32>> {
+        assert_eq!(seqs.len(), tokens.len());
+        let n = seqs.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let meta = &self.engine.meta;
+        let (layers, kvh, hd, max_ctx) = (meta.n_layers, meta.n_kv_heads, meta.head_dim, meta.max_ctx);
+        let bucket = meta
+            .decode_bucket(n)
+            .ok_or_else(|| anyhow!("batch {n} too large"))?;
+
+        // gather host caches into the engine's batch layout
+        let cache_elems = layers * bucket * kvh * max_ctx * hd;
+        let mut k_cache = vec![0.0f32; cache_elems];
+        let mut v_cache = vec![0.0f32; cache_elems];
+        let mut ctx_lens = vec![0i32; n];
+        for (slot, &seq) in seqs.iter().enumerate() {
+            let s = self
+                .store
+                .get(&seq)
+                .ok_or_else(|| anyhow!("unknown sequence {seq}"))?;
+            if s.len >= max_ctx {
+                return Err(anyhow!("sequence {seq} exceeds max_ctx {max_ctx}"));
+            }
+            ctx_lens[slot] = s.len as i32;
+            for t in 0..s.len {
+                for l in 0..layers {
+                    for h in 0..kvh {
+                        let src = ((t * layers + l) * kvh + h) * hd;
+                        let dst = ((((l * bucket + slot) * kvh + h) * max_ctx) + t) * hd;
+                        k_cache[dst..dst + hd].copy_from_slice(&s.k[src..src + hd]);
+                        v_cache[dst..dst + hd].copy_from_slice(&s.v[src..src + hd]);
+                    }
+                }
+            }
+        }
+
+        let out = self.engine.decode(tokens, &ctx_lens, &k_cache, &v_cache)?;
+
+        // append new KV ([layer][bucket][kv][hd]) and account a token
+        for (slot, &seq) in seqs.iter().enumerate() {
+            self.pool.grow(seq, 1).map_err(|e| anyhow!("{e}"))?;
+            let s = self.store.get_mut(&seq).unwrap();
+            for l in 0..layers {
+                for h in 0..kvh {
+                    let base = ((l * bucket + slot) * kvh + h) * hd;
+                    s.k.extend_from_slice(&out.k_new[base..base + hd]);
+                    s.v.extend_from_slice(&out.v_new[base..base + hd]);
+                }
+            }
+            s.len += 1;
+        }
+        Ok(out.next_tokens[..n].to_vec())
+    }
+
+    /// Release a finished sequence.
+    pub fn release(&mut self, seq: u64) -> Result<()> {
+        self.store.remove(&seq);
+        self.pool.release(seq).map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Greedy generation helper (used by tests and the quickstart):
+    /// prefill + decode until `max_new` tokens.
+    pub fn generate(&mut self, seq: u64, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
+        let first = self.prefill(seq, prompt)?;
+        let mut out = vec![first];
+        let mut cur = first;
+        for _ in 1..max_new {
+            let next = self.decode(&[seq], &[cur])?;
+            cur = next[0];
+            out.push(cur);
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,192 @@
+//! artifacts/meta.json — the ABI between `python/compile/aot.py` and the
+//! Rust runtime: model config, flattened weight order, shape buckets.
+
+use crate::util::json::{self, Value};
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One weight tensor in the canonical flattened order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl WeightSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed meta.json.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub dir: PathBuf,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn_dim: usize,
+    pub max_ctx: usize,
+    pub weights: Vec<WeightSpec>,
+    pub prefill_buckets: Vec<usize>,
+    pub decode_buckets: Vec<usize>,
+    /// bucket -> artifact filename
+    pub prefill_artifacts: Vec<(usize, String)>,
+    pub decode_artifacts: Vec<(usize, String)>,
+}
+
+fn req_usize(v: &Value, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(Value::as_usize)
+        .ok_or_else(|| anyhow!("meta.json: missing integer field '{key}'"))
+}
+
+impl ModelMeta {
+    /// Load `<dir>/meta.json`.
+    pub fn load(dir: &Path) -> Result<ModelMeta> {
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let v = json::parse(&text).map_err(|e| anyhow!("parsing meta.json: {e}"))?;
+        let cfg = v.get("config").ok_or_else(|| anyhow!("meta.json: no config"))?;
+
+        let weights = v
+            .get("weights")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow!("meta.json: no weights"))?
+            .iter()
+            .map(|w| {
+                let name = w
+                    .get("name")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| anyhow!("weight without name"))?
+                    .to_string();
+                let shape = w
+                    .get("shape")
+                    .and_then(Value::as_arr)
+                    .ok_or_else(|| anyhow!("weight without shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<Vec<usize>>>()?;
+                Ok(WeightSpec { name, shape })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let buckets = |key: &str| -> Result<Vec<usize>> {
+            v.get(key)
+                .and_then(Value::as_arr)
+                .ok_or_else(|| anyhow!("meta.json: no {key}"))?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad bucket")))
+                .collect()
+        };
+        let artifacts = |key: &str| -> Result<Vec<(usize, String)>> {
+            let obj = v
+                .get(key)
+                .and_then(Value::as_obj)
+                .ok_or_else(|| anyhow!("meta.json: no {key}"))?;
+            let mut out: Vec<(usize, String)> = obj
+                .iter()
+                .map(|(k, val)| {
+                    let bucket: usize = k.parse().map_err(|_| anyhow!("bad bucket key {k}"))?;
+                    let f = val.as_str().ok_or_else(|| anyhow!("bad artifact"))?;
+                    Ok((bucket, f.to_string()))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            out.sort_unstable();
+            Ok(out)
+        };
+
+        Ok(ModelMeta {
+            dir: dir.to_path_buf(),
+            vocab_size: req_usize(cfg, "vocab_size")?,
+            d_model: req_usize(cfg, "d_model")?,
+            n_layers: req_usize(cfg, "n_layers")?,
+            n_heads: req_usize(cfg, "n_heads")?,
+            n_kv_heads: req_usize(cfg, "n_kv_heads")?,
+            head_dim: req_usize(cfg, "head_dim")?,
+            ffn_dim: req_usize(cfg, "ffn_dim")?,
+            max_ctx: req_usize(cfg, "max_ctx")?,
+            weights,
+            prefill_buckets: buckets("prefill_buckets")?,
+            decode_buckets: buckets("decode_buckets")?,
+            prefill_artifacts: artifacts("prefill_artifacts")?,
+            decode_artifacts: artifacts("decode_artifacts")?,
+        })
+    }
+
+    /// Default artifacts directory: `$BULLET_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("BULLET_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Smallest prefill bucket that fits `n` tokens.
+    pub fn prefill_bucket(&self, n: usize) -> Option<usize> {
+        self.prefill_buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    /// Smallest decode bucket that fits a batch of `n`.
+    pub fn decode_bucket(&self, n: usize) -> Option<usize> {
+        self.decode_buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    /// KV floats per token (one layer set: L * kv_heads * head_dim).
+    pub fn kv_floats_per_token(&self) -> usize {
+        self.n_layers * self.n_kv_heads * self.head_dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if d.join("meta.json").exists() {
+            Some(d)
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn loads_real_meta() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipped: artifacts not built");
+            return;
+        };
+        let m = ModelMeta::load(&dir).unwrap();
+        assert_eq!(m.n_layers, 4);
+        assert_eq!(m.head_dim, 32);
+        assert_eq!(m.weights.len(), 1 + 9 * m.n_layers + 2);
+        assert_eq!(m.weights[0].name, "embed");
+        assert_eq!(m.weights[0].shape, vec![m.vocab_size, m.d_model]);
+        assert!(m.prefill_buckets.contains(&128));
+        assert!(m.decode_buckets.contains(&8));
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipped: artifacts not built");
+            return;
+        };
+        let m = ModelMeta::load(&dir).unwrap();
+        assert_eq!(m.prefill_bucket(1), Some(16));
+        assert_eq!(m.prefill_bucket(16), Some(16));
+        assert_eq!(m.prefill_bucket(17), Some(32));
+        assert_eq!(m.prefill_bucket(1000), None);
+        assert_eq!(m.decode_bucket(3), Some(4));
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        let err = ModelMeta::load(Path::new("/nonexistent-bullet")).unwrap_err();
+        assert!(err.to_string().contains("meta.json"));
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: load the AOT artifacts produced by `make artifacts` and
+//! execute the real (tiny) model from the Rust request path.  Python is
+//! never involved at serving time — the HLO text files plus meta.json are
+//! the complete model.
+
+pub mod executor;
+pub mod meta;
+pub mod pjrt;
+pub mod weights;
+
+pub use executor::ModelRuntime;
+pub use meta::ModelMeta;
+pub use pjrt::PjrtEngine;

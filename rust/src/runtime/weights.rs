@@ -1,0 +1,74 @@
+//! Deterministic weight generation.
+//!
+//! No pretrained checkpoint is available offline, so the served model's
+//! weights are generated in Rust — normal(0, 0.05) for projections, ones
+//! for norm gains, exactly mirroring `python/compile/model.py::init_params`
+//! in *distribution* (values differ; only shapes are ABI).  A fixed seed
+//! makes every serving run reproducible.
+
+use crate::runtime::meta::{ModelMeta, WeightSpec};
+use crate::util::rng::Rng;
+
+/// Scale used for non-norm weights (matches the python init).
+pub const WEIGHT_SCALE: f32 = 0.05;
+
+/// Generate one weight tensor.
+pub fn generate_weight(spec: &WeightSpec, rng: &mut Rng) -> Vec<f32> {
+    let n = spec.elements();
+    if spec.name.ends_with("norm") {
+        vec![1.0; n]
+    } else {
+        (0..n).map(|_| WEIGHT_SCALE * rng.normal() as f32).collect()
+    }
+}
+
+/// Generate the full flattened weight list in meta order.
+pub fn generate_all(meta: &ModelMeta, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed ^ 0x77E16475);
+    meta.weights
+        .iter()
+        .map(|w| {
+            let mut sub = rng.fork(0);
+            generate_weight(w, &mut sub)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, shape: &[usize]) -> WeightSpec {
+        WeightSpec {
+            name: name.into(),
+            shape: shape.to_vec(),
+        }
+    }
+
+    #[test]
+    fn norm_weights_are_ones() {
+        let mut rng = Rng::new(1);
+        let w = generate_weight(&spec("layer0.attn_norm", &[64]), &mut rng);
+        assert_eq!(w, vec![1.0; 64]);
+    }
+
+    #[test]
+    fn projection_weights_scaled_normal() {
+        let mut rng = Rng::new(2);
+        let w = generate_weight(&spec("layer0.wq", &[256, 256]), &mut rng);
+        assert_eq!(w.len(), 256 * 256);
+        let mean: f32 = w.iter().sum::<f32>() / w.len() as f32;
+        let std: f32 =
+            (w.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / w.len() as f32).sqrt();
+        assert!(mean.abs() < 0.005, "mean {mean}");
+        assert!((std - WEIGHT_SCALE).abs() < 0.005, "std {std}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(3);
+        let mut b = Rng::new(3);
+        let s = spec("embed", &[100, 10]);
+        assert_eq!(generate_weight(&s, &mut a), generate_weight(&s, &mut b));
+    }
+}

@@ -1,0 +1,8 @@
+//! SLO-aware task scheduling (§3.3): system-state tracking and the
+//! Algorithm-1 policy that picks SM partitions each scheduling cycle.
+
+pub mod policy;
+pub mod state;
+
+pub use policy::{Decision, SloScheduler};
+pub use state::{DecodeReqState, PrefillBatch, PrefillReq, SystemState};

@@ -1,0 +1,424 @@
+//! Algorithm 1: SLO-aware scheduling.
+//!
+//! Each cycle the scheduler (a) estimates every tracked request's TTFT
+//! and TPOT under the current partition, (b) reorders the waiting queue
+//! by SLO slack, and (c) searches the partition space:
+//!
+//! - both P90s within budget   → `ReduceDecodeSM` (prioritize prefill —
+//!   finishing prefill sooner grows the decode batch and throughput);
+//! - both violated             → `SetBalancedSM` (minimize the worst
+//!   violation ratio);
+//! - only TPOT violated        → `ReducePrefillSM`;
+//! - only TTFT violated        → `ReduceDecodeSM`, escalating to a
+//!   temporary decode *pause* when even the minimum decode allocation
+//!   cannot rescue TTFT while TPOT has slack (§3.3.3).
+
+use crate::config::ServingConfig;
+use crate::perf::PerfModel;
+use crate::resource::Partition;
+use crate::sched::state::SystemState;
+use crate::util::stats;
+
+/// Scheduler output for one cycle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Decision {
+    pub partition: Partition,
+    /// Skip the next decode iteration entirely (borrow all SMs for prefill).
+    pub pause_decode: bool,
+}
+
+/// The SLO-aware scheduler.
+pub struct SloScheduler {
+    pub cfg: ServingConfig,
+    pub perf: PerfModel,
+}
+
+impl SloScheduler {
+    pub fn new(cfg: ServingConfig, perf: PerfModel) -> SloScheduler {
+        SloScheduler { cfg, perf }
+    }
+
+    /// Predicted remaining prefill time for the active batch under `pm` SMs.
+    fn rem_prefill_time(&self, st: &SystemState, pm: usize, contended: bool) -> f64 {
+        match &st.prefill {
+            None => 0.0,
+            Some(b) => {
+                let layers_left = st.total_layers.saturating_sub(b.layers_done);
+                self.perf
+                    .predict_prefill_remaining(b.n_tokens, 0, pm, layers_left, contended)
+            }
+        }
+    }
+
+    /// P90 TTFT violation ratio (>1 ⇒ violated) under a candidate `pm`.
+    /// Covers the active batch AND the waiting queue (whose requests must
+    /// first wait for the active batch — the cascading-congestion term).
+    ///
+    /// Hot path: called once per candidate partition in the searches.
+    /// One `predict_prefill_layer` per candidate; each waiting request's
+    /// own prefill time is scaled from that single prediction (per-token
+    /// rate) rather than re-predicted — the queue estimate is coarse by
+    /// nature (§3.3.2's q_i), and this keeps the decision microseconds.
+    fn ttft_ratio_p90(&self, st: &SystemState, pm: usize, contended: bool) -> f64 {
+        let (rem, per_token_layer) = match &st.prefill {
+            None => (0.0, {
+                // no active batch: derive the rate from a reference size
+                let r = 2048usize;
+                self.perf.predict_prefill_layer(r, 0, pm, contended) / r as f64
+            }),
+            Some(b) => {
+                let layer = self.perf.predict_prefill_layer(b.n_tokens, 0, pm, contended);
+                let layers_left = st.total_layers.saturating_sub(b.layers_done);
+                (layer * layers_left as f64, layer / b.n_tokens.max(1) as f64)
+            }
+        };
+        let mut ratios: Vec<f64> = Vec::with_capacity(
+            st.prefill.as_ref().map(|b| b.reqs.len()).unwrap_or(0) + st.waiting.len(),
+        );
+        if let Some(b) = &st.prefill {
+            for r in &b.reqs {
+                let ttft = (st.now - r.arrival) + rem;
+                ratios.push(ttft / self.cfg.slo.ttft_budget(r.input_len).max(1e-9));
+            }
+        }
+        // Waiting requests queue behind the active batch, then run their
+        // own prefill (scaled per-token estimate at this partition).
+        let mut queue_ahead = rem;
+        for r in &st.waiting {
+            let own = per_token_layer * r.input_len.max(1) as f64 * st.total_layers as f64;
+            let ttft = (st.now - r.arrival) + queue_ahead + own;
+            ratios.push(ttft / self.cfg.slo.ttft_budget(r.input_len).max(1e-9));
+            queue_ahead += own;
+        }
+        if ratios.is_empty() {
+            0.0
+        } else {
+            stats::percentile(&ratios, self.cfg.slo_percentile)
+        }
+    }
+
+    /// P90 of observed per-request TPOT (partition-independent; computed
+    /// once per scheduling cycle).
+    fn observed_tpot_p90(&self, st: &SystemState) -> f64 {
+        if st.decode.is_empty() {
+            return 0.0;
+        }
+        let obs: Vec<f64> = st.decode.iter().map(|d| d.observed_tpot()).collect();
+        stats::percentile(&obs, self.cfg.slo_percentile)
+    }
+
+    /// P90 TPOT violation ratio under a candidate `dm`.  Blends the
+    /// observed per-request TPOT (the past is already spent) with the
+    /// predicted next-iteration time (what the partition controls).
+    /// The projection is affine in the (constant) next-iteration time, so
+    /// P90(projected) == 0.5*P90(observed) + 0.5*next — no per-candidate
+    /// vector or sort.
+    fn tpot_ratio_p90_with(&self, st: &SystemState, dm: usize, contended: bool, obs_p90: f64) -> f64 {
+        if st.decode.is_empty() {
+            return 0.0;
+        }
+        let bs = st.decode_batch_size();
+        let cl = st.decode_avg_ctx();
+        let next_iter = self.perf.predict_decode_step(bs, cl, dm, contended);
+        let budget = self.cfg.slo.tpot_budget().max(1e-9);
+        let projected = if obs_p90 > 0.0 {
+            0.5 * obs_p90 + 0.5 * next_iter
+        } else {
+            next_iter
+        };
+        projected / budget
+    }
+
+    fn tpot_ratio_p90(&self, st: &SystemState, dm: usize, contended: bool) -> f64 {
+        self.tpot_ratio_p90_with(st, dm, contended, self.observed_tpot_p90(st))
+    }
+
+    /// Reorder the waiting queue by SLO slack (most urgent first) —
+    /// Algorithm 1 line 7.
+    pub fn reorder_waiting(&self, st: &mut SystemState) {
+        let now = st.now;
+        let slo = self.cfg.slo;
+        st.waiting.sort_by(|a, b| {
+            let slack_a = slo.ttft_budget(a.input_len) - (now - a.arrival);
+            let slack_b = slo.ttft_budget(b.input_len) - (now - b.arrival);
+            slack_a.partial_cmp(&slack_b).unwrap()
+        });
+    }
+
+    /// Candidate SM counts, descending from `from`, at mask granularity.
+    fn steps_down(&self, from: usize, to_min: usize) -> Vec<usize> {
+        let g = self.cfg.gpu.sm_granularity.max(1);
+        let mut v = Vec::new();
+        let mut x = self.cfg.gpu.quantize_sms(from);
+        let lo = self.cfg.gpu.quantize_sms(to_min);
+        while x >= lo {
+            v.push(x);
+            if x < g + lo {
+                break;
+            }
+            x -= g * 3; // coarse steps keep the search O(#SMs/6), as §3.3.3
+        }
+        v
+    }
+
+    /// The main decision procedure (Algorithm 1).
+    pub fn schedule(&self, st: &mut SystemState) -> Decision {
+        let gpu_sms = self.cfg.gpu.num_sms;
+        self.reorder_waiting(st);
+
+        // Degenerate phases: hand the whole GPU to whoever is active.
+        if !st.prefill_active() && st.waiting.is_empty() {
+            return Decision {
+                partition: Partition { prefill_sms: 0, decode_sms: gpu_sms },
+                pause_decode: false,
+            };
+        }
+        if st.decode.is_empty() {
+            return Decision {
+                partition: Partition { prefill_sms: gpu_sms, decode_sms: 0 },
+                pause_decode: false,
+            };
+        }
+
+        let contended = true; // both phases active below this point
+        let cur = st.partition;
+        let cur_pm = cur.prefill_sms.max(self.cfg.min_prefill_sms);
+        let cur_dm = cur.decode_sms.max(self.cfg.min_decode_sms);
+        let obs_p90 = self.observed_tpot_p90(st);
+        let ttft_viol = self.ttft_ratio_p90(st, cur_pm, contended) > 1.0;
+        let tpot_viol = self.tpot_ratio_p90_with(st, cur_dm, contended, obs_p90) > 1.0;
+
+        match (ttft_viol, tpot_viol) {
+            (false, false) | (true, false) => self.reduce_decode_sm(st, obs_p90),
+            (true, true) => self.set_balanced_sm(st, obs_p90),
+            (false, true) => self.reduce_prefill_sm(st, obs_p90),
+        }
+    }
+
+    /// Shrink decode's share to accelerate prefill, keeping TPOT legal;
+    /// escalate to a decode pause if the minimum share still cannot save
+    /// TTFT while TPOT has headroom.
+    fn reduce_decode_sm(&self, st: &SystemState, obs_p90: f64) -> Decision {
+        let gpu_sms = self.cfg.gpu.num_sms;
+        // Prefill-first: find the SMALLEST decode share that keeps TPOT
+        // legal — every SM freed accelerates prefill and, transitively,
+        // throughput (the paper's primary objective when slack exists).
+        let mut best: Option<(usize, usize)> = None;
+        for dm in self.steps_down(gpu_sms - self.cfg.min_prefill_sms, self.cfg.min_decode_sms) {
+            let pm = gpu_sms - dm;
+            if pm < self.cfg.min_prefill_sms {
+                continue;
+            }
+            if self.tpot_ratio_p90_with(st, dm, true, obs_p90) <= 1.0 {
+                best = Some((pm, dm));
+            } else if best.is_some() {
+                break; // past the legal region; smaller dm only worsens TPOT
+            }
+        }
+        if let Some((pm, dm)) = best {
+            // TPOT fine at the floor but TTFT still violated → borrow all
+            // SMs: pause decode for one cycle (§3.3.3, Fig. 8a-②).
+            let still_violated = self.ttft_ratio_p90(st, pm, true) > 1.0;
+            let tpot_headroom = self.tpot_ratio_p90_with(st, dm, true, obs_p90) <= 0.8;
+            if still_violated && tpot_headroom {
+                return Decision {
+                    partition: Partition { prefill_sms: gpu_sms, decode_sms: dm },
+                    pause_decode: true,
+                };
+            }
+            return Decision {
+                partition: Partition { prefill_sms: pm, decode_sms: dm },
+                pause_decode: false,
+            };
+        }
+        // Even the largest decode share violates TPOT — fall back to balance.
+        self.set_balanced_sm(st, obs_p90)
+    }
+
+    /// Grow decode's share until TPOT is legal (or prefill hits its floor).
+    fn reduce_prefill_sm(&self, st: &SystemState, obs_p90: f64) -> Decision {
+        let gpu_sms = self.cfg.gpu.num_sms;
+        for pm in self.steps_down(st.partition.prefill_sms.max(self.cfg.min_prefill_sms), self.cfg.min_prefill_sms) {
+            let dm = gpu_sms - pm;
+            if self.tpot_ratio_p90_with(st, dm, true, obs_p90) <= 1.0 {
+                return Decision {
+                    partition: Partition { prefill_sms: pm, decode_sms: dm },
+                    pause_decode: false,
+                };
+            }
+        }
+        // TPOT unsatisfiable: give decode everything above prefill's floor.
+        let pm = self.cfg.gpu.quantize_sms(self.cfg.min_prefill_sms);
+        Decision {
+            partition: Partition { prefill_sms: pm, decode_sms: gpu_sms - pm },
+            pause_decode: false,
+        }
+    }
+
+    /// Both phases violated: pick the split minimizing the worst ratio.
+    fn set_balanced_sm(&self, st: &SystemState, obs_p90: f64) -> Decision {
+        let gpu_sms = self.cfg.gpu.num_sms;
+        let mut best = Partition::split(&self.cfg.gpu, gpu_sms / 2);
+        let mut best_score = f64::INFINITY;
+        let g = self.cfg.gpu.sm_granularity * 3;
+        let mut pm = self.cfg.gpu.quantize_sms(self.cfg.min_prefill_sms);
+        while pm + self.cfg.min_decode_sms <= gpu_sms {
+            let dm = gpu_sms - pm;
+            let score = self
+                .ttft_ratio_p90(st, pm, true)
+                .max(self.tpot_ratio_p90_with(st, dm, true, obs_p90));
+            if score < best_score {
+                best_score = score;
+                best = Partition { prefill_sms: pm, decode_sms: dm };
+            }
+            pm += g;
+        }
+        Decision {
+            partition: best,
+            pause_decode: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuSpec, ModelSpec, ServingConfig};
+    use crate::sched::state::{DecodeReqState, PrefillBatch, PrefillReq, SystemState};
+
+    fn scheduler() -> SloScheduler {
+        let cfg = ServingConfig::default();
+        let perf = PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b());
+        SloScheduler::new(cfg, perf)
+    }
+
+    fn state_with(
+        prefill_tokens: usize,
+        layers_done: usize,
+        decode: Vec<DecodeReqState>,
+        waiting: Vec<PrefillReq>,
+        now: f64,
+    ) -> SystemState {
+        let prefill = if prefill_tokens > 0 {
+            Some(PrefillBatch {
+                reqs: vec![PrefillReq { id: 1, arrival: 0.0, input_len: prefill_tokens, output_len: 64 }],
+                n_tokens: prefill_tokens,
+                layers_done,
+                started_at: 0.0,
+            })
+        } else {
+            None
+        };
+        SystemState {
+            now,
+            prefill,
+            decode,
+            waiting,
+            partition: Partition::split(&GpuSpec::a100(), 54),
+            total_layers: 32,
+        }
+    }
+
+    fn decode_req(id: u64, ctx: usize, tpot: f64) -> DecodeReqState {
+        DecodeReqState {
+            id,
+            input_len: ctx,
+            ctx_len: ctx,
+            tokens_out: 10,
+            output_len: 100,
+            decode_elapsed: tpot * 9.0,
+        }
+    }
+
+    #[test]
+    fn idle_prefill_gives_decode_everything() {
+        let s = scheduler();
+        let mut st = state_with(0, 0, vec![decode_req(1, 500, 0.02)], vec![], 1.0);
+        let d = s.schedule(&mut st);
+        assert_eq!(d.partition.decode_sms, 108);
+        assert!(!d.pause_decode);
+    }
+
+    #[test]
+    fn idle_decode_gives_prefill_everything() {
+        let s = scheduler();
+        let mut st = state_with(2048, 4, vec![], vec![], 0.1);
+        let d = s.schedule(&mut st);
+        assert_eq!(d.partition.prefill_sms, 108);
+    }
+
+    #[test]
+    fn healthy_state_prioritizes_prefill() {
+        // Both metrics easily within budget → ReduceDecodeSM: prefill
+        // gets at least its current share, decode shrinks toward minimum.
+        let s = scheduler();
+        let mut st = state_with(1024, 16, vec![decode_req(1, 200, 0.02)], vec![], 0.05);
+        let d = s.schedule(&mut st);
+        assert!(d.partition.prefill_sms >= 54, "{:?}", d.partition);
+        assert!(d.partition.decode_sms >= s.cfg.min_decode_sms);
+    }
+
+    #[test]
+    fn ttft_pressure_shrinks_decode() {
+        // A huge prefill that is already late, decode healthy.
+        let s = scheduler();
+        let mut st = state_with(16384, 0, vec![decode_req(1, 200, 0.02)], vec![], 30.0);
+        let d = s.schedule(&mut st);
+        // Either decode is squeezed hard, or (if hopeless) paused.
+        assert!(
+            d.partition.prefill_sms > 54 || d.pause_decode,
+            "decision {d:?}"
+        );
+    }
+
+    #[test]
+    fn tpot_pressure_grows_decode() {
+        // Decode with long contexts and observed TPOT over budget; prefill early.
+        let s = scheduler();
+        let decode: Vec<DecodeReqState> =
+            (0..64).map(|i| decode_req(i, 8000, 0.3)).collect();
+        let mut st = state_with(1024, 30, decode, vec![], 0.01);
+        st.partition = Partition::split(&GpuSpec::a100(), 84); // decode squeezed
+        let d = s.schedule(&mut st);
+        assert!(
+            d.partition.decode_sms > 24,
+            "decode should gain SMs: {:?}",
+            d.partition
+        );
+        assert!(!d.pause_decode);
+    }
+
+    #[test]
+    fn reorder_puts_tightest_slack_first() {
+        let s = scheduler();
+        let mut st = state_with(0, 0, vec![], vec![
+            PrefillReq { id: 1, arrival: 0.0, input_len: 4000, output_len: 1 }, // big budget
+            PrefillReq { id: 2, arrival: 0.0, input_len: 100, output_len: 1 },  // tiny budget
+        ], 0.2);
+        s.reorder_waiting(&mut st);
+        assert_eq!(st.waiting[0].id, 2);
+    }
+
+    #[test]
+    fn pause_only_when_tpot_has_headroom() {
+        let s = scheduler();
+        // Late prefill + decode already at its TPOT limit → no pause.
+        let decode: Vec<DecodeReqState> =
+            (0..128).map(|i| decode_req(i, 6000, 0.145)).collect();
+        let mut st = state_with(16384, 0, decode, vec![], 40.0);
+        let d = s.schedule(&mut st);
+        if d.pause_decode {
+            panic!("must not pause decode when TPOT is near its budget: {d:?}");
+        }
+    }
+
+    #[test]
+    fn partitions_respect_granularity() {
+        let s = scheduler();
+        let decode: Vec<DecodeReqState> = (0..32).map(|i| decode_req(i, 2000, 0.1)).collect();
+        let mut st = state_with(8192, 8, decode, vec![], 5.0);
+        let d = s.schedule(&mut st);
+        assert_eq!(d.partition.prefill_sms % 2, 0);
+        assert_eq!(d.partition.decode_sms % 2, 0);
+    }
+}

@@ -1,0 +1,156 @@
+//! System state S_k = (P_k, D_k, R_k) (§3.3.2).
+
+use crate::resource::Partition;
+
+/// A request known to the prefill side (queued or in the active batch).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrefillReq {
+    pub id: u64,
+    pub arrival: f64,
+    pub input_len: usize,
+    pub output_len: usize,
+}
+
+/// P_k: the running prefill batch.
+#[derive(Debug, Clone)]
+pub struct PrefillBatch {
+    pub reqs: Vec<PrefillReq>,
+    /// n_p: total tokens across the batch.
+    pub n_tokens: usize,
+    /// l_k: layers already executed.
+    pub layers_done: usize,
+    /// Wall/virtual time the batch started executing.
+    pub started_at: f64,
+}
+
+impl PrefillBatch {
+    pub fn new(reqs: Vec<PrefillReq>, started_at: f64) -> PrefillBatch {
+        let n_tokens = reqs.iter().map(|r| r.input_len).sum();
+        PrefillBatch {
+            reqs,
+            n_tokens,
+            layers_done: 0,
+            started_at,
+        }
+    }
+}
+
+/// D_k entry: one request in the decode batch.
+#[derive(Debug, Clone)]
+pub struct DecodeReqState {
+    pub id: u64,
+    pub input_len: usize,
+    /// Tokens of context currently cached (prompt + generated).
+    pub ctx_len: usize,
+    /// o_i: output tokens produced so far (including the first).
+    pub tokens_out: usize,
+    /// Target output length.
+    pub output_len: usize,
+    /// d_i: accumulated decode-phase time (since first token).
+    pub decode_elapsed: f64,
+}
+
+impl DecodeReqState {
+    /// Observed average TPOT so far (o_i / d_i of Algorithm 1, inverted
+    /// to seconds per token).  Zero until a second token exists.
+    pub fn observed_tpot(&self) -> f64 {
+        if self.tokens_out <= 1 {
+            0.0
+        } else {
+            self.decode_elapsed / (self.tokens_out - 1) as f64
+        }
+    }
+
+    pub fn finished(&self) -> bool {
+        self.tokens_out >= self.output_len
+    }
+}
+
+/// The full scheduler-visible state.
+#[derive(Debug, Clone)]
+pub struct SystemState {
+    pub now: f64,
+    pub prefill: Option<PrefillBatch>,
+    pub decode: Vec<DecodeReqState>,
+    /// w_k: requests waiting for prefill (scheduler may reorder).
+    pub waiting: Vec<PrefillReq>,
+    /// R_k: current SM allocation.
+    pub partition: Partition,
+    /// Model depth (layers to run per prefill).
+    pub total_layers: usize,
+}
+
+impl SystemState {
+    pub fn decode_batch_size(&self) -> usize {
+        self.decode.len()
+    }
+
+    /// Mean context length of the decode batch (1 if empty, to keep
+    /// estimator calls well-defined).
+    pub fn decode_avg_ctx(&self) -> usize {
+        if self.decode.is_empty() {
+            return 1;
+        }
+        (self.decode.iter().map(|d| d.ctx_len).sum::<usize>() / self.decode.len()).max(1)
+    }
+
+    pub fn prefill_active(&self) -> bool {
+        self.prefill.is_some()
+    }
+
+    pub fn phases_colocated(&self) -> bool {
+        self.prefill.is_some() && !self.decode.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuSpec;
+
+    #[test]
+    fn batch_token_sum() {
+        let b = PrefillBatch::new(
+            vec![
+                PrefillReq { id: 1, arrival: 0.0, input_len: 100, output_len: 10 },
+                PrefillReq { id: 2, arrival: 0.1, input_len: 50, output_len: 10 },
+            ],
+            0.2,
+        );
+        assert_eq!(b.n_tokens, 150);
+        assert_eq!(b.layers_done, 0);
+    }
+
+    #[test]
+    fn observed_tpot() {
+        let mut d = DecodeReqState {
+            id: 1,
+            input_len: 10,
+            ctx_len: 12,
+            tokens_out: 1,
+            output_len: 5,
+            decode_elapsed: 0.0,
+        };
+        assert_eq!(d.observed_tpot(), 0.0);
+        d.tokens_out = 3;
+        d.decode_elapsed = 0.4;
+        assert!((d.observed_tpot() - 0.2).abs() < 1e-12);
+        assert!(!d.finished());
+        d.tokens_out = 5;
+        assert!(d.finished());
+    }
+
+    #[test]
+    fn avg_ctx_handles_empty() {
+        let st = SystemState {
+            now: 0.0,
+            prefill: None,
+            decode: vec![],
+            waiting: vec![],
+            partition: crate::resource::Partition::split(&GpuSpec::a100(), 54),
+            total_layers: 32,
+        };
+        assert_eq!(st.decode_avg_ctx(), 1);
+        assert!(!st.phases_colocated());
+    }
+}

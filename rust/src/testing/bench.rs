@@ -1,0 +1,95 @@
+//! Bench harness for `harness = false` benches (criterion replacement).
+//!
+//! Measures wall-clock over warmup + timed iterations, reports
+//! mean / p50 / p90 with adaptive batching for sub-microsecond bodies.
+
+use std::time::Instant;
+
+/// Result of one measured benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p90_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_s * 1e6
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>10.3} us/iter (p50 {:>10.3}, p90 {:>10.3}, min {:>10.3}, n={})",
+            self.name,
+            self.mean_s * 1e6,
+            self.p50_s * 1e6,
+            self.p90_s * 1e6,
+            self.min_s * 1e6,
+            self.iters
+        )
+    }
+}
+
+/// Time `f`, auto-batching so each sample spans >= 10 us.
+pub fn bench(name: &str, target_samples: usize, mut f: impl FnMut()) -> BenchResult {
+    // Warmup + batch size estimation.
+    let mut batch = 1usize;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        if dt >= 10e-6 || batch >= 1 << 20 {
+            break;
+        }
+        batch *= 4;
+    }
+    let mut samples = Vec::with_capacity(target_samples);
+    for _ in 0..target_samples {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t0.elapsed().as_secs_f64() / batch as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: batch * target_samples,
+        mean_s: mean,
+        p50_s: crate::util::stats::percentile_sorted(&samples, 50.0),
+        p90_s: crate::util::stats::percentile_sorted(&samples, 90.0),
+        min_s: samples[0],
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 10, || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(black_box(i * i));
+            }
+            black_box(acc);
+        });
+        assert!(r.mean_s > 0.0);
+        assert!(r.p90_s >= r.p50_s);
+        assert!(r.min_s <= r.mean_s * 1.5);
+        assert!(r.report().contains("spin"));
+    }
+}

@@ -1,0 +1,6 @@
+//! In-tree testing substrates: a property-testing mini-framework
+//! (`prop`) and a bench harness (`bench`) — replacements for proptest and
+//! criterion, which are unavailable in the offline crate set.
+
+pub mod bench;
+pub mod prop;

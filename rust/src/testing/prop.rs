@@ -1,0 +1,122 @@
+//! Property-testing mini-framework.
+//!
+//! `proptest` is not in the offline crate set, so this provides the 20%
+//! that covers our needs: seeded generators, a `forall` runner with many
+//! iterations, and input reporting on failure (no shrinking — failures
+//! print the seed and generated case so they can be replayed exactly).
+//!
+//! ```ignore
+//! prop::forall(1234, 500, |g| {
+//!     let xs = g.vec(0..100, |g| g.f64_in(0.0, 1e3));
+//!     let p = prop::percentile(&xs, 50.0);
+//!     prop::check(p >= min && p <= max, format!("median out of range"))
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Generator handed to property bodies.
+pub struct Gen {
+    pub rng: Rng,
+    /// Case index (for diagnostics).
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range_u64(lo, hi)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+
+    pub fn vec<T>(&mut self, len_lo: usize, len_hi: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.usize_in(len_lo, len_hi);
+        (0..n).map(|_| f(self)).collect()
+    }
+}
+
+/// Outcome of one property case.
+pub type CaseResult = Result<(), String>;
+
+/// Convenience assertion for property bodies.
+pub fn check(cond: bool, msg: impl Into<String>) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `cases` random cases of `body`; panics with seed + case index on
+/// the first failure so the case can be replayed.
+pub fn forall(seed: u64, cases: usize, mut body: impl FnMut(&mut Gen) -> CaseResult) {
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let rng = root.fork(case as u64);
+        let mut g = Gen { rng, case };
+        if let Err(msg) = body(&mut g) {
+            panic!("property failed (seed={seed}, case={case}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(1, 100, |g| {
+            count += 1;
+            let x = g.f64_in(0.0, 1.0);
+            check((0.0..1.0).contains(&x), "f64_in out of range")
+        });
+        assert_eq!(count, 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed (seed=2, case=0)")]
+    fn failing_property_reports_seed_and_case() {
+        forall(2, 10, |_| check(false, "always fails"));
+    }
+
+    #[test]
+    fn gen_ranges() {
+        forall(3, 200, |g| {
+            let u = g.usize_in(5, 10);
+            check((5..=10).contains(&u), format!("usize_in gave {u}"))?;
+            let v = g.vec(2, 4, |g| g.bool());
+            check(v.len() >= 2 && v.len() <= 4, "vec len")
+        });
+    }
+
+    #[test]
+    fn same_seed_same_cases() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        forall(7, 20, |g| {
+            a.push(g.u64_in(0, 1_000_000));
+            Ok(())
+        });
+        forall(7, 20, |g| {
+            b.push(g.u64_in(0, 1_000_000));
+            Ok(())
+        });
+        assert_eq!(a, b);
+    }
+}

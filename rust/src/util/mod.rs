@@ -1,0 +1,9 @@
+//! Offline-environment substrates: JSON, PRNG, statistics, CLI parsing
+//! and table rendering.  Only `xla` and `anyhow` resolve from the vendored
+//! crate set, so everything else the system needs is implemented here.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod tbl;

@@ -1,0 +1,251 @@
+//! Descriptive statistics used throughout the metrics and calibration
+//! code: percentiles, means, linear least squares, and a streaming
+//! Welford accumulator.
+
+/// Percentile of a sample (linear interpolation, like numpy's default).
+/// `p` in [0, 100]. Returns NaN on an empty slice.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Percentile over an already-sorted slice.
+pub fn percentile_sorted(v: &[f64], p: f64) -> f64 {
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    let p = p.clamp(0.0, 100.0);
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = rank - lo as f64;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+/// Arithmetic mean (NaN on empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (NaN for < 2 points).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return f64::NAN;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Maximum (NaN on empty).
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NAN, f64::max)
+}
+
+/// Minimum (NaN on empty).
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NAN, f64::min)
+}
+
+/// Ordinary least squares for y = a*x + b. Returns (a, b).
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "linear_fit needs >= 2 points");
+    let n = xs.len() as f64;
+    let sx = xs.iter().sum::<f64>();
+    let sy = ys.iter().sum::<f64>();
+    let sxx = xs.iter().map(|x| x * x).sum::<f64>();
+    let sxy = xs.iter().zip(ys).map(|(x, y)| x * y).sum::<f64>();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return (0.0, sy / n);
+    }
+    let a = (n * sxy - sx * sy) / denom;
+    let b = (sy - a * sx) / n;
+    (a, b)
+}
+
+/// Best single scale factor s minimizing sum (s*x - y)^2.
+pub fn scale_fit(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let num: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let den: f64 = xs.iter().map(|x| x * x).sum();
+    if den.abs() < 1e-12 {
+        1.0
+    } else {
+        num / den
+    }
+}
+
+/// Mean relative error |pred - actual| / actual (actual==0 terms skipped).
+pub fn mean_relative_error(pred: &[f64], actual: &[f64]) -> f64 {
+    assert_eq!(pred.len(), actual.len());
+    let mut total = 0.0;
+    let mut n = 0usize;
+    for (p, a) in pred.iter().zip(actual) {
+        if a.abs() > 1e-12 {
+            total += ((p - a) / a).abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        f64::NAN
+    } else {
+        total / n as f64
+    }
+}
+
+/// Streaming mean/variance (Welford) plus min/max.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            f64::NAN
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert!((percentile(&xs, 90.0) - 4.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_unsorted_input() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+    }
+
+    #[test]
+    fn percentile_single() {
+        assert_eq!(percentile(&[7.0], 25.0), 7.0);
+    }
+
+    #[test]
+    fn percentile_empty_nan() {
+        assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn mean_and_stddev() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn linear_fit_exact() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [1.0, 3.0, 5.0, 7.0];
+        let (a, b) = linear_fit(&xs, &ys);
+        assert!((a - 2.0).abs() < 1e-9);
+        assert!((b - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scale_fit_exact() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [2.5, 5.0, 7.5];
+        assert!((scale_fit(&xs, &ys) - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mre_basic() {
+        let pred = [1.1, 2.2];
+        let act = [1.0, 2.0];
+        assert!((mean_relative_error(&pred, &act) - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [1.0, 2.0, 3.5, 4.25, 8.0, -1.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((w.stddev() - stddev(&xs)).abs() < 1e-12);
+        assert_eq!(w.min(), -1.0);
+        assert_eq!(w.max(), 8.0);
+        assert_eq!(w.count(), 6);
+    }
+}

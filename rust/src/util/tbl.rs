@@ -1,0 +1,140 @@
+//! ASCII table rendering for the bench binaries — every paper table and
+//! figure is regenerated as aligned text rows.
+
+/// A simple column-aligned table builder.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str) -> Table {
+        Table {
+            title: title.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn header<S: ToString>(mut self, cols: &[S]) -> Table {
+        self.header = cols.iter().map(|c| c.to_string()).collect();
+        self
+    }
+
+    pub fn row<S: ToString>(&mut self, cells: &[S]) -> &mut Table {
+        self.rows.push(cells.iter().map(|c| c.to_string()).collect());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self
+            .header
+            .len()
+            .max(self.rows.iter().map(|r| r.len()).max().unwrap_or(0));
+        let mut widths = vec![0usize; ncols];
+        let measure = |row: &[String], widths: &mut Vec<usize>| {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        };
+        measure(&self.header, &mut widths);
+        for r in &self.rows {
+            measure(r, &mut widths);
+        }
+        let fmt_row = |row: &[String]| -> String {
+            let cells: Vec<String> = (0..ncols)
+                .map(|i| {
+                    let cell = row.get(i).map(|s| s.as_str()).unwrap_or("");
+                    let pad = widths[i] - cell.chars().count();
+                    format!("{}{}", cell, " ".repeat(pad))
+                })
+                .collect();
+            format!("| {} |", cells.join(" | "))
+        };
+        let sep = format!(
+            "+{}+",
+            widths
+                .iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join("+")
+        );
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("{}\n", self.title));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        if !self.header.is_empty() {
+            out.push_str(&fmt_row(&self.header));
+            out.push('\n');
+            out.push_str(&sep);
+            out.push('\n');
+        }
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format a float with `digits` significant decimals.
+pub fn f(x: f64, digits: usize) -> String {
+    format!("{:.*}", digits, x)
+}
+
+/// Format milliseconds from seconds.
+pub fn ms(seconds: f64) -> String {
+    format!("{:.2}", seconds * 1e3)
+}
+
+/// Render a sparkline-esque horizontal bar of `frac` in [0,1].
+pub fn bar(frac: f64, width: usize) -> String {
+    let frac = frac.clamp(0.0, 1.0);
+    let filled = (frac * width as f64).round() as usize;
+    format!("{}{}", "#".repeat(filled), ".".repeat(width - filled))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo").header(&["a", "long-column"]);
+        t.row(&["1", "2"]);
+        t.row(&["333", "4"]);
+        let s = t.render();
+        assert!(s.contains("| a   | long-column |"), "{s}");
+        assert!(s.contains("| 333 | 4           |"), "{s}");
+    }
+
+    #[test]
+    fn ragged_rows_ok() {
+        let mut t = Table::new("").header(&["x"]);
+        t.row(&["1", "2", "3"]);
+        let s = t.render();
+        assert!(s.contains("| 1 | 2 | 3 |"));
+    }
+
+    #[test]
+    fn bar_bounds() {
+        assert_eq!(bar(0.0, 10), "..........");
+        assert_eq!(bar(1.0, 10), "##########");
+        assert_eq!(bar(0.5, 10), "#####.....");
+        assert_eq!(bar(2.0, 4), "####"); // clamped
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(f(1.23456, 2), "1.23");
+        assert_eq!(ms(0.0215), "21.50");
+    }
+}

@@ -1,0 +1,241 @@
+//! Property-based tests over coordinator/substrate invariants, via the
+//! in-tree `testing::prop` mini-framework (offline stand-in for proptest).
+
+use bullet::config::{GpuSpec, ModelSpec, ServingConfig};
+use bullet::gpu::roofline::GroundTruth;
+use bullet::gpu::simulator::Simulator;
+use bullet::gpu::stream::SmMask;
+use bullet::gpu::{wave_quantization_idle_ratio, KernelDesc, OpClass};
+use bullet::kvcache::{KvPool, BLOCK_TOKENS};
+use bullet::model::phases::{decode_layer_kernels, prefill_layer_kernels, PhaseShape};
+use bullet::perf::PerfModel;
+use bullet::resource::Partition;
+use bullet::sched::{DecodeReqState, PrefillBatch, PrefillReq, SloScheduler, SystemState};
+use bullet::testing::prop::{check, forall};
+use bullet::util::stats;
+
+#[test]
+fn prop_wave_quantization_bounds_and_alignment() {
+    forall(101, 500, |g| {
+        let grid = g.usize_in(1, 4096);
+        let sms = g.usize_in(1, 192);
+        let s = wave_quantization_idle_ratio(grid, sms);
+        check((0.0..1.0).contains(&s), format!("s={s} out of [0,1)"))?;
+        // aligned grids have zero idle
+        let aligned = grid.div_ceil(sms) * sms;
+        let s2 = wave_quantization_idle_ratio(aligned, sms);
+        check(s2.abs() < 1e-12, format!("aligned grid idle {s2}"))
+    });
+}
+
+#[test]
+fn prop_roofline_monotone_in_sms() {
+    // more SMs never makes a kernel slower (solo).
+    let gt = GroundTruth::noiseless(GpuSpec::a100());
+    forall(102, 300, |g| {
+        let flops = g.f64_in(1e9, 1e13);
+        let bytes = g.f64_in(1e6, 1e10);
+        let op = *g.pick(&[
+            OpClass::GemmMlp,
+            OpClass::GemmQkv,
+            OpClass::AttnPrefill,
+            OpClass::AttnDecode,
+            OpClass::Elementwise,
+        ]);
+        // aligned grid isolates the scaling curve from wave effects
+        let sms = g.usize_in(2, 108);
+        let k = KernelDesc::new(op, flops, bytes, sms * 4);
+        let t_small = gt.solo_time(&k, sms);
+        let k_full = KernelDesc::new(op, flops, bytes, 108 * 4);
+        let t_full = gt.solo_time(&k_full, 108);
+        check(
+            t_full <= t_small * 1.0001,
+            format!("{op:?}: full {t_full} > {sms}-SM {t_small}"),
+        )
+    });
+}
+
+#[test]
+fn prop_simulator_work_conservation() {
+    // Total FLOPs/bytes integrated by the simulator equal what was
+    // submitted, regardless of stream layout and contention.
+    forall(103, 60, |g| {
+        let gt = GroundTruth::noiseless(GpuSpec::a100());
+        let mut sim = Simulator::new(gt, g.u64_in(0, u64::MAX));
+        let split = g.usize_in(10, 98);
+        let a = sim.create_stream(SmMask::first(split), "a");
+        let b = sim.create_stream(SmMask::last(108 - split, 108), "b");
+        let mut flops = 0.0;
+        let mut bytes = 0.0;
+        for _ in 0..g.usize_in(1, 10) {
+            let f = g.f64_in(1e9, 1e12);
+            let by = g.f64_in(1e6, 1e9);
+            let stream = if g.bool() { a } else { b };
+            let op = *g.pick(&[OpClass::GemmMlp, OpClass::AttnDecode, OpClass::Elementwise]);
+            sim.submit(stream, KernelDesc::new(op, f, by, g.usize_in(1, 2048)));
+            flops += f;
+            bytes += by;
+        }
+        sim.run_until_idle();
+        let u = sim.total_util();
+        check(
+            (u.flops - flops).abs() / flops.max(1.0) < 1e-6
+                && (u.bytes - bytes).abs() / bytes.max(1.0) < 1e-6,
+            format!("work lost: {} vs {flops}", u.flops),
+        )
+    });
+}
+
+#[test]
+fn prop_kv_pool_never_leaks_or_double_books() {
+    forall(104, 200, |g| {
+        let blocks = g.usize_in(4, 64);
+        let mut pool = KvPool::new(blocks * BLOCK_TOKENS);
+        let mut live: Vec<(u64, usize)> = Vec::new();
+        for step in 0..g.usize_in(5, 40) {
+            if g.bool() || live.is_empty() {
+                let id = step as u64;
+                let tokens = g.usize_in(1, 3 * BLOCK_TOKENS);
+                if pool.can_grow(id, tokens) {
+                    pool.grow(id, tokens).map_err(|e| e.to_string())?;
+                    live.push((id, tokens));
+                }
+            } else {
+                let idx = g.usize_in(0, live.len() - 1);
+                let (id, _) = live.remove(idx);
+                pool.release(id).map_err(|e| e.to_string())?;
+            }
+            // invariant: used blocks == ceil-sum of live seq lens
+            let expect: usize = live
+                .iter()
+                .map(|(_, t)| t.div_ceil(BLOCK_TOKENS))
+                .sum();
+            check(
+                pool.used_blocks() == expect,
+                format!("used {} expect {expect}", pool.used_blocks()),
+            )?;
+        }
+        // drain
+        for (id, _) in live {
+            pool.release(id).map_err(|e| e.to_string())?;
+        }
+        check(pool.used_blocks() == 0, "pool not drained")
+    });
+}
+
+#[test]
+fn prop_scheduler_decisions_always_legal() {
+    // Whatever the system state, the decision must respect granularity,
+    // floors and GPU bounds — and never pause decode while TPOT is the
+    // violated constraint.
+    let cfg = ServingConfig::default();
+    let perf = PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b());
+    let sched = SloScheduler::new(cfg.clone(), perf);
+    forall(105, 300, |g| {
+        let now = g.f64_in(0.0, 100.0);
+        let n_decode = g.usize_in(0, 64);
+        let decode: Vec<DecodeReqState> = (0..n_decode)
+            .map(|i| DecodeReqState {
+                id: i as u64,
+                input_len: g.usize_in(16, 4096),
+                ctx_len: g.usize_in(16, 8192),
+                tokens_out: g.usize_in(1, 100),
+                output_len: 200,
+                decode_elapsed: g.f64_in(0.0, 20.0),
+            })
+            .collect();
+        let prefill = if g.bool() {
+            Some(PrefillBatch {
+                reqs: vec![PrefillReq {
+                    id: 1000,
+                    arrival: g.f64_in(0.0, now),
+                    input_len: g.usize_in(16, 16384),
+                    output_len: 64,
+                }],
+                n_tokens: g.usize_in(16, 16384),
+                layers_done: g.usize_in(0, 31),
+                started_at: g.f64_in(0.0, now),
+            })
+        } else {
+            None
+        };
+        let waiting: Vec<PrefillReq> = (0..g.usize_in(0, 5))
+            .map(|i| PrefillReq {
+                id: 2000 + i as u64,
+                arrival: g.f64_in(0.0, now),
+                input_len: g.usize_in(16, 8192),
+                output_len: 64,
+            })
+            .collect();
+        let mut st = SystemState {
+            now,
+            prefill,
+            decode,
+            waiting,
+            partition: Partition::split(&GpuSpec::a100(), g.usize_in(6, 102)),
+            total_layers: 32,
+        };
+        let d = sched.schedule(&mut st);
+        let p = d.partition;
+        check(p.prefill_sms <= 108 && p.decode_sms <= 108, "over GPU")?;
+        check(
+            p.prefill_sms % 2 == 0 && p.decode_sms % 2 == 0,
+            format!("granularity violated: {p:?}"),
+        )?;
+        if st.phases_colocated() {
+            check(
+                p.prefill_sms + p.decode_sms >= 108 - 12,
+                format!("GPU left idle: {p:?}"),
+            )?;
+        }
+        // waiting queue must come back sorted by slack
+        let slo = cfg.slo;
+        for w in st.waiting.windows(2) {
+            let sa = slo.ttft_budget(w[0].input_len) - (now - w[0].arrival);
+            let sb = slo.ttft_budget(w[1].input_len) - (now - w[1].arrival);
+            check(sa <= sb + 1e-9, "waiting not sorted by slack")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_phase_costs_scale_sanely() {
+    let m = ModelSpec::llama31_8b();
+    forall(106, 200, |g| {
+        let t1 = g.usize_in(64, 8192);
+        let t2 = t1 * 2;
+        let p1: f64 = prefill_layer_kernels(&m, PhaseShape { tokens: t1, context: 0 })
+            .iter()
+            .map(|k| k.flops)
+            .sum();
+        let p2: f64 = prefill_layer_kernels(&m, PhaseShape { tokens: t2, context: 0 })
+            .iter()
+            .map(|k| k.flops)
+            .sum();
+        check(p2 > p1 * 1.9, format!("prefill flops not ~linear: {p1} {p2}"))?;
+        let bs = g.usize_in(1, 128);
+        let cl = g.usize_in(64, 8192);
+        let d: f64 = decode_layer_kernels(&m, PhaseShape { tokens: bs, context: cl })
+            .iter()
+            .map(|k| k.bytes)
+            .sum();
+        let d2: f64 = decode_layer_kernels(&m, PhaseShape { tokens: bs, context: cl * 2 })
+            .iter()
+            .map(|k| k.bytes)
+            .sum();
+        check(d2 > d, "decode bytes must grow with context")
+    });
+}
+
+#[test]
+fn prop_percentile_within_minmax() {
+    forall(107, 300, |g| {
+        let xs = g.vec(1, 200, |g| g.f64_in(-1e6, 1e6));
+        let p = g.f64_in(0.0, 100.0);
+        let v = stats::percentile(&xs, p);
+        let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        check(v >= lo - 1e-9 && v <= hi + 1e-9, format!("{v} not in [{lo},{hi}]"))
+    });
+}

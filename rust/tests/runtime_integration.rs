@@ -1,0 +1,149 @@
+//! Integration: the full AOT bridge — HLO-text artifacts → PJRT compile →
+//! prefill/decode execution with the paged host KV store.
+//!
+//! Requires `make artifacts`; tests self-skip when artifacts are missing
+//! so `cargo test` stays green on a fresh checkout.
+
+use bullet::coordinator::tokenizer::Tokenizer;
+use bullet::runtime::{ModelMeta, ModelRuntime};
+use std::path::PathBuf;
+
+fn artifacts() -> Option<PathBuf> {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if d.join("meta.json").exists() {
+        Some(d)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn loads_and_compiles_all_buckets() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load(&dir, 7).expect("load runtime");
+    assert_eq!(rt.max_prompt(), 128);
+    assert_eq!(rt.max_batch(), 8);
+}
+
+#[test]
+fn prefill_then_decode_generates_deterministically() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = ModelRuntime::load(&dir, 7).unwrap();
+    let prompt: Vec<i32> = (3..20).collect();
+    let a = rt.generate(1, &prompt, 8).unwrap();
+    rt.release(1).unwrap();
+    let b = rt.generate(2, &prompt, 8).unwrap();
+    rt.release(2).unwrap();
+    assert_eq!(a, b);
+    assert_eq!(a.len(), 8);
+    // all ids in vocab
+    assert!(a.iter().all(|&t| (0..2048).contains(&t)));
+}
+
+#[test]
+fn weight_seed_changes_output() {
+    let Some(dir) = artifacts() else { return };
+    let prompt: Vec<i32> = (3..40).collect();
+    let mut rt1 = ModelRuntime::load(&dir, 7).unwrap();
+    let a = rt1.generate(1, &prompt, 6).unwrap();
+    drop(rt1);
+    let mut rt2 = ModelRuntime::load(&dir, 8).unwrap();
+    let b = rt2.generate(1, &prompt, 6).unwrap();
+    assert_ne!(a, b, "different weights must generate differently");
+}
+
+#[test]
+fn batched_decode_matches_solo_decode() {
+    // The decisive batching-correctness check: a sequence's tokens must
+    // not depend on which other sequences share its decode batch.
+    let Some(dir) = artifacts() else { return };
+    let mut rt = ModelRuntime::load(&dir, 7).unwrap();
+
+    let p1: Vec<i32> = (3..30).collect();
+    let p2: Vec<i32> = (100..160).rev().collect();
+
+    // solo generation for p1
+    let solo = rt.generate(10, &p1, 6).unwrap();
+    rt.release(10).unwrap();
+
+    // batched: p1 and p2 decode together
+    let f1 = rt.prefill(21, &p1).unwrap();
+    let f2 = rt.prefill(22, &p2).unwrap();
+    let mut t1 = f1;
+    let mut t2 = f2;
+    let mut got = vec![f1];
+    for _ in 1..6 {
+        let next = rt.decode(&[21, 22], &[t1, t2]).unwrap();
+        t1 = next[0];
+        t2 = next[1];
+        got.push(t1);
+    }
+    assert_eq!(solo, got, "batching changed sequence 1's tokens");
+}
+
+#[test]
+fn bucket_padding_invariance() {
+    // Same prompt served via different padding buckets → same tokens.
+    let Some(dir) = artifacts() else { return };
+    let mut rt = ModelRuntime::load(&dir, 7).unwrap();
+    let p: Vec<i32> = (5..19).collect(); // fits bucket 16
+    let a = rt.generate(1, &p, 4).unwrap();
+    rt.release(1).unwrap();
+    // the same tokens via generate on a fresh runtime: decode path uses
+    // ctx_lens, not the bucket, so this exercises pad-token invariance.
+    let mut rt2 = ModelRuntime::load(&dir, 7).unwrap();
+    let b = rt2.generate(9, &p, 4).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn kv_pool_accounting_tracks_tokens() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = ModelRuntime::load(&dir, 7).unwrap();
+    let p: Vec<i32> = (3..50).collect();
+    rt.prefill(1, &p).unwrap();
+    let before = rt.pool.cached_tokens();
+    assert_eq!(before, p.len());
+    rt.decode(&[1], &[42]).unwrap();
+    assert_eq!(rt.pool.cached_tokens(), p.len() + 1);
+    rt.release(1).unwrap();
+    assert_eq!(rt.pool.cached_tokens(), 0);
+}
+
+#[test]
+fn serve_text_roundtrip() {
+    // Text in, text out through the tokenizer + runtime.
+    let Some(dir) = artifacts() else { return };
+    let mut rt = ModelRuntime::load(&dir, 7).unwrap();
+    let tok = Tokenizer::new(rt.engine.meta.vocab_size);
+    let ids = tok.encode("What is the answer?");
+    let out = rt.generate(1, &ids, 12).unwrap();
+    let text = tok.decode(&out);
+    // random weights → arbitrary text; just verify the pipe produced
+    // *some* decodable byte string of the right token count.
+    assert_eq!(out.len(), 12);
+    let _ = text;
+}
+
+#[test]
+fn rejects_oversized_prompt_and_unknown_seq() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = ModelRuntime::load(&dir, 7).unwrap();
+    let too_long: Vec<i32> = vec![5; 500];
+    assert!(rt.prefill(1, &too_long).is_err());
+    assert!(rt.decode(&[99], &[1]).is_err());
+}
+
+#[test]
+fn meta_matches_python_config() {
+    let Some(dir) = artifacts() else { return };
+    let m = ModelMeta::load(&dir).unwrap();
+    // ABI invariants the python side guarantees (ModelConfig defaults)
+    assert_eq!(m.vocab_size, 2048);
+    assert_eq!(m.d_model, 256);
+    assert_eq!(m.n_heads, 8);
+    assert_eq!(m.n_kv_heads, 4);
+    assert_eq!(m.max_ctx, 192);
+    assert_eq!(m.weights.len(), 39);
+}

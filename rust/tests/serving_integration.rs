@@ -1,0 +1,145 @@
+//! Integration over the simulation serving stack: coordinator →
+//! scheduler → engines → simulator, plus the live threaded engine when
+//! artifacts are available.
+
+use bullet::baselines::{run_system, System};
+use bullet::config::{ServingConfig, SloSpec};
+use bullet::coordinator::{BuildOptions, BulletServer};
+use bullet::engine::live_engine::{serve_live, LiveRequest};
+use bullet::metrics::summarize;
+use bullet::runtime::ModelRuntime;
+use bullet::workload::{generate_n_requests, Dataset};
+use std::path::PathBuf;
+
+#[test]
+fn coordinator_end_to_end_with_profiling() {
+    let cfg = ServingConfig {
+        slo: SloSpec::azure_code(),
+        ..ServingConfig::default()
+    };
+    let server = BulletServer::build(cfg.clone(), BuildOptions::with_coarse_profiling(&cfg));
+    let out = server.serve_dataset(&Dataset::azure_code(), 4.0, 40, 17);
+    assert_eq!(out.records.len(), 40);
+    let s = summarize(&out.records, &cfg.slo, Some(out.virtual_duration));
+    // sanity envelope for the simulated A100 + Llama-8B
+    assert!(s.mean_ttft < 5.0, "ttft {}", s.mean_ttft);
+    assert!(s.mean_tpot < 0.25, "tpot {}", s.mean_tpot);
+    assert!(s.slo_attainment > 0.3, "slo {}", s.slo_attainment);
+}
+
+#[test]
+fn bullet_vs_baselines_ordering_holds() {
+    // The paper's qualitative result on a congested code workload:
+    // Bullet's mean TTFT beats every chunked-prefill system, and its
+    // SLO attainment is at least as good.
+    let cfg = ServingConfig {
+        slo: SloSpec::azure_code(),
+        ..ServingConfig::default()
+    };
+    let server = BulletServer::build(cfg.clone(), BuildOptions::with_coarse_profiling(&cfg));
+    let trace = generate_n_requests(&Dataset::azure_code(), 6.0, 60, 23);
+
+    let bullet = summarize(
+        &run_system(System::Bullet, &cfg, server.perf(), server.ground_truth(), &trace, 1),
+        &cfg.slo,
+        None,
+    );
+    for sys in [System::Vllm1024, System::Sglang1024, System::Sglang2048] {
+        let base = summarize(
+            &run_system(sys, &cfg, server.perf(), server.ground_truth(), &trace, 1),
+            &cfg.slo,
+            None,
+        );
+        assert!(
+            bullet.mean_ttft < base.mean_ttft,
+            "{}: bullet ttft {} vs {}",
+            sys.label(),
+            bullet.mean_ttft,
+            base.mean_ttft
+        );
+        assert!(
+            bullet.slo_attainment >= base.slo_attainment - 0.05,
+            "{}: bullet slo {} vs {}",
+            sys.label(),
+            bullet.slo_attainment,
+            base.slo_attainment
+        );
+    }
+}
+
+#[test]
+fn ablations_are_distinct_systems() {
+    let cfg = ServingConfig::default();
+    let server = BulletServer::build(cfg.clone(), BuildOptions::default());
+    let trace = generate_n_requests(&Dataset::sharegpt(), 8.0, 40, 29);
+    let mut results = Vec::new();
+    for sys in System::ablation_set() {
+        let s = summarize(
+            &run_system(sys, &cfg, server.perf(), server.ground_truth(), &trace, 2),
+            &cfg.slo,
+            None,
+        );
+        results.push((sys.label(), s.mean_ttft, s.mean_tpot));
+    }
+    // full Bullet should not be the worst on either metric
+    let bullet = results.last().unwrap().clone();
+    let worst_ttft = results.iter().map(|x| x.1).fold(0.0, f64::max);
+    let worst_tpot = results.iter().map(|x| x.2).fold(0.0, f64::max);
+    assert!(bullet.1 < worst_ttft || bullet.2 < worst_tpot, "{results:?}");
+}
+
+fn artifacts() -> Option<PathBuf> {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if d.join("meta.json").exists() {
+        Some(d)
+    } else {
+        eprintln!("skipping live test: run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn live_engine_serves_real_model() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load(&dir, 7).unwrap();
+    let trace: Vec<LiveRequest> = (0..6)
+        .map(|i| LiveRequest {
+            id: i,
+            arrival: i as f64 * 0.01,
+            prompt: (3..(20 + i as i32 * 7)).collect(),
+            output_len: 5 + (i as usize % 3),
+        })
+        .collect();
+    let (records, stats) = serve_live(rt, trace).unwrap();
+    assert_eq!(records.len(), 6);
+    for r in &records {
+        assert!(r.first_token_time >= r.prefill_start);
+        assert!(r.finish_time >= r.first_token_time);
+        assert!(r.ttft() < 60.0);
+    }
+    assert!(stats.decode_iterations > 0);
+    assert!(stats.max_batch_seen >= 1);
+}
+
+#[test]
+fn live_engine_continuous_batching_overlaps_requests() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load(&dir, 7).unwrap();
+    // all arrive at once with long outputs: the decode batch must grow
+    // beyond 1 (continuous batching), proving concurrent membership.
+    let trace: Vec<LiveRequest> = (0..4)
+        .map(|i| LiveRequest {
+            id: i,
+            arrival: 0.0,
+            prompt: (3..30).collect(),
+            output_len: 24,
+        })
+        .collect();
+    let (records, stats) = serve_live(rt, trace).unwrap();
+    assert_eq!(records.len(), 4);
+    assert!(
+        stats.max_batch_seen >= 2,
+        "expected batched decode, max batch {}",
+        stats.max_batch_seen
+    );
+}
