@@ -9,13 +9,15 @@
 //! and vice versa.  Chunked attention must RELOAD the KV of all previous
 //! chunks — the N(N+1)/2 cost of §2.3.1 — which `prefill_layer_kernels`
 //! models through the `context` field.
+//!
+//! Expressed as a [`ServingPolicy`] over the shared serving core: the
+//! policy plans only when *all* lanes are idle (lock-step) and performs
+//! the whole iteration's lifecycle update when its single lane drains.
 
 use crate::config::ServingConfig;
+use crate::engine::core::{CoreOptions, EngineCore, Lane, ServingPolicy};
 use crate::gpu::kernel::KernelDesc;
 use crate::gpu::roofline::GroundTruth;
-use crate::gpu::simulator::Simulator;
-use crate::gpu::stream::SmMask;
-use crate::kvcache::KvPool;
 use crate::metrics::RequestRecord;
 use crate::model::phases::{decode_layer_kernels, prefill_layer_kernels, PhaseShape};
 use crate::workload::Request;
@@ -72,25 +74,118 @@ pub fn kv_reload_factor(n_chunks: usize) -> usize {
     n_chunks * (n_chunks + 1) / 2
 }
 
-struct PrefillProgress {
-    id: u64,
-    arrival: f64,
-    input_len: usize,
-    output_len: usize,
-    /// Tokens already prefilled (the reload context of the next chunk).
-    done: usize,
-    prefill_start: Option<f64>,
+/// One hybrid iteration's shape, shared by the chunked and NanoFlow
+/// policies: decode slots first, then prefill chunks under the budget.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct HybridBatch {
+    /// Decode token slots this iteration.
+    pub ds: usize,
+    /// Prefill chunk tokens this iteration.
+    pub chunk_tokens: usize,
+    /// Largest reload context across the chunks.
+    pub ctx_max: usize,
+    /// Mean decode context length.
+    pub cl: usize,
+    /// (waiting index, tokens taken, prior context) per chunk.
+    pub assignments: Vec<(usize, usize, usize)>,
 }
 
-struct DecodeActive {
-    id: u64,
-    arrival: f64,
-    input_len: usize,
-    output_len: usize,
-    ctx_len: usize,
-    tokens_out: usize,
-    prefill_start: f64,
-    first_token_time: f64,
+impl HybridBatch {
+    pub fn empty(&self) -> bool {
+        self.chunk_tokens == 0 && self.ds == 0
+    }
+}
+
+/// Build the iteration's hybrid batch against the core's queues,
+/// reserving KV (input + output) for requests starting their first chunk.
+pub(crate) fn build_hybrid_batch(core: &mut EngineCore, chunk_size: usize) -> HybridBatch {
+    let now = core.now();
+    let ds = core.decode.len().min(chunk_size);
+    let mut budget = chunk_size - ds;
+    let mut assignments: Vec<(usize, usize, usize)> = Vec::new();
+    for (i, w) in core.waiting.iter_mut().enumerate() {
+        if budget == 0 {
+            break;
+        }
+        let take = w.remaining().min(budget);
+        if take == 0 {
+            continue;
+        }
+        // KV reservation at first chunk (input + output, see engine docs).
+        if w.done == 0 {
+            let reserve = w.req.input_len + w.req.output_len;
+            if !core.kv.can_grow(w.req.id, reserve) {
+                continue; // waits for memory
+            }
+            core.kv.grow(w.req.id, reserve).unwrap();
+            w.prefill_start = Some(now);
+        }
+        assignments.push((i, take, w.done));
+        budget -= take;
+    }
+    let chunk_tokens = assignments.iter().map(|a| a.1).sum();
+    let ctx_max = assignments.iter().map(|a| a.2).max().unwrap_or(0);
+    let cl = if ds > 0 {
+        (core.decode.iter().map(|d| d.st.ctx_len).sum::<usize>() / ds).max(1)
+    } else {
+        1
+    };
+    HybridBatch {
+        ds,
+        chunk_tokens,
+        ctx_max,
+        cl,
+        assignments,
+    }
+}
+
+/// Shared stall handling for the chunk-budget engines.  A stall with
+/// work waiting means nothing is in flight that could ever free the
+/// pool — a non-empty decode batch or pending join always yields
+/// `ds >= 1` and a launchable hybrid iteration — so every waiting
+/// request is at `done == 0` and failed its reservation against an
+/// empty pool: the head request can never fit.  Fail loudly like the
+/// Bullet admission path.
+pub(crate) fn hybrid_stall(core: &EngineCore) -> bool {
+    if core.waiting.is_empty() {
+        return false;
+    }
+    let w = &core.waiting[0];
+    panic!(
+        "request {} needs {} KV tokens but pool holds {}",
+        w.req.id,
+        w.req.input_len + w.req.output_len,
+        core.kv.capacity_tokens()
+    );
+}
+
+/// End-of-iteration lifecycle, shared by the chunked and NanoFlow
+/// policies: charge the CPU overhead, credit a token to every decode
+/// member, credit chunk progress, and migrate finished prefills.
+pub(crate) fn complete_hybrid_iteration(
+    core: &mut EngineCore,
+    batch: &HybridBatch,
+    iter_overhead: f64,
+) {
+    core.sim.run_for(iter_overhead);
+    // Decode side: one token each (joins happen at the NEXT boundary, so
+    // this iteration's finishers are exactly the pre-iteration batch).
+    core.advance_decode_token();
+    // Prefill side: credit progress; completed prompts emit their first
+    // token at this iteration's end and migrate to decode.
+    let mut finished_idx: Vec<usize> = Vec::new();
+    for &(i, take, _) in &batch.assignments {
+        core.waiting[i].done += take;
+        if core.waiting[i].done >= core.waiting[i].req.input_len {
+            finished_idx.push(i);
+        }
+    }
+    finished_idx.sort_unstable_by(|a, b| b.cmp(a)); // remove back-to-front
+    for i in finished_idx {
+        let w = core.waiting.remove(i);
+        let ps = w.prefill_start.expect("chunked request ran without start");
+        core.finish_prefill(w.req, ps);
+    }
 }
 
 /// One hybrid-batch layer pass: fused GEMMs over (ds + chunk) rows plus
@@ -131,8 +226,69 @@ fn hybrid_iteration_kernels(
     out
 }
 
+/// Chunked-prefill decision logic as a [`ServingPolicy`]: lock-step
+/// hybrid batches on one whole-GPU lane.
+pub struct ChunkedPolicy {
+    ccfg: ChunkedConfig,
+    /// The iteration currently in flight (None between iterations).
+    batch: Option<HybridBatch>,
+}
+
+impl ChunkedPolicy {
+    pub fn new(ccfg: ChunkedConfig) -> ChunkedPolicy {
+        ChunkedPolicy { ccfg, batch: None }
+    }
+}
+
+impl ServingPolicy for ChunkedPolicy {
+    fn label(&self) -> String {
+        self.ccfg.label.to_string()
+    }
+
+    fn plan(&mut self, core: &mut EngineCore) {
+        if !core.all_idle() {
+            return; // lock-step: plan only at iteration boundaries
+        }
+        // Finished prefills join decode right at the boundary (chunked
+        // engines have no decode-batch cap beyond the token budget).
+        core.join_pending(usize::MAX);
+        let batch = build_hybrid_batch(core, self.ccfg.chunk_size);
+        if batch.empty() {
+            return; // idle or memory-stalled; pump handles the wait
+        }
+        let kernels = hybrid_iteration_kernels(
+            &core.cfg,
+            batch.chunk_tokens,
+            batch.ctx_max,
+            batch.ds,
+            batch.cl,
+        );
+        // Lock-step execution of the fused pass on the full-GPU stream.
+        let stream = core.rm.prefill_stream_for(core.cfg.gpu.num_sms);
+        core.submit(Lane::Prefill, stream, kernels);
+        self.batch = Some(batch);
+    }
+
+    fn on_drain(&mut self, lane: Lane, core: &mut EngineCore) {
+        if lane != Lane::Prefill {
+            return;
+        }
+        let batch = self.batch.take().expect("drain without an iteration");
+        complete_hybrid_iteration(core, &batch, self.ccfg.iter_overhead);
+    }
+
+    fn on_stall(&mut self, core: &mut EngineCore) -> bool {
+        hybrid_stall(core)
+    }
+
+    fn has_private_work(&self) -> bool {
+        self.batch.is_some()
+    }
+}
+
 /// Serve `trace` with a chunked-prefill engine; same record format as
-/// the Bullet engine so summaries are directly comparable.
+/// the Bullet engine so summaries are directly comparable.  (Thin
+/// wrapper over [`EngineCore`] + [`ChunkedPolicy`].)
 pub fn serve_chunked(
     cfg: &ServingConfig,
     ccfg: &ChunkedConfig,
@@ -140,152 +296,16 @@ pub fn serve_chunked(
     trace: &[Request],
     seed: u64,
 ) -> Vec<RequestRecord> {
-    let mut sim = Simulator::new(gt.clone(), seed);
-    let stream = sim.create_stream(SmMask::first(cfg.gpu.num_sms), "hybrid");
-    let mut kv = KvPool::new(cfg.kv_capacity_tokens);
-
-    let mut waiting: Vec<PrefillProgress> = Vec::new();
-    let mut decode: Vec<DecodeActive> = Vec::new();
-    let mut records: Vec<RequestRecord> = Vec::new();
-    let mut next_arrival = 0usize;
-    let expected = trace.len();
-
-    while records.len() < expected {
-        let now = sim.now();
-        while next_arrival < trace.len() && trace[next_arrival].arrival <= now {
-            let r = &trace[next_arrival];
-            waiting.push(PrefillProgress {
-                id: r.id,
-                arrival: r.arrival,
-                input_len: r.input_len,
-                output_len: r.output_len,
-                done: 0,
-                prefill_start: None,
-            });
-            next_arrival += 1;
-        }
-
-        if waiting.is_empty() && decode.is_empty() {
-            if next_arrival < trace.len() {
-                let dt = (trace[next_arrival].arrival - now).max(0.0) + 1e-9;
-                sim.run_for(dt);
-                continue;
-            }
-            unreachable!("work exhausted with records missing");
-        }
-
-        // Build the hybrid batch: decode first (token each), then chunks.
-        let ds = decode.len().min(ccfg.chunk_size);
-        let mut budget = ccfg.chunk_size - ds;
-        let mut assignments: Vec<(usize, usize, usize)> = Vec::new(); // (idx, take, ctx)
-        for (i, w) in waiting.iter_mut().enumerate() {
-            if budget == 0 {
-                break;
-            }
-            let remaining = w.input_len - w.done;
-            let take = remaining.min(budget);
-            if take == 0 {
-                continue;
-            }
-            // KV reservation at first chunk (input + output, see engine docs).
-            if w.done == 0 {
-                let reserve = w.input_len + w.output_len;
-                if !kv.can_grow(w.id, reserve) {
-                    continue; // waits for memory
-                }
-                kv.grow(w.id, reserve).unwrap();
-                w.prefill_start = Some(now);
-            }
-            assignments.push((i, take, w.done));
-            budget -= take;
-        }
-
-        // Lock-step execution of the fused pass.
-        let chunk_tokens: usize = assignments.iter().map(|a| a.1).sum();
-        let ctx_max = assignments.iter().map(|a| a.2).max().unwrap_or(0);
-        let cl = if ds > 0 {
-            (decode.iter().map(|d| d.ctx_len).sum::<usize>() / ds).max(1)
-        } else {
-            1
-        };
-        if chunk_tokens == 0 && ds == 0 {
-            // memory-stalled: wait for a decode to finish... but decode is
-            // empty here only if waiting couldn't reserve; jump time.
-            sim.run_for(1e-3);
-            continue;
-        }
-        sim.submit_all(
-            stream,
-            hybrid_iteration_kernels(cfg, chunk_tokens, ctx_max, ds, cl),
-        );
-        sim.run_until_stream_idle(stream);
-        sim.run_for(ccfg.iter_overhead);
-        let iter_end = sim.now();
-        sim.take_completions();
-
-        // Decode side: one token each.
-        let mut i = 0;
-        while i < decode.len() {
-            let d = &mut decode[i];
-            d.tokens_out += 1;
-            d.ctx_len += 1;
-            if d.tokens_out >= d.output_len {
-                let d = decode.remove(i);
-                records.push(RequestRecord {
-                    id: d.id,
-                    arrival: d.arrival,
-                    input_len: d.input_len,
-                    output_len: d.output_len,
-                    first_token_time: d.first_token_time,
-                    finish_time: iter_end,
-                    prefill_start: d.prefill_start,
-                });
-                kv.release(d.id).unwrap();
-            } else {
-                i += 1;
-            }
-        }
-
-        // Prefill side: credit progress; completed prompts emit their
-        // first token at this iteration's end and join decode.
-        let mut finished_idx: Vec<usize> = Vec::new();
-        for &(i, take, _) in &assignments {
-            waiting[i].done += take;
-            if waiting[i].done >= waiting[i].input_len {
-                finished_idx.push(i);
-            }
-        }
-        finished_idx.sort_unstable_by(|a, b| b.cmp(a)); // remove back-to-front
-        for i in finished_idx {
-            let w = waiting.remove(i);
-            let ps = w.prefill_start.unwrap();
-            if w.output_len <= 1 {
-                records.push(RequestRecord {
-                    id: w.id,
-                    arrival: w.arrival,
-                    input_len: w.input_len,
-                    output_len: w.output_len,
-                    first_token_time: iter_end,
-                    finish_time: iter_end,
-                    prefill_start: ps,
-                });
-                kv.release(w.id).unwrap();
-            } else {
-                decode.push(DecodeActive {
-                    id: w.id,
-                    arrival: w.arrival,
-                    input_len: w.input_len,
-                    output_len: w.output_len,
-                    ctx_len: w.input_len,
-                    tokens_out: 1,
-                    prefill_start: ps,
-                    first_token_time: iter_end,
-                });
-            }
-        }
-    }
-
-    records
+    let opts = CoreOptions {
+        seed,
+        // the pre-refactor baseline loops had no virtual-time cap
+        max_virtual_time: f64::INFINITY,
+        ..CoreOptions::default()
+    };
+    let mut core = EngineCore::new(cfg.clone(), gt.clone(), trace.to_vec(), &opts);
+    let mut policy = ChunkedPolicy::new(ccfg.clone());
+    core.run(&mut policy);
+    core.into_output().records
 }
 
 #[cfg(test)]

@@ -14,6 +14,6 @@ pub mod chunked;
 pub mod nanoflow;
 pub mod systems;
 
-pub use chunked::{serve_chunked, ChunkedConfig};
-pub use nanoflow::serve_nanoflow;
+pub use chunked::{serve_chunked, ChunkedConfig, ChunkedPolicy};
+pub use nanoflow::{serve_nanoflow, NanoflowPolicy};
 pub use systems::{run_system, System};

@@ -11,38 +11,92 @@
 //! kernels are issued on two concurrent full-GPU streams (the simulator's
 //! CKE + bandwidth-contention physics produce the partial overlap), with
 //! a barrier per iteration — the fixed-pipeline synchronization.
+//!
+//! As a [`ServingPolicy`]: batch building and end-of-iteration lifecycle
+//! are shared with the chunked policy; the only difference is kernel
+//! issue (two overlapped lanes) and the drain barrier (`on_drain` waits
+//! for BOTH lanes before completing the iteration).
 
-use crate::baselines::chunked::ChunkedConfig;
+use crate::baselines::chunked::{
+    build_hybrid_batch, complete_hybrid_iteration, hybrid_stall, ChunkedConfig, HybridBatch,
+};
 use crate::config::ServingConfig;
+use crate::engine::core::{CoreOptions, EngineCore, Lane, ServingPolicy};
 use crate::gpu::roofline::GroundTruth;
-use crate::gpu::simulator::Simulator;
-use crate::gpu::stream::SmMask;
-use crate::kvcache::KvPool;
 use crate::metrics::RequestRecord;
 use crate::model::phases::{decode_all_layers, prefill_all_layers, PhaseShape};
 use crate::workload::Request;
 
-struct Prefilling {
-    id: u64,
-    arrival: f64,
-    input_len: usize,
-    output_len: usize,
-    done: usize,
-    prefill_start: Option<f64>,
+/// NanoFlow decision logic: hybrid batches with nano-batch overlap.
+pub struct NanoflowPolicy {
+    ccfg: ChunkedConfig,
+    batch: Option<HybridBatch>,
 }
 
-struct Decoding {
-    id: u64,
-    arrival: f64,
-    input_len: usize,
-    output_len: usize,
-    ctx_len: usize,
-    tokens_out: usize,
-    prefill_start: f64,
-    first_token_time: f64,
+impl NanoflowPolicy {
+    /// NanoFlow config = chunked config (chunk 1024 in the paper's setup).
+    pub fn new(ccfg: ChunkedConfig) -> NanoflowPolicy {
+        NanoflowPolicy { ccfg, batch: None }
+    }
 }
 
-/// NanoFlow config = chunked config (chunk 1024 in the paper's setup).
+impl ServingPolicy for NanoflowPolicy {
+    fn label(&self) -> String {
+        "NanoFlow".into()
+    }
+
+    fn plan(&mut self, core: &mut EngineCore) {
+        if !core.all_idle() {
+            return; // fixed pipeline: one hybrid iteration at a time
+        }
+        core.join_pending(usize::MAX);
+        let batch = build_hybrid_batch(core, self.ccfg.chunk_size);
+        if batch.empty() {
+            return;
+        }
+        // Nano-batch overlap: the two halves co-run on concurrent
+        // full-GPU streams (barrier at the end).
+        let full = core.cfg.gpu.num_sms;
+        if batch.chunk_tokens > 0 {
+            let kernels = prefill_all_layers(
+                &core.cfg.model,
+                PhaseShape { tokens: batch.chunk_tokens, context: batch.ctx_max },
+            );
+            let stream = core.rm.prefill_stream_for(full);
+            core.submit(Lane::Prefill, stream, kernels);
+        }
+        if batch.ds > 0 {
+            let kernels = decode_all_layers(
+                &core.cfg.model,
+                PhaseShape { tokens: batch.ds, context: batch.cl },
+            );
+            let stream = core.rm.decode_stream_for(full);
+            core.submit(Lane::Decode, stream, kernels);
+        }
+        self.batch = Some(batch);
+    }
+
+    fn on_drain(&mut self, _lane: Lane, core: &mut EngineCore) {
+        // Pipeline barrier: the iteration completes only when BOTH
+        // nano-batch lanes have drained.
+        if !core.all_idle() {
+            return;
+        }
+        let batch = self.batch.take().expect("drain without an iteration");
+        complete_hybrid_iteration(core, &batch, self.ccfg.iter_overhead);
+    }
+
+    fn on_stall(&mut self, core: &mut EngineCore) -> bool {
+        hybrid_stall(core)
+    }
+
+    fn has_private_work(&self) -> bool {
+        self.batch.is_some()
+    }
+}
+
+/// Serve `trace` with the NanoFlow engine.  (Thin wrapper over
+/// [`EngineCore`] + [`NanoflowPolicy`].)
 pub fn serve_nanoflow(
     cfg: &ServingConfig,
     ccfg: &ChunkedConfig,
@@ -50,157 +104,16 @@ pub fn serve_nanoflow(
     trace: &[Request],
     seed: u64,
 ) -> Vec<RequestRecord> {
-    let mut sim = Simulator::new(gt.clone(), seed);
-    let full = cfg.gpu.num_sms;
-    let s_prefill = sim.create_stream(SmMask::first(full), "nano-prefill");
-    let s_decode = sim.create_stream(SmMask::first(full), "nano-decode");
-    let mut kv = KvPool::new(cfg.kv_capacity_tokens);
-
-    let mut waiting: Vec<Prefilling> = Vec::new();
-    let mut decode: Vec<Decoding> = Vec::new();
-    let mut records: Vec<RequestRecord> = Vec::new();
-    let mut next_arrival = 0usize;
-    let expected = trace.len();
-
-    while records.len() < expected {
-        let now = sim.now();
-        while next_arrival < trace.len() && trace[next_arrival].arrival <= now {
-            let r = &trace[next_arrival];
-            waiting.push(Prefilling {
-                id: r.id,
-                arrival: r.arrival,
-                input_len: r.input_len,
-                output_len: r.output_len,
-                done: 0,
-                prefill_start: None,
-            });
-            next_arrival += 1;
-        }
-
-        if waiting.is_empty() && decode.is_empty() {
-            if next_arrival < trace.len() {
-                let dt = (trace[next_arrival].arrival - now).max(0.0) + 1e-9;
-                sim.run_for(dt);
-                continue;
-            }
-            unreachable!("work exhausted with records missing");
-        }
-
-        // Hybrid-batch budget accounting identical to chunked prefill.
-        let ds = decode.len().min(ccfg.chunk_size);
-        let mut budget = ccfg.chunk_size - ds;
-        let mut assignments: Vec<(usize, usize, usize)> = Vec::new();
-        for (i, w) in waiting.iter_mut().enumerate() {
-            if budget == 0 {
-                break;
-            }
-            let remaining = w.input_len - w.done;
-            let take = remaining.min(budget);
-            if take == 0 {
-                continue;
-            }
-            if w.done == 0 {
-                let reserve = w.input_len + w.output_len;
-                if !kv.can_grow(w.id, reserve) {
-                    continue;
-                }
-                kv.grow(w.id, reserve).unwrap();
-                w.prefill_start = Some(now);
-            }
-            assignments.push((i, take, w.done));
-            budget -= take;
-        }
-
-        let chunk_tokens: usize = assignments.iter().map(|a| a.1).sum();
-        let ctx_max = assignments.iter().map(|a| a.2).max().unwrap_or(0);
-        let cl = if ds > 0 {
-            (decode.iter().map(|d| d.ctx_len).sum::<usize>() / ds).max(1)
-        } else {
-            1
-        };
-        if chunk_tokens == 0 && ds == 0 {
-            sim.run_for(1e-3);
-            continue;
-        }
-
-        // Nano-batch overlap: the two halves co-run (barrier at the end).
-        if chunk_tokens > 0 {
-            sim.submit_all(
-                s_prefill,
-                prefill_all_layers(&cfg.model, PhaseShape { tokens: chunk_tokens, context: ctx_max }),
-            );
-        }
-        if ds > 0 {
-            sim.submit_all(
-                s_decode,
-                decode_all_layers(&cfg.model, PhaseShape { tokens: ds, context: cl }),
-            );
-        }
-        sim.run_until_idle(); // pipeline barrier
-        sim.run_for(ccfg.iter_overhead);
-        let iter_end = sim.now();
-        sim.take_completions();
-
-        let mut i = 0;
-        while i < decode.len() {
-            let d = &mut decode[i];
-            d.tokens_out += 1;
-            d.ctx_len += 1;
-            if d.tokens_out >= d.output_len {
-                let d = decode.remove(i);
-                records.push(RequestRecord {
-                    id: d.id,
-                    arrival: d.arrival,
-                    input_len: d.input_len,
-                    output_len: d.output_len,
-                    first_token_time: d.first_token_time,
-                    finish_time: iter_end,
-                    prefill_start: d.prefill_start,
-                });
-                kv.release(d.id).unwrap();
-            } else {
-                i += 1;
-            }
-        }
-
-        let mut finished_idx: Vec<usize> = Vec::new();
-        for &(i, take, _) in &assignments {
-            waiting[i].done += take;
-            if waiting[i].done >= waiting[i].input_len {
-                finished_idx.push(i);
-            }
-        }
-        finished_idx.sort_unstable_by(|a, b| b.cmp(a));
-        for i in finished_idx {
-            let w = waiting.remove(i);
-            let ps = w.prefill_start.unwrap();
-            if w.output_len <= 1 {
-                records.push(RequestRecord {
-                    id: w.id,
-                    arrival: w.arrival,
-                    input_len: w.input_len,
-                    output_len: w.output_len,
-                    first_token_time: iter_end,
-                    finish_time: iter_end,
-                    prefill_start: ps,
-                });
-                kv.release(w.id).unwrap();
-            } else {
-                decode.push(Decoding {
-                    id: w.id,
-                    arrival: w.arrival,
-                    input_len: w.input_len,
-                    output_len: w.output_len,
-                    ctx_len: w.input_len,
-                    tokens_out: 1,
-                    prefill_start: ps,
-                    first_token_time: iter_end,
-                });
-            }
-        }
-    }
-
-    records
+    let opts = CoreOptions {
+        seed,
+        // the pre-refactor baseline loops had no virtual-time cap
+        max_virtual_time: f64::INFINITY,
+        ..CoreOptions::default()
+    };
+    let mut core = EngineCore::new(cfg.clone(), gt.clone(), trace.to_vec(), &opts);
+    let mut policy = NanoflowPolicy::new(ccfg.clone());
+    core.run(&mut policy);
+    core.into_output().records
 }
 
 #[cfg(test)]

@@ -1,10 +1,12 @@
 //! Unified runner over every evaluated system — the x-axis of Figs. 11,
-//! 13 and 14.
+//! 13 and 14 — plus the policy factory the cluster layer uses to scale
+//! any of them across replicas.
 
-use crate::baselines::chunked::{serve_chunked, ChunkedConfig};
-use crate::baselines::nanoflow::serve_nanoflow;
+use crate::baselines::chunked::{serve_chunked, ChunkedConfig, ChunkedPolicy};
+use crate::baselines::nanoflow::{serve_nanoflow, NanoflowPolicy};
 use crate::config::ServingConfig;
-use crate::engine::sim_engine::{serve_bullet, Features, SimEngineOptions};
+use crate::engine::core::ServingPolicy;
+use crate::engine::sim_engine::{serve_bullet, BulletPolicy, Features, SimEngineOptions};
 use crate::gpu::roofline::GroundTruth;
 use crate::metrics::RequestRecord;
 use crate::perf::PerfModel;
@@ -41,6 +43,18 @@ impl System {
         }
     }
 
+    /// CLI name → system.
+    pub fn by_name(name: &str) -> Option<System> {
+        match name {
+            "bullet" => Some(System::Bullet),
+            "vllm-1024" => Some(System::Vllm1024),
+            "sglang-1024" => Some(System::Sglang1024),
+            "sglang-2048" => Some(System::Sglang2048),
+            "nanoflow" => Some(System::Nanoflow),
+            _ => None,
+        }
+    }
+
     /// The paper's Fig. 11 comparison set.
     pub fn evaluation_set() -> Vec<System> {
         vec![
@@ -60,6 +74,36 @@ impl System {
             System::WithScheduler,
             System::Bullet,
         ]
+    }
+
+    /// The Bullet feature mask this system corresponds to, if it runs on
+    /// the Bullet policy.
+    fn bullet_features(&self) -> Option<Features> {
+        match self {
+            System::Bullet => Some(Features::default()),
+            System::Naive => Some(Features::naive()),
+            System::WithPartition => Some(Features::partition_only()),
+            System::WithScheduler => Some(Features::scheduler_only()),
+            System::FixedSm(n) => Some(Features::fixed(*n)),
+            _ => None,
+        }
+    }
+
+    /// Instantiate this system's decision logic for one engine instance.
+    /// Every system — Bullet, its ablations, the static-partition
+    /// configurations, chunked prefill and NanoFlow — is a policy over
+    /// the same serving core, so the cluster layer can scale any of them.
+    pub fn policy(&self, cfg: &ServingConfig, perf: &PerfModel) -> Box<dyn ServingPolicy> {
+        if let Some(features) = self.bullet_features() {
+            return Box::new(BulletPolicy::new(cfg, perf, features));
+        }
+        match self {
+            System::Vllm1024 => Box::new(ChunkedPolicy::new(ChunkedConfig::vllm_1024())),
+            System::Sglang1024 => Box::new(ChunkedPolicy::new(ChunkedConfig::sglang_1024())),
+            System::Sglang2048 => Box::new(ChunkedPolicy::new(ChunkedConfig::sglang_2048())),
+            System::Nanoflow => Box::new(NanoflowPolicy::new(ChunkedConfig::sglang_1024())),
+            _ => unreachable!("bullet-family systems handled above"),
+        }
     }
 }
 
@@ -81,7 +125,9 @@ pub fn run_system(
         System::Bullet => {
             serve_bullet(cfg, perf, gt, trace, &bullet_opts(Features::default())).records
         }
-        System::Naive => serve_bullet(cfg, perf, gt, trace, &bullet_opts(Features::naive())).records,
+        System::Naive => {
+            serve_bullet(cfg, perf, gt, trace, &bullet_opts(Features::naive())).records
+        }
         System::WithPartition => {
             serve_bullet(cfg, perf, gt, trace, &bullet_opts(Features::partition_only())).records
         }
@@ -167,5 +213,20 @@ mod tests {
         let before = labels.len();
         labels.dedup();
         assert_eq!(labels.len(), before - 1); // Bullet appears in both sets
+    }
+
+    #[test]
+    fn policy_factory_labels_match() {
+        let (cfg, perf, _) = setup();
+        // the factory builds the system the label says it builds —
+        // including the ablations and fixed-quota configurations
+        for sys in System::evaluation_set()
+            .into_iter()
+            .chain(System::ablation_set())
+            .chain([System::FixedSm(84)])
+        {
+            let p = sys.policy(&cfg, &perf);
+            assert_eq!(p.label(), sys.label(), "{:?}", sys);
+        }
     }
 }

@@ -1,0 +1,295 @@
+//! Multi-replica scale-out: N independent simulated-GPU engine instances
+//! behind a dispatcher.
+//!
+//! Each [`Replica`] is one [`EngineCore`] plus one boxed
+//! [`ServingPolicy`] — the same pairing as single-GPU serving, which is
+//! the point: once every system is a policy over the shared core, the
+//! cluster layer can scale *any* of them (Bullet, chunked, NanoFlow,
+//! MuxServe-style fixed quotas) without touching engine code.
+//!
+//! Co-simulation model: replicas share the global virtual timeline.  The
+//! dispatcher walks the trace in arrival order; before routing a request
+//! it advances every replica's clock to the arrival instant
+//! ([`EngineCore::run_until`]), so state-aware routers (least-kv,
+//! slo-slack) observe live queue depths, KV pressure and backlogs — not
+//! a static pre-partition of the trace.  A replica mid-kernel may
+//! overshoot the instant by one completion; routing signals are
+//! heuristics, so this bounded skew is acceptable and keeps the replicas
+//! lock-step-free.  Determinism: replica seeds derive from the run seed,
+//! and the dispatcher is a pure function of replica state.
+
+pub mod router;
+
+pub use router::{Dispatcher, RouterPolicy};
+
+use crate::baselines::System;
+use crate::config::ServingConfig;
+use crate::engine::core::{CoreOptions, EngineCore, EngineOutput, ServingPolicy};
+use crate::gpu::roofline::GroundTruth;
+use crate::metrics::{merge_records, RequestRecord};
+use crate::perf::PerfModel;
+use crate::workload::Request;
+
+/// Cluster shape: replica count + routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClusterConfig {
+    pub replicas: usize,
+    pub router: RouterPolicy,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            replicas: 1,
+            router: RouterPolicy::RoundRobin,
+        }
+    }
+}
+
+/// One simulated GPU running one serving policy.
+pub struct Replica {
+    pub id: usize,
+    core: EngineCore,
+    policy: Box<dyn ServingPolicy>,
+}
+
+impl Replica {
+    pub fn new(
+        id: usize,
+        system: System,
+        cfg: &ServingConfig,
+        perf: &PerfModel,
+        gt: &GroundTruth,
+        seed: u64,
+        max_virtual_time: f64,
+    ) -> Replica {
+        let opts = CoreOptions {
+            seed,
+            max_virtual_time,
+            ..CoreOptions::default()
+        };
+        Replica {
+            id,
+            core: EngineCore::new(cfg.clone(), gt.clone(), Vec::new(), &opts),
+            policy: system.policy(cfg, perf),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        self.policy.label()
+    }
+
+    pub fn now(&self) -> f64 {
+        self.core.now()
+    }
+
+    /// Requests routed to this replica so far.
+    pub fn assigned(&self) -> usize {
+        self.core.trace_len()
+    }
+
+    /// Routing signal: KV tokens reserved + queued reservations.
+    pub fn outstanding_kv_tokens(&self) -> usize {
+        self.core.outstanding_kv_tokens()
+    }
+
+    /// Routing signal: prompt tokens awaiting prefill (queue + active
+    /// batch remainder).
+    pub fn backlog_tokens(&self) -> usize {
+        self.core.queued_prefill_tokens() + self.policy.private_backlog_tokens()
+    }
+
+    pub fn decode_batch(&self) -> usize {
+        self.core.decode.len()
+    }
+
+    /// Estimated TTFT were `req` routed here now: the prefill backlog
+    /// plus the request's own prompt, at the estimator's per-token rate
+    /// (contended if a decode batch is resident).
+    pub fn estimated_ttft(&self, req: &Request, perf: &PerfModel) -> f64 {
+        let cfg = &self.core.cfg;
+        let contended = !self.core.decode.is_empty();
+        let reference = 2048usize;
+        let per_token =
+            perf.predict_prefill_layer(reference, 0, cfg.gpu.num_sms, contended) / reference as f64;
+        let tokens = (self.backlog_tokens() + req.input_len) as f64;
+        tokens * per_token * cfg.model.n_layers as f64
+    }
+
+    fn advance_to(&mut self, t: f64) {
+        self.core.run_until(self.policy.as_mut(), t);
+    }
+
+    fn push(&mut self, r: Request) {
+        self.core.push_request(r);
+    }
+
+    fn finish(mut self) -> EngineOutput {
+        self.core.run(self.policy.as_mut());
+        self.core.into_output()
+    }
+}
+
+/// Everything a cluster run produces.
+#[derive(Debug, Clone)]
+pub struct ClusterOutput {
+    /// All records, id-ordered (directly comparable with single-GPU runs).
+    pub records: Vec<RequestRecord>,
+    /// Per-replica engine outputs (replica index = vec index).
+    pub per_replica: Vec<EngineOutput>,
+    /// (request id, replica index) routing decisions, in arrival order.
+    pub assignments: Vec<(u64, usize)>,
+    /// Global makespan: the latest replica finish time.
+    pub virtual_duration: f64,
+}
+
+impl ClusterOutput {
+    /// Requests routed to each replica.
+    pub fn per_replica_counts(&self) -> Vec<usize> {
+        let n = self.per_replica.len();
+        let mut counts = vec![0usize; n];
+        for &(_, k) in &self.assignments {
+            counts[k] += 1;
+        }
+        counts
+    }
+}
+
+/// Serve `trace` on `cluster.replicas` instances of `system` behind the
+/// configured router.
+pub fn serve_cluster(
+    system: System,
+    cfg: &ServingConfig,
+    perf: &PerfModel,
+    gt: &GroundTruth,
+    trace: &[Request],
+    seed: u64,
+    cluster: &ClusterConfig,
+) -> ClusterOutput {
+    let n = cluster.replicas.max(1);
+    // Wedge guard that scales with the trace horizon: long-duration
+    // traces must not trip the single-GPU default cap.
+    let horizon = trace.last().map(|r| r.arrival).unwrap_or(0.0);
+    let max_virtual_time = CoreOptions::default().max_virtual_time.max(4.0 * horizon);
+    let mut replicas: Vec<Replica> = (0..n)
+        .map(|i| {
+            // distinct per-replica seeds decorrelate simulator noise
+            let rseed = seed.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(i as u64 + 1));
+            Replica::new(i, system, cfg, perf, gt, rseed, max_virtual_time)
+        })
+        .collect();
+    let mut dispatcher = Dispatcher::new(cluster.router);
+    let mut assignments = Vec::with_capacity(trace.len());
+
+    for r in trace {
+        for rep in replicas.iter_mut() {
+            rep.advance_to(r.arrival);
+        }
+        let k = dispatcher.pick(&replicas, r, perf, &cfg.slo);
+        assignments.push((r.id, k));
+        replicas[k].push(r.clone());
+    }
+
+    let per_replica: Vec<EngineOutput> = replicas.into_iter().map(Replica::finish).collect();
+    let records = merge_records(per_replica.iter().map(|o| o.records.as_slice()));
+    let virtual_duration = per_replica
+        .iter()
+        .map(|o| o.virtual_duration)
+        .fold(0.0, f64::max);
+    ClusterOutput {
+        records,
+        per_replica,
+        assignments,
+        virtual_duration,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuSpec, ModelSpec};
+    use crate::metrics::summarize;
+    use crate::workload::{generate_n_requests, Dataset};
+
+    fn setup() -> (ServingConfig, PerfModel, GroundTruth) {
+        let cfg = ServingConfig::default();
+        let perf = PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b());
+        let gt = GroundTruth::new(GpuSpec::a100());
+        (cfg, perf, gt)
+    }
+
+    #[test]
+    fn round_robin_splits_evenly_and_completes() {
+        let (cfg, perf, gt) = setup();
+        let trace = generate_n_requests(&Dataset::sharegpt(), 10.0, 12, 7);
+        let ccfg = ClusterConfig { replicas: 3, router: RouterPolicy::RoundRobin };
+        let out = serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 1, &ccfg);
+        assert_eq!(out.records.len(), 12);
+        assert_eq!(out.per_replica_counts(), vec![4, 4, 4]);
+        // merged records id-ordered and unique
+        for (i, r) in out.records.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+    }
+
+    #[test]
+    fn state_aware_routers_complete_the_trace() {
+        let (cfg, perf, gt) = setup();
+        let trace = generate_n_requests(&Dataset::sharegpt(), 12.0, 16, 11);
+        for router in [RouterPolicy::LeastKv, RouterPolicy::SloSlack] {
+            let ccfg = ClusterConfig { replicas: 2, router };
+            let out = serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 2, &ccfg);
+            assert_eq!(out.records.len(), 16, "{}", router.label());
+            let counts = out.per_replica_counts();
+            // a state-aware router must not starve a replica under load
+            assert!(counts.iter().all(|&c| c > 0), "{:?}", counts);
+        }
+    }
+
+    #[test]
+    fn cluster_runs_are_deterministic() {
+        let (cfg, perf, gt) = setup();
+        let trace = generate_n_requests(&Dataset::sharegpt(), 10.0, 10, 3);
+        let ccfg = ClusterConfig { replicas: 2, router: RouterPolicy::LeastKv };
+        let a = serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 5, &ccfg);
+        let b = serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 5, &ccfg);
+        assert_eq!(a.records, b.records);
+        assert_eq!(a.assignments, b.assignments);
+    }
+
+    #[test]
+    fn replicas_cut_makespan_under_saturation() {
+        let (cfg, perf, gt) = setup();
+        // heavily saturating: compute-bound prefills arrive far faster
+        // than one GPU can drain them
+        let trace = generate_n_requests(&Dataset::azure_code(), 40.0, 40, 13);
+        let one = serve_cluster(
+            System::Bullet, &cfg, &perf, &gt, &trace, 1,
+            &ClusterConfig { replicas: 1, router: RouterPolicy::RoundRobin },
+        );
+        let four = serve_cluster(
+            System::Bullet, &cfg, &perf, &gt, &trace, 1,
+            &ClusterConfig { replicas: 4, router: RouterPolicy::LeastKv },
+        );
+        assert_eq!(four.records.len(), 40);
+        assert!(
+            four.virtual_duration < one.virtual_duration * 0.55,
+            "1 replica {}s vs 4 replicas {}s",
+            one.virtual_duration,
+            four.virtual_duration
+        );
+    }
+
+    #[test]
+    fn cluster_scales_chunked_systems_too() {
+        // the whole point of the shared core: baselines scale out with
+        // zero engine changes.
+        let (cfg, perf, gt) = setup();
+        let trace = generate_n_requests(&Dataset::sharegpt(), 10.0, 10, 17);
+        let ccfg = ClusterConfig { replicas: 2, router: RouterPolicy::RoundRobin };
+        let out = serve_cluster(System::Sglang1024, &cfg, &perf, &gt, &trace, 3, &ccfg);
+        assert_eq!(out.records.len(), 10);
+        let s = summarize(&out.records, &cfg.slo, Some(out.virtual_duration));
+        assert!(s.throughput_tok_s > 0.0);
+    }
+}

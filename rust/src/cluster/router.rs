@@ -1,0 +1,112 @@
+//! Request routing across replicas.
+//!
+//! Three policies, in increasing awareness:
+//! - **round-robin** — stateless rotation, the classic front-door;
+//! - **least-kv** — route to the replica with the fewest outstanding KV
+//!   tokens (reserved pool + queued reservations), a memory-pressure
+//!   signal that tracks decode-heavy load;
+//! - **slo-slack** — route to the replica whose estimated TTFT for this
+//!   request leaves the most SLO slack, using the §3.2 performance
+//!   estimator over the replica's prefill backlog (a compute-pressure
+//!   signal that tracks prefill-heavy load).
+
+use crate::cluster::Replica;
+use crate::config::SloSpec;
+use crate::perf::PerfModel;
+use crate::workload::Request;
+
+/// Cluster routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    RoundRobin,
+    LeastKv,
+    SloSlack,
+}
+
+impl RouterPolicy {
+    pub fn by_name(name: &str) -> Option<RouterPolicy> {
+        match name {
+            "round-robin" => Some(RouterPolicy::RoundRobin),
+            "least-kv" => Some(RouterPolicy::LeastKv),
+            "slo-slack" => Some(RouterPolicy::SloSlack),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round-robin",
+            RouterPolicy::LeastKv => "least-kv",
+            RouterPolicy::SloSlack => "slo-slack",
+        }
+    }
+
+    pub fn all() -> [RouterPolicy; 3] {
+        [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::LeastKv,
+            RouterPolicy::SloSlack,
+        ]
+    }
+}
+
+/// The dispatcher: picks a replica for each arrival.  Deterministic
+/// given the replica states, so cluster runs are reproducible.
+pub struct Dispatcher {
+    policy: RouterPolicy,
+    rr_next: usize,
+}
+
+impl Dispatcher {
+    pub fn new(policy: RouterPolicy) -> Dispatcher {
+        Dispatcher { policy, rr_next: 0 }
+    }
+
+    pub fn policy(&self) -> RouterPolicy {
+        self.policy
+    }
+
+    /// Choose the replica for `req`.  Replica clocks have been advanced
+    /// to the arrival time, so state queries are current.
+    pub fn pick(
+        &mut self,
+        replicas: &[Replica],
+        req: &Request,
+        perf: &PerfModel,
+        slo: &SloSpec,
+    ) -> usize {
+        assert!(!replicas.is_empty());
+        match self.policy {
+            RouterPolicy::RoundRobin => {
+                let k = self.rr_next % replicas.len();
+                self.rr_next = self.rr_next.wrapping_add(1);
+                k
+            }
+            RouterPolicy::LeastKv => argmin_by(replicas, |r| r.outstanding_kv_tokens() as f64),
+            RouterPolicy::SloSlack => {
+                // max slack == min estimated TTFT for a single request,
+                // but keep the slack form: it is what a multi-model
+                // front-door would compare across heterogeneous SLOs.
+                argmin_by(replicas, |r| {
+                    let est = r.estimated_ttft(req, perf);
+                    -(slo.ttft_budget(req.input_len) - est)
+                })
+            }
+        }
+    }
+}
+
+/// Index of the replica minimizing `key` (first wins ties; `total_cmp`
+/// keeps degenerate estimates from panicking the dispatcher).
+fn argmin_by(replicas: &[Replica], key: impl Fn(&Replica) -> f64) -> usize {
+    let mut best = 0usize;
+    let mut best_key = key(&replicas[0]);
+    for (i, r) in replicas.iter().enumerate().skip(1) {
+        let k = key(r);
+        if k.total_cmp(&best_key) == std::cmp::Ordering::Less {
+            best = i;
+            best_key = k;
+        }
+    }
+    best
+}

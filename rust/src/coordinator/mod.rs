@@ -11,6 +11,8 @@
 
 pub mod tokenizer;
 
+use crate::baselines::System;
+use crate::cluster::{serve_cluster, ClusterConfig, ClusterOutput};
 use crate::config::ServingConfig;
 use crate::engine::sim_engine::{serve_bullet, EngineOutput, SimEngineOptions};
 use crate::gpu::roofline::GroundTruth;
@@ -113,6 +115,33 @@ impl BulletServer {
         let trace = crate::workload::generate_n_requests(dataset, rate, n, seed);
         self.serve(&trace)
     }
+
+    /// Serve a trace on `cluster.replicas` Bullet instances behind the
+    /// configured router (the scale-out path).
+    pub fn serve_cluster(&self, trace: &[Request], cluster: &ClusterConfig) -> ClusterOutput {
+        self.serve_system_cluster(System::Bullet, trace, cluster)
+    }
+
+    /// Scale out any cataloged system — baselines included — across
+    /// replicas.  Replica simulators derive their seeds from the
+    /// server's build seed (like [`BulletServer::serve`]); call
+    /// [`crate::cluster::serve_cluster`] directly for per-run seeds.
+    pub fn serve_system_cluster(
+        &self,
+        system: System,
+        trace: &[Request],
+        cluster: &ClusterConfig,
+    ) -> ClusterOutput {
+        serve_cluster(
+            system,
+            &self.cfg,
+            &self.perf,
+            &self.gt,
+            trace,
+            self.opts.seed,
+            cluster,
+        )
+    }
 }
 
 #[cfg(test)]
@@ -137,6 +166,21 @@ mod tests {
         assert!(profiled.perf().p_b >= 1.0);
         let out = profiled.serve_dataset(&Dataset::sharegpt(), 5.0, 10, 2);
         assert_eq!(out.records.len(), 10);
+    }
+
+    #[test]
+    fn cluster_serving_through_the_facade() {
+        use crate::cluster::RouterPolicy;
+        let server = BulletServer::build(ServingConfig::default(), BuildOptions::default());
+        let trace = crate::workload::generate_n_requests(&Dataset::sharegpt(), 12.0, 12, 4);
+        let out = server.serve_cluster(
+            &trace,
+            &ClusterConfig { replicas: 2, router: RouterPolicy::SloSlack },
+        );
+        assert_eq!(out.records.len(), 12);
+        assert_eq!(out.per_replica.len(), 2);
+        let s = summarize(&out.records, &server.cfg().slo, Some(out.virtual_duration));
+        assert!(s.throughput_tok_s > 0.0);
     }
 
     #[test]

@@ -17,7 +17,7 @@
 use crate::engine::metadata::{Handoff, MetadataBuffer};
 use crate::metrics::RequestRecord;
 use crate::runtime::ModelRuntime;
-use anyhow::Result;
+use crate::util::error::Result;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 

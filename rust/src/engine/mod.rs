@@ -1,17 +1,22 @@
-//! Concurrent execution engines (§3.5).
+//! Serving engines (§3.5) on the shared serving core.
 //!
-//! Two modes share the scheduling logic:
-//! - **sim** (`sim_engine`): a virtual-clock event loop over the GPU
-//!   simulator — deterministic, used for every paper experiment at
-//!   A100/Llama-8B scale.
+//! - **core** (`core`): the harness every system runs on — virtual-clock
+//!   event loop, admission, KV accounting, prefill→decode migration,
+//!   record emission — parameterized by a [`core::ServingPolicy`].
+//! - **sim** (`sim_engine`): Bullet's policy (dynamic SM partitioning +
+//!   SLO scheduling) over the simulated GPU — deterministic, used for
+//!   every paper experiment at A100/Llama-8B scale.  The chunked-prefill
+//!   and NanoFlow baselines are sibling policies in [`crate::baselines`].
 //! - **live** (`live_engine`): real prefill/decode threads over the PJRT
 //!   runtime with a shared metadata buffer (`metadata`) and the shared KV
 //!   pool — proves the decentralized-engines design composes end-to-end
 //!   on real compute (examples/serve_real_model.rs).
 
+pub mod core;
 pub mod live_engine;
 pub mod metadata;
 pub mod sim_engine;
 
+pub use self::core::{CoreOptions, CoreStats, EngineCore, EngineOutput, Lane, ServingPolicy};
 pub use live_engine::{serve_live, LiveRequest, LiveStats};
-pub use sim_engine::{serve_bullet, EngineOutput, SimEngineOptions};
+pub use sim_engine::{serve_bullet, BulletPolicy, Features, SimEngineOptions};

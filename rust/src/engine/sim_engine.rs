@@ -1,8 +1,9 @@
-//! Bullet's serving loop on the simulated GPU: concurrent prefill and
-//! decode with dynamic SM partitioning, driven by a virtual-clock event
-//! loop.
+//! Bullet's serving policy on the shared serving core: concurrent
+//! prefill and decode with dynamic SM partitioning.
 //!
-//! Fidelity notes vs the paper's live system:
+//! The virtual-clock event loop, admission, KV accounting and record
+//! emission live in [`crate::engine::core`]; this module contributes
+//! only Bullet's decisions ([`BulletPolicy`]):
 //! - the prefill engine launches one *layer group* at a time and makes a
 //!   scheduling decision at every group boundary (§3.3.1);
 //! - the decode engine launches whole iterations (CUDA-graph analog) and
@@ -16,16 +17,15 @@
 //!   deviation: the paper allocates decode blocks on demand).
 
 use crate::config::ServingConfig;
+use crate::engine::core::{CoreOptions, EngineCore, Lane, ServingPolicy};
 use crate::gpu::roofline::GroundTruth;
-use crate::gpu::simulator::Simulator;
-use crate::kvcache::KvPool;
-use crate::metrics::timeline::{Timeline, TimelineSample};
-use crate::metrics::RequestRecord;
 use crate::model::phases::{decode_all_layers, prefill_layer_kernels, PhaseShape};
 use crate::perf::PerfModel;
-use crate::resource::{Partition, ResourceManager};
-use crate::sched::{Decision, DecodeReqState, PrefillBatch, PrefillReq, SloScheduler, SystemState};
+use crate::resource::Partition;
+use crate::sched::{Decision, PrefillBatch, PrefillReq, SloScheduler};
 use crate::workload::Request;
+
+pub use crate::engine::core::EngineOutput;
 
 /// Feature switches: the full system runs with everything on; the
 /// Fig. 13/14 baselines disable individual mechanisms.
@@ -118,32 +118,257 @@ impl Default for SimEngineOptions {
     }
 }
 
-/// Everything a serving run produces.
-#[derive(Debug, Clone)]
-pub struct EngineOutput {
-    pub records: Vec<RequestRecord>,
-    pub timeline: Timeline,
-    pub reconfigs: u64,
-    pub decode_pauses: u64,
-    /// Total achieved FLOPs / bytes / SM-seconds (whole run).
-    pub total_flops: f64,
-    pub total_bytes: f64,
-    pub virtual_duration: f64,
-    pub peak_kv_blocks: usize,
+impl SimEngineOptions {
+    fn core_options(&self) -> CoreOptions {
+        CoreOptions {
+            seed: self.seed,
+            record_timeline: self.record_timeline,
+            max_virtual_time: self.max_virtual_time,
+        }
+    }
 }
 
-struct ActiveDecode {
-    st: DecodeReqState,
-    arrival: f64,
-    prefill_start: f64,
-    first_token_time: f64,
-    /// Virtual time of this request's latest token — TPOT accounting
-    /// charges the FULL gap between tokens (queueing, pauses, contention),
-    /// as the paper's d_i does, so the scheduler cannot hide stalls.
-    last_token_time: f64,
+/// Bullet's decision logic (Algorithm 1 + §3.4 resource management),
+/// expressed as a [`ServingPolicy`] over the shared serving core.
+pub struct BulletPolicy {
+    sched: SloScheduler,
+    features: Features,
+    /// The running prefill batch (layer-group progress is policy state;
+    /// the core only sees queued and decoding requests).
+    active_prefill: Option<PrefillBatch>,
+    /// Layers launched in the current group.
+    group_size: usize,
+    paused_decode: bool,
+}
+
+impl BulletPolicy {
+    pub fn new(cfg: &ServingConfig, perf: &PerfModel, features: Features) -> BulletPolicy {
+        BulletPolicy {
+            sched: SloScheduler::new(cfg.clone(), perf.clone()),
+            features,
+            active_prefill: None,
+            group_size: 0,
+            paused_decode: false,
+        }
+    }
+
+    /// Run the scheduler, then apply the feature mask: fixed partitions
+    /// override the searched one; disabled pausing clears pause requests.
+    fn decide(&self, core: &EngineCore) -> Decision {
+        let mut st = core.snapshot(&self.active_prefill);
+        let mut d = self.sched.schedule(&mut st);
+        if !self.features.dynamic_partition {
+            let cfg = &core.cfg;
+            let pm = self
+                .features
+                .fixed_prefill_sms
+                .unwrap_or(cfg.gpu.num_sms)
+                .min(cfg.gpu.num_sms);
+            // §4.4: fixed configurations pin prefill's quota and let decode
+            // use the whole GPU (overlapping masks).
+            d.partition = Partition {
+                prefill_sms: pm,
+                decode_sms: cfg.gpu.num_sms,
+            };
+        }
+        if !self.features.pause {
+            d.pause_decode = false;
+        }
+        d
+    }
+
+    fn apply(&mut self, d: &Decision, core: &mut EngineCore) {
+        core.rm.reconfigure(d.partition);
+        if d.pause_decode && !self.paused_decode {
+            self.paused_decode = true;
+            core.stats.decode_pauses += 1;
+        } else if !d.pause_decode {
+            self.paused_decode = false;
+        }
+    }
+
+    /// Prefill-engine cycle: complete the finished batch, form a new one
+    /// (urgency-ordered, KV-reserved), launch the next layer group under
+    /// a fresh scheduling decision.
+    fn prefill_cycle(&mut self, core: &mut EngineCore) {
+        let now = core.now();
+        let total_layers = core.cfg.model.n_layers;
+
+        // Complete a finished batch: migrate members to decode.
+        let finished = self
+            .active_prefill
+            .as_ref()
+            .map(|b| b.layers_done >= total_layers)
+            .unwrap_or(false);
+        if finished {
+            let b = self.active_prefill.take().unwrap();
+            for r in &b.reqs {
+                core.finish_prefill(r.clone(), b.started_at);
+            }
+        }
+
+        // Form a new batch if idle.
+        if self.active_prefill.is_none() && !core.waiting.is_empty() {
+            // urgency order (Algorithm 1 line 7)
+            if self.features.reorder {
+                core.waiting.sort_by(|a, b| {
+                    self.sched
+                        .ttft_slack(&a.req, now)
+                        .total_cmp(&self.sched.ttft_slack(&b.req, now))
+                });
+            }
+            let mut batch_reqs: Vec<PrefillReq> = Vec::new();
+            let mut tokens = 0usize;
+            let mut i = 0;
+            while i < core.waiting.len() {
+                let r = core.waiting[i].req.clone();
+                let reserve = r.input_len + r.output_len;
+                // TTFT-first admission: a prompt runs alone unless it
+                // and its batch-mates all fit under the small-prompt
+                // threshold (batching only to amortize launches).
+                let fits_policy = batch_reqs.is_empty()
+                    || tokens + r.input_len <= core.cfg.prefill_batch_tokens;
+                if fits_policy
+                    && tokens + r.input_len <= core.cfg.max_prefill_tokens
+                    && core.kv.can_grow(r.id, reserve)
+                {
+                    core.kv.grow(r.id, reserve).expect("kv reserve");
+                    tokens += r.input_len;
+                    core.waiting.remove(i);
+                    batch_reqs.push(r);
+                } else if batch_reqs.is_empty()
+                    && core.decode.is_empty()
+                    && core.pending_join.is_empty()
+                {
+                    // nothing running that could free memory: the
+                    // request can never fit — fail it loudly.
+                    panic!(
+                        "request {} needs {} KV tokens but pool holds {}",
+                        r.id,
+                        reserve,
+                        core.kv.capacity_tokens()
+                    );
+                } else {
+                    i += 1;
+                }
+            }
+            if !batch_reqs.is_empty() {
+                self.active_prefill = Some(PrefillBatch::new(batch_reqs, now));
+            }
+        }
+
+        // Launch the next layer group under a fresh decision.
+        if self.active_prefill.is_some() {
+            let d = self.decide(core);
+            self.apply(&d, core);
+            let b = self.active_prefill.as_ref().unwrap();
+            let (n_tokens, layers_done) = (b.n_tokens, b.layers_done);
+            core.sample_timeline(n_tokens);
+            let layers = core
+                .cfg
+                .prefill_layer_group
+                .max(1)
+                .min(total_layers - layers_done);
+            let shape = PhaseShape { tokens: n_tokens, context: 0 };
+            let mut kernels = Vec::new();
+            for _ in 0..layers {
+                kernels.extend(prefill_layer_kernels(&core.cfg.model, shape));
+            }
+            let stream = core.rm.prefill_stream();
+            core.submit(Lane::Prefill, stream, kernels);
+            self.group_size = layers;
+        }
+    }
+
+    /// Decode-engine cycle: join migrated requests, launch an iteration.
+    fn decode_cycle(&mut self, core: &mut EngineCore) {
+        core.join_pending(core.cfg.max_decode_batch);
+        if core.decode.is_empty() || self.paused_decode {
+            return;
+        }
+        if self.active_prefill.is_none() {
+            // decode-only: take the whole GPU.
+            let d = self.decide(core);
+            self.apply(&d, core);
+        }
+        let bs = core.decode.len();
+        let cl = (core.decode.iter().map(|d| d.st.ctx_len).sum::<usize>() / bs).max(1);
+        let kernels = decode_all_layers(&core.cfg.model, PhaseShape { tokens: bs, context: cl });
+        let stream = core.rm.decode_stream();
+        core.submit(Lane::Decode, stream, kernels);
+    }
+}
+
+impl ServingPolicy for BulletPolicy {
+    /// Mirrors `System::label()` for the bullet-family feature masks, so
+    /// cluster tables attribute ablation/fixed-quota runs correctly.
+    fn label(&self) -> String {
+        let f = &self.features;
+        if let Some(n) = f.fixed_prefill_sms {
+            return format!("SM-{n}");
+        }
+        match (f.dynamic_partition, f.reorder || f.pause) {
+            (true, true) => "Bullet".into(),
+            (true, false) => "w/Partition".into(),
+            (false, true) => "w/Scheduler".into(),
+            (false, false) => "Naive".into(),
+        }
+    }
+
+    fn plan(&mut self, core: &mut EngineCore) {
+        // Prefill decisions happen at layer-group boundaries, decode
+        // decisions at iteration boundaries — the lanes are decoupled.
+        if core.lane_idle(Lane::Prefill) {
+            self.prefill_cycle(core);
+        }
+        if core.lane_idle(Lane::Decode) {
+            self.decode_cycle(core);
+        }
+    }
+
+    fn on_drain(&mut self, lane: Lane, core: &mut EngineCore) {
+        match lane {
+            Lane::Prefill => {
+                if let Some(b) = &mut self.active_prefill {
+                    b.layers_done += self.group_size;
+                }
+                // prefill group boundary wakes a paused decode.
+                self.paused_decode = false;
+            }
+            Lane::Decode => core.advance_decode_token(),
+        }
+    }
+
+    fn on_stall(&mut self, _core: &mut EngineCore) -> bool {
+        // nothing in flight because decode is paused and prefill just
+        // finished — unpause and loop.
+        if self.paused_decode {
+            self.paused_decode = false;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn has_private_work(&self) -> bool {
+        self.active_prefill.is_some()
+    }
+
+    fn private_backlog_tokens(&self) -> usize {
+        match &self.active_prefill {
+            None => 0,
+            Some(b) => {
+                let total = self.sched.cfg.model.n_layers.max(1);
+                let left = total.saturating_sub(b.layers_done);
+                b.n_tokens * left / total
+            }
+        }
+    }
 }
 
 /// Serve `trace` with the full Bullet engine; returns per-request records.
+/// (Thin wrapper over [`EngineCore`] + [`BulletPolicy`] so existing
+/// callers, benches and examples keep compiling unchanged.)
 pub fn serve_bullet(
     cfg: &ServingConfig,
     perf: &PerfModel,
@@ -151,362 +376,10 @@ pub fn serve_bullet(
     trace: &[Request],
     opts: &SimEngineOptions,
 ) -> EngineOutput {
-    let mut sim = Simulator::new(gt.clone(), opts.seed);
-    let mut rm = ResourceManager::new(&mut sim, &cfg.gpu);
-    let sched = SloScheduler::new(cfg.clone(), perf.clone());
-    let mut kv = KvPool::new(cfg.kv_capacity_tokens);
-    let mut timeline = Timeline::new();
-
-    let total_layers = cfg.model.n_layers;
-    let mut waiting: Vec<PrefillReq> = Vec::new();
-    let mut active_prefill: Option<PrefillBatch> = None;
-    let mut prefill_inflight = 0usize; // kernels outstanding in current group
-    let mut group_size = 0usize; // layers in the current group
-    let mut decode: Vec<ActiveDecode> = Vec::new();
-    let mut decode_inflight = 0usize;
-    let mut decode_iter_start = 0.0f64;
-    let mut decode_iter_bs = 0usize;
-    let mut pending_join: Vec<ActiveDecode> = Vec::new();
-    let mut paused_decode = false;
-    let mut decode_pauses = 0u64;
-    let mut records: Vec<RequestRecord> = Vec::new();
-    let mut next_arrival = 0usize;
-    let expected = trace.len();
-
-    // request id -> output_len lookup for active prefill batch
-    let out_len = |id: u64, trace: &[Request]| trace[id as usize].output_len;
-
-    while records.len() < expected {
-        let now = sim.now();
-        if now > opts.max_virtual_time {
-            panic!(
-                "virtual time cap exceeded: {} records of {} done at t={now}",
-                records.len(),
-                expected
-            );
-        }
-
-        // 1. Admit arrivals.
-        while next_arrival < trace.len() && trace[next_arrival].arrival <= now {
-            let r = &trace[next_arrival];
-            waiting.push(PrefillReq {
-                id: r.id,
-                arrival: r.arrival,
-                input_len: r.input_len,
-                output_len: r.output_len,
-            });
-            next_arrival += 1;
-        }
-
-        // 2. Prefill engine cycle (only at group boundaries).
-        if prefill_inflight == 0 {
-            // 2a. Complete a finished batch.
-            let finished = active_prefill
-                .as_ref()
-                .map(|b| b.layers_done >= total_layers)
-                .unwrap_or(false);
-            if finished {
-                let b = active_prefill.take().unwrap();
-                for r in &b.reqs {
-                    if r.output_len <= 1 {
-                        // single-token request: done at prefill.
-                        records.push(RequestRecord {
-                            id: r.id,
-                            arrival: r.arrival,
-                            input_len: r.input_len,
-                            output_len: r.output_len,
-                            first_token_time: now,
-                            finish_time: now,
-                            prefill_start: b.started_at,
-                        });
-                        kv.release(r.id).expect("kv release");
-                    } else {
-                        pending_join.push(ActiveDecode {
-                            st: DecodeReqState {
-                                id: r.id,
-                                input_len: r.input_len,
-                                ctx_len: r.input_len,
-                                tokens_out: 1,
-                                output_len: r.output_len,
-                                decode_elapsed: 0.0,
-                            },
-                            arrival: r.arrival,
-                            prefill_start: b.started_at,
-                            first_token_time: now,
-                            last_token_time: now,
-                        });
-                    }
-                }
-            }
-
-            // 2b. Form a new batch if idle.
-            if active_prefill.is_none() && !waiting.is_empty() {
-                // urgency order (Algorithm 1 line 7)
-                if opts.features.reorder {
-                    let mut st = snapshot(
-                        now,
-                        &active_prefill,
-                        &decode,
-                        &waiting,
-                        rm.partition(),
-                        total_layers,
-                    );
-                    sched.reorder_waiting(&mut st);
-                    waiting = st.waiting.clone();
-                }
-                let mut batch_reqs: Vec<PrefillReq> = Vec::new();
-                let mut tokens = 0usize;
-                let mut i = 0;
-                while i < waiting.len() {
-                    let r = &waiting[i];
-                    let reserve = r.input_len + r.output_len;
-                    // TTFT-first admission: a prompt runs alone unless it
-                    // and its batch-mates all fit under the small-prompt
-                    // threshold (batching only to amortize launches).
-                    let fits_policy = batch_reqs.is_empty()
-                        || tokens + r.input_len <= cfg.prefill_batch_tokens;
-                    if fits_policy
-                        && tokens + r.input_len <= cfg.max_prefill_tokens
-                        && kv.can_grow(r.id, reserve)
-                    {
-                        kv.grow(r.id, reserve).expect("kv reserve");
-                        tokens += r.input_len;
-                        batch_reqs.push(waiting.remove(i));
-                    } else if batch_reqs.is_empty() && decode.is_empty() && pending_join.is_empty()
-                    {
-                        // nothing running that could free memory: the
-                        // request can never fit — fail it loudly.
-                        panic!(
-                            "request {} needs {} KV tokens but pool holds {}",
-                            r.id,
-                            reserve,
-                            kv.capacity_tokens()
-                        );
-                    } else {
-                        i += 1;
-                    }
-                }
-                if !batch_reqs.is_empty() {
-                    active_prefill = Some(PrefillBatch::new(batch_reqs, now));
-                }
-            }
-
-            // 2c. Launch the next layer group under a fresh decision.
-            if let Some(b) = &active_prefill {
-                let mut st = snapshot(now, &active_prefill, &decode, &waiting, rm.partition(), total_layers);
-                let d = decide(&sched, &mut st, &opts.features, &cfg);
-                apply_decision(&mut rm, &d, &mut paused_decode, &mut decode_pauses);
-                if opts.record_timeline {
-                    push_sample(&mut timeline, &mut sim, &rm, b.n_tokens, decode.len(), waiting.len());
-                }
-                let layers = cfg
-                    .prefill_layer_group
-                    .max(1)
-                    .min(total_layers - b.layers_done);
-                let shape = PhaseShape { tokens: b.n_tokens, context: 0 };
-                let stream = rm.prefill_stream();
-                let mut n = 0;
-                for _ in 0..layers {
-                    for k in prefill_layer_kernels(&cfg.model, shape) {
-                        sim.submit(stream, k);
-                        n += 1;
-                    }
-                }
-                prefill_inflight = n;
-                group_size = layers;
-            }
-        }
-
-        // 3. Decode engine cycle (only at iteration boundaries).
-        if decode_inflight == 0 {
-            // 3a. Join migrated requests.
-            while decode.len() < cfg.max_decode_batch && !pending_join.is_empty() {
-                decode.push(pending_join.remove(0));
-            }
-            // 3b. Launch an iteration.
-            if !decode.is_empty() && !paused_decode {
-                if active_prefill.is_none() {
-                    // decode-only: take the whole GPU.
-                    let mut st = snapshot(now, &active_prefill, &decode, &waiting, rm.partition(), total_layers);
-                    let d = decide(&sched, &mut st, &opts.features, &cfg);
-                    apply_decision(&mut rm, &d, &mut paused_decode, &mut decode_pauses);
-                }
-                let bs = decode.len();
-                let cl = (decode.iter().map(|d| d.st.ctx_len).sum::<usize>() / bs).max(1);
-                let stream = rm.decode_stream();
-                let mut n = 0;
-                for k in decode_all_layers(&cfg.model, PhaseShape { tokens: bs, context: cl }) {
-                    sim.submit(stream, k);
-                    n += 1;
-                }
-                decode_inflight = n;
-                decode_iter_start = now;
-                decode_iter_bs = bs;
-            }
-        }
-
-        // 4. Advance virtual time.
-        if sim.idle() {
-            if next_arrival < trace.len() {
-                let dt = (trace[next_arrival].arrival - now).max(0.0) + 1e-9;
-                sim.run_for(dt);
-                continue;
-            } else if records.len() < expected
-                && active_prefill.is_none()
-                && decode.is_empty()
-                && pending_join.is_empty()
-                && waiting.is_empty()
-            {
-                unreachable!("no work left but {} records missing", expected - records.len());
-            } else if paused_decode {
-                // nothing in flight because decode is paused and prefill
-                // just finished — unpause and loop.
-                paused_decode = false;
-                continue;
-            } else {
-                continue;
-            }
-        }
-        sim.step();
-
-        // 5. Process completions.
-        for c in sim.take_completions() {
-            if rm.is_prefill_stream(c.stream) {
-                prefill_inflight -= 1;
-                if prefill_inflight == 0 {
-                    if let Some(b) = &mut active_prefill {
-                        b.layers_done += group_size;
-                    }
-                    // prefill group boundary wakes a paused decode.
-                    paused_decode = false;
-                }
-            } else {
-                decode_inflight -= 1;
-                if decode_inflight == 0 {
-                    let _ = decode_iter_start;
-                    debug_assert_eq!(decode_iter_bs, decode.len());
-                    let token_time = sim.now();
-                    let mut i = 0;
-                    while i < decode.len() {
-                        let d = &mut decode[i];
-                        d.st.tokens_out += 1;
-                        d.st.ctx_len += 1;
-                        d.st.decode_elapsed += token_time - d.last_token_time;
-                        d.last_token_time = token_time;
-                        if d.st.finished() {
-                            let d = decode.remove(i);
-                            records.push(RequestRecord {
-                                id: d.st.id,
-                                arrival: d.arrival,
-                                input_len: d.st.input_len,
-                                output_len: out_len(d.st.id, trace),
-                                first_token_time: d.first_token_time,
-                                finish_time: sim.now(),
-                                prefill_start: d.prefill_start,
-                            });
-                            kv.release(d.st.id).expect("kv release at finish");
-                        } else {
-                            i += 1;
-                        }
-                    }
-                }
-            }
-        }
-    }
-
-    let util = sim.total_util();
-    EngineOutput {
-        records,
-        timeline,
-        reconfigs: rm.reconfig_count(),
-        decode_pauses,
-        total_flops: util.flops,
-        total_bytes: util.bytes,
-        virtual_duration: sim.now(),
-        peak_kv_blocks: kv.peak_used_blocks(),
-    }
-}
-
-/// Run the scheduler, then apply the feature mask: fixed partitions
-/// override the searched one; disabled pausing clears pause requests.
-fn decide(
-    sched: &SloScheduler,
-    st: &mut SystemState,
-    features: &Features,
-    cfg: &ServingConfig,
-) -> Decision {
-    let mut d = sched.schedule(st);
-    if !features.dynamic_partition {
-        let pm = features
-            .fixed_prefill_sms
-            .unwrap_or(cfg.gpu.num_sms)
-            .min(cfg.gpu.num_sms);
-        // §4.4: fixed configurations pin prefill's quota and let decode
-        // use the whole GPU (overlapping masks).
-        d.partition = Partition {
-            prefill_sms: pm,
-            decode_sms: cfg.gpu.num_sms,
-        };
-    }
-    if !features.pause {
-        d.pause_decode = false;
-    }
-    d
-}
-
-fn snapshot(
-    now: f64,
-    prefill: &Option<PrefillBatch>,
-    decode: &[ActiveDecode],
-    waiting: &[PrefillReq],
-    partition: Partition,
-    total_layers: usize,
-) -> SystemState {
-    SystemState {
-        now,
-        prefill: prefill.clone(),
-        decode: decode.iter().map(|d| d.st.clone()).collect(),
-        waiting: waiting.to_vec(),
-        partition,
-        total_layers,
-    }
-}
-
-fn apply_decision(
-    rm: &mut ResourceManager,
-    d: &Decision,
-    paused: &mut bool,
-    pauses: &mut u64,
-) {
-    rm.reconfigure(d.partition);
-    if d.pause_decode && !*paused {
-        *paused = true;
-        *pauses += 1;
-    } else if !d.pause_decode {
-        *paused = false;
-    }
-}
-
-fn push_sample(
-    timeline: &mut Timeline,
-    sim: &mut Simulator,
-    rm: &ResourceManager,
-    prefill_tokens: usize,
-    decode_batch: usize,
-    waiting: usize,
-) {
-    let w = sim.take_util_window();
-    let gpu = sim.gpu().clone();
-    timeline.push(TimelineSample {
-        t: sim.now(),
-        prefill_sms: rm.partition().prefill_sms,
-        decode_sms: rm.partition().decode_sms,
-        prefill_tokens,
-        decode_batch,
-        waiting,
-        compute_util: w.compute_util(&gpu),
-        bandwidth_util: w.bandwidth_util(&gpu),
-    });
+    let mut core = EngineCore::new(cfg.clone(), gt.clone(), trace.to_vec(), &opts.core_options());
+    let mut policy = BulletPolicy::new(cfg, perf, opts.features);
+    core.run(&mut policy);
+    core.into_output()
 }
 
 #[cfg(test)]

@@ -12,6 +12,58 @@
 //!   AOT-lowered to HLO text artifacts executed here via PJRT.
 //! - **L1 (python/compile/kernels/)**: Pallas attention kernels called by
 //!   L2, validated against a pure-jnp oracle.
+//!
+//! # Architecture
+//!
+//! The serving stack is three tiers, each a thin layer over the one
+//! below:
+//!
+//! ```text
+//!  cluster   ─ N replicas behind a Dispatcher (round-robin / least-kv /
+//!              slo-slack routing); each replica = core + policy
+//!  policies  ─ decisions only: BulletPolicy (dynamic SM partitioning,
+//!              Algorithm 1), ChunkedPolicy (vLLM/SGLang lock-step),
+//!              NanoflowPolicy (nano-batch overlap), plus Bullet feature
+//!              masks for the ablations and MuxServe-style fixed quotas
+//!  core      ─ mechanisms only: EngineCore owns the virtual-clock event
+//!              loop, admission, KV reserve/release, prefill→decode
+//!              migration, timeline sampling and RequestRecord emission
+//! ```
+//!
+//! **Serving core** ([`engine::core`]).  [`engine::EngineCore`] drives
+//! admission → plan → advance → completions over the simulated GPU with
+//! two execution *lanes* (prefill, decode).  A policy implements
+//! [`engine::ServingPolicy`]: `plan` launches kernels at lane
+//! boundaries, `on_drain` applies lifecycle effects when a lane's
+//! kernels finish.  Planning per-lane gives Bullet's decoupled engines;
+//! planning only when all lanes are idle gives lock-step (chunked) or
+//! barrier-overlap (NanoFlow) execution.
+//!
+//! **Policies** ([`engine::sim_engine`], [`baselines`]).  Every system
+//! the evaluation compares is a policy over the same core, so results
+//! differ only by decisions, never by bookkeeping.  The
+//! [`baselines::System`] enum is the catalog; `System::policy()` is the
+//! factory.
+//!
+//! **Cluster** ([`cluster`]).  [`cluster::serve_cluster`] runs N
+//! replicas of any system behind a [`cluster::RouterPolicy`]; replicas
+//! co-advance along the global virtual timeline so state-aware routers
+//! see live load.  Surfaced through `BulletServer::serve_cluster`, the
+//! CLI (`--replicas N --router <policy>`) and
+//! `examples/cluster_scaling.rs`.
+//!
+//! ## Adding a serving policy (~100 lines)
+//!
+//! 1. Define a struct holding only your decision state (queues and KV
+//!    live in the core).
+//! 2. Implement [`engine::ServingPolicy`]: in `plan`, inspect
+//!    `core.waiting` / `core.decode`, reserve KV via `core.kv`, and
+//!    launch kernels with `core.submit(lane, stream, kernels)`; in
+//!    `on_drain`, credit progress (`core.advance_decode_token()`,
+//!    `core.finish_prefill(..)`).
+//! 3. Wire it: add a [`baselines::System`] variant (one `policy()` match
+//!    arm) and it runs in every experiment, test harness and the
+//!    cluster for free.  See `rust/README.md` for a walkthrough.
 
 pub mod util;
 pub mod config;
@@ -24,6 +76,7 @@ pub mod resource;
 pub mod engine;
 pub mod coordinator;
 pub mod baselines;
+pub mod cluster;
 pub mod workload;
 pub mod metrics;
 pub mod runtime;

@@ -4,16 +4,18 @@
 //! bullet serve   [--workload sharegpt|azure-code|arxiv-summary] [--rate R]
 //!                [--requests N] [--system bullet|vllm-1024|sglang-1024|
 //!                 sglang-2048|nanoflow] [--profile coarse|paper] [--seed S]
+//!                [--replicas N] [--router round-robin|least-kv|slo-slack]
 //! bullet live    [--requests N] [--artifacts DIR]   # real model via PJRT
 //! bullet profile [--grid coarse|paper]              # offline §3.2.2 pass
 //! bullet info                                        # config + artifact info
 //! ```
 
 use bullet::baselines::{run_system, System};
+use bullet::cluster::{serve_cluster, ClusterConfig, RouterPolicy};
 use bullet::config::{ServingConfig, SloSpec};
 use bullet::coordinator::{BuildOptions, BulletServer, Tokenizer};
 use bullet::engine::live_engine::{serve_live, LiveRequest};
-use bullet::metrics::summarize;
+use bullet::metrics::{summarize, RunSummary};
 use bullet::runtime::{ModelMeta, ModelRuntime};
 use bullet::util::cli::Args;
 use bullet::util::tbl::{f, ms, Table};
@@ -44,7 +46,19 @@ subcommands:
 
 common flags: --workload NAME --rate R --requests N --seed S
 serve flags:  --system bullet|vllm-1024|sglang-1024|sglang-2048|nanoflow
-              --profile coarse|paper";
+              --profile coarse|paper
+              --replicas N --router round-robin|least-kv|slo-slack";
+
+/// The metric rows every serve table shares (single-GPU and cluster).
+fn summary_rows(t: &mut Table, s: &RunSummary) {
+    t.row(&["requests".to_string(), s.n_requests.to_string()]);
+    t.row(&["mean TTFT (ms)".to_string(), ms(s.mean_ttft)]);
+    t.row(&["P90 TTFT (ms)".to_string(), ms(s.p90_ttft)]);
+    t.row(&["mean TPOT (ms)".to_string(), ms(s.mean_tpot)]);
+    t.row(&["P90 TPOT (ms)".to_string(), ms(s.p90_tpot)]);
+    t.row(&["throughput (tok/s)".to_string(), f(s.throughput_tok_s, 1)]);
+    t.row(&["SLO attainment".to_string(), f(s.slo_attainment * 100.0, 1) + "%"]);
+}
 
 fn dataset_and_slo(args: &Args) -> (Dataset, SloSpec) {
     let name = args.get_or("workload", "sharegpt");
@@ -76,30 +90,66 @@ fn serve(args: &Args) {
     let server = BulletServer::build(cfg.clone(), build);
     let trace = generate_n_requests(&ds, rate, n, seed);
 
-    let sys = match args.get_or("system", "bullet") {
-        "bullet" => System::Bullet,
-        "vllm-1024" => System::Vllm1024,
-        "sglang-1024" => System::Sglang1024,
-        "sglang-2048" => System::Sglang2048,
-        "nanoflow" => System::Nanoflow,
-        other => {
-            eprintln!("unknown system '{other}'");
-            std::process::exit(2);
-        }
-    };
+    let sys = System::by_name(args.get_or("system", "bullet")).unwrap_or_else(|| {
+        eprintln!("unknown system '{}'", args.get_or("system", "bullet"));
+        std::process::exit(2);
+    });
+
+    let replicas = args.get_usize("replicas", 1);
+    let router = RouterPolicy::by_name(args.get_or("router", "round-robin")).unwrap_or_else(|| {
+        eprintln!("unknown router '{}'", args.get_or("router", "round-robin"));
+        std::process::exit(2);
+    });
+
+    if replicas > 1 {
+        eprintln!(
+            "serving {} requests of {} at {} req/s with {} on {} replicas ({})...",
+            n,
+            ds.name,
+            rate,
+            sys.label(),
+            replicas,
+            router.label()
+        );
+        let ccfg = ClusterConfig { replicas, router };
+        // direct call so --seed drives the replica simulators, exactly
+        // like the single-replica path below
+        let out = serve_cluster(
+            sys,
+            &cfg,
+            server.perf(),
+            server.ground_truth(),
+            &trace,
+            seed,
+            &ccfg,
+        );
+        let s = summarize(&out.records, &cfg.slo, Some(out.virtual_duration));
+        let mut t = Table::new(&format!(
+            "{} x{} ({}) on {} @ {} req/s",
+            sys.label(),
+            replicas,
+            router.label(),
+            ds.name,
+            rate
+        ))
+        .header(&["metric", "value"]);
+        summary_rows(&mut t, &s);
+        t.row(&["makespan (s)".to_string(), f(out.virtual_duration, 2)]);
+        t.row(&[
+            "per-replica requests".to_string(),
+            format!("{:?}", out.per_replica_counts()),
+        ]);
+        t.print();
+        return;
+    }
+
     eprintln!("serving {} requests of {} at {} req/s with {}...", n, ds.name, rate, sys.label());
     let records = run_system(sys, &cfg, server.perf(), server.ground_truth(), &trace, seed);
     let s = summarize(&records, &cfg.slo, None);
 
     let mut t = Table::new(&format!("{} on {} @ {} req/s", sys.label(), ds.name, rate))
         .header(&["metric", "value"]);
-    t.row(&["requests".to_string(), s.n_requests.to_string()]);
-    t.row(&["mean TTFT (ms)".to_string(), ms(s.mean_ttft)]);
-    t.row(&["P90 TTFT (ms)".to_string(), ms(s.p90_ttft)]);
-    t.row(&["mean TPOT (ms)".to_string(), ms(s.mean_tpot)]);
-    t.row(&["P90 TPOT (ms)".to_string(), ms(s.p90_tpot)]);
-    t.row(&["throughput (tok/s)".to_string(), f(s.throughput_tok_s, 1)]);
-    t.row(&["SLO attainment".to_string(), f(s.slo_attainment * 100.0, 1) + "%"]);
+    summary_rows(&mut t, &s);
     t.print();
 }
 

@@ -74,6 +74,25 @@ pub struct RunSummary {
     pub mean_e2e: f64,
 }
 
+/// Merge per-replica record streams into one id-ordered stream, directly
+/// comparable (and summarizable) like a single-GPU run.
+pub fn merge_records<'a>(
+    parts: impl IntoIterator<Item = &'a [RequestRecord]>,
+) -> Vec<RequestRecord> {
+    let mut out: Vec<RequestRecord> = parts
+        .into_iter()
+        .flat_map(|p| p.iter().cloned())
+        .collect();
+    out.sort_by_key(|r| r.id);
+    out
+}
+
+/// Goodput (§4.1): requests meeting both SLOs, per second.
+pub fn goodput_req_s(records: &[RequestRecord], slo: &SloSpec, duration: Option<f64>) -> f64 {
+    let s = summarize(records, slo, duration);
+    s.slo_attainment * s.throughput_req_s
+}
+
 /// Summarize a completed run.  `duration` defaults to the span from first
 /// arrival to last finish when `None`.
 pub fn summarize(records: &[RequestRecord], slo: &SloSpec, duration: Option<f64>) -> RunSummary {
@@ -180,6 +199,32 @@ mod tests {
         let records = vec![rec(1.0, 1.0, 1.5, 3.0, 10, 5)];
         let s = summarize(&records, &slo, None);
         assert!((s.duration - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_records_orders_by_id() {
+        let a = vec![rec(0.0, 0.0, 0.1, 0.5, 10, 2)];
+        let mut b = vec![rec(0.0, 0.0, 0.2, 0.6, 10, 2)];
+        b[0].id = 5;
+        let mut c = vec![rec(0.0, 0.0, 0.3, 0.7, 10, 2)];
+        c[0].id = 2;
+        let merged = merge_records([b.as_slice(), a.as_slice(), c.as_slice()]);
+        let ids: Vec<u64> = merged.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 2, 5]);
+    }
+
+    #[test]
+    fn goodput_counts_only_slo_met() {
+        let slo = SloSpec {
+            norm_ttft_ms_per_token: 2.0,
+            tpot_ms: 100.0,
+        };
+        let records = vec![
+            rec(0.0, 0.0, 0.1, 0.5, 100, 5), // ok
+            rec(0.0, 0.0, 5.0, 9.0, 100, 5), // ttft violated
+        ];
+        let g = goodput_req_s(&records, &slo, Some(2.0));
+        assert!((g - 0.5).abs() < 1e-12, "goodput {g}");
     }
 
     #[test]

@@ -10,7 +10,7 @@
 
 use crate::kvcache::KvPool;
 use crate::runtime::pjrt::PjrtEngine;
-use anyhow::{anyhow, Result};
+use crate::util::error::{anyhow, Result};
 use std::collections::HashMap;
 use std::path::Path;
 

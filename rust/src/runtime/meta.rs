@@ -2,7 +2,7 @@
 //! Rust runtime: model config, flattened weight order, shape buckets.
 
 use crate::util::json::{self, Value};
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// One weight tensor in the canonical flattened order.

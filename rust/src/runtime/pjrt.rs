@@ -4,11 +4,18 @@
 //! HLO **text** is the interchange format — jax ≥ 0.5 emits protos with
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The real engine needs the vendored `xla` bindings, which are not part
+//! of the default (offline, dependency-free) build.  It is gated behind
+//! the `pjrt` cargo feature; without it a stub with the same API loads
+//! nothing and returns a descriptive error, so the simulation stack —
+//! every paper experiment — builds and runs everywhere.
 
+#[cfg(not(feature = "pjrt"))]
 use crate::runtime::meta::ModelMeta;
-use crate::runtime::weights;
-use anyhow::{anyhow, Context, Result};
-use std::collections::BTreeMap;
+#[cfg(not(feature = "pjrt"))]
+use crate::util::error::Result;
+#[cfg(not(feature = "pjrt"))]
 use std::path::Path;
 
 /// Result of a prefill call.
@@ -32,164 +39,209 @@ pub struct DecodeOut {
     pub bucket: usize,
 }
 
-/// Compiled model + resident weights.
-pub struct PjrtEngine {
-    pub meta: ModelMeta,
-    client: xla::PjRtClient,
-    prefill_exe: BTreeMap<usize, xla::PjRtLoadedExecutable>,
-    decode_exe: BTreeMap<usize, xla::PjRtLoadedExecutable>,
-    weight_bufs: Vec<xla::PjRtBuffer>,
+#[cfg(feature = "pjrt")]
+mod real {
+    use super::{DecodeOut, PrefillOut};
+    use crate::runtime::meta::ModelMeta;
+    use crate::runtime::weights;
+    use crate::util::error::{anyhow, Context, Result};
+    use std::collections::BTreeMap;
+    use std::path::Path;
+
+    /// Compiled model + resident weights.
+    pub struct PjrtEngine {
+        pub meta: ModelMeta,
+        client: xla::PjRtClient,
+        prefill_exe: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+        decode_exe: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+        weight_bufs: Vec<xla::PjRtBuffer>,
+    }
+
+    impl PjrtEngine {
+        /// Load artifacts from `dir`, compile every bucket, generate and
+        /// upload weights (seeded).
+        pub fn load(dir: &Path, weight_seed: u64) -> Result<PjrtEngine> {
+            let meta = ModelMeta::load(dir)?;
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+
+            let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
+                let path = dir.join(file);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                )
+                .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+            };
+
+            let mut prefill_exe = BTreeMap::new();
+            for (bucket, file) in &meta.prefill_artifacts {
+                prefill_exe.insert(*bucket, compile(file).context("prefill artifact")?);
+            }
+            let mut decode_exe = BTreeMap::new();
+            for (bucket, file) in &meta.decode_artifacts {
+                decode_exe.insert(*bucket, compile(file).context("decode artifact")?);
+            }
+
+            // Weights: generate deterministically, upload once.
+            let host = weights::generate_all(&meta, weight_seed);
+            let mut weight_bufs = Vec::with_capacity(host.len());
+            for (spec, data) in meta.weights.iter().zip(&host) {
+                let buf = client
+                    .buffer_from_host_buffer::<f32>(data, &spec.shape, None)
+                    .map_err(|e| anyhow!("uploading weight {}: {e:?}", spec.name))?;
+                weight_bufs.push(buf);
+            }
+
+            Ok(PjrtEngine {
+                meta,
+                client,
+                prefill_exe,
+                decode_exe,
+                weight_bufs,
+            })
+        }
+
+        fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+            self.client
+                .buffer_from_host_buffer::<i32>(data, dims, None)
+                .map_err(|e| anyhow!("upload i32: {e:?}"))
+        }
+
+        fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+            self.client
+                .buffer_from_host_buffer::<f32>(data, dims, None)
+                .map_err(|e| anyhow!("upload f32: {e:?}"))
+        }
+
+        /// Run prefill on a prompt (<= largest bucket tokens).
+        pub fn prefill(&self, tokens: &[i32]) -> Result<PrefillOut> {
+            let true_len = tokens.len();
+            let bucket = self
+                .meta
+                .prefill_bucket(true_len)
+                .ok_or_else(|| anyhow!("prompt of {true_len} tokens exceeds largest bucket"))?;
+            let exe = &self.prefill_exe[&bucket];
+
+            let mut padded = tokens.to_vec();
+            padded.resize(bucket, 0);
+            let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+            let tok_buf = self.upload_i32(&padded, &[bucket])?;
+            let len_buf = self.upload_i32(&[true_len as i32], &[])?;
+            args.push(&tok_buf);
+            args.push(&len_buf);
+
+            let out = exe
+                .execute_b(&args)
+                .map_err(|e| anyhow!("prefill execute: {e:?}"))?;
+            let lit = out[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("prefill literal: {e:?}"))?;
+            let (t, k, v) = lit
+                .to_tuple3()
+                .map_err(|e| anyhow!("prefill tuple: {e:?}"))?;
+            Ok(PrefillOut {
+                first_token: t
+                    .get_first_element::<i32>()
+                    .map_err(|e| anyhow!("first token: {e:?}"))?,
+                k_cache: k.to_vec::<f32>().map_err(|e| anyhow!("k: {e:?}"))?,
+                v_cache: v.to_vec::<f32>().map_err(|e| anyhow!("v: {e:?}"))?,
+                bucket,
+            })
+        }
+
+        /// Run one decode iteration.
+        ///
+        /// `tokens`/`ctx_lens`: one entry per live sequence (<= largest
+        /// bucket).  `k_cache`/`v_cache`: [n_layers, bucket, n_kv, max_ctx,
+        /// hd] padded arrays for the *bucketed* batch (caller pads slots).
+        pub fn decode(
+            &self,
+            tokens: &[i32],
+            ctx_lens: &[i32],
+            k_cache: &[f32],
+            v_cache: &[f32],
+        ) -> Result<DecodeOut> {
+            let n = tokens.len();
+            assert_eq!(n, ctx_lens.len());
+            let bucket = self
+                .meta
+                .decode_bucket(n)
+                .ok_or_else(|| anyhow!("decode batch {n} exceeds largest bucket"))?;
+            let exe = &self.decode_exe[&bucket];
+            let m = &self.meta;
+            let cache_elems = m.n_layers * bucket * m.n_kv_heads * m.max_ctx * m.head_dim;
+            assert_eq!(k_cache.len(), cache_elems, "k_cache shape mismatch");
+            assert_eq!(v_cache.len(), cache_elems, "v_cache shape mismatch");
+
+            let mut tok = tokens.to_vec();
+            tok.resize(bucket, 0);
+            let mut cls = ctx_lens.to_vec();
+            cls.resize(bucket, 0);
+
+            let cache_dims = [m.n_layers, bucket, m.n_kv_heads, m.max_ctx, m.head_dim];
+            let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+            let tok_buf = self.upload_i32(&tok, &[bucket])?;
+            let cls_buf = self.upload_i32(&cls, &[bucket])?;
+            let k_buf = self.upload_f32(k_cache, &cache_dims)?;
+            let v_buf = self.upload_f32(v_cache, &cache_dims)?;
+            args.push(&tok_buf);
+            args.push(&cls_buf);
+            args.push(&k_buf);
+            args.push(&v_buf);
+
+            let out = exe
+                .execute_b(&args)
+                .map_err(|e| anyhow!("decode execute: {e:?}"))?;
+            let lit = out[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("decode literal: {e:?}"))?;
+            let (t, k, v) = lit
+                .to_tuple3()
+                .map_err(|e| anyhow!("decode tuple: {e:?}"))?;
+            Ok(DecodeOut {
+                next_tokens: t.to_vec::<i32>().map_err(|e| anyhow!("tokens: {e:?}"))?,
+                k_new: k.to_vec::<f32>().map_err(|e| anyhow!("k_new: {e:?}"))?,
+                v_new: v.to_vec::<f32>().map_err(|e| anyhow!("v_new: {e:?}"))?,
+                bucket,
+            })
+        }
+    }
 }
 
+#[cfg(feature = "pjrt")]
+pub use real::PjrtEngine;
+
+/// Stub engine for dependency-free builds: same API, `load` always fails.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtEngine {
+    pub meta: ModelMeta,
+}
+
+#[cfg(not(feature = "pjrt"))]
 impl PjrtEngine {
-    /// Load artifacts from `dir`, compile every bucket, generate and
-    /// upload weights (seeded).
-    pub fn load(dir: &Path, weight_seed: u64) -> Result<PjrtEngine> {
-        let meta = ModelMeta::load(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-
-        let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
-            let path = dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
-        };
-
-        let mut prefill_exe = BTreeMap::new();
-        for (bucket, file) in &meta.prefill_artifacts {
-            prefill_exe.insert(*bucket, compile(file).context("prefill artifact")?);
-        }
-        let mut decode_exe = BTreeMap::new();
-        for (bucket, file) in &meta.decode_artifacts {
-            decode_exe.insert(*bucket, compile(file).context("decode artifact")?);
-        }
-
-        // Weights: generate deterministically, upload once.
-        let host = weights::generate_all(&meta, weight_seed);
-        let mut weight_bufs = Vec::with_capacity(host.len());
-        for (spec, data) in meta.weights.iter().zip(&host) {
-            let buf = client
-                .buffer_from_host_buffer::<f32>(data, &spec.shape, None)
-                .map_err(|e| anyhow!("uploading weight {}: {e:?}", spec.name))?;
-            weight_bufs.push(buf);
-        }
-
-        Ok(PjrtEngine {
-            meta,
-            client,
-            prefill_exe,
-            decode_exe,
-            weight_bufs,
-        })
+    pub fn load(_dir: &Path, _weight_seed: u64) -> Result<PjrtEngine> {
+        Err(crate::anyhow!(
+            "built without the `pjrt` feature: live mode needs the vendored \
+             xla bindings — add them as a path dependency in rust/Cargo.toml \
+             (see the [features] comment there), then build with \
+             --features pjrt"
+        ))
     }
 
-    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer::<i32>(data, dims, None)
-            .map_err(|e| anyhow!("upload i32: {e:?}"))
+    pub fn prefill(&self, _tokens: &[i32]) -> Result<PrefillOut> {
+        Err(crate::anyhow!("pjrt feature disabled"))
     }
 
-    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer::<f32>(data, dims, None)
-            .map_err(|e| anyhow!("upload f32: {e:?}"))
-    }
-
-    /// Run prefill on a prompt (<= largest bucket tokens).
-    pub fn prefill(&self, tokens: &[i32]) -> Result<PrefillOut> {
-        let true_len = tokens.len();
-        let bucket = self
-            .meta
-            .prefill_bucket(true_len)
-            .ok_or_else(|| anyhow!("prompt of {true_len} tokens exceeds largest bucket"))?;
-        let exe = &self.prefill_exe[&bucket];
-
-        let mut padded = tokens.to_vec();
-        padded.resize(bucket, 0);
-        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
-        let tok_buf = self.upload_i32(&padded, &[bucket])?;
-        let len_buf = self.upload_i32(&[true_len as i32], &[])?;
-        args.push(&tok_buf);
-        args.push(&len_buf);
-
-        let out = exe
-            .execute_b(&args)
-            .map_err(|e| anyhow!("prefill execute: {e:?}"))?;
-        let lit = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("prefill literal: {e:?}"))?;
-        let (t, k, v) = lit
-            .to_tuple3()
-            .map_err(|e| anyhow!("prefill tuple: {e:?}"))?;
-        Ok(PrefillOut {
-            first_token: t
-                .get_first_element::<i32>()
-                .map_err(|e| anyhow!("first token: {e:?}"))?,
-            k_cache: k.to_vec::<f32>().map_err(|e| anyhow!("k: {e:?}"))?,
-            v_cache: v.to_vec::<f32>().map_err(|e| anyhow!("v: {e:?}"))?,
-            bucket,
-        })
-    }
-
-    /// Run one decode iteration.
-    ///
-    /// `tokens`/`ctx_lens`: one entry per live sequence (<= largest
-    /// bucket).  `k_cache`/`v_cache`: [n_layers, bucket, n_kv, max_ctx,
-    /// hd] padded arrays for the *bucketed* batch (caller pads slots).
     pub fn decode(
         &self,
-        tokens: &[i32],
-        ctx_lens: &[i32],
-        k_cache: &[f32],
-        v_cache: &[f32],
+        _tokens: &[i32],
+        _ctx_lens: &[i32],
+        _k_cache: &[f32],
+        _v_cache: &[f32],
     ) -> Result<DecodeOut> {
-        let n = tokens.len();
-        assert_eq!(n, ctx_lens.len());
-        let bucket = self
-            .meta
-            .decode_bucket(n)
-            .ok_or_else(|| anyhow!("decode batch {n} exceeds largest bucket"))?;
-        let exe = &self.decode_exe[&bucket];
-        let m = &self.meta;
-        let cache_elems = m.n_layers * bucket * m.n_kv_heads * m.max_ctx * m.head_dim;
-        assert_eq!(k_cache.len(), cache_elems, "k_cache shape mismatch");
-        assert_eq!(v_cache.len(), cache_elems, "v_cache shape mismatch");
-
-        let mut tok = tokens.to_vec();
-        tok.resize(bucket, 0);
-        let mut cls = ctx_lens.to_vec();
-        cls.resize(bucket, 0);
-
-        let cache_dims = [m.n_layers, bucket, m.n_kv_heads, m.max_ctx, m.head_dim];
-        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
-        let tok_buf = self.upload_i32(&tok, &[bucket])?;
-        let cls_buf = self.upload_i32(&cls, &[bucket])?;
-        let k_buf = self.upload_f32(k_cache, &cache_dims)?;
-        let v_buf = self.upload_f32(v_cache, &cache_dims)?;
-        args.push(&tok_buf);
-        args.push(&cls_buf);
-        args.push(&k_buf);
-        args.push(&v_buf);
-
-        let out = exe
-            .execute_b(&args)
-            .map_err(|e| anyhow!("decode execute: {e:?}"))?;
-        let lit = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("decode literal: {e:?}"))?;
-        let (t, k, v) = lit
-            .to_tuple3()
-            .map_err(|e| anyhow!("decode tuple: {e:?}"))?;
-        Ok(DecodeOut {
-            next_tokens: t.to_vec::<i32>().map_err(|e| anyhow!("tokens: {e:?}"))?,
-            k_new: k.to_vec::<f32>().map_err(|e| anyhow!("k_new: {e:?}"))?,
-            v_new: v.to_vec::<f32>().map_err(|e| anyhow!("v_new: {e:?}"))?,
-            bucket,
-        })
+        Err(crate::anyhow!("pjrt feature disabled"))
     }
 }

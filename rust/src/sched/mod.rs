@@ -5,4 +5,6 @@ pub mod policy;
 pub mod state;
 
 pub use policy::{Decision, SloScheduler};
-pub use state::{DecodeReqState, PrefillBatch, PrefillReq, SystemState};
+pub use state::{
+    ActiveDecode, DecodeReqState, PrefillBatch, PrefillProgress, PrefillReq, SystemState,
+};

@@ -133,15 +133,20 @@ impl SloScheduler {
         self.tpot_ratio_p90_with(st, dm, contended, self.observed_tpot_p90(st))
     }
 
+    /// SLO slack of a waiting request at virtual time `now` (negative ⇒
+    /// already past its TTFT budget).
+    pub fn ttft_slack(&self, r: &crate::sched::state::PrefillReq, now: f64) -> f64 {
+        self.cfg.slo.ttft_budget(r.input_len) - (now - r.arrival)
+    }
+
     /// Reorder the waiting queue by SLO slack (most urgent first) —
-    /// Algorithm 1 line 7.
+    /// Algorithm 1 line 7.  `total_cmp` keeps the sort total even if a
+    /// degenerate SLO budget produces NaN slack, so the scheduler can
+    /// never panic here.
     pub fn reorder_waiting(&self, st: &mut SystemState) {
         let now = st.now;
-        let slo = self.cfg.slo;
         st.waiting.sort_by(|a, b| {
-            let slack_a = slo.ttft_budget(a.input_len) - (now - a.arrival);
-            let slack_b = slo.ttft_budget(b.input_len) - (now - b.arrival);
-            slack_a.partial_cmp(&slack_b).unwrap()
+            self.ttft_slack(a, now).total_cmp(&self.ttft_slack(b, now))
         });
     }
 
@@ -397,6 +402,23 @@ mod tests {
         ], 0.2);
         s.reorder_waiting(&mut st);
         assert_eq!(st.waiting[0].id, 2);
+    }
+
+    #[test]
+    fn reorder_survives_nan_budget() {
+        // A degenerate SLO (NaN budget) must not panic the scheduler:
+        // total_cmp gives NaN a fixed sort position.
+        let mut cfg = ServingConfig::default();
+        cfg.slo.norm_ttft_ms_per_token = f64::NAN;
+        let perf = PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b());
+        let s = SloScheduler::new(cfg, perf);
+        let mut st = state_with(0, 0, vec![], vec![
+            PrefillReq { id: 1, arrival: 0.0, input_len: 4000, output_len: 1 },
+            PrefillReq { id: 2, arrival: 0.1, input_len: 100, output_len: 1 },
+            PrefillReq { id: 3, arrival: 0.2, input_len: 900, output_len: 1 },
+        ], 0.5);
+        s.reorder_waiting(&mut st); // must not panic
+        assert_eq!(st.waiting.len(), 3);
     }
 
     #[test]

@@ -35,8 +35,40 @@ impl PrefillBatch {
     }
 }
 
+/// A queued request plus prefill progress — the shared waiting-queue
+/// entry of the engine harness.  Chunk-based engines advance `done`
+/// across iterations; whole-prompt engines (Bullet) leave it at 0 and
+/// move the request into a [`PrefillBatch`] instead.  (This replaces the
+/// private `Prefilling`/`PrefillProgress` structs the baselines used to
+/// carry.)
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrefillProgress {
+    pub req: PrefillReq,
+    /// Prompt tokens already prefilled.
+    pub done: usize,
+    /// Virtual time the first chunk/batch started executing (None while
+    /// nothing has run — also the "KV reserved yet?" marker for chunk
+    /// engines, which reserve at first launch).
+    pub prefill_start: Option<f64>,
+}
+
+impl PrefillProgress {
+    pub fn new(req: PrefillReq) -> PrefillProgress {
+        PrefillProgress {
+            req,
+            done: 0,
+            prefill_start: None,
+        }
+    }
+
+    /// Prompt tokens still to prefill.
+    pub fn remaining(&self) -> usize {
+        self.req.input_len - self.done
+    }
+}
+
 /// D_k entry: one request in the decode batch.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct DecodeReqState {
     pub id: u64,
     pub input_len: usize,
@@ -64,6 +96,21 @@ impl DecodeReqState {
     pub fn finished(&self) -> bool {
         self.tokens_out >= self.output_len
     }
+}
+
+/// A request in the decode batch plus the timing metadata every engine
+/// tracks for it (unified from the engines' private `ActiveDecode` /
+/// `Decoding` / `DecodeActive` structs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ActiveDecode {
+    pub st: DecodeReqState,
+    pub arrival: f64,
+    pub prefill_start: f64,
+    pub first_token_time: f64,
+    /// Virtual time of this request's latest token — TPOT accounting
+    /// charges the FULL gap between tokens (queueing, pauses, contention),
+    /// as the paper's d_i does, so the scheduler cannot hide stalls.
+    pub last_token_time: f64,
 }
 
 /// The full scheduler-visible state.

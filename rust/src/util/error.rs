@@ -1,0 +1,125 @@
+//! Minimal `anyhow`-compatible error type so the crate builds with zero
+//! external dependencies (the container has no crates.io access).
+//!
+//! Supports the subset the runtime layer uses: `anyhow!(...)`,
+//! `Result<T>`, `.context(..)` / `.with_context(..)`, and the `{e:#}`
+//! alternate formatting that prints the full context chain
+//! (`outer: inner: root`).
+
+use std::fmt;
+
+/// A string-chained error: `msgs[0]` is the outermost context.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msgs: Vec<String>,
+}
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error {
+            msgs: vec![m.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message (innermost messages keep order).
+    pub fn wrap(mut self, outer: impl fmt::Display) -> Error {
+        self.msgs.insert(0, outer.to_string());
+        self
+    }
+
+    /// The full chain, outermost first.
+    pub fn chain(&self) -> &[String] {
+        &self.msgs
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.msgs.join(": "))
+        } else {
+            write!(f, "{}", self.msgs[0])
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context` stand-in for `Result`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        // `{:#}` captures an existing chain in full (our Error's
+        // alternate form); for foreign errors it is the plain message.
+        self.map_err(|e| Error::msg(format!("{e:#}")).wrap(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{e:#}")).wrap(f()))
+    }
+}
+
+/// `anyhow!`-style constructor.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+// Allow `use crate::util::error::anyhow;` like the real crate.
+pub use crate::anyhow;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        Err(anyhow!("root cause {}", 42))
+    }
+
+    #[test]
+    fn message_and_chain() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root cause 42");
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "gone",
+        ));
+        let e = r.with_context(|| format!("reading {}", "x.json")).unwrap_err();
+        assert!(format!("{e:#}").starts_with("reading x.json: "));
+    }
+
+    #[test]
+    fn nested_context_keeps_the_root_cause() {
+        let e = fails()
+            .context("parsing meta")
+            .context("loading artifacts")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "loading artifacts");
+        assert_eq!(
+            format!("{e:#}"),
+            "loading artifacts: parsing meta: root cause 42"
+        );
+    }
+
+    #[test]
+    fn question_mark_compat() {
+        fn inner() -> Result<()> {
+            fails()?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+}

@@ -1,8 +1,10 @@
-//! Offline-environment substrates: JSON, PRNG, statistics, CLI parsing
-//! and table rendering.  Only `xla` and `anyhow` resolve from the vendored
-//! crate set, so everything else the system needs is implemented here.
+//! Offline-environment substrates: JSON, PRNG, statistics, CLI parsing,
+//! table rendering and error chaining.  The default build has **zero**
+//! external dependencies; only the optional `pjrt` feature expects a
+//! vendored `xla` crate (see `runtime::pjrt`).
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod rng;
 pub mod stats;

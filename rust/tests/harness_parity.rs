@@ -1,0 +1,121 @@
+//! Engine-harness parity: every system ported onto the shared serving
+//! core must stay deterministic (bit-identical record streams across
+//! repeated runs) and preserve the paper's cross-engine ordering
+//! (Bullet's goodput at least matches chunked prefill's on the default
+//! workload).
+
+use bullet::baselines::{run_system, System};
+use bullet::cluster::{ClusterConfig, RouterPolicy};
+use bullet::config::{GpuSpec, ModelSpec, ServingConfig};
+use bullet::coordinator::{BuildOptions, BulletServer};
+use bullet::gpu::roofline::GroundTruth;
+use bullet::metrics::goodput_req_s;
+use bullet::perf::PerfModel;
+use bullet::workload::{generate_n_requests, Dataset};
+
+fn setup() -> (ServingConfig, PerfModel, GroundTruth) {
+    let cfg = ServingConfig::default();
+    let perf = PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b());
+    let gt = GroundTruth::new(GpuSpec::a100());
+    (cfg, perf, gt)
+}
+
+/// Every ported engine, run twice on a fixed seeded trace, must emit a
+/// bit-identical `RequestRecord` stream: the harness introduces no
+/// hidden nondeterminism.
+#[test]
+fn every_engine_is_deterministic_on_the_harness() {
+    let (cfg, perf, gt) = setup();
+    let trace = generate_n_requests(&Dataset::sharegpt(), 6.0, 25, 1234);
+    for sys in [
+        System::Bullet,
+        System::Vllm1024,
+        System::Sglang1024,
+        System::Sglang2048,
+        System::Nanoflow,
+        System::FixedSm(84),
+        System::Naive,
+        System::WithPartition,
+        System::WithScheduler,
+    ] {
+        let a = run_system(sys, &cfg, &perf, &gt, &trace, 99);
+        let b = run_system(sys, &cfg, &perf, &gt, &trace, 99);
+        assert_eq!(a.len(), trace.len(), "{} lost records", sys.label());
+        assert_eq!(a, b, "{} is nondeterministic", sys.label());
+    }
+}
+
+/// Cross-engine sanity on the default (ShareGPT) workload: Bullet's
+/// goodput — SLO-meeting requests per second — must not fall below
+/// chunked prefill's.  This is the paper's qualitative headline and a
+/// regression tripwire for the harness port.
+#[test]
+fn bullet_goodput_at_least_chunked_on_default_workload() {
+    let (cfg, perf, gt) = setup();
+    let trace = generate_n_requests(&Dataset::sharegpt(), 8.0, 50, 321);
+    let bullet = run_system(System::Bullet, &cfg, &perf, &gt, &trace, 3);
+    let chunked = run_system(System::Sglang1024, &cfg, &perf, &gt, &trace, 3);
+    let gb = goodput_req_s(&bullet, &cfg.slo, None);
+    let gc = goodput_req_s(&chunked, &cfg.slo, None);
+    assert!(
+        gb >= gc,
+        "bullet goodput {gb:.3} req/s below chunked {gc:.3} req/s"
+    );
+}
+
+/// Record streams stay causally consistent through the harness for every
+/// engine family (prefill_start >= arrival, first token >= prefill
+/// start, finish >= first token).
+#[test]
+fn records_causally_consistent_across_engines() {
+    let (cfg, perf, gt) = setup();
+    let trace = generate_n_requests(&Dataset::azure_code(), 5.0, 20, 77);
+    for sys in [System::Bullet, System::Sglang1024, System::Nanoflow] {
+        for r in run_system(sys, &cfg, &perf, &gt, &trace, 5) {
+            assert!(r.prefill_start >= r.arrival - 1e-9, "{}: req {}", sys.label(), r.id);
+            assert!(r.first_token_time >= r.prefill_start, "{}: req {}", sys.label(), r.id);
+            assert!(r.finish_time >= r.first_token_time, "{}: req {}", sys.label(), r.id);
+        }
+    }
+}
+
+/// The cluster layer preserves determinism end-to-end (dispatcher +
+/// replicas), and the acceptance-bar scenario holds: 4 replicas deliver
+/// >= 3x the trace throughput of 1 replica under saturation.
+#[test]
+fn cluster_scaling_hits_the_acceptance_bar() {
+    let cfg = ServingConfig::default();
+    let server = BulletServer::build(cfg.clone(), BuildOptions::default());
+    // Azure-Code saturates a single GPU on serial compute-bound prefills
+    // (decode, being weight-read-dominated, would let one GPU co-host the
+    // whole batch and mask the scaling).
+    let trace = generate_n_requests(&Dataset::azure_code(), 80.0, 120, 42);
+    let one = server.serve_cluster(
+        &trace,
+        &ClusterConfig { replicas: 1, router: RouterPolicy::RoundRobin },
+    );
+    let four = server.serve_cluster(
+        &trace,
+        &ClusterConfig { replicas: 4, router: RouterPolicy::LeastKv },
+    );
+    assert_eq!(one.records.len(), trace.len());
+    assert_eq!(four.records.len(), trace.len());
+    // Same tokens served in a fraction of the time.  The demo-grade 3x
+    // bar is asserted by examples/cluster_scaling.rs on its larger
+    // trace; here the suite enforces a margin below it so perf-model
+    // constant tweaks don't flake the default test run.
+    let speedup = one.virtual_duration / four.virtual_duration;
+    assert!(
+        speedup >= 2.5,
+        "4-replica speedup {speedup:.2}x below the 2.5x tripwire \
+         (makespans: 1x {:.1}s, 4x {:.1}s)",
+        one.virtual_duration,
+        four.virtual_duration
+    );
+
+    let again = server.serve_cluster(
+        &trace,
+        &ClusterConfig { replicas: 4, router: RouterPolicy::LeastKv },
+    );
+    assert_eq!(four.records, again.records);
+}
