@@ -5,7 +5,9 @@
 //!   2. simulator event throughput,
 //!   3. end-to-end simulated serving wall time (Fig. 11-sized run),
 //!   4. serving-core dispatch overhead: the `ServingPolicy` trait
-//!      indirection versus a monomorphized engine loop must stay <1%.
+//!      indirection versus a monomorphized engine loop must stay <1%,
+//!   5. prefix-index longest-match lookup — the admission fast path the
+//!      session/prefix-reuse subsystem adds to every arrival.
 //! EXPERIMENTS.md §Perf records before/after for each optimization.
 
 use bullet::config::{GpuSpec, ModelSpec, ServingConfig};
@@ -15,10 +17,13 @@ use bullet::gpu::roofline::GroundTruth;
 use bullet::gpu::simulator::Simulator;
 use bullet::gpu::stream::SmMask;
 use bullet::gpu::{KernelDesc, OpClass};
+use bullet::kvcache::prefix::PrefixIndex;
+use bullet::kvcache::{KvPool, BLOCK_TOKENS};
 use bullet::perf::PerfModel;
 use bullet::resource::Partition;
 use bullet::sched::{DecodeReqState, PrefillBatch, PrefillReq, SloScheduler, SystemState};
 use bullet::testing::bench::{bench, black_box};
+use bullet::testing::content_chain;
 use bullet::workload::{generate_n_requests, Dataset, Request};
 use std::time::Instant;
 
@@ -39,15 +44,23 @@ fn loaded_state() -> SystemState {
             arrival: i as f64 * 0.01,
             input_len: 512 + (i as usize * 731) % 8192,
             output_len: 128,
+            ..Default::default()
         })
         .collect();
     SystemState {
         now: 5.0,
         prefill: Some(PrefillBatch {
-            reqs: vec![PrefillReq { id: 1, arrival: 4.0, input_len: 6000, output_len: 100 }],
+            reqs: vec![PrefillReq {
+                id: 1,
+                arrival: 4.0,
+                input_len: 6000,
+                output_len: 100,
+                ..Default::default()
+            }],
             n_tokens: 6000,
             layers_done: 10,
             started_at: 4.5,
+            ..Default::default()
         }),
         decode,
         waiting,
@@ -145,4 +158,34 @@ fn main() {
         overhead_pct,
         if overhead_pct < 1.0 { "(<1% bar: OK)" } else { "(ABOVE the 1% bar!)" }
     );
+
+    // 5. prefix-index longest-match lookup: the per-arrival admission
+    //    fast path.  256 cached chains of 32 blocks; the probe shares 32
+    //    blocks with one of them and then diverges for another 32 — the
+    //    worst case that still walks a full cached prefix.
+    let mut pool = KvPool::new(16 * 1024 * BLOCK_TOKENS);
+    let mut index = PrefixIndex::new();
+    let contents = |c: u64, b: u64| (c << 32) | b; // unique per (chain, block)
+    for c in 0..256u64 {
+        let chain = content_chain(&(0..32).map(|b| contents(c, b)).collect::<Vec<_>>());
+        let id = 9000 + c;
+        pool.grow(id, 32 * BLOCK_TOKENS).unwrap();
+        let blocks = pool.get(id).unwrap().blocks.clone();
+        index.insert(&mut pool, &chain, &blocks);
+    }
+    // the probe shares chain 171's 32 blocks, then diverges for 32 more
+    let probe_contents: Vec<u64> = (0..32)
+        .map(|b| contents(171, b))
+        .chain((0..32).map(|b| contents(0xF00D, b)))
+        .collect();
+    let probe = content_chain(&probe_contents);
+    let prompt_tokens = probe.len() * BLOCK_TOKENS + 8;
+    let r = bench(
+        "prefix-index longest-match (256 chains x 32 blocks, 64-block probe)",
+        2000,
+        || {
+            black_box(index.lookup(black_box(&probe), prompt_tokens));
+        },
+    );
+    println!("{}", r.report());
 }

@@ -15,7 +15,7 @@
 //! the whole iteration's lifecycle update when its single lane drains.
 
 use crate::config::ServingConfig;
-use crate::engine::core::{CoreOptions, EngineCore, Lane, ServingPolicy};
+use crate::engine::core::{CoreOptions, EngineCore, EngineOutput, Lane, ServingPolicy};
 use crate::gpu::kernel::KernelDesc;
 use crate::gpu::roofline::GroundTruth;
 use crate::metrics::RequestRecord;
@@ -97,30 +97,42 @@ impl HybridBatch {
 }
 
 /// Build the iteration's hybrid batch against the core's queues,
-/// reserving KV (input + output) for requests starting their first chunk.
+/// reserving KV for requests starting their first chunk (input + output
+/// minus any prefix-cached tokens; `prefill_start` doubles as the
+/// "reserved?" marker — a prefix hit starts `done` above zero).
 pub(crate) fn build_hybrid_batch(core: &mut EngineCore, chunk_size: usize) -> HybridBatch {
     let now = core.now();
     let ds = core.decode.len().min(chunk_size);
     let mut budget = chunk_size - ds;
     let mut assignments: Vec<(usize, usize, usize)> = Vec::new();
-    for (i, w) in core.waiting.iter_mut().enumerate() {
+    for i in 0..core.waiting.len() {
         if budget == 0 {
             break;
         }
-        let take = w.remaining().min(budget);
+        let (take, reserved, id, reserve, done) = {
+            let w = &core.waiting[i];
+            (
+                w.remaining().min(budget),
+                w.prefill_start.is_some(),
+                w.req.id,
+                w.req.input_len + w.req.output_len - w.req.cached_len,
+                w.done,
+            )
+        };
         if take == 0 {
             continue;
         }
-        // KV reservation at first chunk (input + output, see engine docs).
-        if w.done == 0 {
-            let reserve = w.req.input_len + w.req.output_len;
-            if !core.kv.can_grow(w.req.id, reserve) {
+        if !reserved {
+            // `kv_room` is the evict-vs-recompute hook: it may reclaim
+            // cache-only blocks (and idle adoptions of OTHER requests —
+            // never entry `i`'s own, so `done` stays valid).
+            if !core.kv_room(id, reserve) {
                 continue; // waits for memory
             }
-            core.kv.grow(w.req.id, reserve).unwrap();
-            w.prefill_start = Some(now);
+            core.kv.grow(id, reserve).unwrap();
+            core.waiting[i].prefill_start = Some(now);
         }
-        assignments.push((i, take, w.done));
+        assignments.push((i, take, done));
         budget -= take;
     }
     let chunk_tokens = assignments.iter().map(|a| a.1).sum();
@@ -143,9 +155,10 @@ pub(crate) fn build_hybrid_batch(core: &mut EngineCore, chunk_size: usize) -> Hy
 /// work waiting means nothing is in flight that could ever free the
 /// pool — a non-empty decode batch or pending join always yields
 /// `ds >= 1` and a launchable hybrid iteration — so every waiting
-/// request is at `done == 0` and failed its reservation against an
-/// empty pool: the head request can never fit.  Fail loudly like the
-/// Bullet admission path.
+/// request is unreserved and failed its reservation against a pool
+/// `kv_room` had already stripped of every reclaimable cached block:
+/// the head request can never fit.  Fail loudly like the Bullet
+/// admission path.
 pub(crate) fn hybrid_stall(core: &EngineCore) -> bool {
     if core.waiting.is_empty() {
         return false;
@@ -154,7 +167,7 @@ pub(crate) fn hybrid_stall(core: &EngineCore) -> bool {
     panic!(
         "request {} needs {} KV tokens but pool holds {}",
         w.req.id,
-        w.req.input_len + w.req.output_len,
+        w.req.input_len + w.req.output_len - w.req.cached_len,
         core.kv.capacity_tokens()
     );
 }
@@ -286,16 +299,15 @@ impl ServingPolicy for ChunkedPolicy {
     }
 }
 
-/// Serve `trace` with a chunked-prefill engine; same record format as
-/// the Bullet engine so summaries are directly comparable.  (Thin
-/// wrapper over [`EngineCore`] + [`ChunkedPolicy`].)
-pub fn serve_chunked(
+/// Serve `trace` with a chunked-prefill engine and return the full
+/// engine output (records + prefix-cache counters + utilization).
+pub fn serve_chunked_output(
     cfg: &ServingConfig,
     ccfg: &ChunkedConfig,
     gt: &GroundTruth,
     trace: &[Request],
     seed: u64,
-) -> Vec<RequestRecord> {
+) -> EngineOutput {
     let opts = CoreOptions {
         seed,
         // the pre-refactor baseline loops had no virtual-time cap
@@ -305,7 +317,20 @@ pub fn serve_chunked(
     let mut core = EngineCore::new(cfg.clone(), gt.clone(), trace.to_vec(), &opts);
     let mut policy = ChunkedPolicy::new(ccfg.clone());
     core.run(&mut policy);
-    core.into_output().records
+    core.into_output()
+}
+
+/// Serve `trace` with a chunked-prefill engine; same record format as
+/// the Bullet engine so summaries are directly comparable.  (Thin
+/// wrapper over [`serve_chunked_output`].)
+pub fn serve_chunked(
+    cfg: &ServingConfig,
+    ccfg: &ChunkedConfig,
+    gt: &GroundTruth,
+    trace: &[Request],
+    seed: u64,
+) -> Vec<RequestRecord> {
+    serve_chunked_output(cfg, ccfg, gt, trace, seed).records
 }
 
 #[cfg(test)]
@@ -354,7 +379,7 @@ mod tests {
     fn long_prompts_split_into_chunks() {
         let (cfg, gt) = setup();
         // one 8k prompt: with cs=1024 needs 8 iterations minimum.
-        let trace = vec![Request { id: 0, arrival: 0.0, input_len: 8192, output_len: 2 }];
+        let trace = vec![Request { id: 0, arrival: 0.0, input_len: 8192, output_len: 2, ..Default::default() }];
         let r1024 = serve_chunked(&cfg, &ChunkedConfig::sglang_1024(), &gt, &trace, 2);
         let r2048 = serve_chunked(&cfg, &ChunkedConfig::sglang_2048(), &gt, &trace, 2);
         // larger chunks finish prefill sooner (fewer reloads + fewer passes)
@@ -374,15 +399,15 @@ mod tests {
         let mut trace = vec![];
         // long-decode requests arrive first and occupy slots
         for i in 0..64 {
-            trace.push(Request { id: i, arrival: 0.0, input_len: 64, output_len: 400 });
+            trace.push(Request { id: i, arrival: 0.0, input_len: 64, output_len: 400, ..Default::default() });
         }
-        trace.push(Request { id: 64, arrival: 1.0, input_len: 4096, output_len: 2 });
+        trace.push(Request { id: 64, arrival: 1.0, input_len: 4096, output_len: 2, ..Default::default() });
         let recs = serve_chunked(&cfg, &ChunkedConfig::sglang_1024(), &gt, &trace, 3);
         let solo = serve_chunked(
             &cfg,
             &ChunkedConfig::sglang_1024(),
             &gt,
-            &[Request { id: 0, arrival: 0.0, input_len: 4096, output_len: 2 }],
+            &[Request { id: 0, arrival: 0.0, input_len: 4096, output_len: 2, ..Default::default() }],
             3,
         );
         let busy_ttft = recs.iter().find(|r| r.id == 64).unwrap().ttft();

@@ -14,6 +14,6 @@ pub mod chunked;
 pub mod nanoflow;
 pub mod systems;
 
-pub use chunked::{serve_chunked, ChunkedConfig, ChunkedPolicy};
-pub use nanoflow::{serve_nanoflow, NanoflowPolicy};
-pub use systems::{run_system, System};
+pub use chunked::{serve_chunked, serve_chunked_output, ChunkedConfig, ChunkedPolicy};
+pub use nanoflow::{serve_nanoflow, serve_nanoflow_output, NanoflowPolicy};
+pub use systems::{run_system, run_system_output, System};

@@ -21,7 +21,7 @@ use crate::baselines::chunked::{
     build_hybrid_batch, complete_hybrid_iteration, hybrid_stall, ChunkedConfig, HybridBatch,
 };
 use crate::config::ServingConfig;
-use crate::engine::core::{CoreOptions, EngineCore, Lane, ServingPolicy};
+use crate::engine::core::{CoreOptions, EngineCore, EngineOutput, Lane, ServingPolicy};
 use crate::gpu::roofline::GroundTruth;
 use crate::metrics::RequestRecord;
 use crate::model::phases::{decode_all_layers, prefill_all_layers, PhaseShape};
@@ -95,15 +95,15 @@ impl ServingPolicy for NanoflowPolicy {
     }
 }
 
-/// Serve `trace` with the NanoFlow engine.  (Thin wrapper over
-/// [`EngineCore`] + [`NanoflowPolicy`].)
-pub fn serve_nanoflow(
+/// Serve `trace` with the NanoFlow engine and return the full engine
+/// output (records + prefix-cache counters + utilization).
+pub fn serve_nanoflow_output(
     cfg: &ServingConfig,
     ccfg: &ChunkedConfig,
     gt: &GroundTruth,
     trace: &[Request],
     seed: u64,
-) -> Vec<RequestRecord> {
+) -> EngineOutput {
     let opts = CoreOptions {
         seed,
         // the pre-refactor baseline loops had no virtual-time cap
@@ -113,7 +113,19 @@ pub fn serve_nanoflow(
     let mut core = EngineCore::new(cfg.clone(), gt.clone(), trace.to_vec(), &opts);
     let mut policy = NanoflowPolicy::new(ccfg.clone());
     core.run(&mut policy);
-    core.into_output().records
+    core.into_output()
+}
+
+/// Serve `trace` with the NanoFlow engine.  (Thin wrapper over
+/// [`serve_nanoflow_output`].)
+pub fn serve_nanoflow(
+    cfg: &ServingConfig,
+    ccfg: &ChunkedConfig,
+    gt: &GroundTruth,
+    trace: &[Request],
+    seed: u64,
+) -> Vec<RequestRecord> {
+    serve_nanoflow_output(cfg, ccfg, gt, trace, seed).records
 }
 
 #[cfg(test)]
@@ -159,8 +171,8 @@ mod tests {
         // A long prompt still pays the chunk pipeline: TTFT scales with
         // chunk count even under overlap.
         let (cfg, gt) = setup();
-        let long = vec![Request { id: 0, arrival: 0.0, input_len: 12288, output_len: 2 }];
-        let short = vec![Request { id: 0, arrival: 0.0, input_len: 1024, output_len: 2 }];
+        let long = vec![Request { id: 0, arrival: 0.0, input_len: 12288, output_len: 2, ..Default::default() }];
+        let short = vec![Request { id: 0, arrival: 0.0, input_len: 1024, output_len: 2, ..Default::default() }];
         let rl = serve_nanoflow(&cfg, &ChunkedConfig::sglang_1024(), &gt, &long, 3);
         let rs = serve_nanoflow(&cfg, &ChunkedConfig::sglang_1024(), &gt, &short, 3);
         assert!(rl[0].ttft() > 8.0 * rs[0].ttft());

@@ -2,10 +2,10 @@
 //! 13 and 14 — plus the policy factory the cluster layer uses to scale
 //! any of them across replicas.
 
-use crate::baselines::chunked::{serve_chunked, ChunkedConfig, ChunkedPolicy};
-use crate::baselines::nanoflow::{serve_nanoflow, NanoflowPolicy};
+use crate::baselines::chunked::{serve_chunked_output, ChunkedConfig, ChunkedPolicy};
+use crate::baselines::nanoflow::{serve_nanoflow_output, NanoflowPolicy};
 use crate::config::ServingConfig;
-use crate::engine::core::ServingPolicy;
+use crate::engine::core::{EngineOutput, ServingPolicy};
 use crate::engine::sim_engine::{serve_bullet, BulletPolicy, Features, SimEngineOptions};
 use crate::gpu::roofline::GroundTruth;
 use crate::metrics::RequestRecord;
@@ -107,7 +107,47 @@ impl System {
     }
 }
 
-/// Run a system over a trace and return per-request records.
+/// Run a system over a trace and return the full [`EngineOutput`]
+/// (records, prefix-cache counters, utilization) — every system runs on
+/// the shared core, so every system reports the same counters.
+pub fn run_system_output(
+    system: System,
+    cfg: &ServingConfig,
+    perf: &PerfModel,
+    gt: &GroundTruth,
+    trace: &[Request],
+    seed: u64,
+) -> EngineOutput {
+    let bullet_opts = |features: Features| SimEngineOptions {
+        seed,
+        features,
+        ..Default::default()
+    };
+    match system {
+        System::Bullet => serve_bullet(cfg, perf, gt, trace, &bullet_opts(Features::default())),
+        System::Naive => serve_bullet(cfg, perf, gt, trace, &bullet_opts(Features::naive())),
+        System::WithPartition => {
+            serve_bullet(cfg, perf, gt, trace, &bullet_opts(Features::partition_only()))
+        }
+        System::WithScheduler => {
+            serve_bullet(cfg, perf, gt, trace, &bullet_opts(Features::scheduler_only()))
+        }
+        System::FixedSm(n) => serve_bullet(cfg, perf, gt, trace, &bullet_opts(Features::fixed(n))),
+        System::Vllm1024 => serve_chunked_output(cfg, &ChunkedConfig::vllm_1024(), gt, trace, seed),
+        System::Sglang1024 => {
+            serve_chunked_output(cfg, &ChunkedConfig::sglang_1024(), gt, trace, seed)
+        }
+        System::Sglang2048 => {
+            serve_chunked_output(cfg, &ChunkedConfig::sglang_2048(), gt, trace, seed)
+        }
+        System::Nanoflow => {
+            serve_nanoflow_output(cfg, &ChunkedConfig::sglang_1024(), gt, trace, seed)
+        }
+    }
+}
+
+/// Run a system over a trace and return per-request records.  (Thin
+/// wrapper over [`run_system_output`].)
 pub fn run_system(
     system: System,
     cfg: &ServingConfig,
@@ -116,32 +156,7 @@ pub fn run_system(
     trace: &[Request],
     seed: u64,
 ) -> Vec<RequestRecord> {
-    let bullet_opts = |features: Features| SimEngineOptions {
-        seed,
-        features,
-        ..Default::default()
-    };
-    match system {
-        System::Bullet => {
-            serve_bullet(cfg, perf, gt, trace, &bullet_opts(Features::default())).records
-        }
-        System::Naive => {
-            serve_bullet(cfg, perf, gt, trace, &bullet_opts(Features::naive())).records
-        }
-        System::WithPartition => {
-            serve_bullet(cfg, perf, gt, trace, &bullet_opts(Features::partition_only())).records
-        }
-        System::WithScheduler => {
-            serve_bullet(cfg, perf, gt, trace, &bullet_opts(Features::scheduler_only())).records
-        }
-        System::FixedSm(n) => {
-            serve_bullet(cfg, perf, gt, trace, &bullet_opts(Features::fixed(n))).records
-        }
-        System::Vllm1024 => serve_chunked(cfg, &ChunkedConfig::vllm_1024(), gt, trace, seed),
-        System::Sglang1024 => serve_chunked(cfg, &ChunkedConfig::sglang_1024(), gt, trace, seed),
-        System::Sglang2048 => serve_chunked(cfg, &ChunkedConfig::sglang_2048(), gt, trace, seed),
-        System::Nanoflow => serve_nanoflow(cfg, &ChunkedConfig::sglang_1024(), gt, trace, seed),
-    }
+    run_system_output(system, cfg, perf, gt, trace, seed).records
 }
 
 #[cfg(test)]

@@ -26,6 +26,7 @@ use crate::baselines::System;
 use crate::config::ServingConfig;
 use crate::engine::core::{CoreOptions, EngineCore, EngineOutput, ServingPolicy};
 use crate::gpu::roofline::GroundTruth;
+use crate::kvcache::prefix::PrefixStats;
 use crate::metrics::{merge_records, RequestRecord};
 use crate::perf::PerfModel;
 use crate::workload::Request;
@@ -153,6 +154,17 @@ impl ClusterOutput {
         }
         counts
     }
+
+    /// Cluster-wide prefix-cache counters (summed over replicas; all
+    /// zero with the cache off).  Replica caches are private, so the
+    /// aggregate hit rate is what the routing policy actually earned.
+    pub fn prefix_stats(&self) -> PrefixStats {
+        let mut total = PrefixStats::default();
+        for o in &self.per_replica {
+            total.merge(&o.prefix);
+        }
+        total
+    }
 }
 
 /// Serve `trace` on `cluster.replicas` instances of `system` behind the
@@ -277,6 +289,47 @@ mod tests {
             "1 replica {}s vs 4 replicas {}s",
             one.virtual_duration,
             four.virtual_duration
+        );
+    }
+
+    #[test]
+    fn prefix_affinity_pins_sessions_and_earns_hits() {
+        use crate::workload::{generate_sessions, SessionProfile};
+        let cfg = ServingConfig { prefix_cache: true, ..ServingConfig::default() };
+        let perf = PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b());
+        let gt = GroundTruth::new(GpuSpec::a100());
+        let trace = generate_sessions(&SessionProfile::conversational(), 1.5, 12, 19);
+        let run = |router| {
+            serve_cluster(
+                System::Bullet,
+                &cfg,
+                &perf,
+                &gt,
+                &trace,
+                4,
+                &ClusterConfig { replicas: 3, router },
+            )
+        };
+        let aff = run(RouterPolicy::PrefixAffinity);
+        assert_eq!(aff.records.len(), trace.len());
+        // stickiness: every turn of a session lands on one replica
+        let mut session_replica = std::collections::BTreeMap::new();
+        for (r, &(id, k)) in trace.iter().zip(&aff.assignments) {
+            assert_eq!(r.id, id);
+            let sid = r.session_id.unwrap();
+            assert_eq!(*session_replica.entry(sid).or_insert(k), k, "session {sid} split");
+        }
+        // and that locality converts later turns into prefix hits
+        let s = aff.prefix_stats();
+        assert!(s.hits > 0, "affinity routing must earn hits: {s:?}");
+        // round-robin scatters turns across private caches — it cannot
+        // beat stickiness on hit rate
+        let rr = run(RouterPolicy::RoundRobin);
+        assert!(
+            s.hit_rate() >= rr.prefix_stats().hit_rate(),
+            "affinity {:.2} < round-robin {:.2}",
+            s.hit_rate(),
+            rr.prefix_stats().hit_rate()
         );
     }
 

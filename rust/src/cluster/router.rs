@@ -1,6 +1,6 @@
 //! Request routing across replicas.
 //!
-//! Three policies, in increasing awareness:
+//! Four policies, in increasing awareness:
 //! - **round-robin** — stateless rotation, the classic front-door;
 //! - **least-kv** — route to the replica with the fewest outstanding KV
 //!   tokens (reserved pool + queued reservations), a memory-pressure
@@ -8,12 +8,19 @@
 //! - **slo-slack** — route to the replica whose estimated TTFT for this
 //!   request leaves the most SLO slack, using the §3.2 performance
 //!   estimator over the replica's prefill backlog (a compute-pressure
-//!   signal that tracks prefill-heavy load).
+//!   signal that tracks prefill-heavy load);
+//! - **prefix-affinity** — pin each conversation to one replica so its
+//!   later turns land where the session's KV prefix is already cached
+//!   (a session's first turn, and sessionless traffic, falls back to
+//!   least-kv).  Replica prefix caches are private, so spreading a
+//!   session across replicas forfeits every hit after the first turn —
+//!   stickiness IS the locality policy.
 
 use crate::cluster::Replica;
 use crate::config::SloSpec;
 use crate::perf::PerfModel;
 use crate::workload::Request;
+use std::collections::BTreeMap;
 
 /// Cluster routing policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -21,6 +28,7 @@ pub enum RouterPolicy {
     RoundRobin,
     LeastKv,
     SloSlack,
+    PrefixAffinity,
 }
 
 impl RouterPolicy {
@@ -29,6 +37,7 @@ impl RouterPolicy {
             "round-robin" => Some(RouterPolicy::RoundRobin),
             "least-kv" => Some(RouterPolicy::LeastKv),
             "slo-slack" => Some(RouterPolicy::SloSlack),
+            "prefix-affinity" => Some(RouterPolicy::PrefixAffinity),
             _ => None,
         }
     }
@@ -38,14 +47,16 @@ impl RouterPolicy {
             RouterPolicy::RoundRobin => "round-robin",
             RouterPolicy::LeastKv => "least-kv",
             RouterPolicy::SloSlack => "slo-slack",
+            RouterPolicy::PrefixAffinity => "prefix-affinity",
         }
     }
 
-    pub fn all() -> [RouterPolicy; 3] {
+    pub fn all() -> [RouterPolicy; 4] {
         [
             RouterPolicy::RoundRobin,
             RouterPolicy::LeastKv,
             RouterPolicy::SloSlack,
+            RouterPolicy::PrefixAffinity,
         ]
     }
 }
@@ -55,15 +66,26 @@ impl RouterPolicy {
 pub struct Dispatcher {
     policy: RouterPolicy,
     rr_next: usize,
+    /// prefix-affinity stickiness: session id → replica.
+    session_map: BTreeMap<u64, usize>,
 }
 
 impl Dispatcher {
     pub fn new(policy: RouterPolicy) -> Dispatcher {
-        Dispatcher { policy, rr_next: 0 }
+        Dispatcher {
+            policy,
+            rr_next: 0,
+            session_map: BTreeMap::new(),
+        }
     }
 
     pub fn policy(&self) -> RouterPolicy {
         self.policy
+    }
+
+    /// Sessions currently pinned (prefix-affinity only).
+    pub fn pinned_sessions(&self) -> usize {
+        self.session_map.len()
     }
 
     /// Choose the replica for `req`.  Replica clocks have been advanced
@@ -91,6 +113,19 @@ impl Dispatcher {
                     let est = r.estimated_ttft(req, perf);
                     -(slo.ttft_budget(req.input_len) - est)
                 })
+            }
+            RouterPolicy::PrefixAffinity => {
+                let Some(sid) = req.session_id else {
+                    // sessionless traffic: no prefix to chase
+                    return argmin_by(replicas, |r| r.outstanding_kv_tokens() as f64);
+                };
+                if let Some(&k) = self.session_map.get(&sid) {
+                    return k;
+                }
+                // first turn: balance by memory pressure, then stick
+                let k = argmin_by(replicas, |r| r.outstanding_kv_tokens() as f64);
+                self.session_map.insert(sid, k);
+                k
             }
         }
     }

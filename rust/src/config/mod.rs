@@ -209,6 +209,11 @@ pub struct ServingConfig {
     pub slo_percentile: f64,
     /// Allow intentional SM overlap between phases during transitions (§3.4.2).
     pub allow_sm_overlap: bool,
+    /// Shared-prefix KV reuse: match arrivals against the content-hash
+    /// prefix index and prefill only the uncached suffix.  Off by
+    /// default — single-turn workloads carry no content hashes, and off
+    /// keeps every legacy run bit-identical.
+    pub prefix_cache: bool,
 }
 
 impl Default for ServingConfig {
@@ -229,6 +234,7 @@ impl Default for ServingConfig {
             kv_capacity_tokens,
             slo_percentile: 90.0,
             allow_sm_overlap: true,
+            prefix_cache: false,
         }
     }
 }
@@ -272,6 +278,9 @@ impl ServingConfig {
         }
         if let Some(x) = v.get("kv_capacity_tokens").and_then(Value::as_usize) {
             cfg.kv_capacity_tokens = x;
+        }
+        if let Some(x) = v.get("prefix_cache").and_then(Value::as_bool) {
+            cfg.prefix_cache = x;
         }
         cfg
     }
@@ -330,13 +339,14 @@ mod tests {
     fn from_json_overrides() {
         let v = json::parse(
             r#"{"gpu": {"num_sms": 132}, "slo": {"tpot_ms": 99.0},
-                "max_decode_batch": 64}"#,
+                "max_decode_batch": 64, "prefix_cache": true}"#,
         )
         .unwrap();
         let cfg = ServingConfig::from_json(&v);
         assert_eq!(cfg.gpu.num_sms, 132);
         assert_eq!(cfg.slo.tpot_ms, 99.0);
         assert_eq!(cfg.max_decode_batch, 64);
+        assert!(cfg.prefix_cache);
         // untouched default
         assert_eq!(cfg.prefill_layer_group, 1);
     }

@@ -16,6 +16,13 @@
 //!   completions), with idle-time jumps to the next arrival;
 //! - the waiting queue ([`PrefillProgress`]) fed from the trace;
 //! - KV-pool reserve/release bookkeeping at admission and completion;
+//! - the prefix-cache fast path (when `cfg.prefix_cache` is on): at
+//!   admission the request's content-hash chain is matched against the
+//!   [`PrefixIndex`], the hit blocks are adopted into the KV pool, and
+//!   the request is charged only its uncached suffix (`cached_len` /
+//!   `PrefillProgress::done`); at prefill completion the prompt's full
+//!   blocks are published back to the index.  [`EngineCore::kv_room`] is
+//!   the evict-vs-recompute hook policies call under memory pressure;
 //! - prefill→decode migration through `pending_join` (copy-free, the
 //!   shared-pool semantics of §3.5);
 //! - per-token decode advancement and [`RequestRecord`] emission;
@@ -35,7 +42,8 @@ use crate::gpu::kernel::KernelDesc;
 use crate::gpu::roofline::GroundTruth;
 use crate::gpu::simulator::Simulator;
 use crate::gpu::stream::StreamId;
-use crate::kvcache::KvPool;
+use crate::kvcache::prefix::{PrefixIndex, PrefixStats};
+use crate::kvcache::{KvPool, BLOCK_TOKENS};
 use crate::metrics::timeline::{Timeline, TimelineSample};
 use crate::metrics::RequestRecord;
 use crate::resource::ResourceManager;
@@ -43,6 +51,7 @@ use crate::sched::{
     ActiveDecode, DecodeReqState, PrefillBatch, PrefillProgress, PrefillReq, SystemState,
 };
 use crate::workload::Request;
+use std::collections::BTreeMap;
 
 /// The two execution lanes of the serving core.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -63,6 +72,8 @@ pub struct EngineOutput {
     pub total_bytes: f64,
     pub virtual_duration: f64,
     pub peak_kv_blocks: usize,
+    /// Prefix-cache counters (all zero with `cfg.prefix_cache` off).
+    pub prefix: PrefixStats,
 }
 
 /// Run-level counters policies may bump.
@@ -139,6 +150,10 @@ pub struct EngineCore {
     pub sim: Simulator,
     pub rm: ResourceManager,
     pub kv: KvPool,
+    /// Content-addressed prefix cache (`None` ⇔ `cfg.prefix_cache` off).
+    pub prefix: Option<PrefixIndex>,
+    /// Prompt hash chains of admitted-but-unfinished cacheable requests.
+    prefix_meta: BTreeMap<u64, Vec<u64>>,
     /// Admitted-but-not-yet-fully-prefilled requests.
     pub waiting: Vec<PrefillProgress>,
     /// The running decode batch.
@@ -169,8 +184,11 @@ impl EngineCore {
         let mut sim = Simulator::new(gt, opts.seed);
         let rm = ResourceManager::new(&mut sim, &cfg.gpu);
         let kv = KvPool::new(cfg.kv_capacity_tokens);
+        let prefix = cfg.prefix_cache.then(PrefixIndex::new);
         EngineCore {
             kv,
+            prefix,
+            prefix_meta: BTreeMap::new(),
             rm,
             sim,
             waiting: Vec::new(),
@@ -243,18 +261,117 @@ impl EngineCore {
         self.inflight[lane as usize] += n;
     }
 
-    /// Move arrivals whose time has come into the waiting queue.
+    /// Move arrivals whose time has come into the waiting queue.  With
+    /// the prefix cache on, each cacheable arrival is matched against
+    /// the index here (the admission fast path): hit blocks are adopted
+    /// into the KV pool and only the uncached suffix remains to prefill.
     pub fn admit_arrivals(&mut self) {
         let now = self.sim.now();
         while self.next_arrival < self.trace.len() && self.trace[self.next_arrival].arrival <= now {
-            let r = &self.trace[self.next_arrival];
-            self.waiting.push(PrefillProgress::new(PrefillReq {
-                id: r.id,
-                arrival: r.arrival,
-                input_len: r.input_len,
-                output_len: r.output_len,
-            }));
+            let (id, arrival, input_len, output_len) = {
+                let r = &self.trace[self.next_arrival];
+                (r.id, r.arrival, r.input_len, r.output_len)
+            };
+            let mut cached = 0usize;
+            if self.prefix.is_some() && !self.trace[self.next_arrival].block_hashes.is_empty() {
+                // consumed trace entries are never re-read (only
+                // `trace[next_arrival..]` is), so move the hashes out
+                // instead of cloning — they live on in `prefix_meta`
+                // until the prefill completes
+                let hashes = std::mem::take(&mut self.trace[self.next_arrival].block_hashes);
+                let ix = self.prefix.as_mut().unwrap();
+                let blocks = ix.lookup(&hashes, input_len);
+                if !blocks.is_empty() {
+                    cached = blocks.len() * BLOCK_TOKENS;
+                    self.kv.adopt(id, &blocks).expect("prefix adopt at admission");
+                }
+                self.prefix_meta.insert(id, hashes);
+            }
+            let mut p = PrefillProgress::new(PrefillReq {
+                id,
+                arrival,
+                input_len,
+                output_len,
+                cached_len: cached,
+            });
+            p.done = cached;
+            self.waiting.push(p);
             self.next_arrival += 1;
+        }
+    }
+
+    /// Evict-vs-recompute hook for admission-time memory pressure: can
+    /// `tokens` more tokens be reserved for `seq_id`?  On pressure the
+    /// core first EVICTs least-recently-used blocks held only by the
+    /// prefix cache; still short, it drops the adopted prefixes of other
+    /// queued-but-idle requests — those fall back to RECOMPUTE (their
+    /// blocks stay published and become evictable).  Returns whether the
+    /// reservation now fits; `false` leaves the request queued.
+    /// Equivalent to `kv.can_grow` when the cache is off.  Worst case is
+    /// O(waiting · cache log cache) — only reachable in an OOM-pressure
+    /// round, never on the hit/miss fast path.
+    pub fn kv_room(&mut self, seq_id: u64, tokens: usize) -> bool {
+        if self.kv.can_grow(seq_id, tokens) {
+            return true;
+        }
+        if self.prefix.is_none() {
+            return false;
+        }
+        let need = self
+            .kv
+            .blocks_needed(seq_id, tokens)
+            .saturating_sub(self.kv.free_blocks());
+        self.prefix.as_mut().unwrap().evict_lru(&mut self.kv, need);
+        if self.kv.can_grow(seq_id, tokens) {
+            return true;
+        }
+        // Recompute path: un-adopt queued prefixes ONE AT A TIME (never
+        // the requester's own), evicting the unpinned blocks after each,
+        // and stop as soon as the reservation fits — transient pressure
+        // should cost as few queued cache wins as possible.
+        for i in 0..self.waiting.len() {
+            let (wid, cached, reserved) = {
+                let w = &self.waiting[i];
+                (w.req.id, w.req.cached_len, w.prefill_start.is_some())
+            };
+            if wid == seq_id || reserved || cached == 0 {
+                continue;
+            }
+            self.kv.release(wid).expect("drop adopted prefix");
+            self.prefix.as_mut().unwrap().note_dropped_adoption(cached);
+            self.waiting[i].req.cached_len = 0;
+            self.waiting[i].done = 0;
+            let need = self
+                .kv
+                .blocks_needed(seq_id, tokens)
+                .saturating_sub(self.kv.free_blocks());
+            self.prefix.as_mut().unwrap().evict_lru(&mut self.kv, need);
+            if self.kv.can_grow(seq_id, tokens) {
+                return true;
+            }
+        }
+        // every mutation above re-checked and returned on success, so
+        // reaching here means the reservation still cannot fit
+        false
+    }
+
+    /// Publish a finished prefill's full-block prompt KV into the prefix
+    /// index (no-op with the cache off or for unique content).
+    fn index_prompt(&mut self, req: &PrefillReq) {
+        if self.prefix.is_none() {
+            return;
+        }
+        let Some(chain) = self.prefix_meta.remove(&req.id) else {
+            return;
+        };
+        let full_blocks = (req.input_len / BLOCK_TOKENS).min(chain.len());
+        let to_insert = self.kv.get(req.id).and_then(|s| {
+            let nb = full_blocks.min(s.blocks.len());
+            (nb > 0).then(|| (chain[..nb].to_vec(), s.blocks[..nb].to_vec()))
+        });
+        if let Some((hashes, blocks)) = to_insert {
+            let ix = self.prefix.as_mut().unwrap();
+            ix.insert(&mut self.kv, &hashes, &blocks);
         }
     }
 
@@ -262,6 +379,7 @@ impl EngineCore {
     /// single-token requests finish outright (record + KV release), the
     /// rest queue for decode-boundary migration.
     pub fn finish_prefill(&mut self, req: PrefillReq, prefill_start: f64) {
+        self.index_prompt(&req);
         let now = self.sim.now();
         if req.output_len <= 1 {
             self.records.push(RequestRecord {
@@ -374,11 +492,12 @@ impl EngineCore {
     /// the reservations queued and injected-but-unadmitted requests will
     /// make (cluster routing signal).
     pub fn outstanding_kv_tokens(&self) -> usize {
+        // adopted prefix tokens already count in `kv.cached_tokens()`
         let queued: usize = self
             .waiting
             .iter()
             .filter(|w| w.prefill_start.is_none())
-            .map(|w| w.req.input_len + w.req.output_len)
+            .map(|w| w.req.input_len + w.req.output_len - w.req.cached_len)
             .sum();
         let injected: usize = self
             .pending_injected()
@@ -500,7 +619,9 @@ impl EngineCore {
     /// Tear down into the run-level output.
     pub fn into_output(self) -> EngineOutput {
         let util = self.sim.total_util();
+        let prefix = self.prefix.as_ref().map(|ix| *ix.stats()).unwrap_or_default();
         EngineOutput {
+            prefix,
             records: self.records,
             timeline: self.timeline,
             reconfigs: self.rm.reconfig_count(),
@@ -570,6 +691,7 @@ mod tests {
                 arrival: i as f64 * 0.01,
                 input_len: 64,
                 output_len: 4,
+                ..Default::default()
             })
             .collect();
         let mut core = core_with(trace);
@@ -591,6 +713,7 @@ mod tests {
                 arrival: i as f64 * 0.5,
                 input_len: 64,
                 output_len: 200,
+                ..Default::default()
             })
             .collect();
         let mut core = core_with(trace);
@@ -611,6 +734,7 @@ mod tests {
             arrival: 0.0,
             input_len: 32,
             output_len: 2,
+            ..Default::default()
         }]);
         let mut p = InstantPrefill;
         core.run(&mut p);
@@ -620,6 +744,7 @@ mod tests {
             arrival: core.now() + 1.0,
             input_len: 32,
             output_len: 2,
+            ..Default::default()
         });
         assert!(!core.finished());
         core.run(&mut p);
@@ -631,12 +756,137 @@ mod tests {
         let mut core = core_with(vec![]);
         assert_eq!(core.outstanding_kv_tokens(), 0);
         assert_eq!(core.queued_prefill_tokens(), 0);
-        core.push_request(Request { id: 0, arrival: 1.0, input_len: 100, output_len: 10 });
-        core.push_request(Request { id: 1, arrival: 2.0, input_len: 50, output_len: 5 });
+        core.push_request(Request { id: 0, arrival: 1.0, input_len: 100, output_len: 10, ..Default::default() });
+        core.push_request(Request { id: 1, arrival: 2.0, input_len: 50, output_len: 5, ..Default::default() });
         // clock still at 0, nothing admitted — but a state-aware
         // dispatcher must see its own recent routing decisions.
         assert_eq!(core.outstanding_kv_tokens(), 165);
         assert_eq!(core.queued_prefill_tokens(), 150);
+    }
+
+    use crate::testing::content_chain as chain;
+
+    #[test]
+    fn admission_adopts_cached_prefix_and_charges_suffix() {
+        let cfg = ServingConfig { prefix_cache: true, ..ServingConfig::default() };
+        let gt = GroundTruth::noiseless(GpuSpec::a100());
+        // two requests with identical 130-token prompts (8 full blocks)
+        let hashes = chain(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let trace: Vec<Request> = (0..2)
+            .map(|i| Request {
+                id: i,
+                arrival: i as f64,
+                input_len: 130,
+                output_len: 1,
+                block_hashes: hashes.clone(),
+                session_id: Some(77),
+            })
+            .collect();
+        let mut core = EngineCore::new(cfg, gt, trace, &CoreOptions::default());
+        core.admit_arrivals();
+        assert_eq!(core.waiting.len(), 1, "only the t=0 arrival is due");
+        let w0 = core.waiting.remove(0);
+        assert_eq!(w0.req.cached_len, 0, "cold cache: nothing to adopt");
+        // run its prefill by hand and finish — publishes 8 blocks
+        core.kv.grow(w0.req.id, w0.req.input_len + w0.req.output_len).unwrap();
+        core.finish_prefill(w0.req, 0.0);
+        assert_eq!(core.prefix.as_ref().unwrap().len(), 8);
+        assert_eq!(core.kv.used_blocks(), 8, "prompt blocks outlive the request");
+        // the identical second prompt adopts every full block but the
+        // last token's
+        core.sim.run_for(1.5);
+        core.admit_arrivals();
+        let w1 = &core.waiting[0];
+        assert_eq!(w1.req.cached_len, 128);
+        assert_eq!(w1.done, 128);
+        assert_eq!(w1.remaining(), 2);
+        assert!(core.kv.contains(1), "adopted seq must exist");
+        assert_eq!(core.kv.get(1).unwrap().len, 128);
+        let s = core.prefix.as_ref().unwrap().stats();
+        assert_eq!(s.lookups, 2);
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.cached_tokens, 128);
+    }
+
+    #[test]
+    fn kv_room_evicts_cache_only_blocks_under_pressure() {
+        let cfg = ServingConfig {
+            prefix_cache: true,
+            kv_capacity_tokens: 4 * BLOCK_TOKENS,
+            ..ServingConfig::default()
+        };
+        let gt = GroundTruth::noiseless(GpuSpec::a100());
+        let mut core = EngineCore::new(cfg, gt, vec![], &CoreOptions::default());
+        // fill half the pool with cache-only blocks
+        core.kv.grow(100, 2 * BLOCK_TOKENS).unwrap();
+        let blocks = core.kv.get(100).unwrap().blocks.clone();
+        let hashes = chain(&[41, 42]);
+        core.prefix.as_mut().unwrap().insert(&mut core.kv, &hashes, &blocks);
+        core.kv.release(100).unwrap();
+        assert_eq!(core.kv.free_blocks(), 2);
+        // a 3-block reservation requires evicting a cached block
+        assert!(core.kv_room(7, 3 * BLOCK_TOKENS), "eviction must make room");
+        assert!(core.kv.free_blocks() >= 3);
+        assert_eq!(core.prefix.as_ref().unwrap().stats().evictions, 1);
+        // impossible reservations still fail cleanly
+        assert!(!core.kv_room(7, 100 * BLOCK_TOKENS));
+    }
+
+    #[test]
+    fn kv_room_recompute_drops_idle_adoptions_and_accounts_them() {
+        let cfg = ServingConfig {
+            prefix_cache: true,
+            kv_capacity_tokens: 4 * BLOCK_TOKENS,
+            ..ServingConfig::default()
+        };
+        let gt = GroundTruth::noiseless(GpuSpec::a100());
+        let mut core = EngineCore::new(cfg, gt, vec![], &CoreOptions::default());
+        // seed the index with a 2-block chain, then release the seq
+        core.kv.grow(100, 2 * BLOCK_TOKENS).unwrap();
+        let blocks = core.kv.get(100).unwrap().blocks.clone();
+        let hashes = chain(&[61, 62]);
+        core.prefix.as_mut().unwrap().insert(&mut core.kv, &hashes, &blocks);
+        core.kv.release(100).unwrap();
+        // admit a request that adopts the cached prefix (pins the blocks)
+        core.push_request(Request {
+            id: 0,
+            arrival: 0.0,
+            input_len: 2 * BLOCK_TOKENS + 8,
+            output_len: 4,
+            block_hashes: hashes,
+            session_id: None,
+        });
+        core.admit_arrivals();
+        assert_eq!(core.waiting[0].req.cached_len, 2 * BLOCK_TOKENS);
+        // a 4-block reservation cannot fit while the adoption pins the
+        // cached blocks (refcount 2 ⇒ unevictable): the recompute path
+        // must drop the idle adoption, unpin, and evict
+        assert!(core.kv_room(9, 4 * BLOCK_TOKENS));
+        assert_eq!(core.waiting[0].req.cached_len, 0, "adoption revoked");
+        assert_eq!(core.waiting[0].done, 0, "request falls back to a full prefill");
+        assert!(!core.kv.contains(0));
+        let s = *core.prefix.as_ref().unwrap().stats();
+        assert_eq!(s.dropped_adoptions, 1);
+        assert_eq!(s.dropped_tokens, 2 * BLOCK_TOKENS as u64);
+        assert_eq!(s.tokens_saved(), 0, "revoked tokens are not savings");
+    }
+
+    #[test]
+    fn prefix_cache_off_leaves_admission_untouched() {
+        let gt = GroundTruth::noiseless(GpuSpec::a100());
+        let trace = vec![Request {
+            id: 0,
+            arrival: 0.0,
+            input_len: 130,
+            output_len: 1,
+            block_hashes: chain(&[1, 2, 3, 4, 5, 6, 7, 8]),
+            session_id: Some(1),
+        }];
+        let mut core = core_with(trace);
+        core.admit_arrivals();
+        assert!(core.prefix.is_none());
+        assert_eq!(core.waiting[0].req.cached_len, 0);
+        assert_eq!(core.waiting[0].done, 0);
     }
 
     #[test]
@@ -646,6 +896,7 @@ mod tests {
             arrival: 0.0,
             input_len: 128,
             output_len: 1,
+            ..Default::default()
         }]);
         core.run(&mut InstantPrefill);
         let out = core.into_output();

@@ -222,26 +222,30 @@ impl BulletPolicy {
             let mut i = 0;
             while i < core.waiting.len() {
                 let r = core.waiting[i].req.clone();
-                let reserve = r.input_len + r.output_len;
+                // charge only the uncached suffix: prefix-cached tokens
+                // are already resident (adopted at admission)
+                let suffix = r.input_len - r.cached_len;
+                let reserve = r.input_len + r.output_len - r.cached_len;
                 // TTFT-first admission: a prompt runs alone unless it
                 // and its batch-mates all fit under the small-prompt
                 // threshold (batching only to amortize launches).
                 let fits_policy = batch_reqs.is_empty()
-                    || tokens + r.input_len <= core.cfg.prefill_batch_tokens;
+                    || tokens + suffix <= core.cfg.prefill_batch_tokens;
                 if fits_policy
-                    && tokens + r.input_len <= core.cfg.max_prefill_tokens
-                    && core.kv.can_grow(r.id, reserve)
+                    && tokens + suffix <= core.cfg.max_prefill_tokens
+                    && core.kv_room(r.id, reserve)
                 {
                     core.kv.grow(r.id, reserve).expect("kv reserve");
-                    tokens += r.input_len;
+                    tokens += suffix;
                     core.waiting.remove(i);
                     batch_reqs.push(r);
                 } else if batch_reqs.is_empty()
                     && core.decode.is_empty()
                     && core.pending_join.is_empty()
                 {
-                    // nothing running that could free memory: the
-                    // request can never fit — fail it loudly.
+                    // nothing running that could free memory (and
+                    // `kv_room` already evicted every reclaimable cached
+                    // block): the request can never fit — fail loudly.
                     panic!(
                         "request {} needs {} KV tokens but pool holds {}",
                         r.id,
@@ -262,14 +266,17 @@ impl BulletPolicy {
             let d = self.decide(core);
             self.apply(&d, core);
             let b = self.active_prefill.as_ref().unwrap();
-            let (n_tokens, layers_done) = (b.n_tokens, b.layers_done);
+            let (n_tokens, layers_done, ctx_cached) = (b.n_tokens, b.layers_done, b.ctx_cached);
             core.sample_timeline(n_tokens);
             let layers = core
                 .cfg
                 .prefill_layer_group
                 .max(1)
                 .min(total_layers - layers_done);
-            let shape = PhaseShape { tokens: n_tokens, context: 0 };
+            // prefix-cached tokens are not recomputed, but the suffix's
+            // attention reads their KV — the same reload physics as a
+            // chunked continuation
+            let shape = PhaseShape { tokens: n_tokens, context: ctx_cached };
             let mut kernels = Vec::new();
             for _ in 0..layers {
                 kernels.extend(prefill_layer_kernels(&core.cfg.model, shape));
@@ -475,7 +482,7 @@ mod tests {
     #[test]
     fn single_token_outputs_finish_at_prefill() {
         let (cfg, perf, gt) = quick_setup();
-        let trace = vec![Request { id: 0, arrival: 0.0, input_len: 512, output_len: 1 }];
+        let trace = vec![Request { id: 0, arrival: 0.0, input_len: 512, output_len: 1, ..Default::default() }];
         let out = serve_bullet(&cfg, &perf, &gt, &trace, &SimEngineOptions::default());
         assert_eq!(out.records.len(), 1);
         assert_eq!(out.records[0].first_token_time, out.records[0].finish_time);

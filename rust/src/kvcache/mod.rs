@@ -1,4 +1,5 @@
-//! Paged KV-cache manager (PagedAttention-style, §3.5.2).
+//! Paged KV-cache manager (PagedAttention-style, §3.5.2) with
+//! refcounted block sharing.
 //!
 //! A single pool of fixed-size token blocks is shared by the prefill and
 //! decode engines — the simulator analog of the paper's CUDA-IPC-shared
@@ -6,6 +7,24 @@
 //! migration to decode is copy-free (the block table handle moves, the
 //! data stays).  The live PJRT runtime uses the same manager with an
 //! actual `Vec<f32>` backing store per block (see `runtime::executor`).
+//!
+//! Ownership model: every physical block carries a reference count, so a
+//! block may back several sequences at once.  Three ways to share:
+//!
+//! - [`KvPool::fork`] clones a whole sequence copy-on-write: both
+//!   sequences reference the same blocks, and the first `grow` that
+//!   would write into a shared, partially-filled tail block copies it
+//!   first (the CoW rule of vLLM's parallel sampling);
+//! - [`KvPool::adopt`] starts a new sequence on an existing run of full
+//!   blocks — the prefix-cache hit path ([`prefix::PrefixIndex`]);
+//! - [`KvPool::incref`] / [`KvPool::decref`] let an external owner (the
+//!   prefix index) pin blocks past the owning sequence's release.
+//!
+//! A block returns to the free list only when its last reference drops.
+//! `used_blocks() + free_blocks() == capacity_blocks()` holds at every
+//! step (asserted by `tests/properties.rs`).
+
+pub mod prefix;
 
 use std::collections::BTreeMap;
 
@@ -19,6 +38,8 @@ pub enum KvError {
     OutOfMemory { requested_blocks: usize, free_blocks: usize },
     /// Unknown sequence handle.
     UnknownSeq(u64),
+    /// Target sequence of a `fork`/`adopt` already exists.
+    SeqExists(u64),
 }
 
 impl std::fmt::Display for KvError {
@@ -29,6 +50,7 @@ impl std::fmt::Display for KvError {
                 free_blocks,
             } => write!(f, "KV OOM: need {requested_blocks} blocks, {free_blocks} free"),
             KvError::UnknownSeq(id) => write!(f, "unknown KV sequence {id}"),
+            KvError::SeqExists(id) => write!(f, "KV sequence {id} already exists"),
         }
     }
 }
@@ -60,6 +82,8 @@ impl SeqCache {
 pub struct KvPool {
     capacity_blocks: usize,
     free: Vec<usize>,
+    /// Per-block reference count (0 ⇔ on the free list).
+    refs: Vec<u32>,
     seqs: BTreeMap<u64, SeqCache>,
     /// High-water mark of allocated blocks (for reporting).
     peak_used: usize,
@@ -72,6 +96,7 @@ impl KvPool {
         KvPool {
             capacity_blocks: blocks,
             free: (0..blocks).rev().collect(),
+            refs: vec![0; blocks],
             seqs: BTreeMap::new(),
             peak_used: 0,
         }
@@ -81,10 +106,19 @@ impl KvPool {
         self.capacity_blocks * BLOCK_TOKENS
     }
 
+    pub fn capacity_blocks(&self) -> usize {
+        self.capacity_blocks
+    }
+
     pub fn free_tokens(&self) -> usize {
         self.free.len() * BLOCK_TOKENS
     }
 
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Distinct physical blocks in use (shared blocks count once).
     pub fn used_blocks(&self) -> usize {
         self.capacity_blocks - self.free.len()
     }
@@ -93,7 +127,14 @@ impl KvPool {
         self.peak_used
     }
 
-    /// Tokens cached across all live sequences.
+    /// References currently held on a physical block (0 ⇔ free).
+    pub fn refcount(&self, block: usize) -> u32 {
+        self.refs[block]
+    }
+
+    /// Tokens cached across all live sequences (logical commitment:
+    /// shared blocks count once per holder — the routing signal, not the
+    /// physical footprint).
     pub fn cached_tokens(&self) -> usize {
         self.seqs.values().map(|s| s.len).sum()
     }
@@ -110,45 +151,147 @@ impl KvPool {
         self.seqs.get(&seq_id)
     }
 
-    /// Can `tokens` more tokens be stored for (possibly new) `seq_id`?
-    pub fn can_grow(&self, seq_id: u64, tokens: usize) -> bool {
-        let cur = self.seqs.get(&seq_id);
-        let cur_len = cur.map(|s| s.len).unwrap_or(0);
-        let cur_blocks = cur.map(|s| s.blocks.len()).unwrap_or(0);
-        let need_blocks = (cur_len + tokens).div_ceil(BLOCK_TOKENS) - cur_blocks;
-        need_blocks <= self.free.len()
+    /// Would appending `tokens` tokens to (possibly new) `seq_id` write
+    /// into a shared, partially-filled tail block?  That write must copy
+    /// the block first (copy-on-write).
+    fn needs_cow(&self, seq_id: u64, tokens: usize) -> bool {
+        if tokens == 0 {
+            return false;
+        }
+        match self.seqs.get(&seq_id) {
+            Some(s) => {
+                s.len % BLOCK_TOKENS != 0
+                    && s.blocks.last().is_some_and(|&b| self.refs[b] > 1)
+            }
+            None => false,
+        }
     }
 
-    /// Allocate (or extend) a sequence by `tokens` tokens.
-    pub fn grow(&mut self, seq_id: u64, tokens: usize) -> Result<(), KvError> {
+    /// Fresh blocks a `grow(seq_id, tokens)` would allocate (including a
+    /// copy-on-write replacement of a shared tail block).
+    pub fn blocks_needed(&self, seq_id: u64, tokens: usize) -> usize {
         let (cur_len, cur_blocks) = match self.seqs.get(&seq_id) {
             Some(s) => (s.len, s.blocks.len()),
             None => (0, 0),
         };
-        let need_blocks = (cur_len + tokens).div_ceil(BLOCK_TOKENS) - cur_blocks;
-        if need_blocks > self.free.len() {
+        (cur_len + tokens).div_ceil(BLOCK_TOKENS) - cur_blocks
+            + usize::from(self.needs_cow(seq_id, tokens))
+    }
+
+    /// Can `tokens` more tokens be stored for (possibly new) `seq_id`?
+    pub fn can_grow(&self, seq_id: u64, tokens: usize) -> bool {
+        self.blocks_needed(seq_id, tokens) <= self.free.len()
+    }
+
+    /// Allocate (or extend) a sequence by `tokens` tokens, copying a
+    /// shared tail block first when necessary (CoW).
+    pub fn grow(&mut self, seq_id: u64, tokens: usize) -> Result<(), KvError> {
+        let need = self.blocks_needed(seq_id, tokens);
+        if need > self.free.len() {
             return Err(KvError::OutOfMemory {
-                requested_blocks: need_blocks,
+                requested_blocks: need,
                 free_blocks: self.free.len(),
             });
+        }
+        let cow = self.needs_cow(seq_id, tokens);
+        let mut fresh = Vec::with_capacity(need);
+        for _ in 0..need {
+            let b = self.free.pop().unwrap();
+            self.refs[b] = 1;
+            fresh.push(b);
         }
         let entry = self.seqs.entry(seq_id).or_insert(SeqCache {
             seq_id,
             blocks: Vec::new(),
             len: 0,
         });
-        for _ in 0..need_blocks {
-            entry.blocks.push(self.free.pop().unwrap());
+        let mut copied_out = None;
+        if cow {
+            // replace the shared tail with the first fresh block (which
+            // receives the copy of the partial contents)
+            copied_out = entry.blocks.pop();
         }
+        entry.blocks.extend(fresh);
         entry.len += tokens;
+        if let Some(b) = copied_out {
+            // other holders keep the original
+            debug_assert!(self.refs[b] > 1, "CoW of an exclusive block");
+            self.refs[b] -= 1;
+        }
         self.peak_used = self.peak_used.max(self.capacity_blocks - self.free.len());
         Ok(())
     }
 
-    /// Release a sequence, returning its blocks to the pool.
+    /// Fork `src` into a new sequence `dst` sharing all of `src`'s
+    /// blocks copy-on-write: both sequences keep identical contents, and
+    /// the first grow that would write into the shared partial tail
+    /// block copies it.  No new blocks are allocated here.
+    pub fn fork(&mut self, src: u64, dst: u64) -> Result<(), KvError> {
+        if self.seqs.contains_key(&dst) {
+            return Err(KvError::SeqExists(dst));
+        }
+        let (blocks, len) = match self.seqs.get(&src) {
+            Some(s) => (s.blocks.clone(), s.len),
+            None => return Err(KvError::UnknownSeq(src)),
+        };
+        for &b in &blocks {
+            self.refs[b] += 1;
+        }
+        self.seqs.insert(dst, SeqCache { seq_id: dst, blocks, len });
+        Ok(())
+    }
+
+    /// Start a new sequence on an already-cached run of FULL blocks
+    /// (the prefix-cache hit path): the blocks are shared, and the
+    /// sequence's length starts at `blocks.len() * BLOCK_TOKENS`.
+    pub fn adopt(&mut self, seq_id: u64, blocks: &[usize]) -> Result<(), KvError> {
+        if self.seqs.contains_key(&seq_id) {
+            return Err(KvError::SeqExists(seq_id));
+        }
+        for &b in blocks {
+            self.incref(b);
+        }
+        self.seqs.insert(
+            seq_id,
+            SeqCache {
+                seq_id,
+                blocks: blocks.to_vec(),
+                len: blocks.len() * BLOCK_TOKENS,
+            },
+        );
+        Ok(())
+    }
+
+    /// Add a reference to a live block (external pin, e.g. the prefix
+    /// index caching a finished prefill's blocks).
+    pub fn incref(&mut self, block: usize) {
+        assert!(
+            self.refs[block] > 0,
+            "incref on free KV block {block}"
+        );
+        self.refs[block] += 1;
+    }
+
+    /// Drop a reference; the block returns to the free list when the
+    /// last reference goes.
+    pub fn decref(&mut self, block: usize) {
+        assert!(
+            self.refs[block] > 0,
+            "KV refcount underflow on block {block}"
+        );
+        self.refs[block] -= 1;
+        if self.refs[block] == 0 {
+            self.free.push(block);
+        }
+    }
+
+    /// Release a sequence; its blocks return to the pool when no other
+    /// holder (sibling fork, prefix index) still references them.
     pub fn release(&mut self, seq_id: u64) -> Result<(), KvError> {
         let s = self.seqs.remove(&seq_id).ok_or(KvError::UnknownSeq(seq_id))?;
-        self.free.extend(s.blocks);
+        for b in s.blocks {
+            self.decref(b);
+        }
         Ok(())
     }
 
@@ -266,5 +409,98 @@ mod tests {
         p.grow(2, 30).unwrap();
         assert_eq!(p.cached_tokens(), 40);
         assert_eq!(p.num_seqs(), 2);
+    }
+
+    #[test]
+    fn fork_shares_blocks_without_allocating() {
+        let mut p = KvPool::new(16 * 8);
+        p.grow(1, 40).unwrap(); // 3 blocks
+        assert_eq!(p.used_blocks(), 3);
+        p.fork(1, 2).unwrap();
+        assert_eq!(p.used_blocks(), 3, "fork must not allocate");
+        assert_eq!(p.get(2).unwrap().blocks, p.get(1).unwrap().blocks);
+        assert_eq!(p.get(2).unwrap().len, 40);
+        for &b in &p.get(1).unwrap().blocks.clone() {
+            assert_eq!(p.refcount(b), 2);
+        }
+        // releasing one sequence keeps the blocks alive for the other
+        p.release(1).unwrap();
+        assert_eq!(p.used_blocks(), 3);
+        p.release(2).unwrap();
+        assert_eq!(p.used_blocks(), 0);
+    }
+
+    #[test]
+    fn grow_after_fork_copies_shared_tail() {
+        let mut p = KvPool::new(16 * 8);
+        p.grow(1, 20).unwrap(); // blocks [b0, b1], b1 holds 4 tokens
+        p.fork(1, 2).unwrap();
+        let shared_tail = *p.get(1).unwrap().blocks.last().unwrap();
+        // growing the fork writes into the partial tail → CoW
+        p.grow(2, 4).unwrap();
+        let fork_tail = *p.get(2).unwrap().blocks.last().unwrap();
+        assert_ne!(fork_tail, shared_tail, "shared tail must be copied");
+        assert_eq!(p.get(2).unwrap().len, 24);
+        // parent untouched, still sharing b0 with the fork
+        assert_eq!(*p.get(1).unwrap().blocks.last().unwrap(), shared_tail);
+        assert_eq!(p.refcount(shared_tail), 1);
+        assert_eq!(p.refcount(p.get(1).unwrap().blocks[0]), 2);
+        assert_eq!(p.used_blocks(), 3);
+    }
+
+    #[test]
+    fn grow_past_full_shared_tail_needs_no_cow() {
+        let mut p = KvPool::new(16 * 8);
+        p.grow(1, 32).unwrap(); // two FULL blocks
+        p.fork(1, 2).unwrap();
+        let before = p.get(2).unwrap().blocks.clone();
+        p.grow(2, 8).unwrap(); // appends a fresh block, no copy
+        let after = &p.get(2).unwrap().blocks;
+        assert_eq!(&after[..2], &before[..]);
+        assert_eq!(after.len(), 3);
+        assert_eq!(p.used_blocks(), 3);
+    }
+
+    #[test]
+    fn adopt_shares_cached_prefix() {
+        let mut p = KvPool::new(16 * 8);
+        p.grow(1, 48).unwrap(); // 3 full blocks
+        let prefix = p.get(1).unwrap().blocks[..2].to_vec();
+        p.adopt(2, &prefix).unwrap();
+        assert_eq!(p.get(2).unwrap().len, 32);
+        assert_eq!(p.used_blocks(), 3);
+        // extend the adopter past the shared prefix
+        p.grow(2, 20).unwrap();
+        assert_eq!(p.get(2).unwrap().len, 52);
+        assert_eq!(p.used_blocks(), 5);
+        // the shared prefix survives the parent's release
+        p.release(1).unwrap();
+        assert_eq!(p.refcount(prefix[0]), 1);
+        p.release(2).unwrap();
+        assert_eq!(p.used_blocks(), 0);
+    }
+
+    #[test]
+    fn fork_and_adopt_reject_existing_target() {
+        let mut p = KvPool::new(16 * 8);
+        p.grow(1, 16).unwrap();
+        p.grow(2, 16).unwrap();
+        assert_eq!(p.fork(1, 2), Err(KvError::SeqExists(2)));
+        assert_eq!(p.adopt(2, &[]), Err(KvError::SeqExists(2)));
+        assert_eq!(p.fork(9, 3), Err(KvError::UnknownSeq(9)));
+    }
+
+    #[test]
+    fn accounting_identity_holds_under_sharing() {
+        let mut p = KvPool::new(16 * 10);
+        p.grow(1, 50).unwrap();
+        p.fork(1, 2).unwrap();
+        p.grow(2, 30).unwrap(); // CoW + growth
+        p.grow(1, 2).unwrap(); // parent CoW? tail now exclusive again
+        assert_eq!(p.used_blocks() + p.free_blocks(), p.capacity_blocks());
+        p.release(1).unwrap();
+        p.release(2).unwrap();
+        assert_eq!(p.used_blocks(), 0);
+        assert_eq!(p.free_blocks(), p.capacity_blocks());
     }
 }

@@ -1,0 +1,365 @@
+//! Content-addressed prefix cache over the paged KV pool.
+//!
+//! Requests carry a *chained* per-block content-hash of their prompt
+//! (`workload::Request::block_hashes`): entry `i` hashes blocks `0..=i`,
+//! so two prompts share a chain prefix exactly as far as their token
+//! contents agree, and a single map probe per block implements
+//! block-granularity longest-prefix match — the admission fast path.
+//!
+//! Lifecycle:
+//! - **lookup** (admission): walk the chain until the first miss; the
+//!   caller adopts the matched blocks via [`crate::kvcache::KvPool::adopt`]
+//!   and charges only the uncached suffix to the prefill compute model.
+//!   The match is capped below the full prompt — the last token must
+//!   always be recomputed to produce the first output logits.
+//! - **insert** (prefill completion): the prompt's full blocks are
+//!   published under their chain hashes; the index takes a reference
+//!   ([`crate::kvcache::KvPool::incref`]) so the blocks outlive the
+//!   request.
+//! - **evict** (memory pressure): least-recently-used blocks whose only
+//!   remaining reference is the index are dropped until the requested
+//!   room exists — the *evict* side of the evict-vs-recompute hook
+//!   (`EngineCore::kv_room` implements the recompute side).
+//!
+//! Determinism: `BTreeMap` storage, a logical LRU clock, and
+//! `(last_used, hash)`-ordered eviction make every operation a pure
+//! function of the call sequence.
+
+use crate::kvcache::{KvPool, BLOCK_TOKENS};
+use std::collections::BTreeMap;
+
+/// Run-level prefix-cache counters (reported in `EngineOutput`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PrefixStats {
+    /// Lookups for cacheable (hash-carrying) requests.
+    pub lookups: u64,
+    /// Lookups that matched at least one block.
+    pub hits: u64,
+    /// Total blocks served from cache.
+    pub hit_blocks: u64,
+    /// Prefill tokens skipped via cached prefixes (block granularity).
+    pub cached_tokens: u64,
+    /// Prompt tokens across all looked-up requests (ratio denominator).
+    pub prompt_tokens: u64,
+    /// Blocks newly published to the index.
+    pub insertions: u64,
+    /// Blocks dropped under memory pressure.
+    pub evictions: u64,
+    /// Adoptions revoked by the recompute path (`EngineCore::kv_room`):
+    /// the hit was counted, but the tokens were prefilled after all.
+    pub dropped_adoptions: u64,
+    /// Cached tokens un-adopted by the recompute path.
+    pub dropped_tokens: u64,
+}
+
+impl PrefixStats {
+    /// Fraction of cacheable requests that hit at least one block.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups as f64
+        }
+    }
+
+    /// Fraction of looked-up prompt tokens served from cache.
+    pub fn cached_token_ratio(&self) -> f64 {
+        if self.prompt_tokens == 0 {
+            0.0
+        } else {
+            self.cached_tokens as f64 / self.prompt_tokens as f64
+        }
+    }
+
+    /// Prefill tokens actually skipped: cached at admission MINUS the
+    /// adoptions the recompute path revoked under memory pressure.
+    pub fn tokens_saved(&self) -> u64 {
+        self.cached_tokens.saturating_sub(self.dropped_tokens)
+    }
+
+    /// Field-wise accumulate (cluster-level aggregation).
+    pub fn merge(&mut self, o: &PrefixStats) {
+        self.lookups += o.lookups;
+        self.hits += o.hits;
+        self.hit_blocks += o.hit_blocks;
+        self.cached_tokens += o.cached_tokens;
+        self.prompt_tokens += o.prompt_tokens;
+        self.insertions += o.insertions;
+        self.evictions += o.evictions;
+        self.dropped_adoptions += o.dropped_adoptions;
+        self.dropped_tokens += o.dropped_tokens;
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct CachedBlock {
+    block: usize,
+    last_used: u64,
+    /// Position in its content chain (content-determined, so identical
+    /// across re-inserts).  Eviction frees deep (leaf) blocks first: a
+    /// chain is only reachable up to its first gap, so evicting a head
+    /// block would strand every cached block behind it.
+    depth: u32,
+}
+
+/// The content-hash prefix index (see module docs).
+#[derive(Debug, Default)]
+pub struct PrefixIndex {
+    /// chain hash → cached physical block.
+    map: BTreeMap<u64, CachedBlock>,
+    /// Logical LRU clock (bumped per lookup/insert).
+    clock: u64,
+    stats: PrefixStats,
+}
+
+impl PrefixIndex {
+    pub fn new() -> PrefixIndex {
+        PrefixIndex::default()
+    }
+
+    /// Cached blocks currently held.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn stats(&self) -> &PrefixStats {
+        &self.stats
+    }
+
+    /// Physical blocks the index holds references on (test/introspection).
+    pub fn cached_block_ids(&self) -> Vec<usize> {
+        self.map.values().map(|cb| cb.block).collect()
+    }
+
+    /// Longest-prefix match for a prompt of `prompt_tokens` tokens:
+    /// walks `chain` until the first miss and returns the matched
+    /// physical blocks in token order.  Capped so at least one prompt
+    /// token is left to prefill (the logits token).  Touches matched
+    /// blocks for LRU.
+    pub fn lookup(&mut self, chain: &[u64], prompt_tokens: usize) -> Vec<usize> {
+        self.clock += 1;
+        self.stats.lookups += 1;
+        self.stats.prompt_tokens += prompt_tokens as u64;
+        let max_blocks = prompt_tokens.saturating_sub(1) / BLOCK_TOKENS;
+        let mut out = Vec::new();
+        for h in chain.iter().take(max_blocks) {
+            match self.map.get_mut(h) {
+                Some(cb) => {
+                    cb.last_used = self.clock;
+                    out.push(cb.block);
+                }
+                None => break,
+            }
+        }
+        if !out.is_empty() {
+            self.stats.hits += 1;
+            self.stats.hit_blocks += out.len() as u64;
+            self.stats.cached_tokens += (out.len() * BLOCK_TOKENS) as u64;
+        }
+        out
+    }
+
+    /// Publish a finished prefill's full prompt blocks under their chain
+    /// hashes.  Blocks new to the index are pinned with an extra pool
+    /// reference; hashes already present keep their existing copy (its
+    /// recency is refreshed instead).
+    pub fn insert(&mut self, pool: &mut KvPool, chain: &[u64], blocks: &[usize]) {
+        debug_assert_eq!(chain.len(), blocks.len());
+        self.clock += 1;
+        for (depth, (h, &b)) in chain.iter().zip(blocks).enumerate() {
+            match self.map.get_mut(h) {
+                Some(cb) => cb.last_used = self.clock,
+                None => {
+                    pool.incref(b);
+                    self.map.insert(
+                        *h,
+                        CachedBlock { block: b, last_used: self.clock, depth: depth as u32 },
+                    );
+                    self.stats.insertions += 1;
+                }
+            }
+        }
+    }
+
+    /// Record that `EngineCore::kv_room`'s recompute path revoked an
+    /// adoption of `tokens` cached tokens (the hit stands in the
+    /// counters, but the tokens were not actually saved).
+    pub fn note_dropped_adoption(&mut self, tokens: usize) {
+        self.stats.dropped_adoptions += 1;
+        self.stats.dropped_tokens += tokens as u64;
+    }
+
+    /// Evict least-recently-used blocks whose ONLY remaining reference
+    /// is the index, until `need_blocks` have been freed or candidates
+    /// run out.  Returns the number freed.  Blocks also referenced by a
+    /// live sequence are never touched.  Among equally-recent blocks the
+    /// DEEPEST chain positions go first (leaf-first, as radix-tree
+    /// caches do): lookups stop at the first gap, so evicting a head
+    /// block would strand every cached block behind it.
+    pub fn evict_lru(&mut self, pool: &mut KvPool, need_blocks: usize) -> usize {
+        if need_blocks == 0 || self.map.is_empty() {
+            return 0;
+        }
+        let mut candidates: Vec<(u64, std::cmp::Reverse<u32>, u64, usize)> = self
+            .map
+            .iter()
+            .filter(|(_, cb)| pool.refcount(cb.block) == 1)
+            .map(|(h, cb)| (cb.last_used, std::cmp::Reverse(cb.depth), *h, cb.block))
+            .collect();
+        candidates.sort_unstable();
+        let mut freed = 0;
+        for (_, _, h, b) in candidates {
+            if freed >= need_blocks {
+                break;
+            }
+            self.map.remove(&h);
+            pool.decref(b); // last reference → block returns to the pool
+            freed += 1;
+            self.stats.evictions += 1;
+        }
+        freed
+    }
+
+    /// Drop every cached block (test/teardown helper).
+    pub fn clear(&mut self, pool: &mut KvPool) {
+        for (_, cb) in std::mem::take(&mut self.map) {
+            pool.decref(cb.block);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use crate::testing::content_chain as chain;
+
+    /// Grow a seq of `blocks` FULL blocks and publish it.
+    fn seed_entry(pool: &mut KvPool, ix: &mut PrefixIndex, id: u64, contents: &[u64]) -> Vec<usize> {
+        pool.grow(id, contents.len() * BLOCK_TOKENS).unwrap();
+        let blocks = pool.get(id).unwrap().blocks.clone();
+        ix.insert(pool, &chain(contents), &blocks);
+        blocks
+    }
+
+    #[test]
+    fn longest_prefix_match_stops_at_divergence() {
+        let mut pool = KvPool::new(64 * BLOCK_TOKENS);
+        let mut ix = PrefixIndex::new();
+        let blocks = seed_entry(&mut pool, &mut ix, 1, &[10, 11, 12, 13]);
+        // same first two blocks, divergent third
+        let probe = chain(&[10, 11, 99, 13]);
+        let m = ix.lookup(&probe, 1024);
+        assert_eq!(m, blocks[..2].to_vec());
+        // full match when contents agree
+        let m = ix.lookup(&chain(&[10, 11, 12, 13]), 1024);
+        assert_eq!(m, blocks);
+        assert_eq!(ix.stats().hits, 2);
+    }
+
+    #[test]
+    fn lookup_never_caches_the_full_prompt() {
+        let mut pool = KvPool::new(64 * BLOCK_TOKENS);
+        let mut ix = PrefixIndex::new();
+        seed_entry(&mut pool, &mut ix, 1, &[1, 2, 3]);
+        // prompt of exactly 3 blocks: at most 2 may come from cache
+        let m = ix.lookup(&chain(&[1, 2, 3]), 3 * BLOCK_TOKENS);
+        assert_eq!(m.len(), 2);
+        // one extra token → all 3 cached blocks usable
+        let m = ix.lookup(&chain(&[1, 2, 3]), 3 * BLOCK_TOKENS + 1);
+        assert_eq!(m.len(), 3);
+    }
+
+    #[test]
+    fn cached_blocks_survive_release_until_evicted() {
+        let mut pool = KvPool::new(8 * BLOCK_TOKENS);
+        let mut ix = PrefixIndex::new();
+        seed_entry(&mut pool, &mut ix, 1, &[7, 8]);
+        pool.release(1).unwrap();
+        assert_eq!(pool.used_blocks(), 2, "index pins the blocks");
+        let m = ix.lookup(&chain(&[7, 8]), 1024);
+        assert_eq!(m.len(), 2);
+        let freed = ix.evict_lru(&mut pool, 2);
+        assert_eq!(freed, 2);
+        assert_eq!(pool.used_blocks(), 0);
+        assert!(ix.lookup(&chain(&[7, 8]), 1024).is_empty());
+    }
+
+    #[test]
+    fn eviction_is_lru_ordered_and_skips_live_blocks() {
+        let mut pool = KvPool::new(16 * BLOCK_TOKENS);
+        let mut ix = PrefixIndex::new();
+        let old = seed_entry(&mut pool, &mut ix, 1, &[1, 2]);
+        let hot = seed_entry(&mut pool, &mut ix, 2, &[3, 4]);
+        pool.release(1).unwrap();
+        pool.release(2).unwrap();
+        // touch the second entry so the first is LRU
+        ix.lookup(&chain(&[3, 4]), 1024);
+        let freed = ix.evict_lru(&mut pool, 2);
+        assert_eq!(freed, 2);
+        // the cold entry went, the hot one survived
+        assert!(ix.lookup(&chain(&[1, 2]), 1024).is_empty());
+        assert_eq!(ix.lookup(&chain(&[3, 4]), 1024), hot);
+        assert!(old.iter().all(|&b| pool.refcount(b) == 0));
+        // live (sequence-held) blocks are never evicted
+        let live = seed_entry(&mut pool, &mut ix, 3, &[5, 6]);
+        let freed = ix.evict_lru(&mut pool, 100);
+        assert!(freed >= 2, "only unreferenced blocks evictable, freed {freed}");
+        assert_eq!(ix.lookup(&chain(&[5, 6]), 1024), live);
+        assert!(pool.contains(3));
+    }
+
+    #[test]
+    fn eviction_frees_leaf_blocks_before_chain_heads() {
+        let mut pool = KvPool::new(16 * BLOCK_TOKENS);
+        let mut ix = PrefixIndex::new();
+        let blocks = seed_entry(&mut pool, &mut ix, 1, &[1, 2, 3]);
+        pool.release(1).unwrap();
+        // equally-recent blocks: the deepest goes first, so the chain
+        // head survives and still serves a (shorter) hit
+        assert_eq!(ix.evict_lru(&mut pool, 1), 1);
+        let m = ix.lookup(&chain(&[1, 2, 3]), 1024);
+        assert_eq!(m, blocks[..2].to_vec(), "head of the chain must remain reachable");
+    }
+
+    #[test]
+    fn insert_is_idempotent_for_existing_hashes() {
+        let mut pool = KvPool::new(16 * BLOCK_TOKENS);
+        let mut ix = PrefixIndex::new();
+        let first = seed_entry(&mut pool, &mut ix, 1, &[9, 10]);
+        // a second identical prompt publishes nothing new
+        pool.grow(2, 2 * BLOCK_TOKENS).unwrap();
+        let dup_blocks = pool.get(2).unwrap().blocks.clone();
+        ix.insert(&mut pool, &chain(&[9, 10]), &dup_blocks);
+        assert_eq!(ix.len(), 2);
+        assert_eq!(ix.stats().insertions, 2);
+        // the index still serves the FIRST copy
+        assert_eq!(ix.lookup(&chain(&[9, 10]), 1024), first);
+        // and the duplicate's own blocks free normally
+        pool.release(2).unwrap();
+        assert!(dup_blocks.iter().all(|&b| pool.refcount(b) == 0));
+    }
+
+    #[test]
+    fn stats_track_ratio_and_rate() {
+        let mut pool = KvPool::new(16 * BLOCK_TOKENS);
+        let mut ix = PrefixIndex::new();
+        seed_entry(&mut pool, &mut ix, 1, &[1, 2]);
+        ix.lookup(&chain(&[1, 2]), 3 * BLOCK_TOKENS); // hit: 2 blocks of 3
+        ix.lookup(&chain(&[42]), 2 * BLOCK_TOKENS); // miss
+        let s = ix.stats();
+        assert_eq!(s.lookups, 2);
+        assert_eq!(s.hits, 1);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(s.cached_tokens, 2 * BLOCK_TOKENS as u64);
+        assert_eq!(s.prompt_tokens, 5 * BLOCK_TOKENS as u64);
+        let mut total = PrefixStats::default();
+        total.merge(s);
+        total.merge(s);
+        assert_eq!(total.lookups, 4);
+    }
+}

@@ -20,14 +20,16 @@
 //!
 //! ```text
 //!  cluster   ─ N replicas behind a Dispatcher (round-robin / least-kv /
-//!              slo-slack routing); each replica = core + policy
+//!              slo-slack / prefix-affinity routing); each replica =
+//!              core + policy
 //!  policies  ─ decisions only: BulletPolicy (dynamic SM partitioning,
 //!              Algorithm 1), ChunkedPolicy (vLLM/SGLang lock-step),
 //!              NanoflowPolicy (nano-batch overlap), plus Bullet feature
 //!              masks for the ablations and MuxServe-style fixed quotas
 //!  core      ─ mechanisms only: EngineCore owns the virtual-clock event
-//!              loop, admission, KV reserve/release, prefill→decode
-//!              migration, timeline sampling and RequestRecord emission
+//!              loop, admission (incl. the prefix-cache fast path), KV
+//!              reserve/release, prefill→decode migration, timeline
+//!              sampling and RequestRecord emission
 //! ```
 //!
 //! **Serving core** ([`engine::core`]).  [`engine::EngineCore`] drives
@@ -51,6 +53,28 @@
 //! see live load.  Surfaced through `BulletServer::serve_cluster`, the
 //! CLI (`--replicas N --router <policy>`) and
 //! `examples/cluster_scaling.rs`.
+//!
+//! **Session & prefix reuse** ([`kvcache`], [`workload::sessions`]).
+//! The KV pool refcounts physical blocks, so sequences can share them:
+//! [`kvcache::KvPool::fork`] clones a sequence copy-on-write and
+//! [`kvcache::KvPool::adopt`] starts one on an already-cached prefix.
+//! [`kvcache::prefix::PrefixIndex`] is a content-hash index over full
+//! prompt blocks (chained hashes ⇒ block-granularity longest-prefix
+//! match) with LRU eviction of cache-only blocks.  With
+//! `ServingConfig::prefix_cache` on, [`engine::EngineCore`] matches each
+//! arrival at admission, adopts the hit blocks, and charges only the
+//! uncached suffix to the prefill path — the §3.2 estimator and the SM
+//! partitioner see the reduced token count — then publishes the prompt's
+//! blocks back to the index when its prefill completes; under memory
+//! pressure `EngineCore::kv_room` first evicts LRU cached blocks, then
+//! falls back to recompute (dropping idle adoptions).  The
+//! `conversational` workload ([`workload::sessions`]) generates the
+//! traffic that makes this pay — tenants with shared system prompts and
+//! multi-turn sessions that re-send their history — and the
+//! `prefix-affinity` router pins each session to the replica holding its
+//! KV.  `examples/prefix_reuse.rs` demonstrates (and asserts) the
+//! cache-on vs cache-off TTFT and goodput win; run metrics land in
+//! `EngineOutput::prefix` (hit rate, cached-token ratio, tokens saved).
 //!
 //! ## Adding a serving policy (~100 lines)
 //!

@@ -1,25 +1,27 @@
 //! Bullet CLI — launcher for the serving system.
 //!
 //! ```text
-//! bullet serve   [--workload sharegpt|azure-code|arxiv-summary] [--rate R]
-//!                [--requests N] [--system bullet|vllm-1024|sglang-1024|
-//!                 sglang-2048|nanoflow] [--profile coarse|paper] [--seed S]
-//!                [--replicas N] [--router round-robin|least-kv|slo-slack]
+//! bullet serve   [--workload sharegpt|azure-code|arxiv-summary|conversational]
+//!                [--rate R] [--requests N] [--system bullet|vllm-1024|
+//!                 sglang-1024|sglang-2048|nanoflow] [--profile coarse|paper]
+//!                [--seed S] [--prefix-cache on|off] [--replicas N]
+//!                [--router round-robin|least-kv|slo-slack|prefix-affinity]
 //! bullet live    [--requests N] [--artifacts DIR]   # real model via PJRT
 //! bullet profile [--grid coarse|paper]              # offline §3.2.2 pass
 //! bullet info                                        # config + artifact info
 //! ```
 
-use bullet::baselines::{run_system, System};
+use bullet::baselines::{run_system_output, System};
 use bullet::cluster::{serve_cluster, ClusterConfig, RouterPolicy};
 use bullet::config::{ServingConfig, SloSpec};
 use bullet::coordinator::{BuildOptions, BulletServer, Tokenizer};
 use bullet::engine::live_engine::{serve_live, LiveRequest};
+use bullet::kvcache::prefix::PrefixStats;
 use bullet::metrics::{summarize, RunSummary};
 use bullet::runtime::{ModelMeta, ModelRuntime};
 use bullet::util::cli::Args;
 use bullet::util::tbl::{f, ms, Table};
-use bullet::workload::{generate_n_requests, Dataset};
+use bullet::workload::trace_by_name;
 use std::path::PathBuf;
 
 fn main() {
@@ -47,7 +49,10 @@ subcommands:
 common flags: --workload NAME --rate R --requests N --seed S
 serve flags:  --system bullet|vllm-1024|sglang-1024|sglang-2048|nanoflow
               --profile coarse|paper
-              --replicas N --router round-robin|least-kv|slo-slack";
+              --prefix-cache on|off   (shared-prefix KV reuse; pairs with
+                                       --workload conversational)
+              --replicas N
+              --router round-robin|least-kv|slo-slack|prefix-affinity";
 
 /// The metric rows every serve table shares (single-GPU and cluster).
 fn summary_rows(t: &mut Table, s: &RunSummary) {
@@ -60,26 +65,48 @@ fn summary_rows(t: &mut Table, s: &RunSummary) {
     t.row(&["SLO attainment".to_string(), f(s.slo_attainment * 100.0, 1) + "%"]);
 }
 
-fn dataset_and_slo(args: &Args) -> (Dataset, SloSpec) {
-    let name = args.get_or("workload", "sharegpt");
-    let ds = Dataset::by_name(name).unwrap_or_else(|| {
-        eprintln!("unknown workload '{name}'");
-        std::process::exit(2);
-    });
-    let slo = match name {
+/// Prefix-cache rows appended to serve tables when the cache is on.
+fn prefix_rows(t: &mut Table, ps: &PrefixStats) {
+    t.row(&["prefix hit rate".to_string(), f(ps.hit_rate() * 100.0, 1) + "%"]);
+    t.row(&[
+        "cached-token ratio".to_string(),
+        f(ps.cached_token_ratio() * 100.0, 1) + "%",
+    ]);
+    t.row(&["prefill tokens saved".to_string(), ps.tokens_saved().to_string()]);
+    t.row(&["prefix evictions".to_string(), ps.evictions.to_string()]);
+}
+
+fn workload_slo(name: &str) -> SloSpec {
+    match name {
         "azure-code" => SloSpec::azure_code(),
         "arxiv-summary" => SloSpec::arxiv_summary(),
+        // conversational shares ShareGPT's SLOs (same interactive shape)
         _ => SloSpec::sharegpt(),
-    };
-    (ds, slo)
+    }
 }
 
 fn serve(args: &Args) {
-    let (ds, slo) = dataset_and_slo(args);
+    let name = args.get_or("workload", "sharegpt").to_string();
     let rate = args.get_f64("rate", 10.0);
     let n = args.get_usize("requests", 200);
     let seed = args.get_u64("seed", 42);
-    let cfg = ServingConfig { slo, ..ServingConfig::default() };
+    let trace = trace_by_name(&name, rate, n, seed).unwrap_or_else(|| {
+        eprintln!("unknown workload '{name}'");
+        std::process::exit(2);
+    });
+    let prefix_cache = match args.get_or("prefix-cache", "off") {
+        "on" => true,
+        "off" => false,
+        other => {
+            eprintln!("unknown --prefix-cache '{other}' (use on|off)");
+            std::process::exit(2);
+        }
+    };
+    let cfg = ServingConfig {
+        slo: workload_slo(&name),
+        prefix_cache,
+        ..ServingConfig::default()
+    };
 
     let build = match args.get_or("profile", "coarse") {
         "paper" => BuildOptions::with_paper_profiling(&cfg),
@@ -88,7 +115,6 @@ fn serve(args: &Args) {
     };
     eprintln!("building server (profiling: {})...", args.get_or("profile", "coarse"));
     let server = BulletServer::build(cfg.clone(), build);
-    let trace = generate_n_requests(&ds, rate, n, seed);
 
     let sys = System::by_name(args.get_or("system", "bullet")).unwrap_or_else(|| {
         eprintln!("unknown system '{}'", args.get_or("system", "bullet"));
@@ -105,7 +131,7 @@ fn serve(args: &Args) {
         eprintln!(
             "serving {} requests of {} at {} req/s with {} on {} replicas ({})...",
             n,
-            ds.name,
+            name,
             rate,
             sys.label(),
             replicas,
@@ -129,7 +155,7 @@ fn serve(args: &Args) {
             sys.label(),
             replicas,
             router.label(),
-            ds.name,
+            name,
             rate
         ))
         .header(&["metric", "value"]);
@@ -139,17 +165,23 @@ fn serve(args: &Args) {
             "per-replica requests".to_string(),
             format!("{:?}", out.per_replica_counts()),
         ]);
+        if cfg.prefix_cache {
+            prefix_rows(&mut t, &out.prefix_stats());
+        }
         t.print();
         return;
     }
 
-    eprintln!("serving {} requests of {} at {} req/s with {}...", n, ds.name, rate, sys.label());
-    let records = run_system(sys, &cfg, server.perf(), server.ground_truth(), &trace, seed);
-    let s = summarize(&records, &cfg.slo, None);
+    eprintln!("serving {} requests of {} at {} req/s with {}...", n, name, rate, sys.label());
+    let out = run_system_output(sys, &cfg, server.perf(), server.ground_truth(), &trace, seed);
+    let s = summarize(&out.records, &cfg.slo, None);
 
-    let mut t = Table::new(&format!("{} on {} @ {} req/s", sys.label(), ds.name, rate))
+    let mut t = Table::new(&format!("{} on {} @ {} req/s", sys.label(), name, rate))
         .header(&["metric", "value"]);
     summary_rows(&mut t, &s);
+    if cfg.prefix_cache {
+        prefix_rows(&mut t, &out.prefix);
+    }
     t.print();
 }
 

@@ -83,9 +83,12 @@ impl SloScheduler {
         }
         // Waiting requests queue behind the active batch, then run their
         // own prefill (scaled per-token estimate at this partition).
+        // Prefix-cached tokens are already resident, so only the suffix
+        // costs compute — the SLO budget still covers the full prompt.
         let mut queue_ahead = rem;
         for r in &st.waiting {
-            let own = per_token_layer * r.input_len.max(1) as f64 * st.total_layers as f64;
+            let suffix = (r.input_len - r.cached_len).max(1);
+            let own = per_token_layer * suffix as f64 * st.total_layers as f64;
             let ttft = (st.now - r.arrival) + queue_ahead + own;
             ratios.push(ttft / self.cfg.slo.ttft_budget(r.input_len).max(1e-9));
             queue_ahead += own;
@@ -306,10 +309,17 @@ mod tests {
     ) -> SystemState {
         let prefill = if prefill_tokens > 0 {
             Some(PrefillBatch {
-                reqs: vec![PrefillReq { id: 1, arrival: 0.0, input_len: prefill_tokens, output_len: 64 }],
+                reqs: vec![PrefillReq {
+                    id: 1,
+                    arrival: 0.0,
+                    input_len: prefill_tokens,
+                    output_len: 64,
+                    ..Default::default()
+                }],
                 n_tokens: prefill_tokens,
                 layers_done,
                 started_at: 0.0,
+                ..Default::default()
             })
         } else {
             None
@@ -397,8 +407,8 @@ mod tests {
     fn reorder_puts_tightest_slack_first() {
         let s = scheduler();
         let mut st = state_with(0, 0, vec![], vec![
-            PrefillReq { id: 1, arrival: 0.0, input_len: 4000, output_len: 1 }, // big budget
-            PrefillReq { id: 2, arrival: 0.0, input_len: 100, output_len: 1 },  // tiny budget
+            PrefillReq { id: 1, arrival: 0.0, input_len: 4000, output_len: 1, ..Default::default() }, // big budget
+            PrefillReq { id: 2, arrival: 0.0, input_len: 100, output_len: 1, ..Default::default() },  // tiny budget
         ], 0.2);
         s.reorder_waiting(&mut st);
         assert_eq!(st.waiting[0].id, 2);
@@ -413,9 +423,9 @@ mod tests {
         let perf = PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b());
         let s = SloScheduler::new(cfg, perf);
         let mut st = state_with(0, 0, vec![], vec![
-            PrefillReq { id: 1, arrival: 0.0, input_len: 4000, output_len: 1 },
-            PrefillReq { id: 2, arrival: 0.1, input_len: 100, output_len: 1 },
-            PrefillReq { id: 3, arrival: 0.2, input_len: 900, output_len: 1 },
+            PrefillReq { id: 1, arrival: 0.0, input_len: 4000, output_len: 1, ..Default::default() },
+            PrefillReq { id: 2, arrival: 0.1, input_len: 100, output_len: 1, ..Default::default() },
+            PrefillReq { id: 3, arrival: 0.2, input_len: 900, output_len: 1, ..Default::default() },
         ], 0.5);
         s.reorder_waiting(&mut st); // must not panic
         assert_eq!(st.waiting.len(), 3);

@@ -3,20 +3,30 @@
 use crate::resource::Partition;
 
 /// A request known to the prefill side (queued or in the active batch).
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Default)]
 pub struct PrefillReq {
     pub id: u64,
     pub arrival: f64,
     pub input_len: usize,
     pub output_len: usize,
+    /// Prompt tokens already resident in the KV pool via a prefix-cache
+    /// hit (block granularity, always < `input_len`).  The prefill
+    /// engines charge only the `input_len - cached_len` suffix to the
+    /// compute model; 0 with the cache off or on a miss.
+    pub cached_len: usize,
 }
 
 /// P_k: the running prefill batch.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct PrefillBatch {
     pub reqs: Vec<PrefillReq>,
-    /// n_p: total tokens across the batch.
+    /// n_p: total tokens the batch must still compute (prefix-cached
+    /// prompt tokens are excluded — the estimator and SM provisioning
+    /// must see the reduced load).
     pub n_tokens: usize,
+    /// Largest prefix-cached context across the batch: the suffix's
+    /// attention reads this many cached KV tokens.
+    pub ctx_cached: usize,
     /// l_k: layers already executed.
     pub layers_done: usize,
     /// Wall/virtual time the batch started executing.
@@ -25,10 +35,12 @@ pub struct PrefillBatch {
 
 impl PrefillBatch {
     pub fn new(reqs: Vec<PrefillReq>, started_at: f64) -> PrefillBatch {
-        let n_tokens = reqs.iter().map(|r| r.input_len).sum();
+        let n_tokens = reqs.iter().map(|r| r.input_len - r.cached_len).sum();
+        let ctx_cached = reqs.iter().map(|r| r.cached_len).max().unwrap_or(0);
         PrefillBatch {
             reqs,
             n_tokens,
+            ctx_cached,
             layers_done: 0,
             started_at,
         }
@@ -159,13 +171,27 @@ mod tests {
     fn batch_token_sum() {
         let b = PrefillBatch::new(
             vec![
-                PrefillReq { id: 1, arrival: 0.0, input_len: 100, output_len: 10 },
-                PrefillReq { id: 2, arrival: 0.1, input_len: 50, output_len: 10 },
+                PrefillReq { id: 1, arrival: 0.0, input_len: 100, output_len: 10, cached_len: 0 },
+                PrefillReq { id: 2, arrival: 0.1, input_len: 50, output_len: 10, cached_len: 0 },
             ],
             0.2,
         );
         assert_eq!(b.n_tokens, 150);
+        assert_eq!(b.ctx_cached, 0);
         assert_eq!(b.layers_done, 0);
+    }
+
+    #[test]
+    fn batch_charges_only_the_uncached_suffix() {
+        let b = PrefillBatch::new(
+            vec![
+                PrefillReq { id: 1, arrival: 0.0, input_len: 100, output_len: 10, cached_len: 64 },
+                PrefillReq { id: 2, arrival: 0.1, input_len: 50, output_len: 10, cached_len: 16 },
+            ],
+            0.2,
+        );
+        assert_eq!(b.n_tokens, 36 + 34);
+        assert_eq!(b.ctx_cached, 64);
     }
 
     #[test]

@@ -4,3 +4,12 @@
 
 pub mod bench;
 pub mod prop;
+
+/// Chained per-block content hashes in the PRODUCTION scheme of
+/// `workload::sessions` (hash `i` covers blocks `0..=i`): the one
+/// helper every prefix-cache test and bench should build chains with,
+/// so a change to the chaining scheme has a single point of truth.
+/// Distinct `contents` values model distinct block contents.
+pub fn content_chain(contents: &[u64]) -> Vec<u64> {
+    crate::workload::sessions::chain_hashes(contents.iter().copied())
+}

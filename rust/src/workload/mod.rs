@@ -10,10 +10,14 @@
 //! (arrival time, input_len, output_len), so this preserves everything
 //! the experiments measure.
 
+pub mod sessions;
+
+pub use sessions::{generate_conversational, generate_n_turns, generate_sessions, SessionProfile};
+
 use crate::util::rng::Rng;
 
 /// One request in a trace.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Default)]
 pub struct Request {
     pub id: u64,
     /// Arrival time, seconds from trace start.
@@ -22,6 +26,15 @@ pub struct Request {
     pub input_len: usize,
     /// Number of tokens to generate.
     pub output_len: usize,
+    /// Chained per-block content hashes of the prompt (entry `i` covers
+    /// KV blocks `0..=i`), the identity the prefix cache matches on.
+    /// Empty ⇒ unique content that can never be shared — the default for
+    /// the single-turn datasets.  Produced by [`sessions`].
+    pub block_hashes: Vec<u64>,
+    /// Conversation id for multi-turn workloads; later turns of a session
+    /// re-send earlier context, and the prefix-affinity router uses this
+    /// to pin a session to the replica already holding its KV.
+    pub session_id: Option<u64>,
 }
 
 /// Dataset model: clipped-lognormal input/output token lengths.
@@ -132,6 +145,8 @@ pub fn generate_trace(dataset: &Dataset, rate: f64, duration: f64, seed: u64) ->
             arrival: t,
             input_len: dataset.sample_input(&mut rng),
             output_len: dataset.sample_output(&mut rng),
+            block_hashes: Vec::new(),
+            session_id: None,
         });
         id += 1;
     }
@@ -141,6 +156,7 @@ pub fn generate_trace(dataset: &Dataset, rate: f64, duration: f64, seed: u64) ->
 /// Generate a fixed number of requests (rate-shaped arrivals, unbounded
 /// duration) — convenient for closed experiments.
 pub fn generate_n_requests(dataset: &Dataset, rate: f64, n: usize, seed: u64) -> Vec<Request> {
+    assert!(rate > 0.0, "generate_n_requests: rate must be positive, got {rate}");
     let mut rng = Rng::new(seed ^ 0xABCDEF);
     let mut out = Vec::with_capacity(n);
     let mut t = 0.0;
@@ -151,6 +167,8 @@ pub fn generate_n_requests(dataset: &Dataset, rate: f64, n: usize, seed: u64) ->
             arrival: t,
             input_len: dataset.sample_input(&mut rng),
             output_len: dataset.sample_output(&mut rng),
+            block_hashes: Vec::new(),
+            session_id: None,
         });
     }
     out
@@ -167,6 +185,11 @@ pub fn generate_bursty_trace(
     burst_len: f64,
     seed: u64,
 ) -> Vec<Request> {
+    assert!(
+        base_rate > 0.0 && burst_rate > 0.0 && duration > 0.0,
+        "generate_bursty_trace: rates and duration must be positive \
+         (base {base_rate}, burst {burst_rate}, duration {duration})"
+    );
     let mut rng = Rng::new(seed ^ 0x5DEECE66D);
     let mut out = Vec::new();
     let mut t = 0.0;
@@ -186,10 +209,24 @@ pub fn generate_bursty_trace(
             arrival: t,
             input_len: dataset.sample_input(&mut rng),
             output_len: dataset.sample_output(&mut rng),
+            block_hashes: Vec::new(),
+            session_id: None,
         });
         id += 1;
     }
     out
+}
+
+/// Workload catalog: the single-turn [`Dataset`]s plus the multi-turn
+/// session workloads registered in [`SessionProfile::by_name`]
+/// (`conversational`) — one entry point for the CLI and examples.  For
+/// session workloads, `rate` is interpreted as the target *request*
+/// rate (sessions arrive at `rate / mean-turns`).
+pub fn trace_by_name(name: &str, rate: f64, n: usize, seed: u64) -> Option<Vec<Request>> {
+    if let Some(p) = SessionProfile::by_name(name) {
+        return Some(generate_n_turns(&p, rate, n, seed));
+    }
+    Dataset::by_name(name).map(|d| generate_n_requests(&d, rate, n, seed))
 }
 
 #[cfg(test)]
@@ -220,7 +257,9 @@ mod tests {
         let mut rng = Rng::new(3);
         let med = |d: &Dataset, rng: &mut Rng| {
             let mut v: Vec<f64> = (0..2000).map(|_| d.sample_input(rng) as f64).collect();
-            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // total_cmp: NaN-proof total order (matches the SloScheduler
+            // reorder fix — partial_cmp().unwrap() would panic on NaN)
+            v.sort_by(f64::total_cmp);
             stats::percentile_sorted(&v, 50.0)
         };
         let sg = med(&Dataset::sharegpt(), &mut rng);
@@ -271,5 +310,38 @@ mod tests {
     fn by_name_lookup() {
         assert_eq!(Dataset::by_name("sharegpt").unwrap().name, "sharegpt");
         assert!(Dataset::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn trace_by_name_covers_all_workloads() {
+        for name in ["sharegpt", "azure-code", "arxiv-summary", "conversational"] {
+            let t = trace_by_name(name, 5.0, 20, 3).unwrap();
+            assert_eq!(t.len(), 20, "{name}");
+        }
+        assert!(trace_by_name("nope", 5.0, 20, 3).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "rate must be positive")]
+    fn n_requests_rejects_non_positive_rate() {
+        generate_n_requests(&Dataset::sharegpt(), 0.0, 10, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be positive")]
+    fn bursty_trace_rejects_non_positive_base_rate() {
+        generate_bursty_trace(&Dataset::sharegpt(), 0.0, 10.0, 60.0, 20.0, 10.0, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be positive")]
+    fn bursty_trace_rejects_non_positive_burst_rate() {
+        generate_bursty_trace(&Dataset::sharegpt(), 5.0, -1.0, 60.0, 20.0, 10.0, 1);
+    }
+
+    #[test]
+    fn single_turn_requests_carry_no_content_identity() {
+        let t = generate_n_requests(&Dataset::sharegpt(), 5.0, 5, 8);
+        assert!(t.iter().all(|r| r.block_hashes.is_empty() && r.session_id.is_none()));
     }
 }

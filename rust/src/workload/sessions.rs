@@ -1,0 +1,385 @@
+//! Multi-turn conversational workloads: the traffic shape where prefix
+//! reuse pays.
+//!
+//! A *session* is one user's conversation with one *tenant* (a product
+//! surface with a shared system prompt).  Turn `t`'s prompt is the
+//! system prompt, the whole conversation so far (earlier prompts and
+//! replies re-sent verbatim), and a fresh user message — so consecutive
+//! turns share an ever-growing token prefix, and sessions of the same
+//! tenant share at least the system prompt.  Turns are separated by
+//! lognormal *think-time* gaps.
+//!
+//! Content is abstracted the same way the length distributions are: a
+//! block's "contents" are a deterministic function of (tenant, block
+//! index) inside the system prompt and (session, block index) after it,
+//! folded into the chained [`Request::block_hashes`] the prefix cache
+//! matches on.  Identical real prefixes ⇒ identical chains; the chain
+//! breaks at the first divergent block.  Generated reply tokens are
+//! treated as recomputed-on-resend (they only become cacheable once the
+//! next turn's prefill publishes them), which conservatively models
+//! tokenization drift between generation and re-submission.
+
+use crate::kvcache::BLOCK_TOKENS;
+use crate::util::rng::Rng;
+use crate::workload::Request;
+
+/// splitmix64-style combiner for content identities.
+fn mix(a: u64, b: u64) -> u64 {
+    let mut z = a ^ b.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Fold per-block contents into the chained hash form the prefix cache
+/// matches on (hash `i` covers blocks `0..=i`).  THE chaining scheme:
+/// `hash_chain` below and `testing::content_chain` both build on it.
+pub(crate) fn chain_hashes(contents: impl Iterator<Item = u64>) -> Vec<u64> {
+    let mut out = Vec::new();
+    let mut h = 0xB10Cu64;
+    for c in contents {
+        h = mix(h, c);
+        out.push(h);
+    }
+    out
+}
+
+/// Shape of a conversational workload.
+#[derive(Debug, Clone)]
+pub struct SessionProfile {
+    pub name: &'static str,
+    /// Distinct tenants, each with its own shared system prompt.
+    pub tenants: usize,
+    /// System-prompt tokens (identical across a tenant's sessions).
+    pub system_prompt_tokens: usize,
+    /// Turns per session, uniform in `[min_turns, max_turns]`.
+    pub min_turns: usize,
+    pub max_turns: usize,
+    /// Per-turn user-message tokens: clipped lognormal.
+    pub user_mu: f64,
+    pub user_sigma: f64,
+    pub user_min: usize,
+    pub user_max: usize,
+    /// Per-turn reply tokens: clipped lognormal.
+    pub out_mu: f64,
+    pub out_sigma: f64,
+    pub out_min: usize,
+    pub out_max: usize,
+    /// Think-time gap between consecutive turn arrivals: lognormal, s.
+    pub think_mu: f64,
+    pub think_sigma: f64,
+    /// Prompt-length cap (production context limits truncate history).
+    pub max_input_tokens: usize,
+}
+
+impl SessionProfile {
+    /// The default `conversational` workload: assistant-style traffic
+    /// with a 512-token shared system prompt per tenant.
+    pub fn conversational() -> SessionProfile {
+        SessionProfile {
+            name: "conversational",
+            tenants: 4,
+            system_prompt_tokens: 512,
+            min_turns: 2,
+            max_turns: 8,
+            user_mu: 4.4, // median ~81 tokens
+            user_sigma: 0.7,
+            user_min: 8,
+            user_max: 1024,
+            out_mu: 5.0, // median ~148
+            out_sigma: 0.6,
+            out_min: 16,
+            out_max: 512,
+            think_mu: 2.2, // median ~9 s
+            think_sigma: 0.8,
+            max_input_tokens: 12288,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<SessionProfile> {
+        match name {
+            "conversational" => Some(SessionProfile::conversational()),
+            _ => None,
+        }
+    }
+
+    /// Expected turns per session (uniform distribution midpoint).
+    pub fn mean_turns(&self) -> f64 {
+        (self.min_turns + self.max_turns) as f64 / 2.0
+    }
+}
+
+fn sample_len(rng: &mut Rng, mu: f64, sigma: f64, lo: usize, hi: usize) -> usize {
+    (rng.lognormal(mu, sigma).round() as usize).clamp(lo, hi)
+}
+
+/// Chained content hashes for one turn's prompt: block `b` carries the
+/// tenant's system-prompt content while it lies wholly inside it, the
+/// session's own history after.  Depending only on (tenant,
+/// content-seed, block index), the chain is identical across a
+/// session's turns as far as their prompts actually agree —
+/// longest-prefix-match fodder.  Capped (truncated) turns pass a
+/// per-turn `content_seed`, since a sliding context window shifts
+/// every non-system block's contents.
+fn hash_chain(
+    system_prompt_tokens: usize,
+    tenant_seed: u64,
+    content_seed: u64,
+    input_len: usize,
+) -> Vec<u64> {
+    let blocks = input_len / BLOCK_TOKENS;
+    chain_hashes((0..blocks).map(|b| {
+        if (b + 1) * BLOCK_TOKENS <= system_prompt_tokens {
+            mix(tenant_seed, b as u64)
+        } else {
+            mix(content_seed, b as u64)
+        }
+    }))
+}
+
+/// Generate `n_sessions` sessions whose starts are Poisson at
+/// `session_rate` sessions/s.  Returns all turns of all sessions merged
+/// into one arrival-ordered trace with ids `0..len`.
+pub fn generate_sessions(
+    p: &SessionProfile,
+    session_rate: f64,
+    n_sessions: usize,
+    seed: u64,
+) -> Vec<Request> {
+    assert!(
+        session_rate > 0.0,
+        "generate_sessions: session_rate must be positive, got {session_rate}"
+    );
+    assert!(n_sessions > 0 && p.tenants > 0);
+    assert!(p.min_turns >= 1 && p.min_turns <= p.max_turns);
+    let mut rng = Rng::new(seed ^ 0xC0FFEE);
+    let mut reqs: Vec<Request> = Vec::new();
+    let mut start = 0.0f64;
+    for s in 0..n_sessions {
+        start += rng.exponential(session_rate);
+        let tenant = rng.below(p.tenants as u64);
+        let session_id = mix(seed, 0x5E55 ^ (s as u64 + 1));
+        let tenant_seed = mix(seed, 0x7E4A ^ tenant);
+        let turns = p.min_turns + rng.below((p.max_turns - p.min_turns + 1) as u64) as usize;
+        // tokens the next prompt re-sends (system prompt + history)
+        let mut history = p.system_prompt_tokens;
+        let mut arrival = start;
+        for turn in 0..turns {
+            let user = sample_len(&mut rng, p.user_mu, p.user_sigma, p.user_min, p.user_max);
+            let capped = history + user > p.max_input_tokens;
+            let input_len = (history + user).min(p.max_input_tokens);
+            let output_len = sample_len(&mut rng, p.out_mu, p.out_sigma, p.out_min, p.out_max);
+            // Context truncation slides the non-system window, shifting
+            // every block's contents — so a capped turn shares only the
+            // system prompt with its neighbors (per-turn content epoch),
+            // instead of spuriously matching the previous capped prompt
+            // bit-for-bit.
+            let content_seed = if capped {
+                mix(session_id, 0xCA11 ^ (turn as u64 + 1))
+            } else {
+                session_id
+            };
+            reqs.push(Request {
+                id: 0, // assigned after the arrival sort
+                arrival,
+                input_len,
+                output_len,
+                block_hashes: hash_chain(p.system_prompt_tokens, tenant_seed, content_seed, input_len),
+                session_id: Some(session_id),
+            });
+            history = input_len + output_len;
+            arrival += rng.lognormal(p.think_mu, p.think_sigma);
+        }
+    }
+    // stable sort: same-instant turns keep session order
+    reqs.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+    for (i, r) in reqs.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    reqs
+}
+
+/// CLI-shaped entry point for any profile: approximately `n_requests`
+/// requests arriving at roughly `rate` requests/s (sessions at
+/// `rate / mean-turns`), truncated to exactly `n_requests`.
+pub fn generate_n_turns(p: &SessionProfile, rate: f64, n_requests: usize, seed: u64) -> Vec<Request> {
+    assert!(n_requests > 0, "generate_n_turns: need at least one request");
+    // oversample sessions so truncation, not exhaustion, sets the count
+    // (turn counts are random, so double until the trace is long enough)
+    let mut sessions = ((n_requests as f64 / p.mean_turns()).ceil() as usize).max(1) * 2;
+    loop {
+        let mut reqs = generate_sessions(p, rate / p.mean_turns(), sessions, seed);
+        if reqs.len() >= n_requests {
+            reqs.truncate(n_requests);
+            return reqs;
+        }
+        sessions *= 2;
+    }
+}
+
+/// [`generate_n_turns`] over the default `conversational` profile.
+pub fn generate_conversational(rate: f64, n_requests: usize, seed: u64) -> Vec<Request> {
+    generate_n_turns(&SessionProfile::conversational(), rate, n_requests, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn per_session(trace: &[Request]) -> BTreeMap<u64, Vec<&Request>> {
+        let mut m: BTreeMap<u64, Vec<&Request>> = BTreeMap::new();
+        for r in trace {
+            m.entry(r.session_id.unwrap()).or_default().push(r);
+        }
+        m
+    }
+
+    #[test]
+    fn deterministic_and_arrival_ordered() {
+        let p = SessionProfile::conversational();
+        let a = generate_sessions(&p, 1.0, 20, 7);
+        let b = generate_sessions(&p, 1.0, 20, 7);
+        assert_eq!(a, b);
+        for w in a.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        for (i, r) in a.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+        let c = generate_sessions(&p, 1.0, 20, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn later_turns_extend_the_conversation_prefix() {
+        let p = SessionProfile::conversational();
+        let trace = generate_sessions(&p, 2.0, 12, 3);
+        let mut checked = 0;
+        for turns in per_session(&trace).values() {
+            for w in turns.windows(2) {
+                let (prev, next) = (w[0], w[1]);
+                assert!(next.arrival > prev.arrival);
+                // the next prompt re-sends the previous prompt + reply
+                assert!(
+                    next.input_len > prev.input_len
+                        || next.input_len == p.max_input_tokens,
+                    "prompt must grow (or cap): {} -> {}",
+                    prev.input_len,
+                    next.input_len
+                );
+                // hash chains agree exactly over the previous prompt's
+                // full blocks — what the prefix cache will match.
+                // (Capped turns intentionally diverge: truncation slides
+                // the window, so only the system prompt survives.)
+                if next.input_len < p.max_input_tokens {
+                    let shared = prev.input_len / BLOCK_TOKENS;
+                    assert!(next.block_hashes.len() >= shared);
+                    assert_eq!(
+                        &next.block_hashes[..shared],
+                        &prev.block_hashes[..shared],
+                        "turn chain must extend its predecessor"
+                    );
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked > 0, "need at least one multi-turn session");
+    }
+
+    #[test]
+    fn same_tenant_chains_share_only_the_system_prompt() {
+        let sys = 512;
+        let sys_blocks = sys / BLOCK_TOKENS;
+        // two sessions of one tenant agree exactly on the system prompt
+        let a = hash_chain(sys, 77, 1001, 1024);
+        let b = hash_chain(sys, 77, 2002, 1024);
+        assert_eq!(&a[..sys_blocks], &b[..sys_blocks]);
+        assert_ne!(a[sys_blocks], b[sys_blocks], "histories diverge after the system prompt");
+        // chained hashing: a single divergence poisons everything after
+        assert!(a[sys_blocks..].iter().zip(&b[sys_blocks..]).all(|(x, y)| x != y));
+        // different tenants diverge from block 0
+        let c = hash_chain(sys, 78, 1001, 1024);
+        assert_ne!(a[0], c[0]);
+    }
+
+    #[test]
+    fn first_block_identity_is_per_tenant() {
+        let p = SessionProfile::conversational();
+        let trace = generate_sessions(&p, 2.0, 16, 11);
+        let sessions = per_session(&trace);
+        let firsts: std::collections::BTreeSet<u64> =
+            sessions.values().map(|t| t[0].block_hashes[0]).collect();
+        assert!(
+            firsts.len() <= p.tenants,
+            "first block depends only on the tenant: {} > {}",
+            firsts.len(),
+            p.tenants
+        );
+    }
+
+    #[test]
+    fn capped_turns_share_only_the_system_prompt() {
+        // growth floors guarantee the cap engages by the 4th turn, so
+        // the last two turns of every session are both capped
+        let p = SessionProfile {
+            min_turns: 5,
+            max_turns: 5,
+            user_min: 64,
+            out_min: 64,
+            max_input_tokens: 896,
+            ..SessionProfile::conversational()
+        };
+        let trace = generate_sessions(&p, 4.0, 4, 7);
+        let sys_blocks = p.system_prompt_tokens / BLOCK_TOKENS;
+        let mut capped_pairs = 0;
+        for turns in per_session(&trace).values() {
+            for w in turns.windows(2) {
+                let (a, b) = (w[0], w[1]);
+                if a.input_len == p.max_input_tokens && b.input_len == p.max_input_tokens {
+                    // truncation slides the window: identical lengths,
+                    // but only the system prompt may match
+                    assert_eq!(&a.block_hashes[..sys_blocks], &b.block_hashes[..sys_blocks]);
+                    assert_ne!(
+                        a.block_hashes[sys_blocks], b.block_hashes[sys_blocks],
+                        "capped prompts must not alias bit-for-bit"
+                    );
+                    capped_pairs += 1;
+                }
+            }
+        }
+        assert!(capped_pairs >= 4, "every session must end with capped turns: {capped_pairs}");
+    }
+
+    #[test]
+    fn prompts_respect_the_context_cap() {
+        let p = SessionProfile {
+            min_turns: 8,
+            max_turns: 12,
+            max_input_tokens: 2048,
+            ..SessionProfile::conversational()
+        };
+        let trace = generate_sessions(&p, 4.0, 8, 13);
+        assert!(trace.iter().all(|r| r.input_len <= 2048));
+        // capped prompts still hash to capped chains
+        assert!(trace.iter().all(|r| r.block_hashes.len() == r.input_len / BLOCK_TOKENS));
+    }
+
+    #[test]
+    fn conversational_entry_point_counts_and_ids() {
+        let t = generate_conversational(10.0, 77, 21);
+        assert_eq!(t.len(), 77);
+        for (i, r) in t.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert!(r.session_id.is_some());
+            assert!(!r.block_hashes.is_empty() || r.input_len < BLOCK_TOKENS);
+        }
+        assert_eq!(t, generate_conversational(10.0, 77, 21));
+    }
+
+    #[test]
+    #[should_panic(expected = "session_rate must be positive")]
+    fn rejects_non_positive_session_rate() {
+        generate_sessions(&SessionProfile::conversational(), 0.0, 4, 1);
+    }
+}

@@ -6,11 +6,13 @@ use bullet::gpu::roofline::GroundTruth;
 use bullet::gpu::simulator::Simulator;
 use bullet::gpu::stream::SmMask;
 use bullet::gpu::{wave_quantization_idle_ratio, KernelDesc, OpClass};
+use bullet::kvcache::prefix::PrefixIndex;
 use bullet::kvcache::{KvPool, BLOCK_TOKENS};
 use bullet::model::phases::{decode_layer_kernels, prefill_layer_kernels, PhaseShape};
 use bullet::perf::PerfModel;
 use bullet::resource::Partition;
 use bullet::sched::{DecodeReqState, PrefillBatch, PrefillReq, SloScheduler, SystemState};
+use bullet::testing::content_chain;
 use bullet::testing::prop::{check, forall};
 use bullet::util::stats;
 
@@ -123,6 +125,113 @@ fn prop_kv_pool_never_leaks_or_double_books() {
     });
 }
 
+/// Refcounted-sharing invariants under a randomized
+/// grow / fork / release / cache-insert / evict sequence:
+/// - `used_blocks + free_blocks == capacity_blocks` at every step;
+/// - every block's refcount equals its holder count (sequences listing
+///   it + the prefix index), so no block is ever double-owned or leaked;
+/// - refcounts never underflow (`decref` panics the test if they would).
+#[test]
+fn prop_kv_refcount_share_invariants() {
+    forall(108, 150, |g| {
+        let blocks = g.usize_in(8, 64);
+        let mut pool = KvPool::new(blocks * BLOCK_TOKENS);
+        let mut index = PrefixIndex::new();
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        for _step in 0..g.usize_in(10, 60) {
+            match g.usize_in(0, 5) {
+                0 | 1 => {
+                    // grow a new or existing sequence
+                    let id = if live.is_empty() || g.bool() {
+                        next_id += 1;
+                        next_id
+                    } else {
+                        live[g.usize_in(0, live.len() - 1)]
+                    };
+                    let t = g.usize_in(1, 3 * BLOCK_TOKENS);
+                    if pool.can_grow(id, t) {
+                        pool.grow(id, t).map_err(|e| e.to_string())?;
+                        if !live.contains(&id) {
+                            live.push(id);
+                        }
+                    }
+                }
+                2 => {
+                    // fork a live sequence copy-on-write
+                    if !live.is_empty() {
+                        let src = live[g.usize_in(0, live.len() - 1)];
+                        next_id += 1;
+                        pool.fork(src, next_id).map_err(|e| e.to_string())?;
+                        live.push(next_id);
+                    }
+                }
+                3 => {
+                    // release
+                    if !live.is_empty() {
+                        let idx = g.usize_in(0, live.len() - 1);
+                        let id = live.remove(idx);
+                        pool.release(id).map_err(|e| e.to_string())?;
+                    }
+                }
+                4 => {
+                    // publish a live sequence's full blocks to the cache
+                    if !live.is_empty() {
+                        let id = live[g.usize_in(0, live.len() - 1)];
+                        let s = pool.get(id).unwrap();
+                        let nb = s.len / BLOCK_TOKENS;
+                        let seq_blocks = s.blocks[..nb].to_vec();
+                        // unique content per (seq, block) → per-seq chains
+                        let contents: Vec<u64> =
+                            (0..nb as u64).map(|b| (id << 32) | b).collect();
+                        let chain = content_chain(&contents);
+                        index.insert(&mut pool, &chain, &seq_blocks);
+                    }
+                }
+                _ => {
+                    // evict under synthetic memory pressure
+                    index.evict_lru(&mut pool, g.usize_in(1, 8));
+                }
+            }
+            // accounting identity
+            check(
+                pool.used_blocks() + pool.free_blocks() == pool.capacity_blocks(),
+                format!(
+                    "identity broken: used {} + free {} != cap {}",
+                    pool.used_blocks(),
+                    pool.free_blocks(),
+                    pool.capacity_blocks()
+                ),
+            )?;
+            // per-block refcount == holder count
+            let mut holders = vec![0u32; pool.capacity_blocks()];
+            for &id in &live {
+                for &b in &pool.get(id).unwrap().blocks {
+                    holders[b] += 1;
+                }
+            }
+            for b in index.cached_block_ids() {
+                holders[b] += 1;
+            }
+            for (b, &h) in holders.iter().enumerate() {
+                check(
+                    pool.refcount(b) == h,
+                    format!("block {b}: refcount {} != holders {h}", pool.refcount(b)),
+                )?;
+            }
+        }
+        // drain: sequences first, then the cache — pool must come back whole
+        for id in live {
+            pool.release(id).map_err(|e| e.to_string())?;
+        }
+        index.clear(&mut pool);
+        check(
+            pool.used_blocks() == 0 && pool.free_blocks() == pool.capacity_blocks(),
+            "pool not drained",
+        )
+    });
+}
+
 #[test]
 fn prop_scheduler_decisions_always_legal() {
     // Whatever the system state, the decision must respect granularity,
@@ -151,10 +260,12 @@ fn prop_scheduler_decisions_always_legal() {
                     arrival: g.f64_in(0.0, now),
                     input_len: g.usize_in(16, 16384),
                     output_len: 64,
+                    ..Default::default()
                 }],
                 n_tokens: g.usize_in(16, 16384),
                 layers_done: g.usize_in(0, 31),
                 started_at: g.f64_in(0.0, now),
+                ..Default::default()
             })
         } else {
             None
@@ -165,6 +276,7 @@ fn prop_scheduler_decisions_always_legal() {
                 arrival: g.f64_in(0.0, now),
                 input_len: g.usize_in(16, 8192),
                 output_len: 64,
+                ..Default::default()
             })
             .collect();
         let mut st = SystemState {

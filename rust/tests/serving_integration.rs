@@ -3,13 +3,36 @@
 //! artifacts are available.
 
 use bullet::baselines::{run_system, System};
-use bullet::config::{ServingConfig, SloSpec};
+use bullet::config::{GpuSpec, ModelSpec, ServingConfig, SloSpec};
 use bullet::coordinator::{BuildOptions, BulletServer};
 use bullet::engine::live_engine::{serve_live, LiveRequest};
-use bullet::metrics::summarize;
+use bullet::engine::sim_engine::{serve_bullet, SimEngineOptions};
+use bullet::gpu::roofline::GroundTruth;
+use bullet::metrics::{goodput_req_s, summarize};
+use bullet::perf::PerfModel;
 use bullet::runtime::ModelRuntime;
-use bullet::workload::{generate_n_requests, Dataset};
+use bullet::workload::{generate_n_requests, generate_sessions, Dataset, SessionProfile};
 use std::path::PathBuf;
+
+/// The conversational stress trace shared by the prefix-reuse tests: 30
+/// sessions arriving fast with short think times, so re-prefilled
+/// context saturates a single GPU when the cache is off.
+fn stress_sessions(seed: u64) -> Vec<bullet::workload::Request> {
+    let profile = SessionProfile {
+        think_mu: 0.7, // median ~2 s between turns
+        min_turns: 3,
+        max_turns: 5,
+        ..SessionProfile::conversational()
+    };
+    generate_sessions(&profile, 12.0, 30, seed)
+}
+
+fn sim_setup() -> (PerfModel, GroundTruth) {
+    (
+        PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b()),
+        GroundTruth::new(GpuSpec::a100()),
+    )
+}
 
 #[test]
 fn coordinator_end_to_end_with_profiling() {
@@ -86,6 +109,102 @@ fn ablations_are_distinct_systems() {
     let worst_ttft = results.iter().map(|x| x.1).fold(0.0, f64::max);
     let worst_tpot = results.iter().map(|x| x.2).fold(0.0, f64::max);
     assert!(bullet.1 < worst_ttft || bullet.2 < worst_tpot, "{results:?}");
+}
+
+/// ISSUE-2 acceptance bar: on a conversational trace with shared system
+/// prompts, prefix-cache-on beats cache-off on BOTH mean TTFT and
+/// goodput, with a non-zero hit rate.
+#[test]
+fn prefix_cache_beats_cold_serving_on_conversational_trace() {
+    let (perf, gt) = sim_setup();
+    let trace = stress_sessions(11);
+    let serve = |prefix_cache: bool| {
+        let cfg = ServingConfig {
+            slo: SloSpec::sharegpt(),
+            prefix_cache,
+            ..ServingConfig::default()
+        };
+        let out = serve_bullet(&cfg, &perf, &gt, &trace, &SimEngineOptions::default());
+        (out, cfg)
+    };
+    let (off, cfg) = serve(false);
+    let (on, _) = serve(true);
+    assert_eq!(off.records.len(), trace.len());
+    assert_eq!(on.records.len(), trace.len());
+
+    // the cache actually engaged
+    assert!(on.prefix.hits > 0, "no prefix hits on a multi-turn trace: {:?}", on.prefix);
+    assert!(on.prefix.cached_tokens > 0);
+    assert_eq!(off.prefix.hits, 0, "cache-off run must not touch the index");
+
+    let s_off = summarize(&off.records, &cfg.slo, Some(off.virtual_duration));
+    let s_on = summarize(&on.records, &cfg.slo, Some(on.virtual_duration));
+    assert!(
+        s_on.mean_ttft < s_off.mean_ttft,
+        "prefix cache must cut mean TTFT: on {} vs off {}",
+        s_on.mean_ttft,
+        s_off.mean_ttft
+    );
+    let g_off = goodput_req_s(&off.records, &cfg.slo, Some(off.virtual_duration));
+    let g_on = goodput_req_s(&on.records, &cfg.slo, Some(on.virtual_duration));
+    assert!(
+        g_on > g_off,
+        "prefix cache must raise goodput on a saturated trace: on {g_on} vs off {g_off}"
+    );
+}
+
+/// Determinism extends to the prefix-cache path: identical runs produce
+/// bit-identical records AND identical cache counters.
+#[test]
+fn prefix_cache_runs_are_deterministic() {
+    let (perf, gt) = sim_setup();
+    let trace = stress_sessions(23);
+    let cfg = ServingConfig {
+        slo: SloSpec::sharegpt(),
+        prefix_cache: true,
+        ..ServingConfig::default()
+    };
+    let a = serve_bullet(&cfg, &perf, &gt, &trace, &SimEngineOptions::default());
+    let b = serve_bullet(&cfg, &perf, &gt, &trace, &SimEngineOptions::default());
+    assert_eq!(a.records, b.records);
+    assert_eq!(a.prefix, b.prefix);
+}
+
+/// With no content hashes to match (single-turn datasets), turning the
+/// cache on changes nothing: records are bit-identical to cache-off.
+#[test]
+fn prefix_cache_is_inert_on_sessionless_traffic() {
+    let (perf, gt) = sim_setup();
+    let trace = generate_n_requests(&Dataset::sharegpt(), 8.0, 30, 5);
+    let run = |prefix_cache: bool| {
+        let cfg = ServingConfig { prefix_cache, ..ServingConfig::default() };
+        serve_bullet(&cfg, &perf, &gt, &trace, &SimEngineOptions::default())
+    };
+    let off = run(false);
+    let on = run(true);
+    assert_eq!(off.records, on.records);
+    assert_eq!(on.prefix.hits, 0);
+    assert_eq!(on.prefix.lookups, 0, "hash-less requests skip the index entirely");
+}
+
+/// The chunked baselines ride the same admission fast path: cache-on
+/// completes the conversational trace and earns hits there too.
+#[test]
+fn chunked_engines_share_the_prefix_fast_path() {
+    let (perf, gt) = sim_setup();
+    let trace = stress_sessions(31);
+    let cfg = ServingConfig {
+        slo: SloSpec::sharegpt(),
+        prefix_cache: true,
+        ..ServingConfig::default()
+    };
+    for sys in [System::Sglang1024, System::Nanoflow] {
+        let recs = run_system(sys, &cfg, &perf, &gt, &trace, 9);
+        assert_eq!(recs.len(), trace.len(), "{} lost records", sys.label());
+        for r in recs {
+            assert!(r.finish_time >= r.first_token_time, "{}: req {}", sys.label(), r.id);
+        }
+    }
 }
 
 fn artifacts() -> Option<PathBuf> {
