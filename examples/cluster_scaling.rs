@@ -86,7 +86,8 @@ fn main() {
         "SLO attainment",
     ]);
     for router in RouterPolicy::all() {
-        let out = server.serve_cluster(&trace, &ClusterConfig { replicas: 4, router });
+        let ccfg = ClusterConfig { replicas: 4, router, ..Default::default() };
+        let out = server.serve_cluster(&trace, &ccfg);
         let s = summarize(&out.records, &cfg.slo, Some(out.virtual_duration));
         t.row(&[
             router.label().to_string(),

@@ -104,7 +104,8 @@ fn main() {
     ]);
     let mut rates = std::collections::BTreeMap::new();
     for router in [RouterPolicy::RoundRobin, RouterPolicy::PrefixAffinity] {
-        let out = server.serve_cluster(&trace, &ClusterConfig { replicas: 3, router });
+        let ccfg = ClusterConfig { replicas: 3, router, ..Default::default() };
+        let out = server.serve_cluster(&trace, &ccfg);
         let s = summarize(&out.records, &cfg.slo, Some(out.virtual_duration));
         let g = goodput_req_s(&out.records, &cfg.slo, Some(out.virtual_duration));
         let cps = out.prefix_stats();

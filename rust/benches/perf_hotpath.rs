@@ -8,6 +8,10 @@
 //!      indirection versus a monomorphized engine loop must stay <1%,
 //!   5. prefix-index longest-match lookup — the admission fast path the
 //!      session/prefix-reuse subsystem adds to every arrival.
+//!   6. correction-grid interpolation on WIDE profiled axes — one interp
+//!      per candidate partition per scheduling cycle; `locate` is a
+//!      binary search (`partition_point`), so paper-fidelity and wider
+//!      grids stay off the decision budget.
 //! EXPERIMENTS.md §Perf records before/after for each optimization.
 
 use bullet::config::{GpuSpec, ModelSpec, ServingConfig};
@@ -188,4 +192,32 @@ fn main() {
         },
     );
     println!("{}", r.report());
+
+    // 6. correction-grid interpolation on wide axes.  The narrow case
+    //    mirrors the coarse test grid; the wide case is far past the
+    //    paper grid (512/256/128 knots) — with binary-search `locate`
+    //    both should bench within the same order of magnitude.
+    use bullet::perf::grid::Grid3;
+    let make_grid = |n0: usize, n1: usize, n2: usize| {
+        let axis = |n: usize| (0..n).map(|i| (i * i) as f64 + i as f64).collect::<Vec<_>>();
+        Grid3::new(axis(n0), axis(n1), axis(n2), 1.0)
+    };
+    let narrow = make_grid(3, 2, 3);
+    let wide = make_grid(512, 256, 128);
+    let probes: Vec<(f64, f64, f64)> = (0..64)
+        .map(|i| {
+            let x = (i * 4001 % 262144) as f64;
+            (x, x * 0.3, x * 0.1)
+        })
+        .collect();
+    for (label, grid) in [("3x2x3 (coarse)", &narrow), ("512x256x128 (wide)", &wide)] {
+        let r = bench(&format!("Grid3 interp, {label}, 64 probes"), 5000, || {
+            let mut acc = 0.0;
+            for &(a, b, c) in &probes {
+                acc += grid.interp(black_box(a), black_box(b), black_box(c));
+            }
+            black_box(acc);
+        });
+        println!("{}", r.report());
+    }
 }

@@ -191,6 +191,13 @@ pub(crate) fn complete_hybrid_iteration(
         core.waiting[i].done += take;
         if core.waiting[i].done >= core.waiting[i].req.input_len {
             finished_idx.push(i);
+        } else {
+            // Chunk-boundary publication (SGLang-style radix insert):
+            // the blocks this chunk just computed become visible NOW,
+            // so a mid-prompt arrival sharing the prefix can hit them
+            // instead of waiting for full-prompt completion.
+            let (id, done) = (core.waiting[i].req.id, core.waiting[i].done);
+            core.publish_progress(id, done);
         }
     }
     finished_idx.sort_unstable_by(|a, b| b.cmp(a)); // remove back-to-front
@@ -415,6 +422,40 @@ mod tests {
             busy_ttft > 1.1 * solo[0].ttft(),
             "busy {busy_ttft} solo {}",
             solo[0].ttft()
+        );
+    }
+
+    #[test]
+    fn chunk_boundary_publication_serves_mid_prompt_arrivals() {
+        use crate::kvcache::BLOCK_TOKENS;
+        use crate::testing::content_chain;
+        // One long prompt chunk-prefills over many iterations; an
+        // identical prompt arrives MID-prefill.  With chunk-boundary
+        // publication the second request hits the already-computed
+        // blocks instead of waiting for full-prompt completion.
+        let (cfg, gt) = setup();
+        let cfg = ServingConfig { prefix_cache: true, ..cfg };
+        let nb = 512usize; // 8192 prompt tokens = 8+ chunks of 1024
+        let contents: Vec<u64> = (0..nb as u64).collect();
+        let hashes = content_chain(&contents);
+        let input_len = nb * BLOCK_TOKENS + 8;
+        let req = |id, arrival| Request {
+            id,
+            arrival,
+            input_len,
+            output_len: 2,
+            block_hashes: hashes.clone(),
+            session_id: Some(1),
+        };
+        let trace = vec![req(0, 0.0), req(1, 0.2)];
+        let out = serve_chunked_output(&cfg, &ChunkedConfig::sglang_1024(), &gt, &trace, 5);
+        assert_eq!(out.records.len(), 2);
+        let s = out.prefix;
+        assert!(s.partial_insertions > 0, "no chunk-boundary publications: {s:?}");
+        assert!(s.hits >= 1 && s.cached_tokens > 0, "mid-prompt arrival missed: {s:?}");
+        assert!(
+            s.partial_hits >= 1,
+            "the hit must be attributed to partial publication: {s:?}"
         );
     }
 

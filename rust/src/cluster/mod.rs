@@ -23,19 +23,37 @@ pub mod router;
 pub use router::{Dispatcher, RouterPolicy};
 
 use crate::baselines::System;
-use crate::config::ServingConfig;
+use crate::config::{derive_kv_capacity, DriftSpec, GpuSpec, ServingConfig};
 use crate::engine::core::{CoreOptions, EngineCore, EngineOutput, ServingPolicy};
 use crate::gpu::roofline::GroundTruth;
 use crate::kvcache::prefix::PrefixStats;
 use crate::metrics::{merge_records, RequestRecord};
-use crate::perf::PerfModel;
+use crate::perf::{CalibrationStats, PerfModel, PerfPredictor};
 use crate::workload::Request;
 
-/// Cluster shape: replica count + routing policy.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Per-replica hardware overrides for a heterogeneous fleet.  `None`
+/// fields inherit the cluster-wide config / ground truth, so an
+/// all-default spec is exactly a homogeneous replica.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ReplicaSpec {
+    /// This replica's GPU (KV capacity is re-derived from it).
+    pub gpu: Option<GpuSpec>,
+    /// This replica's drift regime (throttling, co-tenant, lottery).
+    pub drift: Option<DriftSpec>,
+}
+
+/// Cluster shape: replica count + routing policy (+ optional
+/// heterogeneous per-replica hardware).
+#[derive(Debug, Clone, PartialEq)]
 pub struct ClusterConfig {
     pub replicas: usize,
     pub router: RouterPolicy,
+    /// Entry `i` overrides replica `i`'s hardware; replicas beyond the
+    /// list (or an empty list — the default) are homogeneous.  A shared
+    /// offline perf model is wrong for such a fleet by construction;
+    /// per-replica online calibration (`ServingConfig::calibration`) is
+    /// how routing signals stay truthful.
+    pub replica_specs: Vec<ReplicaSpec>,
 }
 
 impl Default for ClusterConfig {
@@ -43,6 +61,7 @@ impl Default for ClusterConfig {
         ClusterConfig {
             replicas: 1,
             router: RouterPolicy::RoundRobin,
+            replica_specs: Vec::new(),
         }
     }
 }
@@ -106,7 +125,14 @@ impl Replica {
 
     /// Estimated TTFT were `req` routed here now: the prefill backlog
     /// plus the request's own prompt, at the estimator's per-token rate
-    /// (contended if a decode batch is resident).
+    /// (contended if a decode batch is resident), scaled by the
+    /// replica's learned slowdown — so on a heterogeneous or drifting
+    /// fleet the slo-slack router ranks replicas by their *calibrated*
+    /// speed, not the shared offline grid.  The slowdown (not a cell
+    /// lookup at this probe's shape) is used deliberately: calibration
+    /// cells are shape-local and the fixed probe shape may never have
+    /// been launched, while the slowdown aggregates every observed
+    /// cell.  Exactly 1.0 for calibration-free or unobserved replicas.
     pub fn estimated_ttft(&self, req: &Request, perf: &PerfModel) -> f64 {
         let cfg = &self.core.cfg;
         let contended = !self.core.decode.is_empty();
@@ -114,7 +140,16 @@ impl Replica {
         let per_token =
             perf.predict_prefill_layer(reference, 0, cfg.gpu.num_sms, contended) / reference as f64;
         let tokens = (self.backlog_tokens() + req.input_len) as f64;
-        tokens * per_token * cfg.model.n_layers as f64
+        tokens * per_token * cfg.model.n_layers as f64 * self.calibrated_slowdown()
+    }
+
+    /// The replica's learned observed/nominal slowdown (1.0 until its
+    /// calibrator has samples, or for calibration-free policies).
+    pub fn calibrated_slowdown(&self) -> f64 {
+        self.policy
+            .predictor()
+            .map(|p| p.calibrated_slowdown())
+            .unwrap_or(1.0)
     }
 
     fn advance_to(&mut self, t: f64) {
@@ -165,6 +200,21 @@ impl ClusterOutput {
         }
         total
     }
+
+    /// Cluster-wide calibration counters (sample-weighted merge).
+    pub fn calibration_stats(&self) -> CalibrationStats {
+        let mut total = CalibrationStats::default();
+        for o in &self.per_replica {
+            total.merge(&o.calibration);
+        }
+        total
+    }
+
+    /// Each replica's learned slowdown — the heterogeneity fingerprint
+    /// (all 1.0 with calibration off).
+    pub fn calibrated_slowdowns(&self) -> Vec<f64> {
+        self.per_replica.iter().map(|o| o.calibration.slowdown).collect()
+    }
 }
 
 /// Serve `trace` on `cluster.replicas` instances of `system` behind the
@@ -186,8 +236,35 @@ pub fn serve_cluster(
     let mut replicas: Vec<Replica> = (0..n)
         .map(|i| {
             // distinct per-replica seeds decorrelate simulator noise
+            // (and draw distinct device-lottery factors under drift)
             let rseed = seed.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(i as u64 + 1));
-            Replica::new(i, system, cfg, perf, gt, rseed, max_virtual_time)
+            // heterogeneous fleet: apply this replica's hardware spec
+            match cluster.replica_specs.get(i) {
+                None => Replica::new(i, system, cfg, perf, gt, rseed, max_virtual_time),
+                Some(spec) => {
+                    let mut rcfg = cfg.clone();
+                    let mut rgt = gt.clone();
+                    if let Some(gpu) = &spec.gpu {
+                        // re-derive KV capacity for the new device ONLY
+                        // when the operator left it at the derived
+                        // default — an explicitly pinned capacity (e.g.
+                        // a KV-tight experiment) must survive per-
+                        // replica compute overrides
+                        let was_derived = rcfg.kv_capacity_tokens
+                            == derive_kv_capacity(&rcfg.gpu, &rcfg.model);
+                        rcfg.gpu = gpu.clone();
+                        if was_derived {
+                            rcfg.kv_capacity_tokens =
+                                derive_kv_capacity(&rcfg.gpu, &rcfg.model);
+                        }
+                        rgt.gpu = gpu.clone();
+                    }
+                    if let Some(drift) = &spec.drift {
+                        rgt.drift = drift.clone();
+                    }
+                    Replica::new(i, system, &rcfg, perf, &rgt, rseed, max_virtual_time)
+                }
+            }
         })
         .collect();
     let mut dispatcher = Dispatcher::new(cluster.router);
@@ -234,7 +311,8 @@ mod tests {
     fn round_robin_splits_evenly_and_completes() {
         let (cfg, perf, gt) = setup();
         let trace = generate_n_requests(&Dataset::sharegpt(), 10.0, 12, 7);
-        let ccfg = ClusterConfig { replicas: 3, router: RouterPolicy::RoundRobin };
+        let ccfg =
+            ClusterConfig { replicas: 3, router: RouterPolicy::RoundRobin, ..Default::default() };
         let out = serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 1, &ccfg);
         assert_eq!(out.records.len(), 12);
         assert_eq!(out.per_replica_counts(), vec![4, 4, 4]);
@@ -249,7 +327,7 @@ mod tests {
         let (cfg, perf, gt) = setup();
         let trace = generate_n_requests(&Dataset::sharegpt(), 12.0, 16, 11);
         for router in [RouterPolicy::LeastKv, RouterPolicy::SloSlack] {
-            let ccfg = ClusterConfig { replicas: 2, router };
+            let ccfg = ClusterConfig { replicas: 2, router, ..Default::default() };
             let out = serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 2, &ccfg);
             assert_eq!(out.records.len(), 16, "{}", router.label());
             let counts = out.per_replica_counts();
@@ -262,7 +340,8 @@ mod tests {
     fn cluster_runs_are_deterministic() {
         let (cfg, perf, gt) = setup();
         let trace = generate_n_requests(&Dataset::sharegpt(), 10.0, 10, 3);
-        let ccfg = ClusterConfig { replicas: 2, router: RouterPolicy::LeastKv };
+        let ccfg =
+            ClusterConfig { replicas: 2, router: RouterPolicy::LeastKv, ..Default::default() };
         let a = serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 5, &ccfg);
         let b = serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 5, &ccfg);
         assert_eq!(a.records, b.records);
@@ -277,11 +356,11 @@ mod tests {
         let trace = generate_n_requests(&Dataset::azure_code(), 40.0, 40, 13);
         let one = serve_cluster(
             System::Bullet, &cfg, &perf, &gt, &trace, 1,
-            &ClusterConfig { replicas: 1, router: RouterPolicy::RoundRobin },
+            &ClusterConfig { replicas: 1, router: RouterPolicy::RoundRobin, ..Default::default() },
         );
         let four = serve_cluster(
             System::Bullet, &cfg, &perf, &gt, &trace, 1,
-            &ClusterConfig { replicas: 4, router: RouterPolicy::LeastKv },
+            &ClusterConfig { replicas: 4, router: RouterPolicy::LeastKv, ..Default::default() },
         );
         assert_eq!(four.records.len(), 40);
         assert!(
@@ -307,7 +386,7 @@ mod tests {
                 &gt,
                 &trace,
                 4,
-                &ClusterConfig { replicas: 3, router },
+                &ClusterConfig { replicas: 3, router, ..Default::default() },
             )
         };
         let aff = run(RouterPolicy::PrefixAffinity);
@@ -334,12 +413,75 @@ mod tests {
     }
 
     #[test]
+    fn heterogeneous_replicas_calibrate_apart() {
+        use crate::config::CalibrationConfig;
+        // Replica 1 is a half-speed device; the shared offline model is
+        // profiled for the full-speed one.  Per-replica calibration must
+        // learn the difference: replica 1's slowdown diverges from
+        // replica 0's.
+        let (mut cfg, perf, gt) = setup();
+        cfg.calibration = CalibrationConfig::on();
+        let slow_gpu = GpuSpec {
+            peak_flops: GpuSpec::a100().peak_flops * 0.5,
+            peak_bandwidth: GpuSpec::a100().peak_bandwidth * 0.5,
+            ..GpuSpec::a100()
+        };
+        let ccfg = ClusterConfig {
+            replicas: 2,
+            router: RouterPolicy::RoundRobin,
+            replica_specs: vec![
+                ReplicaSpec::default(),
+                ReplicaSpec { gpu: Some(slow_gpu), drift: None },
+            ],
+        };
+        let trace = generate_n_requests(&Dataset::sharegpt(), 6.0, 20, 21);
+        let out = serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 3, &ccfg);
+        assert_eq!(out.records.len(), 20);
+        let sd = out.calibrated_slowdowns();
+        assert!(
+            sd[1] > sd[0] * 1.3,
+            "half-speed replica must learn a ~2x larger slowdown: {sd:?}"
+        );
+        let cs = out.calibration_stats();
+        assert!(cs.samples > 0);
+    }
+
+    #[test]
+    fn slo_slack_router_sheds_load_off_the_slow_replica() {
+        use crate::config::CalibrationConfig;
+        let (mut cfg, perf, gt) = setup();
+        cfg.calibration = CalibrationConfig::on();
+        let slow_gpu = GpuSpec {
+            peak_flops: GpuSpec::a100().peak_flops * 0.4,
+            peak_bandwidth: GpuSpec::a100().peak_bandwidth * 0.4,
+            ..GpuSpec::a100()
+        };
+        let ccfg = ClusterConfig {
+            replicas: 2,
+            router: RouterPolicy::SloSlack,
+            replica_specs: vec![
+                ReplicaSpec::default(),
+                ReplicaSpec { gpu: Some(slow_gpu), drift: None },
+            ],
+        };
+        let trace = generate_n_requests(&Dataset::azure_code(), 10.0, 30, 5);
+        let out = serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 7, &ccfg);
+        assert_eq!(out.records.len(), 30);
+        let counts = out.per_replica_counts();
+        assert!(
+            counts[1] < counts[0],
+            "router must shed load off the slow replica: {counts:?}"
+        );
+    }
+
+    #[test]
     fn cluster_scales_chunked_systems_too() {
         // the whole point of the shared core: baselines scale out with
         // zero engine changes.
         let (cfg, perf, gt) = setup();
         let trace = generate_n_requests(&Dataset::sharegpt(), 10.0, 10, 17);
-        let ccfg = ClusterConfig { replicas: 2, router: RouterPolicy::RoundRobin };
+        let ccfg =
+            ClusterConfig { replicas: 2, router: RouterPolicy::RoundRobin, ..Default::default() };
         let out = serve_cluster(System::Sglang1024, &cfg, &perf, &gt, &trace, 3, &ccfg);
         assert_eq!(out.records.len(), 10);
         let s = summarize(&out.records, &cfg.slo, Some(out.virtual_duration));

@@ -139,6 +139,167 @@ impl ModelSpec {
     }
 }
 
+/// Non-stationary GPU behavior regimes (off by default, so every run
+/// without an explicit regime stays bit-identical).  The simulated
+/// "silicon" applies these on top of its roofline ground truth; the
+/// offline-profiled performance model knows nothing about them — which
+/// is exactly the gap online calibration exists to close.
+///
+/// Throttling and the phantom co-tenant are COMPUTE-side effects (SM
+/// clocks drop / SM cycles are stolen; HBM bandwidth is untouched), so
+/// compute-bound prefill slows while memory-bound decode barely moves —
+/// a phase-asymmetric shift no uniform fudge factor on the frozen model
+/// could express.  The device lottery scales the whole kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftSpec {
+    /// Gradual clock throttling (thermal): effective SM clock ramps
+    /// linearly from 1.0 down to `throttle_floor` over
+    /// `throttle_ramp_s` seconds of virtual time.  `1.0` disables.
+    pub throttle_floor: f64,
+    pub throttle_ramp_s: f64,
+    /// Step-change interference from a phantom co-tenant stealing SM
+    /// cycles: from `step_at_s` on, every kernel's compute term slows
+    /// by `step_factor` (>= 1).  `f64::INFINITY` disables.
+    pub step_at_s: f64,
+    pub step_factor: f64,
+    /// Per-device lottery: one lognormal slowdown factor drawn per
+    /// simulator instance (seed-dependent), modeling silicon/bin
+    /// variation across a fleet.  Scales compute AND memory.  `0.0`
+    /// disables.
+    pub lottery_sigma: f64,
+}
+
+impl Default for DriftSpec {
+    fn default() -> Self {
+        DriftSpec::none()
+    }
+}
+
+impl DriftSpec {
+    /// The identity regime: a drift-free GPU.
+    pub fn none() -> DriftSpec {
+        DriftSpec {
+            throttle_floor: 1.0,
+            throttle_ramp_s: 60.0,
+            step_at_s: f64::INFINITY,
+            step_factor: 1.0,
+            lottery_sigma: 0.0,
+        }
+    }
+
+    /// Thermal throttling: clocks ramp down to 60% over 40 s.
+    pub fn throttle() -> DriftSpec {
+        DriftSpec {
+            throttle_floor: 0.6,
+            throttle_ramp_s: 40.0,
+            ..DriftSpec::none()
+        }
+    }
+
+    /// Phantom co-tenant: a 1.6x slowdown lands at t = 10 s.
+    pub fn step() -> DriftSpec {
+        DriftSpec {
+            step_at_s: 10.0,
+            step_factor: 1.6,
+            ..DriftSpec::none()
+        }
+    }
+
+    /// Silicon lottery: per-device lognormal speed variation.
+    pub fn lottery() -> DriftSpec {
+        DriftSpec {
+            lottery_sigma: 0.25,
+            ..DriftSpec::none()
+        }
+    }
+
+    /// Everything at once: throttling + step interference + lottery.
+    pub fn storm() -> DriftSpec {
+        DriftSpec {
+            throttle_floor: 0.65,
+            throttle_ramp_s: 40.0,
+            step_at_s: 8.0,
+            step_factor: 1.5,
+            lottery_sigma: 0.15,
+        }
+    }
+
+    /// CLI name → regime.
+    pub fn by_name(name: &str) -> Option<DriftSpec> {
+        match name {
+            "none" => Some(DriftSpec::none()),
+            "throttle" => Some(DriftSpec::throttle()),
+            "step" => Some(DriftSpec::step()),
+            "lottery" => Some(DriftSpec::lottery()),
+            "storm" => Some(DriftSpec::storm()),
+            _ => None,
+        }
+    }
+
+    /// True when every regime is disabled (the identity drift factor).
+    pub fn is_none(&self) -> bool {
+        self.throttle_floor >= 1.0
+            && (self.step_factor <= 1.0 || !self.step_at_s.is_finite())
+            && self.lottery_sigma <= 0.0
+    }
+}
+
+/// Online performance-model calibration knobs (`perf::OnlineCalibrator`).
+/// Disabled by default: the scheduler then consults the offline-profiled
+/// model bit-for-bit, exactly as before calibration existed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibrationConfig {
+    /// Master switch: ingest observation samples and blend learned
+    /// per-cell correction ratios into predictions.
+    pub enabled: bool,
+    /// Base EWMA learning rate for per-cell ratio updates.
+    pub alpha: f64,
+    /// Samples a cell needs before its ratio gets full weight; below
+    /// this the prediction blends toward the offline grid (cold cells
+    /// fall back to it entirely).
+    pub confidence_samples: u64,
+    /// Deadband: samples whose |observed/calibrated - 1| falls below
+    /// this are counted but do not move any ratio, so an accurate
+    /// offline model is left untouched.
+    pub min_abs_residual: f64,
+    /// Residual-trend window for drift detection.
+    pub drift_window: usize,
+    /// |mean signed residual| over the window that flags a drift event.
+    pub drift_threshold: f64,
+    /// Learning-rate multiplier applied for a window after detection.
+    pub drift_boost: f64,
+    /// Clamp on per-sample and per-cell ratios — calibration can never
+    /// produce a non-finite or absurd prediction.
+    pub ratio_min: f64,
+    pub ratio_max: f64,
+}
+
+impl Default for CalibrationConfig {
+    fn default() -> Self {
+        CalibrationConfig {
+            enabled: false,
+            alpha: 0.2,
+            confidence_samples: 4,
+            min_abs_residual: 0.0,
+            drift_window: 12,
+            drift_threshold: 0.2,
+            drift_boost: 4.0,
+            ratio_min: 0.2,
+            ratio_max: 8.0,
+        }
+    }
+}
+
+impl CalibrationConfig {
+    /// Calibration on, default gains.
+    pub fn on() -> CalibrationConfig {
+        CalibrationConfig {
+            enabled: true,
+            ..CalibrationConfig::default()
+        }
+    }
+}
+
 /// Latency targets for a workload (Table 2 of the paper).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SloSpec {
@@ -214,6 +375,9 @@ pub struct ServingConfig {
     /// default — single-turn workloads carry no content hashes, and off
     /// keeps every legacy run bit-identical.
     pub prefix_cache: bool,
+    /// Online performance-model calibration (disabled by default: the
+    /// scheduler consults the offline model unchanged).
+    pub calibration: CalibrationConfig,
 }
 
 impl Default for ServingConfig {
@@ -235,6 +399,7 @@ impl Default for ServingConfig {
             slo_percentile: 90.0,
             allow_sm_overlap: true,
             prefix_cache: false,
+            calibration: CalibrationConfig::default(),
         }
     }
 }
@@ -281,6 +446,9 @@ impl ServingConfig {
         }
         if let Some(x) = v.get("prefix_cache").and_then(Value::as_bool) {
             cfg.prefix_cache = x;
+        }
+        if let Some(x) = v.get("calibration").and_then(Value::as_bool) {
+            cfg.calibration.enabled = x;
         }
         cfg
     }
@@ -349,6 +517,27 @@ mod tests {
         assert!(cfg.prefix_cache);
         // untouched default
         assert_eq!(cfg.prefill_layer_group, 1);
+    }
+
+    #[test]
+    fn drift_default_is_identity() {
+        assert!(DriftSpec::default().is_none());
+        assert!(DriftSpec::by_name("none").unwrap().is_none());
+        for name in ["throttle", "step", "lottery", "storm"] {
+            let d = DriftSpec::by_name(name).unwrap();
+            assert!(!d.is_none(), "{name} must enable a regime");
+        }
+        assert!(DriftSpec::by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn calibration_default_off_and_json_toggle() {
+        let cfg = ServingConfig::default();
+        assert!(!cfg.calibration.enabled);
+        let v = json::parse(r#"{"calibration": true}"#).unwrap();
+        assert!(ServingConfig::from_json(&v).calibration.enabled);
+        let on = CalibrationConfig::on();
+        assert!(on.enabled && on.ratio_min > 0.0 && on.ratio_max.is_finite());
     }
 
     #[test]

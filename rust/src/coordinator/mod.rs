@@ -175,7 +175,7 @@ mod tests {
         let trace = crate::workload::generate_n_requests(&Dataset::sharegpt(), 12.0, 12, 4);
         let out = server.serve_cluster(
             &trace,
-            &ClusterConfig { replicas: 2, router: RouterPolicy::SloSlack },
+            &ClusterConfig { replicas: 2, router: RouterPolicy::SloSlack, ..Default::default() },
         );
         assert_eq!(out.records.len(), 12);
         assert_eq!(out.per_replica.len(), 2);

@@ -46,12 +46,22 @@ use crate::kvcache::prefix::{PrefixIndex, PrefixStats};
 use crate::kvcache::{KvPool, BLOCK_TOKENS};
 use crate::metrics::timeline::{Timeline, TimelineSample};
 use crate::metrics::RequestRecord;
+use crate::perf::{CalibrationStats, PerfPredictor};
 use crate::resource::ResourceManager;
 use crate::sched::{
     ActiveDecode, DecodeReqState, PrefillBatch, PrefillProgress, PrefillReq, SystemState,
 };
 use crate::workload::Request;
 use std::collections::BTreeMap;
+
+/// Per-request prefix bookkeeping between admission and prefill finish.
+#[derive(Debug)]
+struct PrefixMeta {
+    /// The prompt's chained per-block content hashes.
+    chain: Vec<u64>,
+    /// Leading blocks already published at chunk boundaries.
+    published: usize,
+}
 
 /// The two execution lanes of the serving core.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -74,12 +84,19 @@ pub struct EngineOutput {
     pub peak_kv_blocks: usize,
     /// Prefix-cache counters (all zero with `cfg.prefix_cache` off).
     pub prefix: PrefixStats,
+    /// Online-calibration counters (all zero / identity with
+    /// `cfg.calibration.enabled` off or a calibration-free policy).
+    pub calibration: CalibrationStats,
 }
 
 /// Run-level counters policies may bump.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct CoreStats {
     pub decode_pauses: u64,
+    /// Calibration counters, kept current by calibrating policies at
+    /// each observation (the core surfaces them in [`EngineOutput`] and
+    /// the timeline).
+    pub calib: CalibrationStats,
 }
 
 /// Core construction options (engine-agnostic subset of the old
@@ -142,6 +159,14 @@ pub trait ServingPolicy {
     fn private_backlog_tokens(&self) -> usize {
         0
     }
+
+    /// The policy's live performance predictor, if it keeps one (Bullet's
+    /// online calibrator).  Cluster routers consult this so routing sees
+    /// each replica's *calibrated* speed; `None` (the default) falls back
+    /// to the shared offline model.
+    fn predictor(&self) -> Option<&dyn PerfPredictor> {
+        None
+    }
 }
 
 /// The shared serving core (see module docs).
@@ -152,8 +177,10 @@ pub struct EngineCore {
     pub kv: KvPool,
     /// Content-addressed prefix cache (`None` ⇔ `cfg.prefix_cache` off).
     pub prefix: Option<PrefixIndex>,
-    /// Prompt hash chains of admitted-but-unfinished cacheable requests.
-    prefix_meta: BTreeMap<u64, Vec<u64>>,
+    /// Prompt hash chains of admitted-but-unfinished cacheable requests,
+    /// plus how many leading blocks chunk boundaries already published
+    /// (so each boundary publishes only its delta).
+    prefix_meta: BTreeMap<u64, PrefixMeta>,
     /// Admitted-but-not-yet-fully-prefilled requests.
     pub waiting: Vec<PrefillProgress>,
     /// The running decode batch.
@@ -167,6 +194,12 @@ pub struct EngineCore {
     trace: Vec<Request>,
     next_arrival: usize,
     inflight: [usize; 2],
+    /// Virtual time each lane last went idle→busy (the launch instant of
+    /// the in-flight kernel group) — the observation stream's clock: at
+    /// the matching drain, `now - lane_started` is the group's measured
+    /// duration, which calibrating policies feed back as a
+    /// prediction-residual sample.
+    lane_started: [f64; 2],
     record_timeline: bool,
     max_virtual_time: f64,
 }
@@ -200,6 +233,7 @@ impl EngineCore {
             trace,
             next_arrival: 0,
             inflight: [0, 0],
+            lane_started: [0.0, 0.0],
             record_timeline: opts.record_timeline,
             max_virtual_time: opts.max_virtual_time,
             cfg,
@@ -258,7 +292,24 @@ impl EngineCore {
             self.sim.submit(stream, k);
             n += 1;
         }
+        if n > 0 && self.inflight[lane as usize] == 0 {
+            self.lane_started[lane as usize] = self.sim.now();
+        }
         self.inflight[lane as usize] += n;
+    }
+
+    /// Seconds since the lane's in-flight group launched.  Read in
+    /// `on_drain` (the drain instant is the group's completion), this is
+    /// the OBSERVED duration matching the policy's prediction at launch
+    /// — the raw material of online calibration.
+    pub fn lane_busy_span(&self, lane: Lane) -> f64 {
+        self.sim.now() - self.lane_started[lane as usize]
+    }
+
+    /// Fold a calibration sample's effect into the run counters
+    /// (policies call this right after feeding their calibrator).
+    pub fn note_calibration(&mut self, stats: CalibrationStats) {
+        self.stats.calib = stats;
     }
 
     /// Move arrivals whose time has come into the waiting queue.  With
@@ -285,7 +336,8 @@ impl EngineCore {
                     cached = blocks.len() * BLOCK_TOKENS;
                     self.kv.adopt(id, &blocks).expect("prefix adopt at admission");
                 }
-                self.prefix_meta.insert(id, hashes);
+                self.prefix_meta
+                    .insert(id, PrefixMeta { chain: hashes, published: 0 });
             }
             let mut p = PrefillProgress::new(PrefillReq {
                 id,
@@ -361,9 +413,10 @@ impl EngineCore {
         if self.prefix.is_none() {
             return;
         }
-        let Some(chain) = self.prefix_meta.remove(&req.id) else {
+        let Some(meta) = self.prefix_meta.remove(&req.id) else {
             return;
         };
+        let chain = meta.chain;
         let full_blocks = (req.input_len / BLOCK_TOKENS).min(chain.len());
         let to_insert = self.kv.get(req.id).and_then(|s| {
             let nb = full_blocks.min(s.blocks.len());
@@ -372,6 +425,33 @@ impl EngineCore {
         if let Some((hashes, blocks)) = to_insert {
             let ix = self.prefix.as_mut().unwrap();
             ix.insert(&mut self.kv, &hashes, &blocks);
+        }
+    }
+
+    /// Publish the prompt blocks an IN-PROGRESS prefill has already
+    /// computed (`done` tokens) into the prefix index, so mid-prompt
+    /// arrivals sharing the prefix can hit before the prompt completes.
+    /// Chunk-budget engines call this at every chunk boundary; each call
+    /// publishes only the DELTA since the last one, and the full publish
+    /// at prefill completion is idempotent over these blocks.  No-op
+    /// with the cache off or for unique content.
+    pub fn publish_progress(&mut self, id: u64, done: usize) {
+        if self.prefix.is_none() {
+            return;
+        }
+        let Some(meta) = self.prefix_meta.get_mut(&id) else {
+            return;
+        };
+        let nb = (done / BLOCK_TOKENS).min(meta.chain.len());
+        let start = meta.published;
+        let to_insert = self.kv.get(id).and_then(|s| {
+            let nb = nb.min(s.blocks.len());
+            (nb > start).then(|| (meta.chain[start..nb].to_vec(), s.blocks[start..nb].to_vec()))
+        });
+        if let Some((hashes, blocks)) = to_insert {
+            meta.published = start + hashes.len();
+            let ix = self.prefix.as_mut().unwrap();
+            ix.insert_partial(&mut self.kv, &hashes, &blocks, start);
         }
     }
 
@@ -476,6 +556,8 @@ impl EngineCore {
             waiting: self.waiting.len(),
             compute_util: w.compute_util(&gpu),
             bandwidth_util: w.bandwidth_util(&gpu),
+            calib_samples: self.stats.calib.samples,
+            calib_residual: self.stats.calib.mean_abs_residual(),
         });
     }
 
@@ -622,6 +704,7 @@ impl EngineCore {
         let prefix = self.prefix.as_ref().map(|ix| *ix.stats()).unwrap_or_default();
         EngineOutput {
             prefix,
+            calibration: self.stats.calib,
             records: self.records,
             timeline: self.timeline,
             reconfigs: self.rm.reconfig_count(),

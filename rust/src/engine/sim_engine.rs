@@ -20,7 +20,7 @@ use crate::config::ServingConfig;
 use crate::engine::core::{CoreOptions, EngineCore, Lane, ServingPolicy};
 use crate::gpu::roofline::GroundTruth;
 use crate::model::phases::{decode_all_layers, prefill_layer_kernels, PhaseShape};
-use crate::perf::PerfModel;
+use crate::perf::{OnlineCalibrator, PerfModel, PerfPredictor};
 use crate::resource::Partition;
 use crate::sched::{Decision, PrefillBatch, PrefillReq, SloScheduler};
 use crate::workload::Request;
@@ -128,10 +128,37 @@ impl SimEngineOptions {
     }
 }
 
+/// Shape of the prefill layer group currently in flight — what the
+/// scheduler predicted against at launch, replayed against the observed
+/// duration at the drain boundary (the calibration feedback loop).
+#[derive(Debug, Clone, Copy)]
+struct PrefillLaunch {
+    sl: usize,
+    ctx: usize,
+    pm: usize,
+    contended: bool,
+    layers: usize,
+}
+
+/// Shape of the decode iteration in flight.
+#[derive(Debug, Clone, Copy)]
+struct DecodeLaunch {
+    bs: usize,
+    cl: usize,
+    dm: usize,
+    contended: bool,
+}
+
 /// Bullet's decision logic (Algorithm 1 + §3.4 resource management),
 /// expressed as a [`ServingPolicy`] over the shared serving core.
+///
+/// The scheduler consults an [`OnlineCalibrator`] (the [`PerfPredictor`]
+/// trait, never the concrete model): with `cfg.calibration.enabled` the
+/// policy feeds every lane-drain boundary back as a prediction-residual
+/// sample, closing the §3.2 loop at runtime; disabled, the calibrator is
+/// a bitwise pass-through to the offline-profiled model.
 pub struct BulletPolicy {
-    sched: SloScheduler,
+    sched: SloScheduler<OnlineCalibrator>,
     features: Features,
     /// The running prefill batch (layer-group progress is policy state;
     /// the core only sees queued and decoding requests).
@@ -139,16 +166,22 @@ pub struct BulletPolicy {
     /// Layers launched in the current group.
     group_size: usize,
     paused_decode: bool,
+    /// In-flight launch shapes, consumed at the matching drain.
+    prefill_launch: Option<PrefillLaunch>,
+    decode_launch: Option<DecodeLaunch>,
 }
 
 impl BulletPolicy {
     pub fn new(cfg: &ServingConfig, perf: &PerfModel, features: Features) -> BulletPolicy {
+        let calibrator = OnlineCalibrator::new(perf.clone(), cfg.calibration.clone());
         BulletPolicy {
-            sched: SloScheduler::new(cfg.clone(), perf.clone()),
+            sched: SloScheduler::new(cfg.clone(), calibrator),
             features,
             active_prefill: None,
             group_size: 0,
             paused_decode: false,
+            prefill_launch: None,
+            decode_launch: None,
         }
     }
 
@@ -284,6 +317,13 @@ impl BulletPolicy {
             let stream = core.rm.prefill_stream();
             core.submit(Lane::Prefill, stream, kernels);
             self.group_size = layers;
+            self.prefill_launch = Some(PrefillLaunch {
+                sl: n_tokens,
+                ctx: ctx_cached,
+                pm: core.rm.partition().prefill_sms,
+                contended: !core.decode.is_empty(),
+                layers,
+            });
         }
     }
 
@@ -303,6 +343,12 @@ impl BulletPolicy {
         let kernels = decode_all_layers(&core.cfg.model, PhaseShape { tokens: bs, context: cl });
         let stream = core.rm.decode_stream();
         core.submit(Lane::Decode, stream, kernels);
+        self.decode_launch = Some(DecodeLaunch {
+            bs,
+            cl,
+            dm: core.rm.partition().decode_sms,
+            contended: self.active_prefill.is_some(),
+        });
     }
 }
 
@@ -334,15 +380,41 @@ impl ServingPolicy for BulletPolicy {
     }
 
     fn on_drain(&mut self, lane: Lane, core: &mut EngineCore) {
+        // Close the calibration loop: the drain instant is the launched
+        // group's completion, so `lane_busy_span` is the OBSERVED
+        // duration of the shape the scheduler predicted at launch.
+        // (No-op samples when calibration is disabled.)
         match lane {
             Lane::Prefill => {
+                if let Some(l) = self.prefill_launch.take() {
+                    let observed = core.lane_busy_span(Lane::Prefill);
+                    let fed = self
+                        .sched
+                        .perf
+                        .observe_prefill(l.sl, l.ctx, l.pm, l.contended, l.layers, observed);
+                    if fed.is_some() {
+                        core.note_calibration(self.sched.perf.stats());
+                    }
+                }
                 if let Some(b) = &mut self.active_prefill {
                     b.layers_done += self.group_size;
                 }
                 // prefill group boundary wakes a paused decode.
                 self.paused_decode = false;
             }
-            Lane::Decode => core.advance_decode_token(),
+            Lane::Decode => {
+                if let Some(l) = self.decode_launch.take() {
+                    let observed = core.lane_busy_span(Lane::Decode);
+                    let fed = self
+                        .sched
+                        .perf
+                        .observe_decode(l.bs, l.cl, l.dm, l.contended, observed);
+                    if fed.is_some() {
+                        core.note_calibration(self.sched.perf.stats());
+                    }
+                }
+                core.advance_decode_token()
+            }
         }
     }
 
@@ -370,6 +442,10 @@ impl ServingPolicy for BulletPolicy {
                 b.n_tokens * left / total
             }
         }
+    }
+
+    fn predictor(&self) -> Option<&dyn PerfPredictor> {
+        Some(&self.sched.perf)
     }
 }
 
@@ -477,6 +553,41 @@ mod tests {
         let b = serve_bullet(&cfg, &perf, &gt, &trace, &SimEngineOptions::default());
         assert_eq!(a.records, b.records);
         assert_eq!(a.reconfigs, b.reconfigs);
+    }
+
+    #[test]
+    fn calibration_off_leaves_counters_at_identity() {
+        let (cfg, perf, gt) = quick_setup();
+        let trace = generate_n_requests(&Dataset::sharegpt(), 5.0, 10, 13);
+        let out = serve_bullet(&cfg, &perf, &gt, &trace, &SimEngineOptions::default());
+        assert_eq!(out.calibration.samples, 0);
+        assert_eq!(out.calibration.drift_events, 0);
+        assert_eq!(out.calibration.slowdown, 1.0);
+    }
+
+    #[test]
+    fn calibration_on_ingests_lane_drain_samples() {
+        use crate::config::CalibrationConfig;
+        let (mut cfg, perf, gt) = quick_setup();
+        cfg.calibration = CalibrationConfig::on();
+        let trace = generate_n_requests(&Dataset::sharegpt(), 5.0, 15, 13);
+        let out = serve_bullet(&cfg, &perf, &gt, &trace, &SimEngineOptions::default());
+        assert_eq!(out.records.len(), 15);
+        assert!(out.calibration.samples > 10, "{:?}", out.calibration);
+        assert!(out.calibration.slowdown.is_finite() && out.calibration.slowdown > 0.0);
+        assert!(out.calibration.mean_abs_residual().is_finite());
+    }
+
+    #[test]
+    fn calibrated_runs_are_deterministic() {
+        use crate::config::CalibrationConfig;
+        let (mut cfg, perf, gt) = quick_setup();
+        cfg.calibration = CalibrationConfig::on();
+        let trace = generate_n_requests(&Dataset::sharegpt(), 6.0, 20, 9);
+        let a = serve_bullet(&cfg, &perf, &gt, &trace, &SimEngineOptions::default());
+        let b = serve_bullet(&cfg, &perf, &gt, &trace, &SimEngineOptions::default());
+        assert_eq!(a.records, b.records);
+        assert_eq!(a.calibration, b.calibration);
     }
 
     #[test]

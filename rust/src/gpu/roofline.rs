@@ -19,7 +19,7 @@
 //! profiles of this module — mirroring the paper's analytical-model-plus-
 //! profiling methodology, and giving Fig. 15 a non-vacuous error to show.
 
-use crate::config::GpuSpec;
+use crate::config::{DriftSpec, GpuSpec};
 use crate::gpu::kernel::{KernelDesc, OpClass};
 use crate::gpu::wave::wave_slowdown;
 
@@ -50,6 +50,11 @@ pub struct GroundTruth {
     /// averages out but real deployments do not (the dominant source of
     /// the paper's ~19% estimator error).
     pub run_noise_sigma: f64,
+    /// Non-stationary regime (throttling / step interference / device
+    /// lottery).  `DriftSpec::none()` by default: the time-varying
+    /// slowdown factor is then exactly 1.0 and every run is
+    /// bit-identical to a drift-unaware simulator.
+    pub drift: DriftSpec,
 }
 
 impl GroundTruth {
@@ -58,6 +63,7 @@ impl GroundTruth {
             gpu,
             noise_sigma: 0.03,
             run_noise_sigma: 0.10,
+            drift: DriftSpec::none(),
         }
     }
 
@@ -67,7 +73,15 @@ impl GroundTruth {
             gpu,
             noise_sigma: 0.0,
             run_noise_sigma: 0.0,
+            drift: DriftSpec::none(),
         }
+    }
+
+    /// Attach a drift regime (builder style, for deployment-time GTs
+    /// that diverge from the clean GT the profiler saw).
+    pub fn with_drift(mut self, drift: DriftSpec) -> GroundTruth {
+        self.drift = drift;
+        self
     }
 
     /// Hidden per-class constants (the estimator never reads these).

@@ -103,6 +103,8 @@ pub struct Simulator {
     rng: Rng,
     /// Run-correlated slowdown factor (see GroundTruth::run_noise_sigma).
     run_noise: f64,
+    /// Per-device lottery factor (DriftSpec::lottery_sigma; 1.0 when off).
+    lottery: f64,
     completions: Vec<Completion>,
     window: UtilSample,
     total: UtilSample,
@@ -116,15 +118,58 @@ impl Simulator {
         } else {
             1.0
         };
+        // Drawn only when enabled, so a drift-free GT consumes the same
+        // rng stream as before drift regimes existed (bit-identity).
+        let lottery = if gt.drift.lottery_sigma > 0.0 {
+            rng.lognormal(0.0, gt.drift.lottery_sigma)
+        } else {
+            1.0
+        };
         Simulator {
             gt,
             clock: 0.0,
             streams: Vec::new(),
             rng,
             run_noise,
+            lottery,
             completions: Vec::new(),
             window: UtilSample::default(),
             total: UtilSample::default(),
+        }
+    }
+
+    /// Time-varying COMPUTE-side slowdown of the drift regime at virtual
+    /// time `t` (exactly 1.0 when off).  Thermal throttling lowers SM
+    /// clocks and a phantom co-tenant steals SM cycles — both stretch
+    /// the compute term while HBM bandwidth stays intact, so memory-
+    /// bound kernels (decode) barely feel what compute-bound kernels
+    /// (prefill) feel fully.  That phase asymmetry is what a frozen
+    /// uniform model cannot absorb.  Applied piecewise-constant per
+    /// event segment; [`Simulator::step`]/[`Simulator::run_for`] insert
+    /// an extra event at the step-interference boundary so the
+    /// discontinuity never lands mid-segment.
+    fn drift_compute_factor_at(&self, t: f64) -> f64 {
+        let d = &self.gt.drift;
+        let mut factor = 1.0;
+        if d.throttle_floor < 1.0 {
+            let frac = (t / d.throttle_ramp_s.max(1e-9)).clamp(0.0, 1.0);
+            let speed = 1.0 - frac * (1.0 - d.throttle_floor);
+            factor /= speed.max(1e-6);
+        }
+        if t >= d.step_at_s {
+            factor *= d.step_factor;
+        }
+        factor
+    }
+
+    /// Cap an advance so it never crosses the step-interference boundary
+    /// (the post-step rates get their own segment).
+    fn cap_at_step_boundary(&self, dt: f64) -> f64 {
+        let at = self.gt.drift.step_at_s;
+        if self.gt.drift.step_factor > 1.0 && self.clock < at && self.clock + dt > at {
+            at - self.clock
+        } else {
+            dt
         }
     }
 
@@ -308,13 +353,21 @@ impl Simulator {
         } else {
             1.0
         };
+        // Drift: throttle/co-tenant stretch the COMPUTE term only; the
+        // device lottery scales the whole kernel.  Both are exactly 1.0
+        // with drift off, so multiplication is bit-identical.
+        let drift_c = if self.gt.drift.is_none() {
+            1.0
+        } else {
+            self.drift_compute_factor_at(self.clock)
+        };
         tmp.iter()
             .zip(&demands)
             .map(|(t, &demand)| {
                 let other = (total_demand - demand).max(0.0);
                 let interference = 1.0 + GAMMA * other / self.gt.gpu.peak_bandwidth;
                 let tb = t.tb * interference / bw_scale;
-                let t_eff = (t.tc.max(tb)) * t.noise * self.run_noise;
+                let t_eff = ((t.tc * drift_c).max(tb)) * t.noise * self.run_noise * self.lottery;
                 let rate = if t_eff > 0.0 { 1.0 / t_eff } else { f64::INFINITY };
                 (
                     t.idx,
@@ -346,6 +399,7 @@ impl Simulator {
             }
         }
         assert!(dt.is_finite() && dt >= 0.0, "simulator stuck: dt={dt}");
+        let dt = self.cap_at_step_boundary(dt);
         self.advance_by(dt, &rates);
         true
     }
@@ -369,6 +423,7 @@ impl Simulator {
                     dt = dt.min(rem / rate);
                 }
             }
+            let dt = self.cap_at_step_boundary(dt);
             self.advance_by(dt, &rates);
         }
     }
@@ -589,6 +644,153 @@ mod tests {
         let d1 = done[1].end - done[1].start;
         assert!((d0 - t_full).abs() / t_full < 1e-9);
         assert!((d1 - t_half).abs() / t_half < 1e-9);
+    }
+
+    #[test]
+    fn drift_none_is_bit_identical_to_no_drift() {
+        use crate::config::DriftSpec;
+        // An explicit `none` regime must not perturb anything — not the
+        // rng stream, not the rates.
+        let gt_plain = GroundTruth::new(GpuSpec::a100());
+        let gt_none = GroundTruth::new(GpuSpec::a100()).with_drift(DriftSpec::none());
+        let mut ends = Vec::new();
+        for gt in [gt_plain, gt_none] {
+            let mut s = Simulator::new(gt, 7);
+            let st = s.create_stream(SmMask::first(108), "x");
+            for _ in 0..4 {
+                s.submit(st, gemm(1e12));
+            }
+            s.run_until_idle();
+            ends.push(s.take_completions().iter().map(|c| c.end).collect::<Vec<_>>());
+        }
+        assert_eq!(ends[0], ends[1]);
+    }
+
+    #[test]
+    fn throttle_slows_later_kernels() {
+        use crate::config::DriftSpec;
+        let drift = DriftSpec {
+            throttle_floor: 0.5,
+            throttle_ramp_s: 1.0,
+            ..DriftSpec::none()
+        };
+        let gt = GroundTruth::noiseless(GpuSpec::a100()).with_drift(drift);
+        let mut s = Simulator::new(gt, 1);
+        let st = s.create_stream(SmMask::first(108), "x");
+        let k = gemm(2e12);
+        s.submit(st, k.clone());
+        s.run_until_idle();
+        let early = s.take_completions()[0].end;
+        // push the clock past the ramp, then run the same kernel again
+        s.run_for(2.0);
+        let t0 = s.now();
+        s.submit(st, k);
+        s.run_until_idle();
+        let late = s.take_completions()[0].end - t0;
+        assert!(
+            late > early * 1.7,
+            "throttled kernel {late} not ~2x the cold one {early}"
+        );
+    }
+
+    #[test]
+    fn step_interference_lands_at_the_boundary() {
+        use crate::config::DriftSpec;
+        let drift = DriftSpec {
+            step_at_s: 0.5,
+            step_factor: 2.0,
+            ..DriftSpec::none()
+        };
+        let gt = GroundTruth::noiseless(GpuSpec::a100()).with_drift(drift);
+        let mut s = Simulator::new(gt, 1);
+        let st = s.create_stream(SmMask::first(108), "x");
+        let k = gemm(2e12);
+        let solo = s.gt.solo_time(&k, 108);
+        // before the step: unperturbed
+        s.submit(st, k.clone());
+        s.run_until_idle();
+        let pre = s.take_completions()[0].end;
+        assert!((pre - solo).abs() / solo < 1e-9, "pre-step {pre} vs {solo}");
+        // after the step: exactly 2x
+        s.run_for(1.0);
+        let t0 = s.now();
+        s.submit(st, k.clone());
+        s.run_until_idle();
+        let post = s.take_completions()[0].end - t0;
+        assert!(
+            (post - 2.0 * solo).abs() / solo < 1e-6,
+            "post-step {post} vs {}",
+            2.0 * solo
+        );
+        // a kernel SPANNING the boundary pays a blended price
+        let mut s2 = Simulator::new(
+            GroundTruth::noiseless(GpuSpec::a100()).with_drift(DriftSpec {
+                step_at_s: solo * 0.5,
+                step_factor: 2.0,
+                ..DriftSpec::none()
+            }),
+            1,
+        );
+        let st2 = s2.create_stream(SmMask::first(108), "y");
+        s2.submit(st2, k);
+        s2.run_until_idle();
+        let span = s2.take_completions()[0].end;
+        assert!(
+            span > solo * 1.2 && span < solo * 2.0,
+            "spanning kernel {span} vs solo {solo}"
+        );
+    }
+
+    #[test]
+    fn compute_drift_spares_memory_bound_kernels() {
+        use crate::config::DriftSpec;
+        // The co-tenant steals SM cycles: a memory-bound decode sweep is
+        // HBM-limited and must be (near-)immune, while a compute-bound
+        // GEMM pays the full factor — the phase asymmetry calibration
+        // exists to learn.
+        let drift = DriftSpec {
+            step_at_s: 0.0,
+            step_factor: 2.0,
+            ..DriftSpec::none()
+        };
+        let clean = GroundTruth::noiseless(GpuSpec::a100());
+        let drifted = clean.clone().with_drift(drift);
+        let run = |gt: &GroundTruth, k: &KernelDesc| {
+            let mut s = Simulator::new(gt.clone(), 1);
+            let st = s.create_stream(SmMask::first(108), "x");
+            s.submit(st, k.clone());
+            s.run_until_idle();
+            s.take_completions()[0].end
+        };
+        let mem = mem_kernel(4e9);
+        assert!(
+            (run(&drifted, &mem) - run(&clean, &mem)).abs() / run(&clean, &mem) < 1e-9,
+            "memory-bound kernel must not feel an SM co-tenant"
+        );
+        let c = gemm(2e12);
+        assert!(run(&drifted, &c) > run(&clean, &c) * 1.8);
+    }
+
+    #[test]
+    fn lottery_varies_by_seed_and_is_reproducible() {
+        use crate::config::DriftSpec;
+        let gt = GroundTruth::noiseless(GpuSpec::a100()).with_drift(DriftSpec {
+            lottery_sigma: 0.3,
+            ..DriftSpec::none()
+        });
+        let run = |seed| {
+            let mut s = Simulator::new(gt.clone(), seed);
+            let st = s.create_stream(SmMask::first(108), "x");
+            s.submit(st, gemm(1e12));
+            s.run_until_idle();
+            s.take_completions()[0].end
+        };
+        assert_eq!(run(5), run(5), "lottery must be seed-deterministic");
+        let draws: Vec<f64> = (0..8).map(run).collect();
+        let distinct = draws
+            .windows(2)
+            .any(|w| (w[0] - w[1]).abs() / w[0] > 1e-6);
+        assert!(distinct, "device lottery produced identical devices: {draws:?}");
     }
 
     #[test]

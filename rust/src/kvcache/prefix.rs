@@ -50,6 +50,12 @@ pub struct PrefixStats {
     pub dropped_adoptions: u64,
     /// Cached tokens un-adopted by the recompute path.
     pub dropped_tokens: u64,
+    /// Blocks published at CHUNK boundaries, before their prompt's
+    /// prefill completed (chunked/NanoFlow mid-prompt publication).
+    pub partial_insertions: u64,
+    /// Hits that matched at least one chunk-boundary-published block —
+    /// reuse that full-prompt-only publication would have missed.
+    pub partial_hits: u64,
 }
 
 impl PrefixStats {
@@ -88,6 +94,8 @@ impl PrefixStats {
         self.evictions += o.evictions;
         self.dropped_adoptions += o.dropped_adoptions;
         self.dropped_tokens += o.dropped_tokens;
+        self.partial_insertions += o.partial_insertions;
+        self.partial_hits += o.partial_hits;
     }
 }
 
@@ -100,6 +108,9 @@ struct CachedBlock {
     /// chain is only reachable up to its first gap, so evicting a head
     /// block would strand every cached block behind it.
     depth: u32,
+    /// Published at a chunk boundary, before its prompt finished
+    /// prefilling (provenance for the `partial_hits` counter).
+    partial: bool,
 }
 
 /// The content-hash prefix index (see module docs).
@@ -146,10 +157,12 @@ impl PrefixIndex {
         self.stats.prompt_tokens += prompt_tokens as u64;
         let max_blocks = prompt_tokens.saturating_sub(1) / BLOCK_TOKENS;
         let mut out = Vec::new();
+        let mut touched_partial = false;
         for h in chain.iter().take(max_blocks) {
             match self.map.get_mut(h) {
                 Some(cb) => {
                     cb.last_used = self.clock;
+                    touched_partial |= cb.partial;
                     out.push(cb.block);
                 }
                 None => break,
@@ -159,6 +172,9 @@ impl PrefixIndex {
             self.stats.hits += 1;
             self.stats.hit_blocks += out.len() as u64;
             self.stats.cached_tokens += (out.len() * BLOCK_TOKENS) as u64;
+            if touched_partial {
+                self.stats.partial_hits += 1;
+            }
         }
         out
     }
@@ -166,20 +182,62 @@ impl PrefixIndex {
     /// Publish a finished prefill's full prompt blocks under their chain
     /// hashes.  Blocks new to the index are pinned with an extra pool
     /// reference; hashes already present keep their existing copy (its
-    /// recency is refreshed instead).
+    /// recency is refreshed — and any chunk-boundary `partial` tag is
+    /// cleared, since from this instant full-prompt-only publication
+    /// would serve the same hits).
     pub fn insert(&mut self, pool: &mut KvPool, chain: &[u64], blocks: &[usize]) {
+        self.insert_inner(pool, chain, blocks, 0, false);
+    }
+
+    /// Publish blocks a still-running prefill has computed so far (chunk
+    /// boundaries).  `chain`/`blocks` are a DELTA starting at chain
+    /// position `depth0`, so each boundary publishes only its newly
+    /// computed blocks.  New blocks are tagged so hits they enable are
+    /// attributable (`PrefixStats::partial_hits`) until the eventual
+    /// full-prompt insert clears the tag.
+    pub fn insert_partial(
+        &mut self,
+        pool: &mut KvPool,
+        chain: &[u64],
+        blocks: &[usize],
+        depth0: usize,
+    ) {
+        self.insert_inner(pool, chain, blocks, depth0, true);
+    }
+
+    fn insert_inner(
+        &mut self,
+        pool: &mut KvPool,
+        chain: &[u64],
+        blocks: &[usize],
+        depth0: usize,
+        partial: bool,
+    ) {
         debug_assert_eq!(chain.len(), blocks.len());
         self.clock += 1;
-        for (depth, (h, &b)) in chain.iter().zip(blocks).enumerate() {
+        for (i, (h, &b)) in chain.iter().zip(blocks).enumerate() {
             match self.map.get_mut(h) {
-                Some(cb) => cb.last_used = self.clock,
+                Some(cb) => {
+                    cb.last_used = self.clock;
+                    if !partial {
+                        cb.partial = false;
+                    }
+                }
                 None => {
                     pool.incref(b);
                     self.map.insert(
                         *h,
-                        CachedBlock { block: b, last_used: self.clock, depth: depth as u32 },
+                        CachedBlock {
+                            block: b,
+                            last_used: self.clock,
+                            depth: (depth0 + i) as u32,
+                            partial,
+                        },
                     );
                     self.stats.insertions += 1;
+                    if partial {
+                        self.stats.partial_insertions += 1;
+                    }
                 }
             }
         }
@@ -342,6 +400,39 @@ mod tests {
         // and the duplicate's own blocks free normally
         pool.release(2).unwrap();
         assert!(dup_blocks.iter().all(|&b| pool.refcount(b) == 0));
+    }
+
+    #[test]
+    fn partial_publication_is_tagged_and_idempotent() {
+        let mut pool = KvPool::new(16 * BLOCK_TOKENS);
+        let mut ix = PrefixIndex::new();
+        // mid-prefill publications: blocks [0,2) then the delta [2,3)
+        pool.grow(1, 4 * BLOCK_TOKENS).unwrap();
+        let blocks = pool.get(1).unwrap().blocks.clone();
+        let full_chain = chain(&[1, 2, 3, 4]);
+        ix.insert_partial(&mut pool, &full_chain[..2], &blocks[..2], 0);
+        ix.insert_partial(&mut pool, &full_chain[2..3], &blocks[2..3], 2);
+        assert_eq!(ix.stats().partial_insertions, 3);
+        // a mid-prompt arrival hits the partial blocks — and is counted
+        let m = ix.lookup(&full_chain, 4 * BLOCK_TOKENS + 8);
+        assert_eq!(m, blocks[..3].to_vec());
+        assert_eq!(ix.stats().partial_hits, 1);
+        // the full publish at prefill completion adds only the tail and
+        // CLEARS the partial tags — later hits are served identically
+        // by full-prompt-only publication, so they are not "extra"
+        ix.insert(&mut pool, &full_chain, &blocks);
+        assert_eq!(ix.len(), 4);
+        assert_eq!(ix.stats().insertions, 4);
+        assert_eq!(ix.stats().partial_insertions, 3, "tail block is not partial");
+        let m = ix.lookup(&full_chain, 4 * BLOCK_TOKENS + 8);
+        assert_eq!(m.len(), 4);
+        assert_eq!(ix.stats().partial_hits, 1, "post-completion hits are not partial");
+        // leaf-first eviction still sees delta-published depths: the
+        // deepest block goes first, the chain head stays reachable
+        pool.release(1).unwrap();
+        assert_eq!(ix.evict_lru(&mut pool, 1), 1);
+        let m = ix.lookup(&full_chain, 4 * BLOCK_TOKENS + 8);
+        assert_eq!(m, blocks[..3].to_vec(), "head of the chain must remain reachable");
     }
 
     #[test]

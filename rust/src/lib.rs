@@ -54,6 +54,28 @@
 //! CLI (`--replicas N --router <policy>`) and
 //! `examples/cluster_scaling.rs`.
 //!
+//! **Performance modeling: offline profile → online calibration**
+//! ([`perf`]).  Prediction is consumed through the
+//! [`perf::PerfPredictor`] trait — [`sched::SloScheduler`] is generic
+//! over it and never names a concrete model.  [`perf::PerfModel`] is
+//! the frozen §3.2 offline-profiled implementation;
+//! [`perf::OnlineCalibrator`] wraps it in a closed feedback loop: the
+//! Bullet policy replays every lane-drain boundary as a
+//! `(shape, partition, observed)` sample, per-cell correction ratios
+//! EWMA-update with sample-count-gated confidence (cold cells fall
+//! back to the offline grid bit-for-bit), and a residual-trend
+//! detector widens the learning rate on regime changes.  The simulated
+//! silicon can leave the profiled regime via [`config::DriftSpec`]
+//! (thermal throttling and a phantom SM co-tenant stretch the compute
+//! term — prefill feels them fully, memory-bound decode barely — plus
+//! a per-device lottery), and cluster fleets go heterogeneous via
+//! [`cluster::ClusterConfig`]`::replica_specs`; each replica
+//! calibrates independently and the slo-slack router reads calibrated,
+//! not nominal, replica speed.  All of it is off by default
+//! (`--calibration on`, `--drift <regime>`), and
+//! `examples/online_calibration.rs` asserts the calibrated-vs-frozen
+//! win under drift.
+//!
 //! **Session & prefix reuse** ([`kvcache`], [`workload::sessions`]).
 //! The KV pool refcounts physical blocks, so sequences can share them:
 //! [`kvcache::KvPool::fork`] clones a sequence copy-on-write and

@@ -6,6 +6,7 @@
 //!                 sglang-1024|sglang-2048|nanoflow] [--profile coarse|paper]
 //!                [--seed S] [--prefix-cache on|off] [--replicas N]
 //!                [--router round-robin|least-kv|slo-slack|prefix-affinity]
+//!                [--calibration on|off] [--drift none|throttle|step|lottery|storm]
 //! bullet live    [--requests N] [--artifacts DIR]   # real model via PJRT
 //! bullet profile [--grid coarse|paper]              # offline §3.2.2 pass
 //! bullet info                                        # config + artifact info
@@ -13,11 +14,12 @@
 
 use bullet::baselines::{run_system_output, System};
 use bullet::cluster::{serve_cluster, ClusterConfig, RouterPolicy};
-use bullet::config::{ServingConfig, SloSpec};
+use bullet::config::{CalibrationConfig, DriftSpec, ServingConfig, SloSpec};
 use bullet::coordinator::{BuildOptions, BulletServer, Tokenizer};
 use bullet::engine::live_engine::{serve_live, LiveRequest};
 use bullet::kvcache::prefix::PrefixStats;
 use bullet::metrics::{summarize, RunSummary};
+use bullet::perf::CalibrationStats;
 use bullet::runtime::{ModelMeta, ModelRuntime};
 use bullet::util::cli::Args;
 use bullet::util::tbl::{f, ms, Table};
@@ -52,7 +54,12 @@ serve flags:  --system bullet|vllm-1024|sglang-1024|sglang-2048|nanoflow
               --prefix-cache on|off   (shared-prefix KV reuse; pairs with
                                        --workload conversational)
               --replicas N
-              --router round-robin|least-kv|slo-slack|prefix-affinity";
+              --router round-robin|least-kv|slo-slack|prefix-affinity
+              --calibration on|off    (live perf-model feedback; pairs
+                                       with --drift)
+              --drift none|throttle|step|lottery|storm
+                                      (non-stationary GPU regime the
+                                       offline profile cannot see)";
 
 /// The metric rows every serve table shares (single-GPU and cluster).
 fn summary_rows(t: &mut Table, s: &RunSummary) {
@@ -74,6 +81,17 @@ fn prefix_rows(t: &mut Table, ps: &PrefixStats) {
     ]);
     t.row(&["prefill tokens saved".to_string(), ps.tokens_saved().to_string()]);
     t.row(&["prefix evictions".to_string(), ps.evictions.to_string()]);
+}
+
+/// Calibration rows appended to serve tables when calibration is on.
+fn calibration_rows(t: &mut Table, cs: &CalibrationStats) {
+    t.row(&["calib samples".to_string(), cs.samples.to_string()]);
+    t.row(&[
+        "calib mean |residual|".to_string(),
+        f(cs.mean_abs_residual() * 100.0, 1) + "%",
+    ]);
+    t.row(&["calib drift events".to_string(), cs.drift_events.to_string()]);
+    t.row(&["calibrated slowdown".to_string(), f(cs.slowdown, 3) + "x"]);
 }
 
 fn workload_slo(name: &str) -> SloSpec {
@@ -102,9 +120,23 @@ fn serve(args: &Args) {
             std::process::exit(2);
         }
     };
+    let calibration = match args.get_or("calibration", "off") {
+        "on" => CalibrationConfig::on(),
+        "off" => CalibrationConfig::default(),
+        other => {
+            eprintln!("unknown --calibration '{other}' (use on|off)");
+            std::process::exit(2);
+        }
+    };
+    let drift_name = args.get_or("drift", "none").to_string();
+    let drift = DriftSpec::by_name(&drift_name).unwrap_or_else(|| {
+        eprintln!("unknown --drift '{drift_name}' (use none|throttle|step|lottery|storm)");
+        std::process::exit(2);
+    });
     let cfg = ServingConfig {
         slo: workload_slo(&name),
         prefix_cache,
+        calibration,
         ..ServingConfig::default()
     };
 
@@ -127,6 +159,10 @@ fn serve(args: &Args) {
         std::process::exit(2);
     });
 
+    // The offline profile runs on the CLEAN ground truth (that is the
+    // point); the drift regime applies only to the serving-time GPU.
+    let gt = server.ground_truth().clone().with_drift(drift.clone());
+
     if replicas > 1 {
         eprintln!(
             "serving {} requests of {} at {} req/s with {} on {} replicas ({})...",
@@ -137,18 +173,10 @@ fn serve(args: &Args) {
             replicas,
             router.label()
         );
-        let ccfg = ClusterConfig { replicas, router };
+        let ccfg = ClusterConfig { replicas, router, ..Default::default() };
         // direct call so --seed drives the replica simulators, exactly
         // like the single-replica path below
-        let out = serve_cluster(
-            sys,
-            &cfg,
-            server.perf(),
-            server.ground_truth(),
-            &trace,
-            seed,
-            &ccfg,
-        );
+        let out = serve_cluster(sys, &cfg, server.perf(), &gt, &trace, seed, &ccfg);
         let s = summarize(&out.records, &cfg.slo, Some(out.virtual_duration));
         let mut t = Table::new(&format!(
             "{} x{} ({}) on {} @ {} req/s",
@@ -168,12 +196,29 @@ fn serve(args: &Args) {
         if cfg.prefix_cache {
             prefix_rows(&mut t, &out.prefix_stats());
         }
+        if !drift.is_none() {
+            t.row(&["drift regime".to_string(), drift_name.clone()]);
+        }
+        if cfg.calibration.enabled {
+            calibration_rows(&mut t, &out.calibration_stats());
+            // per-replica learned speeds: the heterogeneity fingerprint
+            // (device lottery gives each replica its own silicon)
+            let slowdowns: Vec<String> = out
+                .calibrated_slowdowns()
+                .iter()
+                .map(|x| f(*x, 2))
+                .collect();
+            t.row(&[
+                "per-replica slowdown".to_string(),
+                format!("[{}]", slowdowns.join(", ")),
+            ]);
+        }
         t.print();
         return;
     }
 
     eprintln!("serving {} requests of {} at {} req/s with {}...", n, name, rate, sys.label());
-    let out = run_system_output(sys, &cfg, server.perf(), server.ground_truth(), &trace, seed);
+    let out = run_system_output(sys, &cfg, server.perf(), &gt, &trace, seed);
     let s = summarize(&out.records, &cfg.slo, None);
 
     let mut t = Table::new(&format!("{} on {} @ {} req/s", sys.label(), name, rate))
@@ -181,6 +226,12 @@ fn serve(args: &Args) {
     summary_rows(&mut t, &s);
     if cfg.prefix_cache {
         prefix_rows(&mut t, &out.prefix);
+    }
+    if !drift.is_none() {
+        t.row(&["drift regime".to_string(), drift_name.clone()]);
+    }
+    if cfg.calibration.enabled {
+        calibration_rows(&mut t, &out.calibration);
     }
     t.print();
 }

@@ -20,6 +20,12 @@ pub struct TimelineSample {
     pub compute_util: f64,
     /// Bandwidth utilization over the last window.
     pub bandwidth_util: f64,
+    /// Online-calibration samples ingested so far (0 with calibration
+    /// off — the counters ride the timeline so drift adaptation can be
+    /// plotted against the partition trace).
+    pub calib_samples: u64,
+    /// Mean |predicted-observed|/predicted residual so far.
+    pub calib_residual: f64,
 }
 
 /// Append-only timeline.
@@ -109,6 +115,8 @@ mod tests {
             waiting,
             compute_util: 0.0,
             bandwidth_util: 0.0,
+            calib_samples: 0,
+            calib_residual: 0.0,
         }
     }
 

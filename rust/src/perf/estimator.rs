@@ -5,6 +5,7 @@ use crate::gpu::kernel::KernelDesc;
 use crate::gpu::wave::wave_slowdown;
 use crate::model::phases::{decode_layer_kernels, prefill_layer_kernels, PhaseShape};
 use crate::perf::grid::{Grid2, Grid3};
+use crate::perf::PerfPredictor;
 
 /// Analytical ceilings the estimator *assumes* before profiling (Eq. 2's
 /// C and B with a generic achieved-fraction guess).  Profiling ratios
@@ -115,6 +116,29 @@ impl PerfModel {
         } else {
             base
         }
+    }
+}
+
+/// The frozen offline model IS a predictor (identity wiring — the
+/// inherent methods above are the implementation).
+impl PerfPredictor for PerfModel {
+    fn predict_prefill_layer(&self, sl: usize, ctx: usize, pm: usize, contended: bool) -> f64 {
+        PerfModel::predict_prefill_layer(self, sl, ctx, pm, contended)
+    }
+
+    fn predict_decode_step(&self, bs: usize, cl: usize, dm: usize, contended: bool) -> f64 {
+        PerfModel::predict_decode_step(self, bs, cl, dm, contended)
+    }
+
+    fn predict_prefill_remaining(
+        &self,
+        sl: usize,
+        ctx: usize,
+        pm: usize,
+        layers_left: usize,
+        contended: bool,
+    ) -> f64 {
+        PerfModel::predict_prefill_remaining(self, sl, ctx, pm, layers_left, contended)
     }
 }
 

@@ -2,6 +2,12 @@
 
 /// Locate `x` on a sorted axis: returns (i, frac) such that the value is
 /// between axis[i] and axis[i+1] at fraction `frac` (clamped at the ends).
+///
+/// Binary search (`partition_point`): this sits on the scheduler's
+/// candidate-partition probe path, which interpolates the correction
+/// grids once per candidate per cycle — O(log n) instead of a linear
+/// scan keeps wide profiled axes (paper-fidelity grids, 16+ knots; see
+/// the perf hot-path bench's wide-axis case) off the decision budget.
 fn locate(axis: &[f64], x: f64) -> (usize, f64) {
     assert!(!axis.is_empty());
     if axis.len() == 1 || x <= axis[0] {
@@ -11,10 +17,10 @@ fn locate(axis: &[f64], x: f64) -> (usize, f64) {
     if x >= axis[last] {
         return (last - 1, 1.0);
     }
-    let mut i = 0;
-    while i + 1 < axis.len() && axis[i + 1] < x {
-        i += 1;
-    }
+    // interior: axis[0] < x < axis[last].  The cell index is the number
+    // of interior knots strictly below x — identical to the old linear
+    // scan, found in O(log n).
+    let i = axis[1..].partition_point(|&v| v < x);
     let span = axis[i + 1] - axis[i];
     let frac = if span <= 0.0 { 0.0 } else { (x - axis[i]) / span };
     (i, frac)
@@ -169,5 +175,37 @@ mod tests {
     fn single_point_axis() {
         let g = Grid2::new(vec![5.0], vec![1.0, 2.0], 7.0);
         assert_eq!(g.interp(100.0, 1.5), 7.0);
+    }
+
+    #[test]
+    fn locate_binary_search_matches_linear_scan() {
+        // the pre-optimization reference implementation
+        fn locate_linear(axis: &[f64], x: f64) -> (usize, f64) {
+            if axis.len() == 1 || x <= axis[0] {
+                return (0, 0.0);
+            }
+            let last = axis.len() - 1;
+            if x >= axis[last] {
+                return (last - 1, 1.0);
+            }
+            let mut i = 0;
+            while i + 1 < axis.len() && axis[i + 1] < x {
+                i += 1;
+            }
+            let span = axis[i + 1] - axis[i];
+            let frac = if span <= 0.0 { 0.0 } else { (x - axis[i]) / span };
+            (i, frac)
+        }
+        // irregular wide axis, probes on knots, between knots, outside
+        let axis: Vec<f64> = (0..64).map(|i| (i * i) as f64 * 0.5 + i as f64).collect();
+        let mut probes: Vec<f64> = axis.clone();
+        probes.extend(axis.windows(2).map(|w| 0.3 * w[0] + 0.7 * w[1]));
+        probes.extend([-5.0, 1e9]);
+        for x in probes {
+            let (ia, fa) = locate(&axis, x);
+            let (ib, fb) = locate_linear(&axis, x);
+            assert_eq!(ia, ib, "index mismatch at x={x}");
+            assert_eq!(fa.to_bits(), fb.to_bits(), "frac mismatch at x={x}");
+        }
     }
 }

@@ -1,4 +1,5 @@
-//! Performance estimator (§3.2): a profile-augmented analytical model.
+//! Performance estimator (§3.2): a profile-augmented analytical model,
+//! optionally wrapped in a live calibration loop.
 //!
 //! The analytical core is Eq. 2 — roofline with linear SM scaling and the
 //! wave-quantization correction of Eq. 1.  Because the real hardware
@@ -8,10 +9,55 @@
 //! (§3.2.2) measures a grid of configurations and the estimator stores
 //! measured/analytic *ratios*, interpolated at prediction time, plus
 //! fitted contention decay factors `p_c`/`p_b`.
+//!
+//! Prediction is consumed through the [`PerfPredictor`] trait: the
+//! scheduler and routers never name the concrete model.  [`PerfModel`]
+//! is the frozen offline-profiled implementation;
+//! [`online::OnlineCalibrator`] wraps it in a closed feedback loop that
+//! ingests `(shape, partition, predicted, observed)` samples from the
+//! serving engine and EWMA-corrects per-cell ratios at runtime —
+//! covering what offline profiling cannot see (clock drift, co-tenant
+//! interference, per-device variation, regime changes).
 
 pub mod estimator;
 pub mod grid;
+pub mod online;
 pub mod profiler;
 
 pub use estimator::PerfModel;
+pub use online::{CalibrationStats, OnlineCalibrator};
 pub use profiler::{profile, ProfileSpec};
+
+/// The prediction interface the scheduler and cluster routers consume
+/// (§3.2's estimator role).  Implementations: the frozen offline
+/// [`PerfModel`] and the feedback-driven [`OnlineCalibrator`].
+pub trait PerfPredictor {
+    /// Predicted time of one prefill LAYER over `sl` chunk tokens on
+    /// `ctx` cached context with `pm` SMs.  `contended` = a decode step
+    /// co-runs.
+    fn predict_prefill_layer(&self, sl: usize, ctx: usize, pm: usize, contended: bool) -> f64;
+
+    /// Predicted time of one decode ITERATION (all layers) of batch `bs`
+    /// at mean context `cl` on `dm` SMs.
+    fn predict_decode_step(&self, bs: usize, cl: usize, dm: usize, contended: bool) -> f64;
+
+    /// Predicted remaining prefill time for `layers_left` layers.
+    fn predict_prefill_remaining(
+        &self,
+        sl: usize,
+        ctx: usize,
+        pm: usize,
+        layers_left: usize,
+        contended: bool,
+    ) -> f64 {
+        self.predict_prefill_layer(sl, ctx, pm, contended) * layers_left as f64
+    }
+
+    /// Learned observed-vs-nominal slowdown of the device this predictor
+    /// serves (sample-weighted; 1.0 for an uncalibrated model).  Cluster
+    /// routers use this to rank heterogeneous replicas by *calibrated*
+    /// speed rather than the shared offline grid.
+    fn calibrated_slowdown(&self) -> f64 {
+        1.0
+    }
+}

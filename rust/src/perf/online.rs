@@ -1,0 +1,452 @@
+//! Online calibration (the live half of §3.2): wrap the offline-profiled
+//! [`PerfModel`] in a closed feedback loop.
+//!
+//! Offline profiling fits correction ratios once, before deployment.
+//! Anything the profiled regime did not cover — thermal throttling,
+//! co-tenant interference, per-device silicon variation, or simply a
+//! replica whose GPU differs from the profiled one — leaves a persistent
+//! predicted-vs-observed gap that the SLO scheduler then converts into
+//! mis-partitioned SMs.  The [`OnlineCalibrator`] closes the loop:
+//!
+//! - the serving engine feeds every lane-drain boundary back as a
+//!   `(shape, partition, observed)` sample ([`OnlineCalibrator::observe_prefill`] /
+//!   [`OnlineCalibrator::observe_decode`]);
+//! - samples EWMA-update a per-cell correction ratio, where a cell is a
+//!   coarse bucket over (phase, size, context, SM share) — coarse enough
+//!   to accumulate confidence quickly, fine enough to keep the learned
+//!   ratio shape-local;
+//! - predictions blend the learned ratio in proportion to the cell's
+//!   sample count (confidence gating): cold cells fall back to the
+//!   offline grid bit-for-bit, so an idle or disabled calibrator is
+//!   exactly the frozen model;
+//! - a residual-trend detector widens the learning rate when the signed
+//!   residual drifts (regime change), then relaxes back;
+//! - every ratio is clamped into a finite band, so calibration can never
+//!   emit a non-finite or absurd prediction no matter what it observes.
+//!
+//! Determinism: `BTreeMap` cells and pure-arithmetic updates — a
+//! calibrated run is a pure function of the observation sequence.
+
+use crate::config::CalibrationConfig;
+use crate::perf::estimator::PerfModel;
+use crate::perf::PerfPredictor;
+use std::collections::{BTreeMap, VecDeque};
+
+/// Run-level calibration counters (surfaced in `EngineOutput` and the
+/// CLI tables; merged cluster-wide like `PrefixStats`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CalibrationStats {
+    /// Observation samples ingested.
+    pub samples: u64,
+    /// Sum of |observed - predicted| / predicted over all samples
+    /// (predicted = the calibrated prediction at observation time).
+    pub abs_residual_sum: f64,
+    /// Drift events flagged by the residual-trend detector.
+    pub drift_events: u64,
+    /// Learned observed/nominal slowdown (EWMA over sample ratios;
+    /// 1.0 until samples arrive).
+    pub slowdown: f64,
+}
+
+impl Default for CalibrationStats {
+    fn default() -> Self {
+        CalibrationStats {
+            samples: 0,
+            abs_residual_sum: 0.0,
+            drift_events: 0,
+            slowdown: 1.0,
+        }
+    }
+}
+
+impl CalibrationStats {
+    /// Mean |residual| per sample (0 before any sample).
+    pub fn mean_abs_residual(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.abs_residual_sum / self.samples as f64
+        }
+    }
+
+    /// Field-wise accumulate (cluster-level aggregation); `slowdown`
+    /// merges sample-weighted.
+    pub fn merge(&mut self, o: &CalibrationStats) {
+        let total = self.samples + o.samples;
+        if total > 0 {
+            self.slowdown = (self.slowdown * self.samples as f64
+                + o.slowdown * o.samples as f64)
+                / total as f64;
+        }
+        self.samples = total;
+        self.abs_residual_sum += o.abs_residual_sum;
+        self.drift_events += o.drift_events;
+    }
+}
+
+/// One sample's effect, reported back to the caller (the engine bumps
+/// its run counters from this).
+#[derive(Debug, Clone, Copy)]
+pub struct SampleOutcome {
+    /// |observed - calibrated| / calibrated for this sample.
+    pub abs_residual: f64,
+    /// The residual-trend detector fired on this sample.
+    pub drift: bool,
+}
+
+/// Correction-cell key: coarse bucket over (phase, size, context, SMs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct CellKey {
+    /// 0 = prefill layer, 1 = decode iteration.
+    phase: u8,
+    /// log2 bucket of the size axis (prefill tokens / decode batch).
+    size: u8,
+    /// log2 bucket of the context axis.
+    ctx: u8,
+    /// SM share bucket (12-SM granularity).
+    sms: u8,
+}
+
+fn log2_bucket(x: usize) -> u8 {
+    (usize::BITS - x.max(1).leading_zeros()) as u8
+}
+
+impl CellKey {
+    fn prefill(sl: usize, ctx: usize, pm: usize) -> CellKey {
+        CellKey {
+            phase: 0,
+            size: log2_bucket(sl),
+            ctx: log2_bucket(ctx + 1),
+            sms: (pm / 12) as u8,
+        }
+    }
+
+    fn decode(bs: usize, cl: usize, dm: usize) -> CellKey {
+        CellKey {
+            phase: 1,
+            size: log2_bucket(bs),
+            ctx: log2_bucket(cl),
+            sms: (dm / 12) as u8,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Cell {
+    /// EWMA of observed/offline-predicted ratios for this bucket.
+    ratio: f64,
+    samples: u64,
+}
+
+/// The feedback-calibrated predictor (see module docs).
+#[derive(Debug, Clone)]
+pub struct OnlineCalibrator {
+    inner: PerfModel,
+    cfg: CalibrationConfig,
+    cells: BTreeMap<CellKey, Cell>,
+    /// Recent signed relative residuals vs the CALIBRATED prediction.
+    window: VecDeque<f64>,
+    /// Boosted-learning-rate updates remaining after a drift event.
+    boost_left: u32,
+    stats: CalibrationStats,
+}
+
+impl OnlineCalibrator {
+    pub fn new(inner: PerfModel, cfg: CalibrationConfig) -> OnlineCalibrator {
+        OnlineCalibrator {
+            inner,
+            cfg,
+            cells: BTreeMap::new(),
+            window: VecDeque::new(),
+            boost_left: 0,
+            stats: CalibrationStats::default(),
+        }
+    }
+
+    /// The wrapped offline model.
+    pub fn offline(&self) -> &PerfModel {
+        &self.inner
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    pub fn stats(&self) -> CalibrationStats {
+        self.stats
+    }
+
+    /// Correction cells holding at least one sample.
+    pub fn warm_cells(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Blend a base (offline) prediction with a cell's learned ratio.
+    /// Cold or absent cells return `base` UNCHANGED (bitwise): with the
+    /// calibrator disabled or unobserved, prediction is the frozen model.
+    fn blend(&self, key: &CellKey, base: f64) -> f64 {
+        if !self.cfg.enabled {
+            return base;
+        }
+        let Some(cell) = self.cells.get(key) else {
+            return base;
+        };
+        let w = (cell.samples as f64 / self.cfg.confidence_samples.max(1) as f64).min(1.0);
+        base * (1.0 + w * (cell.ratio - 1.0))
+    }
+
+    fn clamp_ratio(&self, r: f64) -> f64 {
+        if r.is_finite() {
+            r.clamp(self.cfg.ratio_min, self.cfg.ratio_max)
+        } else {
+            1.0
+        }
+    }
+
+    /// Shared sample path: `base` = the offline prediction for the
+    /// observed shape, `calibrated` = our current prediction for it.
+    fn ingest(
+        &mut self,
+        key: CellKey,
+        base: f64,
+        calibrated: f64,
+        observed: f64,
+    ) -> Option<SampleOutcome> {
+        if !self.cfg.enabled
+            || !observed.is_finite()
+            || observed <= 0.0
+            || !base.is_finite()
+            || base <= 0.0
+        {
+            return None;
+        }
+        let residual = (observed - calibrated) / calibrated.max(1e-12);
+        let sample_ratio = self.clamp_ratio(observed / base);
+
+        self.stats.samples += 1;
+        self.stats.abs_residual_sum += residual.abs();
+        // slow EWMA over raw sample ratios = the device's learned slowdown
+        self.stats.slowdown += 0.1 * (sample_ratio - self.stats.slowdown);
+
+        // Drift detection on the signed residual trend.
+        let mut drift = false;
+        self.window.push_back(residual);
+        if self.window.len() >= self.cfg.drift_window.max(1) {
+            let mean: f64 = self.window.iter().sum::<f64>() / self.window.len() as f64;
+            if mean.abs() > self.cfg.drift_threshold {
+                drift = true;
+                self.stats.drift_events += 1;
+                self.boost_left = self.cfg.drift_window.max(1) as u32;
+            }
+            self.window.clear();
+        }
+
+        // Deadband: an in-tolerance sample confirms the current model —
+        // leave every ratio untouched (cold cells stay bitwise-frozen).
+        if residual.abs() >= self.cfg.min_abs_residual {
+            let mut alpha = self.cfg.alpha;
+            if self.boost_left > 0 {
+                alpha = (alpha * self.cfg.drift_boost).min(1.0);
+                self.boost_left -= 1;
+            }
+            let ratio_min = self.cfg.ratio_min;
+            let ratio_max = self.cfg.ratio_max;
+            let cell = self.cells.entry(key).or_insert(Cell { ratio: 1.0, samples: 0 });
+            cell.ratio += alpha * (sample_ratio - cell.ratio);
+            cell.ratio = cell.ratio.clamp(ratio_min, ratio_max);
+            cell.samples += 1;
+        }
+
+        Some(SampleOutcome {
+            abs_residual: residual.abs(),
+            drift,
+        })
+    }
+
+    /// Feed one observed prefill group: `layers` layers of shape
+    /// `(sl, ctx)` ran on `pm` SMs and took `observed` seconds total.
+    pub fn observe_prefill(
+        &mut self,
+        sl: usize,
+        ctx: usize,
+        pm: usize,
+        contended: bool,
+        layers: usize,
+        observed: f64,
+    ) -> Option<SampleOutcome> {
+        let per_layer = observed / layers.max(1) as f64;
+        let base = PerfModel::predict_prefill_layer(&self.inner, sl, ctx, pm, contended);
+        let calibrated = PerfPredictor::predict_prefill_layer(self, sl, ctx, pm, contended);
+        self.ingest(CellKey::prefill(sl, ctx, pm), base, calibrated, per_layer)
+    }
+
+    /// Feed one observed decode iteration (all layers).
+    pub fn observe_decode(
+        &mut self,
+        bs: usize,
+        cl: usize,
+        dm: usize,
+        contended: bool,
+        observed: f64,
+    ) -> Option<SampleOutcome> {
+        let base = PerfModel::predict_decode_step(&self.inner, bs, cl, dm, contended);
+        let calibrated = PerfPredictor::predict_decode_step(self, bs, cl, dm, contended);
+        self.ingest(CellKey::decode(bs, cl, dm), base, calibrated, observed)
+    }
+}
+
+impl PerfPredictor for OnlineCalibrator {
+    fn predict_prefill_layer(&self, sl: usize, ctx: usize, pm: usize, contended: bool) -> f64 {
+        let base = PerfModel::predict_prefill_layer(&self.inner, sl, ctx, pm, contended);
+        self.blend(&CellKey::prefill(sl, ctx, pm), base)
+    }
+
+    fn predict_decode_step(&self, bs: usize, cl: usize, dm: usize, contended: bool) -> f64 {
+        let base = PerfModel::predict_decode_step(&self.inner, bs, cl, dm, contended);
+        self.blend(&CellKey::decode(bs, cl, dm), base)
+    }
+
+    fn calibrated_slowdown(&self) -> f64 {
+        self.stats.slowdown
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CalibrationConfig, GpuSpec, ModelSpec};
+
+    fn calibrator(cfg: CalibrationConfig) -> OnlineCalibrator {
+        let inner = PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b());
+        OnlineCalibrator::new(inner, cfg)
+    }
+
+    #[test]
+    fn disabled_calibrator_is_bitwise_passthrough() {
+        let mut c = calibrator(CalibrationConfig::default());
+        let inner = c.offline().clone();
+        // even after (ignored) observations
+        assert!(c.observe_prefill(2048, 0, 54, true, 4, 1.0).is_none());
+        for (sl, pm) in [(128usize, 24usize), (2048, 54), (8192, 108)] {
+            let a = PerfPredictor::predict_prefill_layer(&c, sl, 0, pm, true);
+            let b = PerfModel::predict_prefill_layer(&inner, sl, 0, pm, true);
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let a = PerfPredictor::predict_decode_step(&c, 64, 2048, 54, false);
+        let b = PerfModel::predict_decode_step(&inner, 64, 2048, 54, false);
+        assert_eq!(a.to_bits(), b.to_bits());
+        assert_eq!(c.stats().samples, 0);
+    }
+
+    #[test]
+    fn cold_cells_fall_back_to_offline_grid() {
+        let mut c = calibrator(CalibrationConfig::on());
+        let base = PerfPredictor::predict_prefill_layer(&c, 1024, 0, 54, false);
+        // teach a DECODE cell; prefill cells stay cold
+        let obs = PerfModel::predict_decode_step(c.offline(), 32, 1024, 54, false) * 2.0;
+        c.observe_decode(32, 1024, 54, false, obs);
+        let after = PerfPredictor::predict_prefill_layer(&c, 1024, 0, 54, false);
+        assert_eq!(base.to_bits(), after.to_bits(), "cold cell must pass through");
+    }
+
+    #[test]
+    fn converges_to_constant_bias() {
+        let mut c = calibrator(CalibrationConfig::on());
+        let base = PerfModel::predict_prefill_layer(c.offline(), 2048, 0, 54, true);
+        for _ in 0..40 {
+            c.observe_prefill(2048, 0, 54, true, 1, base * 1.5);
+        }
+        let p = PerfPredictor::predict_prefill_layer(&c, 2048, 0, 54, true);
+        let learned = p / base;
+        assert!(
+            (learned - 1.5).abs() < 0.08,
+            "learned ratio {learned} should approach 1.5"
+        );
+        assert!(c.calibrated_slowdown() > 1.2);
+        assert!(c.stats().samples == 40);
+    }
+
+    #[test]
+    fn deadband_keeps_accurate_models_frozen() {
+        let mut c = calibrator(CalibrationConfig {
+            min_abs_residual: 0.1,
+            ..CalibrationConfig::on()
+        });
+        let base = PerfModel::predict_decode_step(c.offline(), 64, 2048, 54, true);
+        for _ in 0..20 {
+            c.observe_decode(64, 2048, 54, true, base * 1.03); // within tolerance
+        }
+        assert_eq!(c.warm_cells(), 0, "in-tolerance samples must not open cells");
+        let p = PerfPredictor::predict_decode_step(&c, 64, 2048, 54, true);
+        assert_eq!(p.to_bits(), base.to_bits());
+        assert_eq!(c.stats().samples, 20, "samples still counted");
+    }
+
+    #[test]
+    fn drift_detector_fires_and_boosts_adaptation() {
+        let cfg = CalibrationConfig {
+            alpha: 0.05,
+            drift_window: 5,
+            drift_threshold: 0.2,
+            drift_boost: 8.0,
+            ..CalibrationConfig::on()
+        };
+        let mut slow = calibrator(cfg.clone());
+        let mut fast = calibrator(cfg);
+        fast.cfg.drift_boost = 1.0; // detector on, boost off
+        let base = PerfModel::predict_prefill_layer(slow.offline(), 4096, 0, 72, true);
+        for _ in 0..10 {
+            slow.observe_prefill(4096, 0, 72, true, 1, base * 2.0);
+            fast.observe_prefill(4096, 0, 72, true, 1, base * 2.0);
+        }
+        assert!(slow.stats().drift_events >= 1, "trend must flag drift");
+        let p_boost = PerfPredictor::predict_prefill_layer(&slow, 4096, 0, 72, true);
+        let p_plain = PerfPredictor::predict_prefill_layer(&fast, 4096, 0, 72, true);
+        assert!(
+            p_boost > p_plain,
+            "boosted learning must converge faster: {p_boost} vs {p_plain}"
+        );
+    }
+
+    #[test]
+    fn never_produces_non_finite_predictions() {
+        let mut c = calibrator(CalibrationConfig::on());
+        // hostile observations: zero, negative, inf, nan, absurd
+        for obs in [0.0, -1.0, f64::INFINITY, f64::NAN, 1e30, 1e-30] {
+            c.observe_prefill(1024, 0, 54, true, 1, obs);
+            c.observe_decode(16, 512, 24, false, obs);
+        }
+        for (sl, pm) in [(1usize, 2usize), (1024, 54), (16384, 108)] {
+            let p = PerfPredictor::predict_prefill_layer(&c, sl, 0, pm, true);
+            assert!(p.is_finite() && p >= 0.0, "prefill pred {p}");
+        }
+        let p = PerfPredictor::predict_decode_step(&c, 16, 512, 24, false);
+        assert!(p.is_finite() && p > 0.0, "decode pred {p}");
+    }
+
+    #[test]
+    fn stats_merge_is_sample_weighted() {
+        let mut a = CalibrationStats {
+            samples: 10,
+            abs_residual_sum: 1.0,
+            drift_events: 1,
+            slowdown: 1.0,
+        };
+        let b = CalibrationStats {
+            samples: 30,
+            abs_residual_sum: 3.0,
+            drift_events: 2,
+            slowdown: 2.0,
+        };
+        a.merge(&b);
+        assert_eq!(a.samples, 40);
+        assert_eq!(a.drift_events, 3);
+        assert!((a.slowdown - 1.75).abs() < 1e-12);
+        assert!((a.mean_abs_residual() - 0.1).abs() < 1e-12);
+        // merging an empty default is a no-op
+        let mut c = CalibrationStats::default();
+        c.merge(&CalibrationStats::default());
+        assert_eq!(c.samples, 0);
+        assert_eq!(c.slowdown, 1.0);
+    }
+}

@@ -14,7 +14,7 @@
 //!   cannot rescue TTFT while TPOT has slack (§3.3.3).
 
 use crate::config::ServingConfig;
-use crate::perf::PerfModel;
+use crate::perf::{PerfModel, PerfPredictor};
 use crate::resource::Partition;
 use crate::sched::state::SystemState;
 use crate::util::stats;
@@ -27,14 +27,18 @@ pub struct Decision {
     pub pause_decode: bool,
 }
 
-/// The SLO-aware scheduler.
-pub struct SloScheduler {
+/// The SLO-aware scheduler.  Generic over the prediction source: the
+/// frozen offline [`PerfModel`] (the default, and the pre-calibration
+/// behavior) or any other [`PerfPredictor`] such as the feedback-driven
+/// [`crate::perf::OnlineCalibrator`] — Algorithm 1 consults the trait,
+/// never the concrete model.
+pub struct SloScheduler<P: PerfPredictor = PerfModel> {
     pub cfg: ServingConfig,
-    pub perf: PerfModel,
+    pub perf: P,
 }
 
-impl SloScheduler {
-    pub fn new(cfg: ServingConfig, perf: PerfModel) -> SloScheduler {
+impl<P: PerfPredictor> SloScheduler<P> {
+    pub fn new(cfg: ServingConfig, perf: P) -> SloScheduler<P> {
         SloScheduler { cfg, perf }
     }
 
@@ -62,8 +66,17 @@ impl SloScheduler {
     fn ttft_ratio_p90(&self, st: &SystemState, pm: usize, contended: bool) -> f64 {
         let (rem, per_token_layer) = match &st.prefill {
             None => (0.0, {
-                // no active batch: derive the rate from a reference size
-                let r = 2048usize;
+                // No active batch: derive the per-token rate from the
+                // head of the waiting queue (its uncached suffix is what
+                // will actually run next).  A fixed 2048-token reference
+                // mis-prices short-prompt workloads — attention cost is
+                // quadratic in sl while wave-quantization penalties fall
+                // with it, so no single reference size fits both ends.
+                let r = st
+                    .waiting
+                    .first()
+                    .map(|w| (w.input_len - w.cached_len).max(1))
+                    .unwrap_or(2048);
                 self.perf.predict_prefill_layer(r, 0, pm, contended) / r as f64
             }),
             Some(b) => {
@@ -404,6 +417,42 @@ mod tests {
     }
 
     #[test]
+    fn empty_batch_rate_derived_from_queue_head() {
+        // With no active batch, the TTFT estimate prices the queue at
+        // the HEAD request's own per-token rate, not a fixed 2048-token
+        // reference.
+        let s = scheduler();
+        let st = state_with(
+            0,
+            0,
+            vec![decode_req(1, 500, 0.02)],
+            vec![PrefillReq {
+                id: 9,
+                arrival: 0.0,
+                input_len: 64,
+                output_len: 8,
+                ..Default::default()
+            }],
+            0.1,
+        );
+        let got = s.ttft_ratio_p90(&st, 54, true);
+        let per_token = s.perf.predict_prefill_layer(64, 0, 54, true) / 64.0;
+        let own = per_token * 64.0 * 32.0;
+        let expect = (0.1 + own) / s.cfg.slo.ttft_budget(64);
+        assert!(
+            (got - expect).abs() / expect < 1e-9,
+            "got {got} expect {expect}"
+        );
+        // and the head-derived rate genuinely differs from the old
+        // reference rate, so the fix is observable
+        let ref_rate = s.perf.predict_prefill_layer(2048, 0, 54, true) / 2048.0;
+        assert!(
+            (per_token - ref_rate).abs() / ref_rate > 1e-3,
+            "head rate {per_token} vs reference {ref_rate}"
+        );
+    }
+
+    #[test]
     fn reorder_puts_tightest_slack_first() {
         let s = scheduler();
         let mut st = state_with(0, 0, vec![], vec![
@@ -442,6 +491,42 @@ mod tests {
         if d.pause_decode {
             panic!("must not pause decode when TPOT is near its budget: {d:?}");
         }
+    }
+
+    #[test]
+    fn calibrated_predictor_shifts_partition_toward_decode() {
+        // Same state, two predictors: the frozen model, and a calibrator
+        // that has learned decode runs 3x slower than modeled.  The
+        // scheduler (generic over the trait) must give calibrated decode
+        // strictly more SMs.
+        use crate::config::CalibrationConfig;
+        use crate::perf::{OnlineCalibrator, PerfPredictor};
+        let cfg = ServingConfig::default();
+        let inner = PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b());
+        let frozen = SloScheduler::new(cfg.clone(), inner.clone());
+        let mut cal = OnlineCalibrator::new(inner.clone(), CalibrationConfig::on());
+        for dm in (12..=108).step_by(6) {
+            let base = PerfModel::predict_decode_step(&inner, 96, 6000, dm, true);
+            for _ in 0..6 {
+                cal.observe_decode(96, 6000, dm, true, base * 3.0);
+            }
+        }
+        // sanity: the learned cells inflate decode predictions
+        let p_cal = PerfPredictor::predict_decode_step(&cal, 96, 6000, 54, true);
+        let p_frozen = PerfModel::predict_decode_step(&inner, 96, 6000, 54, true);
+        assert!(p_cal > 2.0 * p_frozen, "cal {p_cal} frozen {p_frozen}");
+        let calibrated = SloScheduler::new(cfg, cal);
+
+        let decode: Vec<DecodeReqState> = (0..96).map(|i| decode_req(i, 6000, 0.10)).collect();
+        let mk = || state_with(4096, 0, decode.clone(), vec![], 0.05);
+        let d_frozen = frozen.schedule(&mut mk());
+        let d_cal = calibrated.schedule(&mut mk());
+        assert!(
+            d_cal.partition.decode_sms > d_frozen.partition.decode_sms,
+            "calibrated {:?} vs frozen {:?}",
+            d_cal.partition,
+            d_frozen.partition
+        );
     }
 
     #[test]

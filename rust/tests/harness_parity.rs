@@ -92,11 +92,11 @@ fn cluster_scaling_hits_the_acceptance_bar() {
     let trace = generate_n_requests(&Dataset::azure_code(), 80.0, 120, 42);
     let one = server.serve_cluster(
         &trace,
-        &ClusterConfig { replicas: 1, router: RouterPolicy::RoundRobin },
+        &ClusterConfig { replicas: 1, router: RouterPolicy::RoundRobin, ..Default::default() },
     );
     let four = server.serve_cluster(
         &trace,
-        &ClusterConfig { replicas: 4, router: RouterPolicy::LeastKv },
+        &ClusterConfig { replicas: 4, router: RouterPolicy::LeastKv, ..Default::default() },
     );
     assert_eq!(one.records.len(), trace.len());
     assert_eq!(four.records.len(), trace.len());
@@ -115,7 +115,7 @@ fn cluster_scaling_hits_the_acceptance_bar() {
 
     let again = server.serve_cluster(
         &trace,
-        &ClusterConfig { replicas: 4, router: RouterPolicy::LeastKv },
+        &ClusterConfig { replicas: 4, router: RouterPolicy::LeastKv, ..Default::default() },
     );
     assert_eq!(four.records, again.records);
 }

@@ -1,7 +1,7 @@
 //! Property-based tests over coordinator/substrate invariants, via the
 //! in-tree `testing::prop` mini-framework (offline stand-in for proptest).
 
-use bullet::config::{GpuSpec, ModelSpec, ServingConfig};
+use bullet::config::{CalibrationConfig, GpuSpec, ModelSpec, ServingConfig};
 use bullet::gpu::roofline::GroundTruth;
 use bullet::gpu::simulator::Simulator;
 use bullet::gpu::stream::SmMask;
@@ -9,7 +9,8 @@ use bullet::gpu::{wave_quantization_idle_ratio, KernelDesc, OpClass};
 use bullet::kvcache::prefix::PrefixIndex;
 use bullet::kvcache::{KvPool, BLOCK_TOKENS};
 use bullet::model::phases::{decode_layer_kernels, prefill_layer_kernels, PhaseShape};
-use bullet::perf::PerfModel;
+use bullet::perf::grid::{Grid2, Grid3};
+use bullet::perf::{OnlineCalibrator, PerfModel, PerfPredictor};
 use bullet::resource::Partition;
 use bullet::sched::{DecodeReqState, PrefillBatch, PrefillReq, SloScheduler, SystemState};
 use bullet::testing::content_chain;
@@ -337,6 +338,114 @@ fn prop_phase_costs_scale_sanely() {
             .map(|k| k.bytes)
             .sum();
         check(d2 > d, "decode bytes must grow with context")
+    });
+}
+
+/// Grid2/Grid3 interpolation is clamped (never escapes the node-value
+/// envelope, even for far-outside probes) and monotone between knots
+/// when the node data is monotone along each axis.
+#[test]
+fn prop_grid_interp_clamped_and_monotone() {
+    fn sorted_axis(g: &mut bullet::testing::prop::Gen, n: usize) -> Vec<f64> {
+        let mut x = g.f64_in(-100.0, 100.0);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(x);
+            x += g.f64_in(0.1, 50.0); // strictly increasing
+        }
+        out
+    }
+    forall(109, 200, |g| {
+        let n0 = g.usize_in(1, 8);
+        let n1 = g.usize_in(1, 8);
+        let (ax0, ax1) = (sorted_axis(g, n0), sorted_axis(g, n1));
+        let mut grid = Grid2::new(ax0.clone(), ax1.clone(), 0.0);
+        // monotone node data: cumulative non-negative increments
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for i in 0..n0 {
+            for j in 0..n1 {
+                let v = i as f64 * 3.0 + j as f64 + g.f64_in(0.0, 0.9);
+                grid.set(i, j, v);
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+        }
+        // clamped: far-outside probes stay inside the node envelope
+        for (x0, x1) in [(-1e9, -1e9), (1e9, 1e9), (-1e9, 1e9)] {
+            let v = grid.interp(x0, x1);
+            check(
+                v >= lo - 1e-9 && v <= hi + 1e-9,
+                format!("clamp escaped: {v} not in [{lo},{hi}]"),
+            )?;
+        }
+        // monotone in each argument between (and beyond) knots
+        let span0 = ax0[n0 - 1] - ax0[0] + 1.0;
+        let x1 = g.f64_in(ax1[0] - 1.0, ax1[n1 - 1] + 1.0);
+        let a = g.f64_in(ax0[0] - 1.0, ax0[n0 - 1] + 1.0);
+        let b = (a + g.f64_in(0.0, span0)).min(ax0[n0 - 1] + 1.0);
+        check(
+            grid.interp(a, x1) <= grid.interp(b, x1) + 1e-9,
+            format!("not monotone along ax0 at x1={x1}: {a} -> {b}"),
+        )?;
+        // Grid3: same probe through a monotone cube
+        let n2 = g.usize_in(1, 5);
+        let ax2 = sorted_axis(g, n2);
+        let mut g3 = Grid3::new(ax0.clone(), ax1.clone(), ax2.clone(), 0.0);
+        for i in 0..n0 {
+            for j in 0..n1 {
+                for k in 0..n2 {
+                    g3.set(i, j, k, i as f64 * 9.0 + j as f64 * 3.0 + k as f64);
+                }
+            }
+        }
+        let (x1, x2) = (
+            g.f64_in(ax1[0] - 1.0, ax1[n1 - 1] + 1.0),
+            g.f64_in(ax2[0] - 1.0, ax2[n2 - 1] + 1.0),
+        );
+        check(
+            g3.interp(a, x1, x2) <= g3.interp(b, x1, x2) + 1e-9,
+            "Grid3 not monotone along ax0",
+        )?;
+        let big = g3.interp(1e12, 1e12, 1e12);
+        let top = (n0 - 1) as f64 * 9.0 + (n1 - 1) as f64 * 3.0 + (n2 - 1) as f64;
+        check((big - top).abs() < 1e-9, format!("Grid3 clamp: {big} vs {top}"))
+    });
+}
+
+/// The EWMA calibrator converges to a synthetic constant-bias ground
+/// truth within a bounded number of samples, and never emits a
+/// non-finite prediction — even when fed garbage observations.
+#[test]
+fn prop_calibrator_converges_and_stays_finite() {
+    forall(110, 60, |g| {
+        let inner = PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b());
+        let mut cal = OnlineCalibrator::new(inner.clone(), CalibrationConfig::on());
+        let bias = g.f64_in(0.4, 3.0);
+        let sl = g.usize_in(64, 8192);
+        let pm = g.usize_in(2, 54) * 2;
+        let contended = g.bool();
+        let base = PerfModel::predict_prefill_layer(&inner, sl, 0, pm, contended);
+        let n = 60;
+        for _ in 0..n {
+            cal.observe_prefill(sl, 0, pm, contended, 1, base * bias);
+        }
+        let learned = PerfPredictor::predict_prefill_layer(&cal, sl, 0, pm, contended) / base;
+        check(
+            (learned - bias).abs() / bias < 0.15,
+            format!("after {n} samples learned {learned} vs bias {bias}"),
+        )?;
+        // hostile observations must never break finiteness
+        for obs in [0.0, -5.0, f64::NAN, f64::INFINITY, 1e300, 1e-300] {
+            cal.observe_prefill(sl, 0, pm, contended, 1, obs);
+            cal.observe_decode(16, 512, pm, contended, obs);
+        }
+        let p1 = PerfPredictor::predict_prefill_layer(&cal, sl, 0, pm, contended);
+        let p2 = PerfPredictor::predict_decode_step(&cal, 16, 512, pm, contended);
+        check(
+            p1.is_finite() && p1 > 0.0 && p2.is_finite() && p2 > 0.0,
+            format!("non-finite prediction: {p1} / {p2}"),
+        )
     });
 }
 
