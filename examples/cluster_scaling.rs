@@ -55,6 +55,7 @@ fn main() {
             &ClusterConfig {
                 replicas,
                 router: RouterPolicy::LeastKv,
+                ..Default::default()
             },
         );
         assert_eq!(out.records.len(), trace.len(), "lost records");

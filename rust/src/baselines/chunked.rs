@@ -18,6 +18,7 @@ use crate::config::ServingConfig;
 use crate::engine::core::{CoreOptions, EngineCore, EngineOutput, Lane, ServingPolicy};
 use crate::gpu::kernel::KernelDesc;
 use crate::gpu::roofline::GroundTruth;
+use crate::kvcache::BLOCK_TOKENS;
 use crate::metrics::RequestRecord;
 use crate::model::phases::{decode_layer_kernels, prefill_layer_kernels, PhaseShape};
 use crate::workload::Request;
@@ -31,6 +32,13 @@ pub struct ChunkedConfig {
     /// Calibration knob for the engine-implementation gap the paper
     /// observes between vLLM V1 and SGLang at equal chunk size.
     pub iter_overhead: f64,
+    /// SGLang-style radix-tree walk cost per prefix-cache block adopted
+    /// (hash + tree-node traversal), charged once when the adopting
+    /// request starts its first chunk.  Free cache hits are a fiction —
+    /// a faithful radix baseline pays the lookup in TTFT.  Only bites
+    /// with `prefix_cache` on (no adoptions ⇒ zero charge), so every
+    /// cache-off run stays bit-identical.
+    pub radix_lookup_per_block: f64,
     pub label: &'static str,
 }
 
@@ -40,6 +48,7 @@ impl ChunkedConfig {
         ChunkedConfig {
             chunk_size: 1024,
             iter_overhead: 4e-3,
+            radix_lookup_per_block: 3e-6,
             label: "vLLM-1024",
         }
     }
@@ -48,6 +57,7 @@ impl ChunkedConfig {
         ChunkedConfig {
             chunk_size: 1024,
             iter_overhead: 1e-3,
+            radix_lookup_per_block: 3e-6,
             label: "SGLang-1024",
         }
     }
@@ -56,8 +66,16 @@ impl ChunkedConfig {
         ChunkedConfig {
             chunk_size: 2048,
             iter_overhead: 1e-3,
+            radix_lookup_per_block: 3e-6,
             label: "SGLang-2048",
         }
+    }
+
+    /// Per-iteration CPU cost: the fixed scheduling overhead plus the
+    /// radix walk for blocks this iteration's new requests adopted from
+    /// the prefix cache.
+    pub(crate) fn iteration_overhead(&self, batch: &HybridBatch) -> f64 {
+        self.iter_overhead + self.radix_lookup_per_block * batch.radix_blocks as f64
     }
 }
 
@@ -76,14 +94,27 @@ pub fn kv_reload_factor(n_chunks: usize) -> usize {
 
 /// One hybrid iteration's shape, shared by the chunked and NanoFlow
 /// policies: decode slots first, then prefill chunks under the budget.
+///
+/// Context is tracked in two parts the budget can see separately: the
+/// RELOAD context this engine computed in earlier chunks (the §2.3.1
+/// triangular re-read) and the CACHED context adopted from the radix
+/// index (resident KV the chunk attends but never recomputed here, and
+/// whose lookup is charged via `radix_blocks`).  Attention reads both,
+/// so `ctx_reload() + ctx_cached` is what the kernels price — identical
+/// to the old single `ctx_max`, keeping cache-off runs bit-identical.
 #[derive(Debug, Clone, Default)]
 pub(crate) struct HybridBatch {
     /// Decode token slots this iteration.
     pub ds: usize,
     /// Prefill chunk tokens this iteration.
     pub chunk_tokens: usize,
-    /// Largest reload context across the chunks.
+    /// Largest TOTAL prior context (reload + cached) across the chunks.
     pub ctx_max: usize,
+    /// Largest prefix-cache–adopted context across the chunks.
+    pub ctx_cached: usize,
+    /// Cache blocks whose radix lookup is charged this iteration
+    /// (requests starting their first chunk with an adopted prefix).
+    pub radix_blocks: usize,
     /// Mean decode context length.
     pub cl: usize,
     /// (waiting index, tokens taken, prior context) per chunk.
@@ -93,6 +124,14 @@ pub(crate) struct HybridBatch {
 impl HybridBatch {
     pub fn empty(&self) -> bool {
         self.chunk_tokens == 0 && self.ds == 0
+    }
+
+    /// Batch-level reload residual: the largest prior context minus the
+    /// largest adopted context.  In a mixed batch the two maxima can
+    /// come from different requests, so this is an aggregate accounting
+    /// view (what the budget sees), not a per-request attribution.
+    pub fn ctx_reload(&self) -> usize {
+        self.ctx_max.saturating_sub(self.ctx_cached)
     }
 }
 
@@ -105,11 +144,13 @@ pub(crate) fn build_hybrid_batch(core: &mut EngineCore, chunk_size: usize) -> Hy
     let ds = core.decode.len().min(chunk_size);
     let mut budget = chunk_size - ds;
     let mut assignments: Vec<(usize, usize, usize)> = Vec::new();
+    let mut ctx_cached = 0usize;
+    let mut radix_blocks = 0usize;
     for i in 0..core.waiting.len() {
         if budget == 0 {
             break;
         }
-        let (take, reserved, id, reserve, done) = {
+        let (take, reserved, id, reserve, done, cached) = {
             let w = &core.waiting[i];
             (
                 w.remaining().min(budget),
@@ -117,6 +158,7 @@ pub(crate) fn build_hybrid_batch(core: &mut EngineCore, chunk_size: usize) -> Hy
                 w.req.id,
                 w.req.input_len + w.req.output_len - w.req.cached_len,
                 w.done,
+                w.req.cached_len,
             )
         };
         if take == 0 {
@@ -131,7 +173,10 @@ pub(crate) fn build_hybrid_batch(core: &mut EngineCore, chunk_size: usize) -> Hy
             }
             core.kv.grow(id, reserve).unwrap();
             core.waiting[i].prefill_start = Some(now);
+            // first chunk of an adopted prefix: charge the radix walk
+            radix_blocks += cached / BLOCK_TOKENS;
         }
+        ctx_cached = ctx_cached.max(cached);
         assignments.push((i, take, done));
         budget -= take;
     }
@@ -146,6 +191,10 @@ pub(crate) fn build_hybrid_batch(core: &mut EngineCore, chunk_size: usize) -> Hy
         ds,
         chunk_tokens,
         ctx_max,
+        // done >= cached per request, so max(done) >= max(cached):
+        // ctx_cached can never exceed ctx_max
+        ctx_cached,
+        radix_blocks,
         cl,
         assignments,
     }
@@ -209,7 +258,12 @@ pub(crate) fn complete_hybrid_iteration(
 }
 
 /// One hybrid-batch layer pass: fused GEMMs over (ds + chunk) rows plus
-/// the two attention kernels, serialized (lock-step).
+/// the two attention kernels, serialized (lock-step).  `ctx` is the
+/// TOTAL prior context (reload + cached): attention reads both alike —
+/// the resident KV is re-read by every chunk either way — so pricing
+/// takes the sum; the budget layer accounts the parts separately via
+/// `HybridBatch::ctx_cached` / `ctx_reload()` (the cached part was
+/// never computed here and paid a radix lookup instead).
 fn hybrid_iteration_kernels(
     cfg: &ServingConfig,
     chunk: usize,
@@ -294,7 +348,7 @@ impl ServingPolicy for ChunkedPolicy {
             return;
         }
         let batch = self.batch.take().expect("drain without an iteration");
-        complete_hybrid_iteration(core, &batch, self.ccfg.iter_overhead);
+        complete_hybrid_iteration(core, &batch, self.ccfg.iteration_overhead(&batch));
     }
 
     fn on_stall(&mut self, core: &mut EngineCore) -> bool {
@@ -427,7 +481,6 @@ mod tests {
 
     #[test]
     fn chunk_boundary_publication_serves_mid_prompt_arrivals() {
-        use crate::kvcache::BLOCK_TOKENS;
         use crate::testing::content_chain;
         // One long prompt chunk-prefills over many iterations; an
         // identical prompt arrives MID-prefill.  With chunk-boundary
@@ -456,6 +509,109 @@ mod tests {
         assert!(
             s.partial_hits >= 1,
             "the hit must be attributed to partial publication: {s:?}"
+        );
+    }
+
+    #[test]
+    fn hybrid_batch_splits_cached_from_reload_context() {
+        use crate::testing::content_chain;
+        // Seed the cache with a 4-block prompt, then admit an identical
+        // one: its first hybrid batch must report the adopted context
+        // under ctx_cached (with the radix blocks charged) while a
+        // cache-less request reports pure reload context.
+        let cfg = ServingConfig { prefix_cache: true, ..ServingConfig::default() };
+        let gt = GroundTruth::new(GpuSpec::a100());
+        let hashes = content_chain(&[1, 2, 3, 4]);
+        let input_len = 4 * BLOCK_TOKENS + 8;
+        let warm = Request {
+            id: 0,
+            arrival: 0.0,
+            input_len,
+            output_len: 2,
+            block_hashes: hashes.clone(),
+            session_id: Some(1),
+        };
+        let mut core = EngineCore::new(cfg, gt, vec![warm], &CoreOptions::default());
+        let mut policy = ChunkedPolicy::new(ChunkedConfig::sglang_1024());
+        core.run(&mut policy);
+        // identical prompt arrives after the first published
+        core.push_request(Request {
+            id: 1,
+            arrival: core.now() + 1.0,
+            input_len,
+            output_len: 2,
+            block_hashes: hashes,
+            session_id: Some(1),
+        });
+        core.sim.run_for(2.0);
+        core.admit_arrivals();
+        assert_eq!(core.waiting[0].req.cached_len, 4 * BLOCK_TOKENS, "adoption expected");
+        let batch = build_hybrid_batch(&mut core, 1024);
+        assert_eq!(batch.ctx_cached, 4 * BLOCK_TOKENS);
+        assert_eq!(batch.radix_blocks, 4, "radix walk charged once, at the first chunk");
+        assert_eq!(batch.ctx_max, 4 * BLOCK_TOKENS, "done == cached at the first chunk");
+        assert_eq!(batch.ctx_reload(), 0, "nothing reloaded yet: all prior context is adopted");
+        // and the per-iteration overhead prices those blocks
+        let ccfg = ChunkedConfig::sglang_1024();
+        let expect = ccfg.iter_overhead + 4.0 * ccfg.radix_lookup_per_block;
+        assert!((ccfg.iteration_overhead(&batch) - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    fn radix_lookup_overhead_lands_in_ttft() {
+        use crate::testing::content_chain;
+        // Two identical long prompts, the second arriving after the
+        // first has fully published: it adopts ~512 blocks.  With a
+        // deliberately large per-block radix cost, its TTFT must grow
+        // by about blocks x cost relative to a free-lookup run — and
+        // the cold first request must not pay a thing.
+        let (cfg, gt) = setup();
+        let cfg = ServingConfig { prefix_cache: true, ..cfg };
+        let nb = 512usize;
+        let contents: Vec<u64> = (0..nb as u64).collect();
+        let hashes = content_chain(&contents);
+        let input_len = nb * BLOCK_TOKENS + 8;
+        let req = |id, arrival| Request {
+            id,
+            arrival,
+            input_len,
+            output_len: 2,
+            block_hashes: hashes.clone(),
+            session_id: Some(1),
+        };
+        // arrival 30 s: far past the first prompt's completion, so the
+        // whole prefix is published and adopted at admission
+        let trace = vec![req(0, 0.0), req(1, 30.0)];
+        let run = |per_block: f64| {
+            let ccfg = ChunkedConfig {
+                radix_lookup_per_block: per_block,
+                ..ChunkedConfig::sglang_1024()
+            };
+            serve_chunked_output(&cfg, &ccfg, &gt, &trace, 5)
+        };
+        let free = run(0.0);
+        let costly = run(1e-3);
+        assert_eq!(free.records.len(), 2);
+        assert_eq!(costly.records.len(), 2);
+        // adoption happened (otherwise the test measures nothing)
+        assert!(free.prefix.hits >= 1, "{:?}", free.prefix);
+        let adopted_blocks = (input_len - 1) / BLOCK_TOKENS; // lookup cap
+        let expected = adopted_blocks as f64 * 1e-3;
+        let ttft = |out: &EngineOutput, id| {
+            out.records.iter().find(|r| r.id == id).unwrap().ttft()
+        };
+        // the cold request pays nothing...
+        assert_eq!(
+            ttft(&free, 0),
+            ttft(&costly, 0),
+            "cold request must not pay the radix walk"
+        );
+        // ...the adopting request pays ~blocks x cost
+        let delta = ttft(&costly, 1) - ttft(&free, 1);
+        assert!(
+            delta > 0.5 * expected && delta < 2.0 * expected,
+            "radix overhead missing from TTFT accounting: delta {delta:.4}s \
+             vs expected ~{expected:.4}s over {adopted_blocks} blocks"
         );
     }
 

@@ -58,6 +58,8 @@ impl ServingPolicy for NanoflowPolicy {
         // full-GPU streams (barrier at the end).
         let full = core.cfg.gpu.num_sms;
         if batch.chunk_tokens > 0 {
+            // attention reads reload + cached context alike (resident
+            // KV re-read per chunk); ctx_max is exactly their sum
             let kernels = prefill_all_layers(
                 &core.cfg.model,
                 PhaseShape { tokens: batch.chunk_tokens, context: batch.ctx_max },
@@ -83,7 +85,7 @@ impl ServingPolicy for NanoflowPolicy {
             return;
         }
         let batch = self.batch.take().expect("drain without an iteration");
-        complete_hybrid_iteration(core, &batch, self.ccfg.iter_overhead);
+        complete_hybrid_iteration(core, &batch, self.ccfg.iteration_overhead(&batch));
     }
 
     fn on_stall(&mut self, core: &mut EngineCore) -> bool {

@@ -1,0 +1,536 @@
+//! Calibration-driven cluster autoscaling: the fleet grows, shrinks and
+//! self-heals from the signals PR 3's online calibrators already emit.
+//!
+//! The control loop (evaluated at arrival-driven control intervals on
+//! the global virtual timeline):
+//!
+//! 1. **Envelope** — the observed arrival rate over a sliding window,
+//!    in tokens/s, times an SLO headroom factor.  This is the demand
+//!    side of the paper's "adaptively provisioned resources under
+//!    latency targets", lifted from SMs-within-a-GPU to
+//!    replicas-within-a-fleet.
+//! 2. **Capacity** — Σ over active replicas of
+//!    `nominal_tokens_per_s / calibrated_slowdown`: the fleet's
+//!    *calibrated* capacity, where `nominal` comes from
+//!    [`crate::sched::policy::service_capacity_tokens_per_s`] (the same
+//!    predictor Algorithm 1 schedules with) and each replica's slowdown
+//!    from its own [`crate::perf::OnlineCalibrator`].  A throttling or
+//!    co-tenanted device genuinely shrinks the fleet.
+//! 3. **Actions** — scale OUT (spawn a replica with the cluster's
+//!    inherited `GpuSpec`) when the envelope outruns capacity; scale IN
+//!    (drain the slowest replica) when a sustained surplus remains even
+//!    without it; RETIRE (deweight-and-drain) a replica whose drift
+//!    events keep firing; RE-PROFILE (offline-grid refresh in place) a
+//!    replica whose converged calibrator keeps reporting high residuals.
+//!
+//! **Hysteresis — the no-flap argument.**  Three separations make an
+//! out→in oscillation impossible within one window:
+//! - threshold separation: scale-out needs `envelope > out_util ×
+//!   capacity`, scale-in needs `envelope < in_util × capacity-without-
+//!   the-victim`, and `in_util < out_util` (clamped at construction);
+//! - cool-downs: any removal (ScaleIn *or* Retire) is refused until
+//!   `cooldown_in_s` has passed since the last action in EITHER
+//!   direction, and any scale-out until `cooldown_out_s` has passed —
+//!   so a scale-out is never followed by a scale-in within one
+//!   scale-in cool-down window (the property `tests/properties.rs`
+//!   fuzzes);
+//! - fleet clamps: `[min_replicas, max_replicas]` bound every action.
+//!
+//! Determinism: the controller is a pure function of the arrival stream
+//! and the replica health snapshots (BTreeMap state, no wall clock), so
+//! autoscaled cluster runs replay bit-identically.
+
+use crate::metrics::timeline::ScaleAction;
+use crate::perf::CalibrationStats;
+use std::collections::{BTreeMap, VecDeque};
+
+/// Autoscaler knobs.  `enabled: false` (the default) removes the
+/// subsystem entirely: `serve_cluster` then runs the fixed-fleet path
+/// bit-identically to pre-autoscaler behavior.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscaleConfig {
+    pub enabled: bool,
+    /// Fleet bounds (both inclusive; min is also the starting floor).
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+    /// Seconds of virtual time between control evaluations.
+    pub control_interval_s: f64,
+    /// Sliding window for the arrival-rate estimate.
+    pub rate_window_s: f64,
+    /// Envelope multiplier on the observed token arrival rate (>1:
+    /// provision ahead of raw demand so queues keep SLO slack).
+    pub slo_headroom: f64,
+    /// Scale OUT when envelope > this fraction of calibrated capacity.
+    pub scale_out_util: f64,
+    /// Scale IN only when envelope < this fraction of the capacity that
+    /// would REMAIN after the removal.  Clamped below `scale_out_util`.
+    pub scale_in_util: f64,
+    /// Minimum gap after any action before the next scale-out.
+    pub cooldown_out_s: f64,
+    /// Minimum gap after any action before the next removal (scale-in
+    /// or retire).  The no-flap window.
+    pub cooldown_in_s: f64,
+    /// Drift events per control window that mark a replica "storming".
+    pub retire_drift_events: u64,
+    /// Consecutive storming windows before the replica is retired.
+    pub retire_windows: u32,
+    /// Recent |residual| at-or-above which a CONVERGED replica gets its
+    /// offline grid refreshed.
+    pub reprofile_residual: f64,
+    /// Samples a calibrator needs before its residuals are trusted.
+    pub reprofile_min_samples: u64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig::off()
+    }
+}
+
+impl AutoscaleConfig {
+    /// Autoscaling absent (the default): `serve_cluster` takes the
+    /// fixed-fleet path untouched.
+    pub fn off() -> AutoscaleConfig {
+        AutoscaleConfig {
+            enabled: false,
+            min_replicas: 1,
+            max_replicas: 4,
+            control_interval_s: 1.0,
+            rate_window_s: 8.0,
+            slo_headroom: 1.25,
+            scale_out_util: 0.85,
+            scale_in_util: 0.45,
+            cooldown_out_s: 3.0,
+            cooldown_in_s: 10.0,
+            retire_drift_events: 2,
+            retire_windows: 3,
+            reprofile_residual: 0.25,
+            reprofile_min_samples: 64,
+        }
+    }
+
+    /// Autoscaling on with default gains and a `[min, max]` fleet.
+    pub fn on(min_replicas: usize, max_replicas: usize) -> AutoscaleConfig {
+        let min = min_replicas.max(1);
+        AutoscaleConfig {
+            enabled: true,
+            min_replicas: min,
+            max_replicas: max_replicas.max(min),
+            ..AutoscaleConfig::off()
+        }
+    }
+}
+
+/// A replica's health snapshot, as the controller sees it: the live
+/// routing/health signals read through `ServingPolicy::predictor()`.
+#[derive(Debug, Clone)]
+pub struct ReplicaHealth {
+    /// Replica id (stable across the run; retired ids are never reused).
+    pub id: usize,
+    /// Calibrated observed/nominal slowdown (1.0 when uncalibrated).
+    pub slowdown: f64,
+    /// The replica's calibration counters (drift events, samples,
+    /// recent residual — identity for calibration-free policies).
+    pub calib: CalibrationStats,
+}
+
+/// One control decision.  At most one is emitted per evaluation; the
+/// cool-downs pace the fleet no matter how noisy the inputs are.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// Spawn one replica (the cluster layer assigns the new id).
+    ScaleOut,
+    /// Drain and release this replica (capacity surplus).
+    ScaleIn(usize),
+    /// Deweight-and-drain this replica (chronic drift).
+    Retire(usize),
+    /// Refresh this replica's offline grid in place.
+    Reprofile(usize),
+}
+
+impl ScaleDecision {
+    pub fn action(&self) -> ScaleAction {
+        match self {
+            ScaleDecision::ScaleOut => ScaleAction::ScaleOut,
+            ScaleDecision::ScaleIn(_) => ScaleAction::ScaleIn,
+            ScaleDecision::Retire(_) => ScaleAction::Retire,
+            ScaleDecision::Reprofile(_) => ScaleAction::Reprofile,
+        }
+    }
+}
+
+/// The fleet controller (see module docs).
+#[derive(Debug)]
+pub struct Autoscaler {
+    cfg: AutoscaleConfig,
+    /// (arrival t, prefill tokens, total tokens) inside the rate window.
+    window: VecDeque<(f64, f64, f64)>,
+    /// First arrival ever seen — bounds the effective averaging span
+    /// before a full window of history exists.
+    first_arrival: f64,
+    last_eval: f64,
+    /// Time of the last scale-out / last removal (either kind).
+    last_out: f64,
+    last_in: f64,
+    /// Per-replica drift-event count at the previous evaluation.
+    drift_seen: BTreeMap<usize, u64>,
+    /// Consecutive storming control windows per replica.
+    storm_streak: BTreeMap<usize, u32>,
+    /// Last re-profile instant per replica.
+    reprofiled: BTreeMap<usize, f64>,
+}
+
+impl Autoscaler {
+    pub fn new(mut cfg: AutoscaleConfig) -> Autoscaler {
+        // threshold separation is part of the no-flap argument — enforce
+        // it rather than trusting every caller
+        if cfg.scale_in_util >= cfg.scale_out_util || cfg.scale_in_util.is_nan() {
+            cfg.scale_in_util = cfg.scale_out_util * 0.5;
+        }
+        Autoscaler {
+            cfg,
+            window: VecDeque::new(),
+            first_arrival: f64::NAN,
+            last_eval: f64::NEG_INFINITY,
+            last_out: f64::NEG_INFINITY,
+            last_in: f64::NEG_INFINITY,
+            drift_seen: BTreeMap::new(),
+            storm_streak: BTreeMap::new(),
+            reprofiled: BTreeMap::new(),
+        }
+    }
+
+    pub fn cfg(&self) -> &AutoscaleConfig {
+        &self.cfg
+    }
+
+    /// Feed one arrival into the demand estimator.
+    pub fn note_arrival(&mut self, t: f64, input_len: usize, output_len: usize) {
+        if self.first_arrival.is_nan() {
+            self.first_arrival = t;
+        }
+        self.window
+            .push_back((t, input_len as f64, (input_len + output_len) as f64));
+        let horizon = t - self.cfg.rate_window_s;
+        while self.window.front().map(|w| w.0 < horizon).unwrap_or(false) {
+            self.window.pop_front();
+        }
+    }
+
+    /// Observed token arrival rate over the sliding window (tokens/s).
+    /// Before a full window of history exists, the divisor is the
+    /// elapsed span (floored at a quarter-window) — otherwise a surge
+    /// in the first seconds of a run is under-read by up to the
+    /// window/elapsed ratio and scale-out lags exactly when it matters.
+    pub fn demand_tokens_per_s(&self, now: f64) -> f64 {
+        let horizon = now - self.cfg.rate_window_s;
+        let total: f64 = self
+            .window
+            .iter()
+            .filter(|w| w.0 >= horizon)
+            .map(|w| w.2)
+            .sum();
+        let window = self.cfg.rate_window_s.max(1e-9);
+        let elapsed = if self.first_arrival.is_nan() {
+            window
+        } else {
+            (now - self.first_arrival).clamp(window * 0.25, window)
+        };
+        total / elapsed
+    }
+
+    /// Whether a call to [`Autoscaler::evaluate`] at `now` would run a
+    /// control evaluation — callers can skip building fleet snapshots
+    /// otherwise (evaluate re-checks, so this is purely an optimization).
+    pub fn due(&self, now: f64) -> bool {
+        self.cfg.enabled && now - self.last_eval >= self.cfg.control_interval_s
+    }
+
+    /// Fraction of windowed arrival tokens that are prefill (prompt)
+    /// tokens — the mix the capacity model prices.  0.7 before data.
+    pub fn prefill_frac(&self) -> f64 {
+        let (p, t) = self
+            .window
+            .iter()
+            .fold((0.0, 0.0), |(p, t), w| (p + w.1, t + w.2));
+        if t <= 0.0 {
+            0.7
+        } else {
+            p / t
+        }
+    }
+
+    /// The fleet's calibrated capacity: Σ nominal / slowdown.  Monotone
+    /// non-increasing in every replica's slowdown (property-tested).
+    pub fn fleet_capacity_tokens_per_s(nominal_per_replica: f64, fleet: &[ReplicaHealth]) -> f64 {
+        fleet
+            .iter()
+            .map(|h| nominal_per_replica / h.slowdown.max(1e-6))
+            .sum()
+    }
+
+    /// Run one control evaluation at virtual time `now` over the ACTIVE
+    /// (non-draining) fleet.  `nominal_per_replica` is the homogeneous
+    /// per-replica capacity unit (see
+    /// [`crate::sched::policy::service_capacity_tokens_per_s`]).
+    pub fn evaluate(
+        &mut self,
+        now: f64,
+        nominal_per_replica: f64,
+        fleet: &[ReplicaHealth],
+    ) -> Option<ScaleDecision> {
+        if !self.cfg.enabled || fleet.is_empty() {
+            return None;
+        }
+        if now - self.last_eval < self.cfg.control_interval_s {
+            return None;
+        }
+        self.last_eval = now;
+
+        // Health bookkeeping: drift-event deltas per control window.
+        for h in fleet {
+            let seen = self.drift_seen.insert(h.id, h.calib.drift_events).unwrap_or(0);
+            let delta = h.calib.drift_events.saturating_sub(seen);
+            let streak = self.storm_streak.entry(h.id).or_insert(0);
+            if delta >= self.cfg.retire_drift_events {
+                *streak += 1;
+            } else {
+                *streak = 0;
+            }
+        }
+
+        let n = fleet.len();
+        let removable = n > self.cfg.min_replicas;
+        let removal_cooled = now - self.last_out >= self.cfg.cooldown_in_s
+            && now - self.last_in >= self.cfg.cooldown_in_s;
+
+        // 1. Retire a chronically drifting replica (health removal).
+        if removable && removal_cooled {
+            let victim = fleet
+                .iter()
+                .filter(|h| {
+                    self.storm_streak.get(&h.id).copied().unwrap_or(0) >= self.cfg.retire_windows
+                })
+                .max_by(|a, b| {
+                    let sa = self.storm_streak.get(&a.id).copied().unwrap_or(0);
+                    let sb = self.storm_streak.get(&b.id).copied().unwrap_or(0);
+                    sa.cmp(&sb)
+                        .then(a.slowdown.total_cmp(&b.slowdown))
+                        .then(a.id.cmp(&b.id))
+                });
+            if let Some(v) = victim {
+                self.last_in = now;
+                self.storm_streak.insert(v.id, 0);
+                return Some(ScaleDecision::Retire(v.id));
+            }
+        }
+
+        // 2. Re-profile a converged replica whose residual stays high.
+        for h in fleet {
+            let since = now - self.reprofiled.get(&h.id).copied().unwrap_or(f64::NEG_INFINITY);
+            if h.calib.samples >= self.cfg.reprofile_min_samples
+                && h.calib.recent_abs_residual >= self.cfg.reprofile_residual
+                && since >= self.cfg.cooldown_in_s
+            {
+                self.reprofiled.insert(h.id, now);
+                return Some(ScaleDecision::Reprofile(h.id));
+            }
+        }
+
+        // 3. Capacity loop: calibrated capacity vs the SLO envelope.
+        let envelope = self.demand_tokens_per_s(now) * self.cfg.slo_headroom;
+        let capacity = Self::fleet_capacity_tokens_per_s(nominal_per_replica, fleet);
+        if n < self.cfg.max_replicas
+            && envelope > self.cfg.scale_out_util * capacity
+            && now - self.last_out >= self.cfg.cooldown_out_s
+            && now - self.last_in >= self.cfg.cooldown_out_s
+        {
+            self.last_out = now;
+            return Some(ScaleDecision::ScaleOut);
+        }
+        if removable && removal_cooled {
+            // shed the slowest replica only if the remainder still
+            // clears the envelope with margin
+            let victim = fleet
+                .iter()
+                .max_by(|a, b| a.slowdown.total_cmp(&b.slowdown).then(a.id.cmp(&b.id)))
+                .expect("non-empty fleet");
+            let remaining = capacity - nominal_per_replica / victim.slowdown.max(1e-6);
+            if envelope < self.cfg.scale_in_util * remaining {
+                self.last_in = now;
+                return Some(ScaleDecision::ScaleIn(victim.id));
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn health(id: usize, slowdown: f64) -> ReplicaHealth {
+        ReplicaHealth { id, slowdown, calib: CalibrationStats::default() }
+    }
+
+    fn cfg() -> AutoscaleConfig {
+        AutoscaleConfig {
+            control_interval_s: 0.5,
+            rate_window_s: 4.0,
+            cooldown_out_s: 2.0,
+            cooldown_in_s: 6.0,
+            ..AutoscaleConfig::on(1, 4)
+        }
+    }
+
+    /// Push `rate` tokens/s worth of arrivals across [t0, t1).
+    fn drive(a: &mut Autoscaler, t0: f64, t1: f64, tokens_per_s: f64) {
+        let step = 0.25;
+        let mut t = t0;
+        while t < t1 {
+            let (input, output) = (tokens_per_s * step * 0.9, tokens_per_s * step * 0.1);
+            a.note_arrival(t, input as usize, output as usize);
+            t += step;
+        }
+    }
+
+    #[test]
+    fn scales_out_when_envelope_exceeds_capacity() {
+        let mut a = Autoscaler::new(cfg());
+        // 20k tok/s demand against one 10k-nominal replica
+        drive(&mut a, 0.0, 5.0, 20_000.0);
+        let d = a.evaluate(5.0, 10_000.0, &[health(0, 1.0)]);
+        assert_eq!(d, Some(ScaleDecision::ScaleOut));
+        // within the out-cool-down, nothing more happens
+        drive(&mut a, 5.0, 6.0, 20_000.0);
+        assert_eq!(a.evaluate(6.0, 10_000.0, &[health(0, 1.0), health(1, 1.0)]), None);
+    }
+
+    #[test]
+    fn calibrated_slowdown_shrinks_capacity_and_triggers_scale_out() {
+        // demand a single HEALTHY replica could carry — but this fleet's
+        // devices learned a 3x slowdown, so capacity is a third
+        let mut a = Autoscaler::new(cfg());
+        drive(&mut a, 0.0, 5.0, 6_000.0);
+        let healthy = a.evaluate(5.0, 10_000.0, &[health(0, 1.0)]);
+        assert_eq!(healthy, None, "healthy capacity covers the envelope");
+        let mut b = Autoscaler::new(cfg());
+        drive(&mut b, 0.0, 5.0, 6_000.0);
+        let slowed = b.evaluate(5.0, 10_000.0, &[health(0, 3.0)]);
+        assert_eq!(slowed, Some(ScaleDecision::ScaleOut));
+    }
+
+    #[test]
+    fn scales_in_the_slowest_replica_after_sustained_lull() {
+        let mut a = Autoscaler::new(cfg());
+        drive(&mut a, 0.0, 10.0, 500.0);
+        let fleet = [health(0, 1.0), health(1, 2.0), health(2, 1.1)];
+        let d = a.evaluate(10.0, 10_000.0, &fleet);
+        assert_eq!(d, Some(ScaleDecision::ScaleIn(1)), "slowest replica sheds first");
+        // and the removal opens its own cool-down
+        assert_eq!(a.evaluate(11.0, 10_000.0, &fleet[..2]), None);
+    }
+
+    #[test]
+    fn retires_on_chronic_drift_and_resets_the_streak() {
+        let mut a = Autoscaler::new(AutoscaleConfig {
+            retire_drift_events: 2,
+            retire_windows: 2,
+            ..cfg()
+        });
+        let mut sick = health(1, 1.5);
+        let well = health(0, 1.0);
+        // keep demand mid-band so neither capacity action can fire
+        drive(&mut a, 0.0, 10.0, 6_000.0);
+        // window 1: 2 fresh drift events -> streak 1
+        sick.calib.drift_events = 2;
+        assert_eq!(a.evaluate(7.0, 10_000.0, &[well.clone(), sick.clone()]), None);
+        // window 2: 2 more -> streak 2 -> retire
+        sick.calib.drift_events = 4;
+        let d = a.evaluate(8.0, 10_000.0, &[well.clone(), sick.clone()]);
+        assert_eq!(d, Some(ScaleDecision::Retire(1)));
+        // a quiet replica never accrues a streak
+        assert_eq!(a.evaluate(20.0, 10_000.0, &[well]), None);
+    }
+
+    #[test]
+    fn reprofiles_converged_high_residual_replicas_once_per_window() {
+        let mut a = Autoscaler::new(AutoscaleConfig {
+            reprofile_min_samples: 50,
+            reprofile_residual: 0.2,
+            ..cfg()
+        });
+        drive(&mut a, 0.0, 10.0, 6_000.0);
+        let mut h = health(0, 2.0);
+        h.calib.samples = 100;
+        h.calib.recent_abs_residual = 0.5;
+        let fleet = [h.clone(), health(1, 1.0)];
+        let d = a.evaluate(7.0, 10_000.0, &fleet);
+        assert_eq!(d, Some(ScaleDecision::Reprofile(0)));
+        // not again within the cool-down, even though the snapshot
+        // still reports a high residual
+        assert_eq!(a.evaluate(8.0, 10_000.0, &fleet), None);
+        // a cold calibrator is never re-profiled (min fleet blocks the
+        // capacity fallbacks so the gate itself is what's tested)
+        let mut b = Autoscaler::new(AutoscaleConfig {
+            reprofile_min_samples: 50,
+            reprofile_residual: 0.2,
+            control_interval_s: 0.5,
+            ..AutoscaleConfig::on(2, 4)
+        });
+        let mut cold = health(0, 2.0);
+        cold.calib.samples = 10;
+        cold.calib.recent_abs_residual = 0.9;
+        assert_eq!(b.evaluate(1.0, 10_000.0, &[cold, health(1, 1.0)]), None);
+    }
+
+    #[test]
+    fn fleet_bounds_are_hard() {
+        let mut a = Autoscaler::new(AutoscaleConfig {
+            cooldown_out_s: 0.0,
+            cooldown_in_s: 0.0,
+            ..cfg()
+        });
+        // overload: never scales past max
+        drive(&mut a, 0.0, 5.0, 1e9);
+        let four: Vec<ReplicaHealth> = (0..4).map(|i| health(i, 1.0)).collect();
+        assert_eq!(a.evaluate(5.0, 10_000.0, &four), None, "at max_replicas");
+        // idle: never shrinks below min
+        let mut b = Autoscaler::new(AutoscaleConfig {
+            cooldown_out_s: 0.0,
+            cooldown_in_s: 0.0,
+            ..AutoscaleConfig::on(2, 4)
+        });
+        drive(&mut b, 0.0, 5.0, 1.0);
+        let two: Vec<ReplicaHealth> = (0..2).map(|i| health(i, 1.0)).collect();
+        assert_eq!(b.evaluate(5.0, 10_000.0, &two), None, "at min_replicas");
+    }
+
+    #[test]
+    fn threshold_separation_is_enforced() {
+        let a = Autoscaler::new(AutoscaleConfig {
+            scale_out_util: 0.5,
+            scale_in_util: 0.9, // inverted on purpose
+            ..AutoscaleConfig::on(1, 4)
+        });
+        assert!(a.cfg().scale_in_util < a.cfg().scale_out_util);
+    }
+
+    #[test]
+    fn demand_window_slides() {
+        let mut a = Autoscaler::new(cfg()); // 4 s window, 1 s floor
+        a.note_arrival(0.0, 900, 100);
+        a.note_arrival(1.0, 900, 100);
+        // warm-up: only 1 s has elapsed, so the divisor is the elapsed
+        // span (not the full window) — an early surge reads at full rate
+        assert!((a.demand_tokens_per_s(1.0) - 2000.0).abs() < 1e-9);
+        // both arrivals age out of the window; divisor is the window
+        a.note_arrival(10.0, 90, 10);
+        assert!((a.demand_tokens_per_s(10.0) - 25.0).abs() < 1e-9);
+        assert!((a.prefill_frac() - 0.9).abs() < 1e-9);
+        // the elapsed-span floor damps a single instantaneous arrival
+        let mut b = Autoscaler::new(cfg());
+        b.note_arrival(0.0, 4000, 0);
+        assert!((b.demand_tokens_per_s(0.0) - 4000.0).abs() < 1e-9, "floored at window/4 = 1 s");
+    }
+}

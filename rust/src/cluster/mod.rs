@@ -18,8 +18,10 @@
 //! lock-step-free.  Determinism: replica seeds derive from the run seed,
 //! and the dispatcher is a pure function of replica state.
 
+pub mod autoscale;
 pub mod router;
 
+pub use autoscale::{AutoscaleConfig, Autoscaler, ReplicaHealth, ScaleDecision};
 pub use router::{Dispatcher, RouterPolicy};
 
 use crate::baselines::System;
@@ -27,8 +29,10 @@ use crate::config::{derive_kv_capacity, DriftSpec, GpuSpec, ServingConfig};
 use crate::engine::core::{CoreOptions, EngineCore, EngineOutput, ServingPolicy};
 use crate::gpu::roofline::GroundTruth;
 use crate::kvcache::prefix::PrefixStats;
+use crate::metrics::timeline::ScaleEvent;
 use crate::metrics::{merge_records, RequestRecord};
 use crate::perf::{CalibrationStats, PerfModel, PerfPredictor};
+use crate::sched::policy::service_capacity_tokens_per_s;
 use crate::workload::Request;
 
 /// Per-replica hardware overrides for a heterogeneous fleet.  `None`
@@ -43,7 +47,7 @@ pub struct ReplicaSpec {
 }
 
 /// Cluster shape: replica count + routing policy (+ optional
-/// heterogeneous per-replica hardware).
+/// heterogeneous per-replica hardware, + the optional autoscaler).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterConfig {
     pub replicas: usize,
@@ -52,8 +56,15 @@ pub struct ClusterConfig {
     /// list (or an empty list — the default) are homogeneous.  A shared
     /// offline perf model is wrong for such a fleet by construction;
     /// per-replica online calibration (`ServingConfig::calibration`) is
-    /// how routing signals stay truthful.
+    /// how routing signals stay truthful.  Autoscaler-spawned replicas
+    /// inherit entry `i` for their id too (ids past the list get the
+    /// cluster default — the "inherited `GpuSpec`" of a scale-out).
     pub replica_specs: Vec<ReplicaSpec>,
+    /// Calibration-driven fleet control (disabled by default: the
+    /// fixed-fleet dispatch path runs bit-identically to pre-autoscaler
+    /// behavior).  With `enabled`, `replicas` (clamped into
+    /// `[min_replicas, max_replicas]`) is the starting fleet.
+    pub autoscale: AutoscaleConfig,
 }
 
 impl Default for ClusterConfig {
@@ -62,6 +73,7 @@ impl Default for ClusterConfig {
             replicas: 1,
             router: RouterPolicy::RoundRobin,
             replica_specs: Vec::new(),
+            autoscale: AutoscaleConfig::off(),
         }
     }
 }
@@ -152,6 +164,21 @@ impl Replica {
             .unwrap_or(1.0)
     }
 
+    /// The replica's live calibration counters (identity for
+    /// calibration-free policies) — the autoscaler's health snapshot.
+    pub fn calibration(&self) -> CalibrationStats {
+        self.policy
+            .predictor()
+            .map(|p| p.calibration())
+            .unwrap_or_default()
+    }
+
+    /// Refresh this replica's offline perf grid in place (autoscaler
+    /// re-profiling action).  Calibration-free policies decline.
+    pub fn reprofile(&mut self) -> bool {
+        self.policy.reprofile()
+    }
+
     fn advance_to(&mut self, t: f64) {
         self.core.run_until(self.policy.as_mut(), t);
     }
@@ -171,12 +198,23 @@ impl Replica {
 pub struct ClusterOutput {
     /// All records, id-ordered (directly comparable with single-GPU runs).
     pub records: Vec<RequestRecord>,
-    /// Per-replica engine outputs (replica index = vec index).
+    /// Per-replica engine outputs (replica index = vec index; with
+    /// autoscaling, every replica ever spawned — retired ones included).
     pub per_replica: Vec<EngineOutput>,
     /// (request id, replica index) routing decisions, in arrival order.
     pub assignments: Vec<(u64, usize)>,
     /// Global makespan: the latest replica finish time.
     pub virtual_duration: f64,
+    /// Autoscaler decisions on the global timeline (empty with the
+    /// autoscaler off).  Each also rides the targeted replica's
+    /// `EngineOutput::scale_events` / timeline.
+    pub scale_events: Vec<ScaleEvent>,
+    /// Replica-steps consumed: Σ over replicas of seconds held (spawn →
+    /// retirement-or-end-of-run, drain included).  A fixed fleet spends
+    /// `replicas × virtual_duration`; the autoscaler's provisioning bar
+    /// is beating `max_replicas × virtual_duration` while also beating
+    /// the fixed fleet's latency.
+    pub replica_steps: f64,
 }
 
 impl ClusterOutput {
@@ -217,8 +255,61 @@ impl ClusterOutput {
     }
 }
 
+/// Everything replica construction needs — shared by the fixed-fleet
+/// path and the autoscaler's spawn action, so a scaled-out replica is
+/// constructed exactly like a boot-time one.
+struct FleetCtx<'a> {
+    system: System,
+    cfg: &'a ServingConfig,
+    perf: &'a PerfModel,
+    gt: &'a GroundTruth,
+    seed: u64,
+    max_virtual_time: f64,
+    cluster: &'a ClusterConfig,
+}
+
+impl FleetCtx<'_> {
+    /// Build replica `i` with its derived seed and (optional)
+    /// per-replica hardware spec.
+    fn build_replica(&self, i: usize) -> Replica {
+        let (system, cfg, perf, gt) = (self.system, self.cfg, self.perf, self.gt);
+        // distinct per-replica seeds decorrelate simulator noise
+        // (and draw distinct device-lottery factors under drift)
+        let rseed = self
+            .seed
+            .wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(i as u64 + 1));
+        // heterogeneous fleet: apply this replica's hardware spec
+        match self.cluster.replica_specs.get(i) {
+            None => Replica::new(i, system, cfg, perf, gt, rseed, self.max_virtual_time),
+            Some(spec) => {
+                let mut rcfg = cfg.clone();
+                let mut rgt = gt.clone();
+                if let Some(gpu) = &spec.gpu {
+                    // re-derive KV capacity for the new device ONLY
+                    // when the operator left it at the derived
+                    // default — an explicitly pinned capacity (e.g.
+                    // a KV-tight experiment) must survive per-
+                    // replica compute overrides
+                    let was_derived =
+                        rcfg.kv_capacity_tokens == derive_kv_capacity(&rcfg.gpu, &rcfg.model);
+                    rcfg.gpu = gpu.clone();
+                    if was_derived {
+                        rcfg.kv_capacity_tokens = derive_kv_capacity(&rcfg.gpu, &rcfg.model);
+                    }
+                    rgt.gpu = gpu.clone();
+                }
+                if let Some(drift) = &spec.drift {
+                    rgt.drift = drift.clone();
+                }
+                Replica::new(i, system, &rcfg, perf, &rgt, rseed, self.max_virtual_time)
+            }
+        }
+    }
+}
+
 /// Serve `trace` on `cluster.replicas` instances of `system` behind the
-/// configured router.
+/// configured router.  With `cluster.autoscale.enabled`, the fleet is
+/// dynamic: see [`serve_cluster_autoscaled`].
 pub fn serve_cluster(
     system: System,
     cfg: &ServingConfig,
@@ -228,45 +319,16 @@ pub fn serve_cluster(
     seed: u64,
     cluster: &ClusterConfig,
 ) -> ClusterOutput {
+    if cluster.autoscale.enabled {
+        return serve_cluster_autoscaled(system, cfg, perf, gt, trace, seed, cluster);
+    }
     let n = cluster.replicas.max(1);
     // Wedge guard that scales with the trace horizon: long-duration
     // traces must not trip the single-GPU default cap.
     let horizon = trace.last().map(|r| r.arrival).unwrap_or(0.0);
     let max_virtual_time = CoreOptions::default().max_virtual_time.max(4.0 * horizon);
-    let mut replicas: Vec<Replica> = (0..n)
-        .map(|i| {
-            // distinct per-replica seeds decorrelate simulator noise
-            // (and draw distinct device-lottery factors under drift)
-            let rseed = seed.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(i as u64 + 1));
-            // heterogeneous fleet: apply this replica's hardware spec
-            match cluster.replica_specs.get(i) {
-                None => Replica::new(i, system, cfg, perf, gt, rseed, max_virtual_time),
-                Some(spec) => {
-                    let mut rcfg = cfg.clone();
-                    let mut rgt = gt.clone();
-                    if let Some(gpu) = &spec.gpu {
-                        // re-derive KV capacity for the new device ONLY
-                        // when the operator left it at the derived
-                        // default — an explicitly pinned capacity (e.g.
-                        // a KV-tight experiment) must survive per-
-                        // replica compute overrides
-                        let was_derived = rcfg.kv_capacity_tokens
-                            == derive_kv_capacity(&rcfg.gpu, &rcfg.model);
-                        rcfg.gpu = gpu.clone();
-                        if was_derived {
-                            rcfg.kv_capacity_tokens =
-                                derive_kv_capacity(&rcfg.gpu, &rcfg.model);
-                        }
-                        rgt.gpu = gpu.clone();
-                    }
-                    if let Some(drift) = &spec.drift {
-                        rgt.drift = drift.clone();
-                    }
-                    Replica::new(i, system, &rcfg, perf, &rgt, rseed, max_virtual_time)
-                }
-            }
-        })
-        .collect();
+    let ctx = FleetCtx { system, cfg, perf, gt, seed, max_virtual_time, cluster };
+    let mut replicas: Vec<Replica> = (0..n).map(|i| ctx.build_replica(i)).collect();
     let mut dispatcher = Dispatcher::new(cluster.router);
     let mut assignments = Vec::with_capacity(trace.len());
 
@@ -290,6 +352,134 @@ pub fn serve_cluster(
         per_replica,
         assignments,
         virtual_duration,
+        scale_events: Vec::new(),
+        // a fixed fleet holds every replica for the whole run
+        replica_steps: n as f64 * virtual_duration,
+    }
+}
+
+/// The dynamic-fleet dispatch loop: identical co-simulation to the
+/// fixed path, plus one [`Autoscaler`] evaluation per control interval.
+/// Spawned replicas join the live run with inherited hardware specs and
+/// seed derivation; retired replicas stop receiving traffic (their
+/// prefix-affinity sessions re-home) but keep draining to completion.
+fn serve_cluster_autoscaled(
+    system: System,
+    cfg: &ServingConfig,
+    perf: &PerfModel,
+    gt: &GroundTruth,
+    trace: &[Request],
+    seed: u64,
+    cluster: &ClusterConfig,
+) -> ClusterOutput {
+    let asc = &cluster.autoscale;
+    let min = asc.min_replicas.max(1);
+    let max = asc.max_replicas.max(min);
+    let init = cluster.replicas.clamp(min, max);
+    let horizon = trace.last().map(|r| r.arrival).unwrap_or(0.0);
+    let max_virtual_time = CoreOptions::default().max_virtual_time.max(4.0 * horizon);
+    let ctx = FleetCtx { system, cfg, perf, gt, seed, max_virtual_time, cluster };
+    let mut replicas: Vec<Replica> = (0..init).map(|i| ctx.build_replica(i)).collect();
+    let mut spawned_at: Vec<f64> = vec![0.0; init];
+    let mut retired_at: Vec<Option<f64>> = vec![None; init];
+    let mut dispatcher = Dispatcher::new(cluster.router);
+    let mut scaler = Autoscaler::new(asc.clone());
+    let mut scale_events: Vec<ScaleEvent> = Vec::new();
+    let mut assignments = Vec::with_capacity(trace.len());
+
+    for r in trace {
+        // co-advance EVERY replica — retired ones keep draining
+        for rep in replicas.iter_mut() {
+            rep.advance_to(r.arrival);
+        }
+        scaler.note_arrival(r.arrival, r.input_len, r.output_len);
+
+        // health snapshots and capacity pricing only when a control
+        // evaluation will actually run (evaluate re-checks the gate)
+        let decision = if scaler.due(r.arrival) {
+            let fleet: Vec<ReplicaHealth> = replicas
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| retired_at[*i].is_none())
+                .map(|(i, rep)| ReplicaHealth {
+                    id: i,
+                    slowdown: rep.calibrated_slowdown(),
+                    calib: rep.calibration(),
+                })
+                .collect();
+            let nominal = service_capacity_tokens_per_s(perf, cfg, scaler.prefill_frac());
+            scaler.evaluate(r.arrival, nominal, &fleet)
+        } else {
+            None
+        };
+        if let Some(decision) = decision {
+            let target = match decision {
+                ScaleDecision::ScaleOut => {
+                    let id = replicas.len();
+                    replicas.push(ctx.build_replica(id));
+                    spawned_at.push(r.arrival);
+                    retired_at.push(None);
+                    id
+                }
+                ScaleDecision::ScaleIn(id) | ScaleDecision::Retire(id) => {
+                    retired_at[id] = Some(r.arrival);
+                    // sessions pinned here must re-home on their next turn
+                    dispatcher.unpin_replica(id);
+                    id
+                }
+                ScaleDecision::Reprofile(id) => {
+                    replicas[id].reprofile();
+                    id
+                }
+            };
+            let fleet_after = retired_at.iter().filter(|t| t.is_none()).count();
+            scale_events.push(ScaleEvent {
+                t: r.arrival,
+                action: decision.action(),
+                replica: target,
+                fleet_after,
+            });
+        }
+
+        let eligible: Vec<usize> = (0..replicas.len())
+            .filter(|&i| retired_at[i].is_none())
+            .collect();
+        let k = dispatcher.pick_among(&replicas, &eligible, r, perf, &cfg.slo);
+        assignments.push((r.id, k));
+        replicas[k].push(r.clone());
+    }
+
+    let mut per_replica: Vec<EngineOutput> = replicas.into_iter().map(Replica::finish).collect();
+    // lifecycle events ride the targeted replica's own output/timeline
+    for ev in &scale_events {
+        per_replica[ev.replica].scale_events.push(*ev);
+        per_replica[ev.replica].timeline.push_event(*ev);
+    }
+    let records = merge_records(per_replica.iter().map(|o| o.records.as_slice()));
+    let virtual_duration = per_replica
+        .iter()
+        .map(|o| o.virtual_duration)
+        .fold(0.0, f64::max);
+    // seconds each replica was held: spawn → retirement (drain included)
+    // for retired replicas, spawn → end-of-run for surviving ones
+    let replica_steps: f64 = per_replica
+        .iter()
+        .enumerate()
+        .map(|(i, o)| {
+            let end = match retired_at[i] {
+                Some(t) => t.max(o.virtual_duration),
+                None => virtual_duration,
+            };
+            (end - spawned_at[i]).max(0.0)
+        })
+        .sum();
+    ClusterOutput {
+        records,
+        per_replica,
+        assignments,
+        virtual_duration,
+        scale_events,
+        replica_steps,
     }
 }
 
@@ -433,6 +623,7 @@ mod tests {
                 ReplicaSpec::default(),
                 ReplicaSpec { gpu: Some(slow_gpu), drift: None },
             ],
+            ..Default::default()
         };
         let trace = generate_n_requests(&Dataset::sharegpt(), 6.0, 20, 21);
         let out = serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 3, &ccfg);
@@ -463,6 +654,7 @@ mod tests {
                 ReplicaSpec::default(),
                 ReplicaSpec { gpu: Some(slow_gpu), drift: None },
             ],
+            ..Default::default()
         };
         let trace = generate_n_requests(&Dataset::azure_code(), 10.0, 30, 5);
         let out = serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 7, &ccfg);

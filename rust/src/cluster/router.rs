@@ -68,6 +68,10 @@ pub struct Dispatcher {
     rr_next: usize,
     /// prefix-affinity stickiness: session id → replica.
     session_map: BTreeMap<u64, usize>,
+    /// Cached `[0, 1, .., n)` index list for the fixed-fleet `pick`
+    /// path, so routing a request allocates nothing once the fleet
+    /// size is stable.
+    all_idx: Vec<usize>,
 }
 
 impl Dispatcher {
@@ -76,6 +80,7 @@ impl Dispatcher {
             policy,
             rr_next: 0,
             session_map: BTreeMap::new(),
+            all_idx: Vec::new(),
         }
     }
 
@@ -88,8 +93,11 @@ impl Dispatcher {
         self.session_map.len()
     }
 
-    /// Choose the replica for `req`.  Replica clocks have been advanced
-    /// to the arrival time, so state queries are current.
+    /// Choose the replica for `req` from the full fleet.  Replica clocks
+    /// have been advanced to the arrival time, so state queries are
+    /// current.  (Thin wrapper over [`Dispatcher::pick_among`] with every
+    /// index eligible — one implementation, so the fixed-fleet and
+    /// autoscaled paths cannot drift apart.)
     pub fn pick(
         &mut self,
         replicas: &[Replica],
@@ -97,19 +105,45 @@ impl Dispatcher {
         perf: &PerfModel,
         slo: &SloSpec,
     ) -> usize {
-        assert!(!replicas.is_empty());
+        if self.all_idx.len() != replicas.len() {
+            self.all_idx = (0..replicas.len()).collect();
+        }
+        // take/restore the cached list so `pick_among` can borrow self
+        let all = std::mem::take(&mut self.all_idx);
+        let k = self.pick_among(replicas, &all, req, perf, slo);
+        self.all_idx = all;
+        k
+    }
+
+    /// Choose the replica for `req` among `eligible` indices — the
+    /// autoscaled path routes over the active (non-draining) subset.
+    /// A prefix-affinity session pinned to a now-ineligible replica is
+    /// RE-HOMED: the pin is dropped and the session re-sticks to the
+    /// least-loaded eligible replica (its cached prefix is forfeited —
+    /// retirement drains the KV with the replica).
+    pub fn pick_among(
+        &mut self,
+        replicas: &[Replica],
+        eligible: &[usize],
+        req: &Request,
+        perf: &PerfModel,
+        slo: &SloSpec,
+    ) -> usize {
+        assert!(!eligible.is_empty(), "no active replica to route to");
+        let least_kv =
+            |s: &[Replica], e: &[usize]| argmin_among(s, e, |r| r.outstanding_kv_tokens() as f64);
         match self.policy {
             RouterPolicy::RoundRobin => {
-                let k = self.rr_next % replicas.len();
+                let k = eligible[self.rr_next % eligible.len()];
                 self.rr_next = self.rr_next.wrapping_add(1);
                 k
             }
-            RouterPolicy::LeastKv => argmin_by(replicas, |r| r.outstanding_kv_tokens() as f64),
+            RouterPolicy::LeastKv => least_kv(replicas, eligible),
             RouterPolicy::SloSlack => {
                 // max slack == min estimated TTFT for a single request,
                 // but keep the slack form: it is what a multi-model
                 // front-door would compare across heterogeneous SLOs.
-                argmin_by(replicas, |r| {
+                argmin_among(replicas, eligible, |r| {
                     let est = r.estimated_ttft(req, perf);
                     -(slo.ttft_budget(req.input_len) - est)
                 })
@@ -117,27 +151,41 @@ impl Dispatcher {
             RouterPolicy::PrefixAffinity => {
                 let Some(sid) = req.session_id else {
                     // sessionless traffic: no prefix to chase
-                    return argmin_by(replicas, |r| r.outstanding_kv_tokens() as f64);
+                    return least_kv(replicas, eligible);
                 };
                 if let Some(&k) = self.session_map.get(&sid) {
-                    return k;
+                    if eligible.contains(&k) {
+                        return k;
+                    }
+                    // pinned replica is draining: re-home the session
+                    self.session_map.remove(&sid);
                 }
-                // first turn: balance by memory pressure, then stick
-                let k = argmin_by(replicas, |r| r.outstanding_kv_tokens() as f64);
+                // first (or re-homed) turn: balance by memory pressure,
+                // then stick
+                let k = least_kv(replicas, eligible);
                 self.session_map.insert(sid, k);
                 k
             }
         }
     }
+
+    /// Drop every session pinned to replica `k` (called when the
+    /// autoscaler retires it); their next turns re-home via
+    /// [`Dispatcher::pick_among`].  Returns how many were unpinned.
+    pub fn unpin_replica(&mut self, k: usize) -> usize {
+        let before = self.session_map.len();
+        self.session_map.retain(|_, v| *v != k);
+        before - self.session_map.len()
+    }
 }
 
-/// Index of the replica minimizing `key` (first wins ties; `total_cmp`
-/// keeps degenerate estimates from panicking the dispatcher).
-fn argmin_by(replicas: &[Replica], key: impl Fn(&Replica) -> f64) -> usize {
-    let mut best = 0usize;
-    let mut best_key = key(&replicas[0]);
-    for (i, r) in replicas.iter().enumerate().skip(1) {
-        let k = key(r);
+/// Eligible index minimizing `key` (first wins ties; `total_cmp` keeps
+/// degenerate estimates from panicking the dispatcher).
+fn argmin_among(replicas: &[Replica], eligible: &[usize], key: impl Fn(&Replica) -> f64) -> usize {
+    let mut best = eligible[0];
+    let mut best_key = key(&replicas[best]);
+    for &i in &eligible[1..] {
+        let k = key(&replicas[i]);
         if k.total_cmp(&best_key) == std::cmp::Ordering::Less {
             best = i;
             best_key = k;

@@ -44,7 +44,7 @@ use crate::gpu::simulator::Simulator;
 use crate::gpu::stream::StreamId;
 use crate::kvcache::prefix::{PrefixIndex, PrefixStats};
 use crate::kvcache::{KvPool, BLOCK_TOKENS};
-use crate::metrics::timeline::{Timeline, TimelineSample};
+use crate::metrics::timeline::{ScaleEvent, Timeline, TimelineSample};
 use crate::metrics::RequestRecord;
 use crate::perf::{CalibrationStats, PerfPredictor};
 use crate::resource::ResourceManager;
@@ -87,6 +87,11 @@ pub struct EngineOutput {
     /// Online-calibration counters (all zero / identity with
     /// `cfg.calibration.enabled` off or a calibration-free policy).
     pub calibration: CalibrationStats,
+    /// Fleet-lifecycle events that targeted THIS engine (spawn, retire,
+    /// re-profile) — filled by the cluster autoscaler; always empty for
+    /// single-GPU and fixed-fleet runs.  The same events also ride
+    /// `timeline.events()`.
+    pub scale_events: Vec<ScaleEvent>,
 }
 
 /// Run-level counters policies may bump.
@@ -166,6 +171,14 @@ pub trait ServingPolicy {
     /// to the shared offline model.
     fn predictor(&self) -> Option<&dyn PerfPredictor> {
         None
+    }
+
+    /// Refresh the policy's offline performance grid in place (the
+    /// cluster autoscaler's re-profiling action for replicas whose
+    /// converged calibrator keeps reporting high residuals).  Returns
+    /// whether a refresh happened; calibration-free policies decline.
+    fn reprofile(&mut self) -> bool {
+        false
     }
 }
 
@@ -705,6 +718,7 @@ impl EngineCore {
         EngineOutput {
             prefix,
             calibration: self.stats.calib,
+            scale_events: Vec::new(),
             records: self.records,
             timeline: self.timeline,
             reconfigs: self.rm.reconfig_count(),

@@ -447,6 +447,14 @@ impl ServingPolicy for BulletPolicy {
     fn predictor(&self) -> Option<&dyn PerfPredictor> {
         Some(&self.sched.perf)
     }
+
+    fn reprofile(&mut self) -> bool {
+        if !self.sched.perf.enabled() {
+            return false;
+        }
+        self.sched.perf.reprofile();
+        true
+    }
 }
 
 /// Serve `trace` with the full Bullet engine; returns per-request records.

@@ -19,6 +19,9 @@
 //! below:
 //!
 //! ```text
+//!  autoscaler─ calibration-driven fleet control (opt-in): grow, shrink,
+//!              retire and re-profile the replica set from the same
+//!              signals the routers read
 //!  cluster   ─ N replicas behind a Dispatcher (round-robin / least-kv /
 //!              slo-slack / prefix-affinity routing); each replica =
 //!              core + policy
@@ -75,6 +78,37 @@
 //! (`--calibration on`, `--drift <regime>`), and
 //! `examples/online_calibration.rs` asserts the calibrated-vs-frozen
 //! win under drift.
+//!
+//! **The autoscaling loop** ([`cluster::autoscale`]).  The calibration
+//! signals close a second, fleet-level loop on top of the per-GPU one:
+//!
+//! ```text
+//!   calibrate ──► per-replica slowdown / drift events / residuals
+//!       │                         │
+//!       │                         ▼
+//!       │   envelope: arrival-rate window × SLO headroom, priced in
+//!       │   tokens/s via sched::policy::service_capacity_tokens_per_s
+//!       │                         │
+//!       ▼                         ▼
+//!   capacity: Σ nominal/slowdown  ──►  Autoscaler (hysteresis:
+//!       ▲                              separated thresholds + cool-downs)
+//!       │                                │
+//!       └── re-profile (grid refresh) ◄──┼──► scale out (spawn replica,
+//!           when converged residual      │    inherited GpuSpec)
+//!           stays high                   └──► scale in / retire (drain;
+//!                                             prefix-affinity sessions
+//!                                             re-home)
+//! ```
+//!
+//! [`cluster::AutoscaleConfig`] (off by default — `serve_cluster` is
+//! then bit-identical to the fixed-fleet path) rides
+//! [`cluster::ClusterConfig`]; decisions land in
+//! `ClusterOutput::scale_events`, the targeted replica's
+//! `EngineOutput`/timeline, and the CLI (`--autoscale on
+//! --min-replicas N --max-replicas N`).  `examples/autoscale.rs`
+//! asserts the bars: an autoscaled fleet beats a fixed one on P90 TTFT
+//! and goodput under a drift storm while consuming fewer replica-steps
+//! than static max provisioning.
 //!
 //! **Session & prefix reuse** ([`kvcache`], [`workload::sessions`]).
 //! The KV pool refcounts physical blocks, so sequences can share them:

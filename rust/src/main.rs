@@ -7,17 +7,19 @@
 //!                [--seed S] [--prefix-cache on|off] [--replicas N]
 //!                [--router round-robin|least-kv|slo-slack|prefix-affinity]
 //!                [--calibration on|off] [--drift none|throttle|step|lottery|storm]
+//!                [--autoscale on|off] [--min-replicas N] [--max-replicas N]
 //! bullet live    [--requests N] [--artifacts DIR]   # real model via PJRT
 //! bullet profile [--grid coarse|paper]              # offline §3.2.2 pass
 //! bullet info                                        # config + artifact info
 //! ```
 
 use bullet::baselines::{run_system_output, System};
-use bullet::cluster::{serve_cluster, ClusterConfig, RouterPolicy};
+use bullet::cluster::{serve_cluster, AutoscaleConfig, ClusterConfig, RouterPolicy};
 use bullet::config::{CalibrationConfig, DriftSpec, ServingConfig, SloSpec};
 use bullet::coordinator::{BuildOptions, BulletServer, Tokenizer};
 use bullet::engine::live_engine::{serve_live, LiveRequest};
 use bullet::kvcache::prefix::PrefixStats;
+use bullet::metrics::timeline::ScaleAction;
 use bullet::metrics::{summarize, RunSummary};
 use bullet::perf::CalibrationStats;
 use bullet::runtime::{ModelMeta, ModelRuntime};
@@ -59,7 +61,11 @@ serve flags:  --system bullet|vllm-1024|sglang-1024|sglang-2048|nanoflow
                                        with --drift)
               --drift none|throttle|step|lottery|storm
                                       (non-stationary GPU regime the
-                                       offline profile cannot see)";
+                                       offline profile cannot see)
+              --autoscale on|off      (calibration-driven fleet control;
+                                       --replicas is the starting fleet)
+              --min-replicas N --max-replicas N
+                                      (fleet bounds with --autoscale on)";
 
 /// The metric rows every serve table shares (single-GPU and cluster).
 fn summary_rows(t: &mut Table, s: &RunSummary) {
@@ -158,22 +164,47 @@ fn serve(args: &Args) {
         eprintln!("unknown router '{}'", args.get_or("router", "round-robin"));
         std::process::exit(2);
     });
+    let autoscale_on = match args.get_or("autoscale", "off") {
+        "on" => true,
+        "off" => false,
+        other => {
+            eprintln!("unknown --autoscale '{other}' (use on|off)");
+            std::process::exit(2);
+        }
+    };
+    let autoscale = if autoscale_on {
+        AutoscaleConfig::on(
+            args.get_usize("min-replicas", 1),
+            args.get_usize("max-replicas", replicas.max(4)),
+        )
+    } else {
+        AutoscaleConfig::off()
+    };
+    if autoscale_on && !cfg.calibration.enabled {
+        eprintln!(
+            "note: --autoscale on without --calibration on: scaling runs on \
+             arrival-rate demand against NOMINAL capacity only — per-replica \
+             slowdowns read 1.0, so drift retirement and re-profiling stay \
+             inert; pair with --calibration on for the full loop"
+        );
+    }
 
     // The offline profile runs on the CLEAN ground truth (that is the
     // point); the drift regime applies only to the serving-time GPU.
     let gt = server.ground_truth().clone().with_drift(drift.clone());
 
-    if replicas > 1 {
+    if replicas > 1 || autoscale_on {
         eprintln!(
-            "serving {} requests of {} at {} req/s with {} on {} replicas ({})...",
+            "serving {} requests of {} at {} req/s with {} on {} replicas ({}{})...",
             n,
             name,
             rate,
             sys.label(),
             replicas,
-            router.label()
+            router.label(),
+            if autoscale_on { ", autoscaled" } else { "" }
         );
-        let ccfg = ClusterConfig { replicas, router, ..Default::default() };
+        let ccfg = ClusterConfig { replicas, router, autoscale, ..Default::default() };
         // direct call so --seed drives the replica simulators, exactly
         // like the single-replica path below
         let out = serve_cluster(sys, &cfg, server.perf(), &gt, &trace, seed, &ccfg);
@@ -195,6 +226,27 @@ fn serve(args: &Args) {
         ]);
         if cfg.prefix_cache {
             prefix_rows(&mut t, &out.prefix_stats());
+        }
+        if autoscale_on {
+            let count = |a: ScaleAction| {
+                out.scale_events.iter().filter(|e| e.action == a).count()
+            };
+            t.row(&[
+                "scale events".to_string(),
+                format!(
+                    "{} out / {} in / {} retire / {} reprofile",
+                    count(ScaleAction::ScaleOut),
+                    count(ScaleAction::ScaleIn),
+                    count(ScaleAction::Retire),
+                    count(ScaleAction::Reprofile)
+                ),
+            ]);
+            let retired = count(ScaleAction::ScaleIn) + count(ScaleAction::Retire);
+            t.row(&[
+                "fleet (final/spawned)".to_string(),
+                format!("{}/{}", out.per_replica.len() - retired, out.per_replica.len()),
+            ]);
+            t.row(&["replica-steps (GPU·s)".to_string(), f(out.replica_steps, 1)]);
         }
         if !drift.is_none() {
             t.row(&["drift regime".to_string(), drift_name.clone()]);

@@ -28,10 +28,39 @@ pub struct TimelineSample {
     pub calib_residual: f64,
 }
 
+/// Fleet-lifecycle actions the cluster autoscaler can take.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleAction {
+    /// Spawn a replica (capacity below the arrival-rate SLO envelope).
+    ScaleOut,
+    /// Drain and release a replica (sustained capacity surplus).
+    ScaleIn,
+    /// Deweight-and-drain a replica whose drift events keep firing
+    /// (health-driven removal, as opposed to capacity-driven `ScaleIn`).
+    Retire,
+    /// Refresh a replica's offline perf grid in place (converged
+    /// calibrator, persistently high residual).  Fleet size unchanged.
+    Reprofile,
+}
+
+/// One autoscaler decision, stamped on the global virtual timeline.
+/// Cluster runs surface these in `ClusterOutput::scale_events` and on
+/// the affected replica's own [`Timeline`] / `EngineOutput`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScaleEvent {
+    pub t: f64,
+    pub action: ScaleAction,
+    /// The replica acted on (the new replica's id for `ScaleOut`).
+    pub replica: usize,
+    /// Active (non-draining) fleet size after the action.
+    pub fleet_after: usize,
+}
+
 /// Append-only timeline.
 #[derive(Debug, Clone, Default)]
 pub struct Timeline {
     samples: Vec<TimelineSample>,
+    events: Vec<ScaleEvent>,
 }
 
 impl Timeline {
@@ -45,6 +74,17 @@ impl Timeline {
             "timeline must be monotone"
         );
         self.samples.push(s);
+    }
+
+    /// Record a fleet-lifecycle event affecting this engine (recorded
+    /// regardless of sample recording — lifecycle is always cheap).
+    pub fn push_event(&mut self, e: ScaleEvent) {
+        self.events.push(e);
+    }
+
+    /// Fleet-lifecycle events affecting this engine, in time order.
+    pub fn events(&self) -> &[ScaleEvent] {
+        &self.events
     }
 
     pub fn samples(&self) -> &[TimelineSample] {
@@ -156,5 +196,20 @@ mod tests {
     #[test]
     fn empty_resample() {
         assert!(Timeline::new().resample(0.5).is_empty());
+    }
+
+    #[test]
+    fn scale_events_ride_the_timeline() {
+        let mut tl = Timeline::new();
+        assert!(tl.events().is_empty());
+        let out = ScaleEvent { t: 1.0, action: ScaleAction::ScaleOut, replica: 2, fleet_after: 3 };
+        let ret = ScaleEvent { t: 9.0, action: ScaleAction::Retire, replica: 1, fleet_after: 2 };
+        tl.push_event(out);
+        tl.push_event(ret);
+        assert_eq!(tl.events().len(), 2);
+        assert_eq!(tl.events()[0].action, ScaleAction::ScaleOut);
+        assert_eq!(tl.events()[1].fleet_after, 2);
+        // events are independent of sample recording
+        assert!(tl.is_empty());
     }
 }

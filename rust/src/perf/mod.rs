@@ -60,4 +60,12 @@ pub trait PerfPredictor {
     fn calibrated_slowdown(&self) -> f64 {
         1.0
     }
+
+    /// The predictor's live calibration counters (identity for frozen
+    /// models).  The cluster autoscaler reads residual, convergence and
+    /// drift-event state through this — the signals that drive
+    /// scale-out, retirement and re-profiling decisions.
+    fn calibration(&self) -> CalibrationStats {
+        CalibrationStats::default()
+    }
 }

@@ -41,10 +41,20 @@ pub struct CalibrationStats {
     /// Sum of |observed - predicted| / predicted over all samples
     /// (predicted = the calibrated prediction at observation time).
     pub abs_residual_sum: f64,
+    /// Fast EWMA of |residual| — the *recent* prediction error, which
+    /// decays after adaptation where the cumulative mean cannot.  The
+    /// cluster autoscaler's re-profiling trigger reads this: a converged
+    /// calibrator whose recent residual stays high needs its offline
+    /// grid refreshed, not more EWMA steps.
+    pub recent_abs_residual: f64,
     /// Drift events flagged by the residual-trend detector.
     pub drift_events: u64,
-    /// Learned observed/nominal slowdown (EWMA over sample ratios;
-    /// 1.0 until samples arrive).
+    /// Offline-grid refreshes applied ([`OnlineCalibrator::reprofile`]).
+    pub reprofiles: u64,
+    /// Learned observed/nominal slowdown vs the ORIGINAL offline grid
+    /// (EWMA over sample ratios; 1.0 until samples arrive).  Survives
+    /// re-profiling — the device did not get faster because the grid
+    /// moved under it.
     pub slowdown: f64,
 }
 
@@ -53,7 +63,9 @@ impl Default for CalibrationStats {
         CalibrationStats {
             samples: 0,
             abs_residual_sum: 0.0,
+            recent_abs_residual: 0.0,
             drift_events: 0,
+            reprofiles: 0,
             slowdown: 1.0,
         }
     }
@@ -69,18 +81,21 @@ impl CalibrationStats {
         }
     }
 
-    /// Field-wise accumulate (cluster-level aggregation); `slowdown`
-    /// merges sample-weighted.
+    /// Field-wise accumulate (cluster-level aggregation); `slowdown` and
+    /// `recent_abs_residual` merge sample-weighted.
     pub fn merge(&mut self, o: &CalibrationStats) {
         let total = self.samples + o.samples;
         if total > 0 {
-            self.slowdown = (self.slowdown * self.samples as f64
-                + o.slowdown * o.samples as f64)
-                / total as f64;
+            let w = |a: f64, b: f64| {
+                (a * self.samples as f64 + b * o.samples as f64) / total as f64
+            };
+            self.slowdown = w(self.slowdown, o.slowdown);
+            self.recent_abs_residual = w(self.recent_abs_residual, o.recent_abs_residual);
         }
         self.samples = total;
         self.abs_residual_sum += o.abs_residual_sum;
         self.drift_events += o.drift_events;
+        self.reprofiles += o.reprofiles;
     }
 }
 
@@ -148,6 +163,12 @@ pub struct OnlineCalibrator {
     window: VecDeque<f64>,
     /// Boosted-learning-rate updates remaining after a drift event.
     boost_left: u32,
+    /// Accumulated offline-grid refresh factor ([`Self::reprofile`]):
+    /// base predictions are the wrapped model's times this.  Exactly
+    /// 1.0 until a re-profile, and the multiply is skipped then, so an
+    /// un-refreshed calibrator stays bitwise-faithful to the offline
+    /// grid.
+    grid_refresh: f64,
     stats: CalibrationStats,
 }
 
@@ -159,6 +180,7 @@ impl OnlineCalibrator {
             cells: BTreeMap::new(),
             window: VecDeque::new(),
             boost_left: 0,
+            grid_refresh: 1.0,
             stats: CalibrationStats::default(),
         }
     }
@@ -179,6 +201,58 @@ impl OnlineCalibrator {
     /// Correction cells holding at least one sample.
     pub fn warm_cells(&self) -> usize {
         self.cells.len()
+    }
+
+    /// Recent |residual| EWMA — the re-profiling trigger signal (see
+    /// [`CalibrationStats::recent_abs_residual`]).
+    pub fn recent_abs_residual(&self) -> f64 {
+        self.stats.recent_abs_residual
+    }
+
+    /// Whether enough samples have been ingested that the learned state
+    /// is trustworthy — the convergence gate autoscalers apply before
+    /// acting on residuals (a cold calibrator's residuals are noise).
+    pub fn converged(&self, min_samples: u64) -> bool {
+        self.cfg.enabled && self.stats.samples >= min_samples
+    }
+
+    /// The accumulated grid-refresh factor (1.0 before any re-profile).
+    pub fn grid_refresh(&self) -> f64 {
+        self.grid_refresh
+    }
+
+    /// Simulated §3.2.2 offline-grid refresh: fold the learned aggregate
+    /// slowdown into the base grid (every base prediction scales by it),
+    /// clear the per-cell ratios and residual history, and keep
+    /// calibrating against the refreshed baseline.  Used by the cluster
+    /// autoscaler when a CONVERGED calibrator's recent residual stays
+    /// high — per-cell EWMA cannot fix a grid that is wrong everywhere.
+    /// `calibrated_slowdown()` stays continuous across the refresh: the
+    /// device's slowdown is measured against the original grid.  Returns
+    /// the fold factor (1.0 when disabled or nothing learned).
+    pub fn reprofile(&mut self) -> f64 {
+        if !self.cfg.enabled || self.stats.samples == 0 {
+            return 1.0;
+        }
+        let fold = self.clamp_ratio(self.stats.slowdown / self.grid_refresh);
+        self.grid_refresh *= fold;
+        self.cells.clear();
+        self.window.clear();
+        self.boost_left = 0;
+        self.stats.reprofiles += 1;
+        self.stats.recent_abs_residual = 0.0;
+        fold
+    }
+
+    /// A base (offline-grid) value under the current refresh factor.
+    /// The multiply is skipped at exactly 1.0 so un-refreshed paths stay
+    /// bitwise identical to the wrapped model.
+    fn refreshed(&self, x: f64) -> f64 {
+        if self.grid_refresh == 1.0 {
+            x
+        } else {
+            x * self.grid_refresh
+        }
     }
 
     /// Blend a base (offline) prediction with a cell's learned ratio.
@@ -203,8 +277,9 @@ impl OnlineCalibrator {
         }
     }
 
-    /// Shared sample path: `base` = the offline prediction for the
-    /// observed shape, `calibrated` = our current prediction for it.
+    /// Shared sample path: `base` = the (refresh-scaled) offline
+    /// prediction for the observed shape, `calibrated` = our current
+    /// prediction for it.
     fn ingest(
         &mut self,
         key: CellKey,
@@ -221,12 +296,17 @@ impl OnlineCalibrator {
             return None;
         }
         let residual = (observed - calibrated) / calibrated.max(1e-12);
+        // cell-relative ratio (vs the refreshed grid) drives the EWMA;
+        // the total ratio (vs the ORIGINAL grid) drives the slowdown
         let sample_ratio = self.clamp_ratio(observed / base);
+        let total_ratio = self.clamp_ratio((observed / base) * self.grid_refresh);
 
         self.stats.samples += 1;
         self.stats.abs_residual_sum += residual.abs();
-        // slow EWMA over raw sample ratios = the device's learned slowdown
-        self.stats.slowdown += 0.1 * (sample_ratio - self.stats.slowdown);
+        // fast |residual| EWMA: the re-profiling trigger signal
+        self.stats.recent_abs_residual += 0.15 * (residual.abs() - self.stats.recent_abs_residual);
+        // slow EWMA over total sample ratios = the device's learned slowdown
+        self.stats.slowdown += 0.1 * (total_ratio - self.stats.slowdown);
 
         // Drift detection on the signed residual trend.
         let mut drift = false;
@@ -275,7 +355,8 @@ impl OnlineCalibrator {
         observed: f64,
     ) -> Option<SampleOutcome> {
         let per_layer = observed / layers.max(1) as f64;
-        let base = PerfModel::predict_prefill_layer(&self.inner, sl, ctx, pm, contended);
+        let base =
+            self.refreshed(PerfModel::predict_prefill_layer(&self.inner, sl, ctx, pm, contended));
         let calibrated = PerfPredictor::predict_prefill_layer(self, sl, ctx, pm, contended);
         self.ingest(CellKey::prefill(sl, ctx, pm), base, calibrated, per_layer)
     }
@@ -289,7 +370,8 @@ impl OnlineCalibrator {
         contended: bool,
         observed: f64,
     ) -> Option<SampleOutcome> {
-        let base = PerfModel::predict_decode_step(&self.inner, bs, cl, dm, contended);
+        let base =
+            self.refreshed(PerfModel::predict_decode_step(&self.inner, bs, cl, dm, contended));
         let calibrated = PerfPredictor::predict_decode_step(self, bs, cl, dm, contended);
         self.ingest(CellKey::decode(bs, cl, dm), base, calibrated, observed)
     }
@@ -297,17 +379,23 @@ impl OnlineCalibrator {
 
 impl PerfPredictor for OnlineCalibrator {
     fn predict_prefill_layer(&self, sl: usize, ctx: usize, pm: usize, contended: bool) -> f64 {
-        let base = PerfModel::predict_prefill_layer(&self.inner, sl, ctx, pm, contended);
+        let base =
+            self.refreshed(PerfModel::predict_prefill_layer(&self.inner, sl, ctx, pm, contended));
         self.blend(&CellKey::prefill(sl, ctx, pm), base)
     }
 
     fn predict_decode_step(&self, bs: usize, cl: usize, dm: usize, contended: bool) -> f64 {
-        let base = PerfModel::predict_decode_step(&self.inner, bs, cl, dm, contended);
+        let base =
+            self.refreshed(PerfModel::predict_decode_step(&self.inner, bs, cl, dm, contended));
         self.blend(&CellKey::decode(bs, cl, dm), base)
     }
 
     fn calibrated_slowdown(&self) -> f64 {
         self.stats.slowdown
+    }
+
+    fn calibration(&self) -> CalibrationStats {
+        self.stats
     }
 }
 
@@ -429,24 +517,70 @@ mod tests {
         let mut a = CalibrationStats {
             samples: 10,
             abs_residual_sum: 1.0,
+            recent_abs_residual: 0.4,
             drift_events: 1,
+            reprofiles: 1,
             slowdown: 1.0,
         };
         let b = CalibrationStats {
             samples: 30,
             abs_residual_sum: 3.0,
+            recent_abs_residual: 0.0,
             drift_events: 2,
+            reprofiles: 0,
             slowdown: 2.0,
         };
         a.merge(&b);
         assert_eq!(a.samples, 40);
         assert_eq!(a.drift_events, 3);
+        assert_eq!(a.reprofiles, 1);
         assert!((a.slowdown - 1.75).abs() < 1e-12);
+        assert!((a.recent_abs_residual - 0.1).abs() < 1e-12);
         assert!((a.mean_abs_residual() - 0.1).abs() < 1e-12);
         // merging an empty default is a no-op
         let mut c = CalibrationStats::default();
         c.merge(&CalibrationStats::default());
         assert_eq!(c.samples, 0);
         assert_eq!(c.slowdown, 1.0);
+    }
+
+    #[test]
+    fn reprofile_folds_the_learned_slowdown_into_the_grid() {
+        let mut c = calibrator(CalibrationConfig::on());
+        let base = PerfModel::predict_prefill_layer(c.offline(), 2048, 0, 54, true);
+        // the device runs a uniform 2x slower than the offline grid
+        for _ in 0..60 {
+            c.observe_prefill(2048, 0, 54, true, 1, base * 2.0);
+        }
+        assert!(c.converged(50));
+        let learned = c.calibrated_slowdown();
+        assert!(learned > 1.6, "slowdown {learned}");
+        let fold = c.reprofile();
+        assert!((fold - learned).abs() < 1e-12, "fold {fold} vs learned {learned}");
+        assert_eq!(c.warm_cells(), 0, "cells cleared by the refresh");
+        assert_eq!(c.stats().reprofiles, 1);
+        assert_eq!(c.recent_abs_residual(), 0.0);
+        // the refreshed grid predicts near-observed even with cold cells
+        let p = PerfPredictor::predict_prefill_layer(&c, 2048, 0, 54, true);
+        assert!(
+            (p / (base * 2.0) - 1.0).abs() < 0.25,
+            "refreshed base {p} should approach the observed {}",
+            base * 2.0
+        );
+        // and the device's total slowdown stays continuous across it
+        assert!((c.calibrated_slowdown() - learned).abs() < 1e-12);
+        // further unbiased observations keep the slowdown near the total
+        for _ in 0..40 {
+            c.observe_prefill(2048, 0, 54, true, 1, base * 2.0);
+        }
+        assert!(
+            (c.calibrated_slowdown() - 2.0).abs() < 0.4,
+            "total slowdown {} should stay ~2x after the refresh",
+            c.calibrated_slowdown()
+        );
+        // an untouched calibrator never refreshes implicitly
+        let mut idle = calibrator(CalibrationConfig::on());
+        assert_eq!(idle.reprofile(), 1.0);
+        assert_eq!(idle.grid_refresh(), 1.0);
     }
 }

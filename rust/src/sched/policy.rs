@@ -27,6 +27,30 @@ pub struct Decision {
     pub pause_decode: bool,
 }
 
+/// Whole-GPU serving capacity in tokens/s under `perf`, for a workload
+/// whose token mix is `prefill_frac` prefill (the rest decode): the
+/// harmonic combination of the two phases' solo service rates at
+/// reference shapes.  This is the unit the cluster autoscaler prices its
+/// arrival-rate SLO envelope in — derived from the same [`PerfPredictor`]
+/// Algorithm 1 schedules with, so a calibrated predictor yields a
+/// calibrated envelope.  Deliberately optimistic (solo, full-GPU,
+/// wave-aligned reference shapes): the autoscaler's utilization
+/// thresholds, not this number, carry the latency headroom.
+pub fn service_capacity_tokens_per_s<P: PerfPredictor>(
+    perf: &P,
+    cfg: &ServingConfig,
+    prefill_frac: f64,
+) -> f64 {
+    let sms = cfg.gpu.num_sms;
+    let layers = cfg.model.n_layers.max(1) as f64;
+    let sl = 2048usize;
+    let rate_p = sl as f64 / (perf.predict_prefill_layer(sl, 0, sms, false) * layers).max(1e-12);
+    let bs = cfg.max_decode_batch.clamp(1, 64);
+    let rate_d = bs as f64 / perf.predict_decode_step(bs, 2048, sms, false).max(1e-12);
+    let f = if prefill_frac.is_finite() { prefill_frac.clamp(0.0, 1.0) } else { 0.5 };
+    1.0 / (f / rate_p.max(1e-9) + (1.0 - f) / rate_d.max(1e-9))
+}
+
 /// The SLO-aware scheduler.  Generic over the prediction source: the
 /// frozen offline [`PerfModel`] (the default, and the pre-calibration
 /// behavior) or any other [`PerfPredictor`] such as the feedback-driven
@@ -40,6 +64,12 @@ pub struct SloScheduler<P: PerfPredictor = PerfModel> {
 impl<P: PerfPredictor> SloScheduler<P> {
     pub fn new(cfg: ServingConfig, perf: P) -> SloScheduler<P> {
         SloScheduler { cfg, perf }
+    }
+
+    /// This scheduler's whole-GPU serving capacity in tokens/s for a
+    /// `prefill_frac` token mix (see [`service_capacity_tokens_per_s`]).
+    pub fn capacity_tokens_per_s(&self, prefill_frac: f64) -> f64 {
+        service_capacity_tokens_per_s(&self.perf, &self.cfg, prefill_frac)
     }
 
     /// Predicted remaining prefill time for the active batch under `pm` SMs.
@@ -527,6 +557,42 @@ mod tests {
             d_cal.partition,
             d_frozen.partition
         );
+    }
+
+    #[test]
+    fn service_capacity_sane_and_mix_sensitive() {
+        let s = scheduler();
+        let all_prefill = s.capacity_tokens_per_s(1.0);
+        let all_decode = s.capacity_tokens_per_s(0.0);
+        let mixed = s.capacity_tokens_per_s(0.7);
+        for c in [all_prefill, all_decode, mixed] {
+            assert!(c.is_finite() && c > 0.0, "capacity {c}");
+        }
+        // A100 + Llama-8B magnitudes: prefill O(10k) tok/s, decode
+        // (weight-read-bound) slower — the mix lands between them.
+        assert!(all_prefill > all_decode, "{all_prefill} vs {all_decode}");
+        assert!(mixed < all_prefill && mixed > all_decode, "mixed {mixed}");
+        assert!(all_prefill > 5_000.0 && all_prefill < 100_000.0, "{all_prefill}");
+        // a predictor that learned a 2x slowdown halves the envelope
+        use crate::config::CalibrationConfig;
+        use crate::perf::OnlineCalibrator;
+        let inner = PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b());
+        let mut cal = OnlineCalibrator::new(inner.clone(), CalibrationConfig::on());
+        let bp = PerfModel::predict_prefill_layer(&inner, 2048, 0, 108, false);
+        let bd = PerfModel::predict_decode_step(&inner, 64, 2048, 108, false);
+        for _ in 0..40 {
+            cal.observe_prefill(2048, 0, 108, false, 1, bp * 2.0);
+            cal.observe_decode(64, 2048, 108, false, bd * 2.0);
+        }
+        let cfg = ServingConfig::default();
+        let slow = service_capacity_tokens_per_s(&cal, &cfg, 0.7);
+        let fast = service_capacity_tokens_per_s(&inner, &cfg, 0.7);
+        assert!(
+            slow < 0.7 * fast,
+            "calibrated capacity {slow} must fall well below nominal {fast}"
+        );
+        // degenerate mixes are clamped, not propagated
+        assert!(s.capacity_tokens_per_s(f64::NAN).is_finite());
     }
 
     #[test]

@@ -1,0 +1,288 @@
+//! Integration over the calibration-driven autoscaler (the feature and
+//! this harness are one deliverable): scale-out under a load ramp,
+//! retire-on-chronic-drift with deweighted routing, the no-flap
+//! hysteresis invariant under an oscillating arrival rate, and
+//! off-switch bit-parity with the PR 3 fixed-fleet path.
+
+use bullet::baselines::System;
+use bullet::cluster::{
+    serve_cluster, AutoscaleConfig, ClusterConfig, ReplicaSpec, RouterPolicy,
+};
+use bullet::config::{CalibrationConfig, DriftSpec, GpuSpec, ModelSpec, ServingConfig};
+use bullet::coordinator::{BuildOptions, BulletServer};
+use bullet::gpu::roofline::GroundTruth;
+use bullet::metrics::timeline::ScaleAction;
+use bullet::perf::PerfModel;
+use bullet::workload::{generate_n_requests, Dataset, Request};
+
+fn setup() -> (ServingConfig, PerfModel, GroundTruth) {
+    let cfg = ServingConfig::default();
+    let perf = PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b());
+    let gt = GroundTruth::new(GpuSpec::a100());
+    (cfg, perf, gt)
+}
+
+fn quick_asc(min: usize, max: usize) -> AutoscaleConfig {
+    AutoscaleConfig {
+        control_interval_s: 0.5,
+        rate_window_s: 4.0,
+        cooldown_out_s: 2.0,
+        cooldown_in_s: 6.0,
+        ..AutoscaleConfig::on(min, max)
+    }
+}
+
+/// A saturating long-prompt ramp pushes the envelope far past one
+/// replica's calibrated capacity: the fleet must grow, the spawned
+/// replicas must take real traffic, and elasticity must undercut static
+/// max provisioning.
+#[test]
+fn scales_out_under_a_load_ramp() {
+    let (cfg, perf, gt) = setup();
+    let trace = generate_n_requests(&Dataset::azure_code(), 20.0, 60, 11);
+    let ccfg = ClusterConfig {
+        replicas: 1,
+        router: RouterPolicy::LeastKv,
+        autoscale: quick_asc(1, 3),
+        ..Default::default()
+    };
+    let out = serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 1, &ccfg);
+    assert_eq!(out.records.len(), trace.len());
+    let outs = out
+        .scale_events
+        .iter()
+        .filter(|e| e.action == ScaleAction::ScaleOut)
+        .count();
+    assert!(outs >= 1, "ramp must trigger a scale-out: {:?}", out.scale_events);
+    assert!(out.per_replica.len() > 1, "fleet never grew");
+    for e in &out.scale_events {
+        assert!(
+            (1..=3).contains(&e.fleet_after),
+            "fleet bound violated: {e:?}"
+        );
+    }
+    // spawned replicas actually absorb load
+    let counts = out.per_replica_counts();
+    assert!(
+        counts.iter().filter(|&&c| c > 0).count() >= 2,
+        "spawned replicas starved: {counts:?}"
+    );
+    // elasticity: cheaper than holding max_replicas the whole run
+    assert!(
+        out.replica_steps < 3.0 * out.virtual_duration,
+        "replica-steps {} vs static max {}",
+        out.replica_steps,
+        3.0 * out.virtual_duration
+    );
+    // lifecycle events ride the spawned replica's own output/timeline
+    let spawn = out
+        .scale_events
+        .iter()
+        .find(|e| e.action == ScaleAction::ScaleOut)
+        .unwrap();
+    assert!(out.per_replica[spawn.replica]
+        .scale_events
+        .iter()
+        .any(|e| e.action == ScaleAction::ScaleOut));
+    assert!(!out.per_replica[spawn.replica].timeline.events().is_empty());
+}
+
+/// A replica whose drift events keep firing gets deweighted and
+/// retired: after the retirement instant the router never sends it
+/// another request, and the trace still completes (it drains).
+#[test]
+fn retires_a_chronically_drifting_replica() {
+    let cfg = ServingConfig {
+        // drift_threshold 0.5: only the injected 3x step can trend the
+        // residual that far — profiling interpolation error cannot flag
+        // the healthy replica and steal the retirement
+        calibration: CalibrationConfig { drift_threshold: 0.5, ..CalibrationConfig::on() },
+        ..ServingConfig::default()
+    };
+    let server = BulletServer::build(cfg.clone(), BuildOptions::with_coarse_profiling(&cfg));
+    let ccfg = ClusterConfig {
+        replicas: 2,
+        router: RouterPolicy::RoundRobin,
+        replica_specs: vec![
+            ReplicaSpec::default(),
+            // a brutal co-tenant lands on replica 1 at t=1
+            ReplicaSpec {
+                drift: Some(DriftSpec { step_at_s: 1.0, step_factor: 3.0, ..DriftSpec::none() }),
+                ..Default::default()
+            },
+        ],
+        autoscale: AutoscaleConfig {
+            // hair-trigger retirement; capacity actions disabled so the
+            // health path is isolated
+            retire_drift_events: 1,
+            retire_windows: 1,
+            control_interval_s: 0.5,
+            cooldown_in_s: 1.0,
+            cooldown_out_s: 1.0,
+            scale_out_util: f64::INFINITY,
+            scale_in_util: 0.0,
+            reprofile_residual: f64::INFINITY,
+            ..AutoscaleConfig::on(1, 3)
+        },
+        ..Default::default()
+    };
+    let trace = generate_n_requests(&Dataset::sharegpt(), 8.0, 60, 7);
+    let out = serve_cluster(
+        System::Bullet,
+        &cfg,
+        server.perf(),
+        server.ground_truth(),
+        &trace,
+        3,
+        &ccfg,
+    );
+    assert_eq!(out.records.len(), trace.len(), "retired replica must drain");
+    let retire = out
+        .scale_events
+        .iter()
+        .find(|e| e.action == ScaleAction::Retire)
+        .unwrap_or_else(|| panic!("chronic drifter never retired: {:?}", out.scale_events));
+    assert_eq!(retire.replica, 1, "the drifting replica is the victim");
+    for (r, &(id, k)) in trace.iter().zip(&out.assignments) {
+        assert_eq!(r.id, id);
+        if r.arrival > retire.t {
+            assert_ne!(k, 1, "request {} routed to the retired replica at t={}", id, r.arrival);
+        }
+    }
+    // retirement is credited: the retired replica's lease ends at
+    // retire-or-drain, not end-of-run (a drained core's clock freezes,
+    // so billing strictly undercuts 2 x makespan)
+    assert!(
+        out.replica_steps < 2.0 * out.virtual_duration,
+        "replica-steps {} must credit the retirement (makespan {})",
+        out.replica_steps,
+        out.virtual_duration
+    );
+}
+
+/// Square-wave arrivals — bursts that clear the scale-out bar, lulls
+/// that clear the scale-in bar — must never produce an out→in flap
+/// within one scale-in cool-down window, and the fleet stays within
+/// its bounds throughout.
+#[test]
+fn never_flaps_under_oscillating_load() {
+    let (cfg, perf, gt) = setup();
+    let mut trace: Vec<Request> = Vec::new();
+    let mut id = 0u64;
+    for cycle in 0..4 {
+        let t0 = cycle as f64 * 10.0;
+        // 1.5 s burst of heavy prompts...
+        for i in 0..30 {
+            trace.push(Request {
+                id,
+                arrival: t0 + i as f64 * 0.05,
+                input_len: 2048,
+                output_len: 16,
+                ..Default::default()
+            });
+            id += 1;
+        }
+        // ...then a quiet tail
+        for i in 0..4 {
+            trace.push(Request {
+                id,
+                arrival: t0 + 2.0 + i as f64 * 2.0,
+                input_len: 256,
+                output_len: 16,
+                ..Default::default()
+            });
+            id += 1;
+        }
+    }
+    let asc = AutoscaleConfig {
+        control_interval_s: 0.5,
+        rate_window_s: 3.0,
+        cooldown_out_s: 2.0,
+        cooldown_in_s: 6.0,
+        ..AutoscaleConfig::on(1, 4)
+    };
+    let ccfg = ClusterConfig {
+        replicas: 1,
+        router: RouterPolicy::LeastKv,
+        autoscale: asc.clone(),
+        ..Default::default()
+    };
+    let out = serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 9, &ccfg);
+    assert_eq!(out.records.len(), trace.len());
+    assert!(
+        out.scale_events.iter().any(|e| e.action == ScaleAction::ScaleOut),
+        "bursts must scale the fleet out: {:?}",
+        out.scale_events
+    );
+    let mut last_out = f64::NEG_INFINITY;
+    for e in &out.scale_events {
+        match e.action {
+            ScaleAction::ScaleOut => last_out = e.t,
+            ScaleAction::ScaleIn | ScaleAction::Retire => assert!(
+                e.t - last_out >= asc.cooldown_in_s - 1e-9,
+                "flap: removal at t={} only {:.2}s after a scale-out",
+                e.t,
+                e.t - last_out
+            ),
+            ScaleAction::Reprofile => {}
+        }
+        assert!((1..=4).contains(&e.fleet_after), "fleet bound violated: {e:?}");
+    }
+}
+
+/// `--autoscale off` (the default config) is bit-identical to the PR 3
+/// fixed-fleet path, and a CLAMPED autoscaler (min == max == replicas,
+/// health actions disabled) routes bit-identically through the dynamic
+/// path — the machinery provably adds nothing until it can act.
+#[test]
+fn autoscale_off_is_bit_identical_to_fixed_fleet() {
+    let (cfg, perf, gt) = setup();
+    let trace = generate_n_requests(&Dataset::sharegpt(), 10.0, 24, 5);
+    for router in [
+        RouterPolicy::RoundRobin,
+        RouterPolicy::LeastKv,
+        RouterPolicy::SloSlack,
+        RouterPolicy::PrefixAffinity,
+    ] {
+        let off = ClusterConfig { replicas: 3, router, ..Default::default() };
+        let a = serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 5, &off);
+        assert!(a.scale_events.is_empty(), "{}: off-path emitted events", router.label());
+        assert!(
+            (a.replica_steps - 3.0 * a.virtual_duration).abs() < 1e-9,
+            "{}: fixed fleet holds every replica for the whole run",
+            router.label()
+        );
+        let clamped = ClusterConfig {
+            autoscale: AutoscaleConfig {
+                retire_drift_events: u64::MAX,
+                reprofile_residual: f64::INFINITY,
+                ..AutoscaleConfig::on(3, 3)
+            },
+            ..off.clone()
+        };
+        let b = serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 5, &clamped);
+        assert_eq!(a.records, b.records, "{}: records diverged", router.label());
+        assert_eq!(a.assignments, b.assignments, "{}: routing diverged", router.label());
+        assert!(b.scale_events.is_empty(), "{}: clamped autoscaler acted", router.label());
+    }
+}
+
+/// Autoscaled runs replay bit-identically — the controller is a pure
+/// function of the arrival stream and replica state.
+#[test]
+fn autoscaled_runs_are_deterministic() {
+    let (cfg, perf, gt) = setup();
+    let trace = generate_n_requests(&Dataset::azure_code(), 15.0, 40, 21);
+    let ccfg = ClusterConfig {
+        replicas: 1,
+        router: RouterPolicy::LeastKv,
+        autoscale: quick_asc(1, 3),
+        ..Default::default()
+    };
+    let a = serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 13, &ccfg);
+    let b = serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 13, &ccfg);
+    assert_eq!(a.records, b.records);
+    assert_eq!(a.assignments, b.assignments);
+    assert_eq!(a.scale_events, b.scale_events);
+    assert_eq!(a.replica_steps, b.replica_steps);
+}

@@ -1,6 +1,7 @@
 //! Property-based tests over coordinator/substrate invariants, via the
 //! in-tree `testing::prop` mini-framework (offline stand-in for proptest).
 
+use bullet::cluster::{AutoscaleConfig, Autoscaler, ReplicaHealth, ScaleDecision};
 use bullet::config::{CalibrationConfig, GpuSpec, ModelSpec, ServingConfig};
 use bullet::gpu::roofline::GroundTruth;
 use bullet::gpu::simulator::Simulator;
@@ -445,6 +446,124 @@ fn prop_calibrator_converges_and_stays_finite() {
         check(
             p1.is_finite() && p1 > 0.0 && p2.is_finite() && p2 > 0.0,
             format!("non-finite prediction: {p1} / {p2}"),
+        )
+    });
+}
+
+/// Autoscaler safety invariants under randomized arrival/drift/health
+/// sequences: the fleet never leaves `[min, max]`, and a removal
+/// (scale-in OR retire) never lands within one scale-in cool-down of a
+/// scale-out — the no-flap hysteresis guarantee.
+#[test]
+fn prop_autoscaler_fleet_bounds_and_hysteresis() {
+    forall(111, 120, |g| {
+        let min = g.usize_in(1, 3);
+        let max = min + g.usize_in(0, 4);
+        let out_util = g.f64_in(0.6, 0.9);
+        let cfg = AutoscaleConfig {
+            control_interval_s: g.f64_in(0.2, 1.0),
+            rate_window_s: g.f64_in(2.0, 6.0),
+            slo_headroom: g.f64_in(1.0, 1.5),
+            scale_out_util: out_util,
+            scale_in_util: g.f64_in(0.1, out_util - 0.15),
+            cooldown_out_s: g.f64_in(0.5, 3.0),
+            cooldown_in_s: g.f64_in(3.0, 10.0),
+            retire_drift_events: g.u64_in(1, 3),
+            retire_windows: g.usize_in(1, 3) as u32,
+            reprofile_residual: g.f64_in(0.1, 0.5),
+            reprofile_min_samples: g.u64_in(10, 100),
+            ..AutoscaleConfig::on(min, max)
+        };
+        let cooldown_in = cfg.cooldown_in_s;
+        let mut asc = Autoscaler::new(cfg);
+        let mut fleet: Vec<ReplicaHealth> = (0..g.usize_in(min, max))
+            .map(|i| ReplicaHealth { id: i, slowdown: 1.0, calib: Default::default() })
+            .collect();
+        let mut next_id = fleet.len();
+        let mut t = 0.0;
+        let mut last_out = f64::NEG_INFINITY;
+        for _ in 0..g.usize_in(20, 60) {
+            t += g.f64_in(0.05, 1.5);
+            for _ in 0..g.usize_in(0, 15) {
+                asc.note_arrival(t, g.usize_in(16, 4096), g.usize_in(1, 512));
+            }
+            // hostile health churn: slowdowns jump, drift events fire,
+            // residuals spike
+            for h in fleet.iter_mut() {
+                h.slowdown = g.f64_in(0.8, 4.0);
+                if g.bool() {
+                    h.calib.drift_events += g.u64_in(0, 4);
+                }
+                h.calib.samples += g.u64_in(0, 40);
+                h.calib.recent_abs_residual = g.f64_in(0.0, 0.8);
+            }
+            let nominal = g.f64_in(1e3, 5e4);
+            if let Some(d) = asc.evaluate(t, nominal, &fleet) {
+                match d {
+                    ScaleDecision::ScaleOut => {
+                        fleet.push(ReplicaHealth {
+                            id: next_id,
+                            slowdown: 1.0,
+                            calib: Default::default(),
+                        });
+                        next_id += 1;
+                        last_out = t;
+                    }
+                    ScaleDecision::ScaleIn(id) | ScaleDecision::Retire(id) => {
+                        let gap = t - last_out;
+                        check(
+                            gap >= cooldown_in - 1e-9,
+                            format!("flap: removal at t={t} only {gap:.2}s after scale-out"),
+                        )?;
+                        let pos = fleet.iter().position(|h| h.id == id);
+                        check(pos.is_some(), format!("removed unknown replica {id}"))?;
+                        fleet.remove(pos.unwrap());
+                    }
+                    ScaleDecision::Reprofile(id) => {
+                        check(
+                            fleet.iter().any(|h| h.id == id),
+                            format!("reprofiled unknown replica {id}"),
+                        )?;
+                    }
+                }
+            }
+            check(
+                fleet.len() >= min && fleet.len() <= max,
+                format!("fleet {} outside [{min}, {max}]", fleet.len()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// The fleet capacity estimate (Σ nominal / slowdown) is monotone
+/// non-increasing in every replica's slowdown, and additive in fleet
+/// membership.
+#[test]
+fn prop_fleet_capacity_monotone_in_slowdown() {
+    forall(112, 300, |g| {
+        let n = g.usize_in(1, 8);
+        let nominal = g.f64_in(1e3, 1e5);
+        let mut fleet: Vec<ReplicaHealth> = (0..n)
+            .map(|i| ReplicaHealth {
+                id: i,
+                slowdown: g.f64_in(0.5, 5.0),
+                calib: Default::default(),
+            })
+            .collect();
+        let c0 = Autoscaler::fleet_capacity_tokens_per_s(nominal, &fleet);
+        check(c0.is_finite() && c0 > 0.0, format!("capacity {c0}"))?;
+        // slowing any one replica never raises capacity
+        let k = g.usize_in(0, n - 1);
+        fleet[k].slowdown += g.f64_in(0.0, 3.0);
+        let c1 = Autoscaler::fleet_capacity_tokens_per_s(nominal, &fleet);
+        check(c1 <= c0 + 1e-9, format!("slowdown raised capacity: {c0} -> {c1}"))?;
+        // removing a replica strictly reduces capacity
+        let gone = fleet.pop().unwrap();
+        let c2 = Autoscaler::fleet_capacity_tokens_per_s(nominal, &fleet);
+        check(
+            c2 < c1 || fleet.is_empty(),
+            format!("removing replica {} did not reduce capacity", gone.id),
         )
     });
 }

@@ -1,0 +1,102 @@
+//! Cluster-wide scenario regression matrix: every engine family ×
+//! workload × router smoke-runs deterministically with fixed seeds, so
+//! the autoscaler (or any future cluster change) cannot silently break
+//! a shipped serving scenario.
+//!
+//! Each cell asserts: the trace completes (non-empty, no lost records),
+//! every summary metric is finite, and two identical runs are bitwise
+//! identical (records AND routing decisions).
+//!
+//! The matrix is `#[ignore]`d in the default test run and executed by
+//! CI's dedicated `scenario-matrix` job (`cargo test --release --test
+//! scenario_matrix -- --ignored`), so matrix failures are distinguishable
+//! from unit failures.  Run it locally the same way.
+
+use bullet::baselines::System;
+use bullet::cluster::{serve_cluster, ClusterConfig, RouterPolicy};
+use bullet::config::{GpuSpec, ModelSpec, ServingConfig};
+use bullet::gpu::roofline::GroundTruth;
+use bullet::metrics::summarize;
+use bullet::perf::PerfModel;
+use bullet::workload::{generate_bursty_trace, trace_by_name, Dataset, Request};
+
+const WORKLOADS: [&str; 4] = ["sharegpt", "azure-code", "conversational", "bursty"];
+
+fn workload(name: &str, seed: u64) -> Vec<Request> {
+    match name {
+        // short burst shape: ~2 req/s with a 12 req/s spike in [1.5, 2.5)
+        "bursty" => generate_bursty_trace(&Dataset::sharegpt(), 2.0, 12.0, 4.0, 1.5, 1.0, seed),
+        other => trace_by_name(other, 6.0, 10, seed).expect("cataloged workload"),
+    }
+}
+
+fn run_matrix(engines: &[System]) {
+    let perf = PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b());
+    let gt = GroundTruth::new(GpuSpec::a100());
+    let mut seed = 9000u64;
+    for &sys in engines {
+        for wl in WORKLOADS {
+            for router in RouterPolicy::all() {
+                seed += 1;
+                let label = format!("{} x {} x {}", sys.label(), wl, router.label());
+                let cfg = ServingConfig {
+                    // sessions carry content hashes; the cache must ride
+                    prefix_cache: wl == "conversational",
+                    ..ServingConfig::default()
+                };
+                let trace = workload(wl, seed);
+                assert!(!trace.is_empty(), "{label}: empty trace");
+                let ccfg = ClusterConfig { replicas: 2, router, ..Default::default() };
+                let a = serve_cluster(sys, &cfg, &perf, &gt, &trace, seed, &ccfg);
+                let b = serve_cluster(sys, &cfg, &perf, &gt, &trace, seed, &ccfg);
+
+                // non-empty completions, nothing lost
+                assert_eq!(a.records.len(), trace.len(), "{label}: lost records");
+                for r in &a.records {
+                    assert!(r.finish_time >= r.first_token_time, "{label}: req {}", r.id);
+                    assert!(r.first_token_time >= r.arrival, "{label}: req {}", r.id);
+                }
+                // bitwise determinism across two runs
+                assert_eq!(a.records, b.records, "{label}: nondeterministic records");
+                assert_eq!(a.assignments, b.assignments, "{label}: nondeterministic routing");
+
+                // finite metrics
+                let s = summarize(&a.records, &cfg.slo, Some(a.virtual_duration));
+                for (name, v) in [
+                    ("mean_ttft", s.mean_ttft),
+                    ("p90_ttft", s.p90_ttft),
+                    ("mean_tpot", s.mean_tpot),
+                    ("p90_tpot", s.p90_tpot),
+                    ("throughput_tok_s", s.throughput_tok_s),
+                    ("goodput_frac", s.slo_attainment),
+                    ("mean_e2e", s.mean_e2e),
+                    ("duration", s.duration),
+                ] {
+                    assert!(
+                        v.is_finite() && v >= 0.0,
+                        "{label}: non-finite {name} = {v}"
+                    );
+                }
+                assert!(s.throughput_tok_s > 0.0, "{label}: zero throughput");
+            }
+        }
+    }
+}
+
+#[test]
+#[ignore = "scenario matrix: run via CI's scenario-matrix job (cargo test --test scenario_matrix -- --ignored)"]
+fn matrix_bullet() {
+    run_matrix(&[System::Bullet]);
+}
+
+#[test]
+#[ignore = "scenario matrix: run via CI's scenario-matrix job (cargo test --test scenario_matrix -- --ignored)"]
+fn matrix_chunked() {
+    run_matrix(&[System::Sglang1024]);
+}
+
+#[test]
+#[ignore = "scenario matrix: run via CI's scenario-matrix job (cargo test --test scenario_matrix -- --ignored)"]
+fn matrix_nanoflow() {
+    run_matrix(&[System::Nanoflow]);
+}
