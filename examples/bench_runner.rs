@@ -1,0 +1,207 @@
+//! Recorded perf trajectory: replay a saturating azure-code trace on an
+//! 8-replica cluster through BOTH simulation backends, verify bitwise
+//! parity in-run, time each, and emit the numbers as `BENCH_6.json` —
+//! the artifact CI's `bench` job uploads and gates on.
+//!
+//! What gets recorded:
+//! - `cluster.virtual_makespan_s` — deterministic simulated makespan
+//!   (bit-identical across machines for the same code), the
+//!   semantics-drift tripwire;
+//! - `cluster.serial_wall_s` / `parallel_wall_s` / `speedup` — the
+//!   tentpole's wall-clock win (serial = `--sim-threads 1`, parallel =
+//!   all cores);
+//! - `cluster.parity` — whether the two backends produced identical
+//!   records, routing and makespan bits THIS run;
+//! - `hotpath.*_us` — perf_hotpath micro-numbers for the per-arrival
+//!   router decision on a 64-replica fleet.
+//!
+//! ```bash
+//! cargo run --release --offline --example bench_runner -- \
+//!     [--requests N] [--replicas N] [--rate R] [--out PATH]
+//! ```
+//!
+//! `tools/compare_bench.py` compares a fresh run against the committed
+//! baseline (skipping wall-clock comparisons when the baseline was not
+//! produced by a verified runner — see the `verified` flag).
+
+use bullet::baselines::System;
+use bullet::cluster::{serve_cluster, ClusterConfig, Dispatcher, ReplicaSignals, RouterPolicy};
+use bullet::config::{GpuSpec, ModelSpec, ServingConfig, SloSpec};
+use bullet::gpu::roofline::GroundTruth;
+use bullet::perf::{CalibrationStats, PerfModel};
+use bullet::testing::bench::{bench, black_box};
+use bullet::util::cli::Args;
+use bullet::util::json::Value;
+use bullet::workload::{generate_n_requests, Dataset, Request};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+fn obj(entries: Vec<(&str, Value)>) -> Value {
+    Value::Obj(
+        entries
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+/// Indented serializer for the committed artifact (the in-crate JSON
+/// Display is compact single-line, which diffs poorly).
+fn pretty(v: &Value, indent: usize, out: &mut String) {
+    let pad = "  ".repeat(indent);
+    match v {
+        Value::Obj(o) if !o.is_empty() => {
+            out.push_str("{\n");
+            for (i, (k, val)) in o.iter().enumerate() {
+                out.push_str(&format!("{pad}  {}: ", Value::Str(k.clone())));
+                pretty(val, indent + 1, out);
+                if i + 1 < o.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            out.push_str(&format!("{pad}}}"));
+        }
+        Value::Arr(a) if !a.is_empty() => {
+            out.push_str("[\n");
+            for (i, val) in a.iter().enumerate() {
+                out.push_str(&format!("{pad}  "));
+                pretty(val, indent + 1, out);
+                if i + 1 < a.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            out.push_str(&format!("{pad}]"));
+        }
+        other => out.push_str(&other.to_string()),
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let replicas = args.get_usize("replicas", 8);
+    let requests = args.get_usize("requests", 2000);
+    // saturating by construction: arrivals outpace the fleet's prefill
+    // capacity, so every replica stays busy between dispatch horizons
+    let rate = args.get_f64("rate", 12.0 * replicas as f64);
+    let out_path = args.get_or("out", "BENCH_6.json").to_string();
+
+    let cfg = ServingConfig {
+        slo: SloSpec::azure_code(),
+        ..ServingConfig::default()
+    };
+    let perf = PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b());
+    let gt = GroundTruth::new(GpuSpec::a100());
+    let trace = generate_n_requests(&Dataset::azure_code(), rate, requests, 42);
+    let ccfg = ClusterConfig { replicas, router: RouterPolicy::LeastKv, ..Default::default() };
+    let threads = ClusterConfig { sim_threads: 0, ..ccfg.clone() }.effective_sim_threads();
+    println!(
+        "bench_runner: {requests} azure-code reqs @ {rate:.0}/s, {replicas} replicas, \
+         {threads} worker threads"
+    );
+
+    // serial reference (the legacy path), then the parallel backend
+    let serial_cfg = ClusterConfig { sim_threads: 1, ..ccfg.clone() };
+    let t0 = Instant::now();
+    let serial = serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 42, &serial_cfg);
+    let serial_wall = t0.elapsed().as_secs_f64();
+
+    let parallel_cfg = ClusterConfig { sim_threads: 0, ..ccfg.clone() };
+    let t0 = Instant::now();
+    let parallel = serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 42, &parallel_cfg);
+    let parallel_wall = t0.elapsed().as_secs_f64();
+
+    // bitwise parity is part of the recorded result, not just the test
+    // suite: a bench artifact from a diverging build must say so
+    let parity = serial.records == parallel.records
+        && serial.assignments == parallel.assignments
+        && serial.virtual_duration.to_bits() == parallel.virtual_duration.to_bits();
+    let speedup = serial_wall / parallel_wall;
+    let makespan = serial.virtual_duration;
+    let out_tokens: usize = serial.records.iter().map(|r| r.output_len).sum();
+    println!(
+        "cluster: makespan {makespan:.2} virtual s | serial {serial_wall:.2}s, \
+         parallel {parallel_wall:.2}s = {speedup:.2}x | parity {parity}"
+    );
+
+    // hotpath micro-numbers: the per-arrival router decision on a
+    // 64-replica fleet (mirrors perf_hotpath case 7)
+    let fleet: Vec<ReplicaSignals> = (0..64)
+        .map(|i| ReplicaSignals {
+            id: i,
+            outstanding_kv_tokens: 40_000 + (i * 977) % 30_000,
+            backlog_tokens: 2_000 + (i * 313) % 9_000,
+            decode_batch: i % 48,
+            num_sms: 108,
+            n_layers: 32,
+            slowdown: 1.0 + (i % 7) as f64 * 0.05,
+            calib: CalibrationStats::default(),
+            drained: false,
+        })
+        .collect();
+    let eligible: Vec<usize> = (0..fleet.len()).collect();
+    let route_req = Request { input_len: 2048, output_len: 128, ..Default::default() };
+    let mut hotpath = Vec::new();
+    for policy in [RouterPolicy::LeastKv, RouterPolicy::SloSlack] {
+        let mut d = Dispatcher::new(policy);
+        let r = bench(&format!("router pick_among ({}, 64 replicas)", policy.label()), 2000, || {
+            black_box(d.pick_among(
+                black_box(&fleet),
+                black_box(&eligible),
+                black_box(&route_req),
+                &perf,
+                &cfg.slo,
+            ));
+        });
+        println!("{}", r.report());
+        hotpath.push((policy.label(), r.mean_us()));
+    }
+
+    let round = |x: f64| (x * 1000.0).round() / 1000.0;
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let host = obj(vec![("cores", Value::Num(cores as f64))]);
+    let config = obj(vec![
+        ("workload", Value::Str("azure-code".into())),
+        ("replicas", Value::Num(replicas as f64)),
+        ("requests", Value::Num(requests as f64)),
+        ("rate_req_s", Value::Num(round(rate))),
+        ("router", Value::Str("least-kv".into())),
+        ("sim_threads_effective", Value::Num(threads as f64)),
+    ]);
+    let cluster = obj(vec![
+        ("virtual_makespan_s", Value::Num(round(makespan))),
+        ("serial_wall_s", Value::Num(round(serial_wall))),
+        ("parallel_wall_s", Value::Num(round(parallel_wall))),
+        ("speedup", Value::Num(round(speedup))),
+        ("realtime_factor", Value::Num(round(makespan / parallel_wall))),
+        ("throughput_tok_s", Value::Num(round(out_tokens as f64 / makespan))),
+        ("parity", Value::Bool(parity)),
+    ]);
+    let micro = Value::Obj(
+        hotpath
+            .iter()
+            .map(|(label, us)| {
+                let key = format!("router_pick_{}_us", label.replace('-', "_"));
+                (key, Value::Num(round(*us)))
+            })
+            .collect(),
+    );
+    let doc = obj(vec![
+        ("bench_id", Value::Num(6.0)),
+        // true = produced by an actual run (CI or local); the committed
+        // baseline starts false (desk-estimated) and flips true once a
+        // CI artifact is promoted to baseline
+        ("verified", Value::Bool(true)),
+        ("host", host),
+        ("config", config),
+        ("cluster", cluster),
+        ("hotpath", micro),
+    ]);
+    let mut text = String::new();
+    pretty(&doc, 0, &mut text);
+    text.push('\n');
+    std::fs::write(&out_path, &text).expect("write bench artifact");
+    println!("wrote {out_path}");
+    assert!(parity, "parallel backend diverged from serial — bench artifact is invalid");
+}

@@ -12,8 +12,13 @@
 //!      per candidate partition per scheduling cycle; `locate` is a
 //!      binary search (`partition_point`), so paper-fidelity and wider
 //!      grids stay off the decision budget.
+//!   7. cluster-router decision latency on a 64-replica fleet — the
+//!      front-door cost every arrival pays; routing reads frozen
+//!      `ReplicaSignals` snapshots, so this is a pure argmin scan (plus
+//!      one perf-estimator probe per replica for slo-slack).
 //! EXPERIMENTS.md §Perf records before/after for each optimization.
 
+use bullet::cluster::{Dispatcher, ReplicaSignals, RouterPolicy};
 use bullet::config::{GpuSpec, ModelSpec, ServingConfig};
 use bullet::coordinator::{BuildOptions, BulletServer};
 use bullet::engine::{BulletPolicy, CoreOptions, EngineCore, Features, ServingPolicy};
@@ -23,6 +28,7 @@ use bullet::gpu::stream::SmMask;
 use bullet::gpu::{KernelDesc, OpClass};
 use bullet::kvcache::prefix::PrefixIndex;
 use bullet::kvcache::{KvPool, BLOCK_TOKENS};
+use bullet::perf::CalibrationStats;
 use bullet::perf::PerfModel;
 use bullet::resource::Partition;
 use bullet::sched::{DecodeReqState, PrefillBatch, PrefillReq, SloScheduler, SystemState};
@@ -217,6 +223,42 @@ fn main() {
                 acc += grid.interp(black_box(a), black_box(b), black_box(c));
             }
             black_box(acc);
+        });
+        println!("{}", r.report());
+    }
+
+    // 7. cluster-router decision latency, 64-replica fleet.  Signals are
+    //    frozen snapshots (exactly what the dispatch loop hands the
+    //    router), staggered so the argmin never short-circuits on a
+    //    trivially uniform fleet.  slo-slack additionally runs one
+    //    perf-estimator probe per replica per arrival — the most
+    //    expensive policy — while least-kv is the pure scan floor.
+    let fleet: Vec<ReplicaSignals> = (0..64)
+        .map(|i| ReplicaSignals {
+            id: i,
+            outstanding_kv_tokens: 40_000 + (i * 977) % 30_000,
+            backlog_tokens: 2_000 + (i * 313) % 9_000,
+            decode_batch: i % 48,
+            num_sms: 108,
+            n_layers: 32,
+            slowdown: 1.0 + (i % 7) as f64 * 0.05,
+            calib: CalibrationStats::default(),
+            drained: false,
+        })
+        .collect();
+    let eligible: Vec<usize> = (0..fleet.len()).collect();
+    let route_req = Request { input_len: 2048, output_len: 128, ..Default::default() };
+    let perf3 = PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b());
+    for policy in [RouterPolicy::LeastKv, RouterPolicy::SloSlack] {
+        let mut d = Dispatcher::new(policy);
+        let r = bench(&format!("router pick_among ({}, 64 replicas)", policy.label()), 5000, || {
+            black_box(d.pick_among(
+                black_box(&fleet),
+                black_box(&eligible),
+                black_box(&route_req),
+                &perf3,
+                &cfg.slo,
+            ));
         });
         println!("{}", r.report());
     }

@@ -15,8 +15,34 @@
 //! a static pre-partition of the trace.  A replica mid-kernel may
 //! overshoot the instant by one completion; routing signals are
 //! heuristics, so this bounded skew is acceptable and keeps the replicas
-//! lock-step-free.  Determinism: replica seeds derive from the run seed,
-//! and the dispatcher is a pure function of replica state.
+//! lock-step-free.
+//!
+//! Parallel execution: replicas are share-nothing BETWEEN dispatch
+//! horizons — between two consecutive arrivals no information flows
+//! across replicas — so each horizon is a barrier: all replicas advance
+//! to the arrival instant concurrently (a [`std::thread::scope`] worker
+//! pool, `ClusterConfig::sim_threads` wide), then the router and
+//! autoscaler run serially on main over per-replica [`ReplicaSignals`]
+//! snapshots taken at the barrier.  A replica's evolution is a pure
+//! function of its own command sequence (advance / push / reprofile),
+//! and the snapshots are pure functions of replica state, so the
+//! parallel path is BIT-IDENTICAL to `sim_threads = 1` — an invariant
+//! the test suite asserts per engine × router × autoscale cell.
+//!
+//! Idle fast-forward: a drained replica (no queued, in-flight, or
+//! private work) cannot change state until its next push, and thanks to
+//! the engine's absolute idle jumps ([`Simulator::advance_idle_to`])
+//! skipping its `advance_to` calls lands it on bitwise-identical
+//! timestamps once work arrives.  Both backends therefore skip drained
+//! replicas entirely, making the per-arrival sweep O(busy replicas) —
+//! this is the per-replica next-event-time scheme in its exact form:
+//! a drained replica's next event IS its next push, and a busy replica
+//! must be advanced anyway.
+//!
+//! Determinism: replica seeds derive from the run seed, and the
+//! dispatcher is a pure function of the signal snapshots.
+//!
+//! [`Simulator::advance_idle_to`]: crate::gpu::simulator::Simulator::advance_idle_to
 
 pub mod autoscale;
 pub mod router;
@@ -34,6 +60,8 @@ use crate::metrics::{merge_records, RequestRecord};
 use crate::perf::{CalibrationStats, PerfModel, PerfPredictor};
 use crate::sched::policy::service_capacity_tokens_per_s;
 use crate::workload::Request;
+use std::sync::mpsc;
+use std::thread;
 
 /// Per-replica hardware overrides for a heterogeneous fleet.  `None`
 /// fields inherit the cluster-wide config / ground truth, so an
@@ -47,7 +75,8 @@ pub struct ReplicaSpec {
 }
 
 /// Cluster shape: replica count + routing policy (+ optional
-/// heterogeneous per-replica hardware, + the optional autoscaler).
+/// heterogeneous per-replica hardware, + the optional autoscaler,
+/// + the simulation thread budget).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterConfig {
     pub replicas: usize,
@@ -65,6 +94,11 @@ pub struct ClusterConfig {
     /// behavior).  With `enabled`, `replicas` (clamped into
     /// `[min_replicas, max_replicas]`) is the starting fleet.
     pub autoscale: AutoscaleConfig,
+    /// Simulation worker threads for the between-horizon replica
+    /// advances: `0` (the default) uses every available core, `1`
+    /// forces the serial backend.  Any value produces bit-identical
+    /// output — this knob trades wall-clock only.
+    pub sim_threads: usize,
 }
 
 impl Default for ClusterConfig {
@@ -74,7 +108,28 @@ impl Default for ClusterConfig {
             router: RouterPolicy::RoundRobin,
             replica_specs: Vec::new(),
             autoscale: AutoscaleConfig::off(),
+            sim_threads: 0,
         }
+    }
+}
+
+impl ClusterConfig {
+    /// Worker threads the dispatch loop will actually use: the
+    /// requested `sim_threads` (0 ⇒ all available cores) capped by the
+    /// largest fleet this run can reach — more workers than replicas
+    /// could never be productive.
+    pub fn effective_sim_threads(&self) -> usize {
+        let requested = if self.sim_threads == 0 {
+            thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.sim_threads
+        };
+        let fleet_bound = if self.autoscale.enabled {
+            self.autoscale.max_replicas.max(1)
+        } else {
+            self.replicas.max(1)
+        };
+        requested.clamp(1, fleet_bound)
     }
 }
 
@@ -83,6 +138,11 @@ pub struct Replica {
     pub id: usize,
     core: EngineCore,
     policy: Box<dyn ServingPolicy>,
+    /// No queued, in-flight, or policy-private work: `advance_to` is a
+    /// pure clock jump until the next push, so backends skip it (see
+    /// module docs).  Maintained here — set by `advance_to`, cleared by
+    /// `push` — so the serial and parallel backends cannot disagree.
+    drained: bool,
 }
 
 impl Replica {
@@ -104,6 +164,8 @@ impl Replica {
             id,
             core: EngineCore::new(cfg.clone(), gt.clone(), Vec::new(), &opts),
             policy: system.policy(cfg, perf),
+            // a fresh replica holds no work until its first push
+            drained: true,
         }
     }
 
@@ -135,26 +197,6 @@ impl Replica {
         self.core.decode.len()
     }
 
-    /// Estimated TTFT were `req` routed here now: the prefill backlog
-    /// plus the request's own prompt, at the estimator's per-token rate
-    /// (contended if a decode batch is resident), scaled by the
-    /// replica's learned slowdown — so on a heterogeneous or drifting
-    /// fleet the slo-slack router ranks replicas by their *calibrated*
-    /// speed, not the shared offline grid.  The slowdown (not a cell
-    /// lookup at this probe's shape) is used deliberately: calibration
-    /// cells are shape-local and the fixed probe shape may never have
-    /// been launched, while the slowdown aggregates every observed
-    /// cell.  Exactly 1.0 for calibration-free or unobserved replicas.
-    pub fn estimated_ttft(&self, req: &Request, perf: &PerfModel) -> f64 {
-        let cfg = &self.core.cfg;
-        let contended = !self.core.decode.is_empty();
-        let reference = 2048usize;
-        let per_token =
-            perf.predict_prefill_layer(reference, 0, cfg.gpu.num_sms, contended) / reference as f64;
-        let tokens = (self.backlog_tokens() + req.input_len) as f64;
-        tokens * per_token * cfg.model.n_layers as f64 * self.calibrated_slowdown()
-    }
-
     /// The replica's learned observed/nominal slowdown (1.0 until its
     /// calibrator has samples, or for calibration-free policies).
     pub fn calibrated_slowdown(&self) -> f64 {
@@ -179,17 +221,98 @@ impl Replica {
         self.policy.reprofile()
     }
 
+    /// Snapshot every dispatcher-visible signal.  Taken at each horizon
+    /// barrier so routing and autoscaling read frozen, thread-free state.
+    pub fn signals(&self) -> ReplicaSignals {
+        ReplicaSignals {
+            id: self.id,
+            outstanding_kv_tokens: self.outstanding_kv_tokens(),
+            backlog_tokens: self.backlog_tokens(),
+            decode_batch: self.decode_batch(),
+            num_sms: self.core.cfg.gpu.num_sms,
+            n_layers: self.core.cfg.model.n_layers,
+            slowdown: self.calibrated_slowdown(),
+            calib: self.calibration(),
+            drained: self.drained,
+        }
+    }
+
     fn advance_to(&mut self, t: f64) {
         self.core.run_until(self.policy.as_mut(), t);
+        self.drained = self.core.drained() && !self.policy.has_private_work();
     }
 
     fn push(&mut self, r: Request) {
+        self.drained = false;
         self.core.push_request(r);
     }
 
     fn finish(mut self) -> EngineOutput {
         self.core.run(self.policy.as_mut());
         self.core.into_output()
+    }
+}
+
+/// A replica's dispatcher-visible state, frozen at a horizon barrier.
+/// Everything the router and autoscaler consult lives here, so the
+/// serial decision code never touches a `Replica` that may be owned by
+/// a worker thread — and both backends route from literally the same
+/// data.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReplicaSignals {
+    pub id: usize,
+    /// KV tokens reserved + queued and injected reservations.
+    pub outstanding_kv_tokens: usize,
+    /// Prompt tokens awaiting prefill (queue + private batches +
+    /// injected tail).
+    pub backlog_tokens: usize,
+    /// Resident decode batch size.
+    pub decode_batch: usize,
+    /// The replica's SM count (heterogeneous fleets differ).
+    pub num_sms: usize,
+    pub n_layers: usize,
+    /// Learned observed/nominal slowdown (1.0 uncalibrated).
+    pub slowdown: f64,
+    /// Live calibration counters (the autoscaler's health input).
+    pub calib: CalibrationStats,
+    /// Whether the replica was drained at the snapshot (no work
+    /// anywhere) — backends use this to skip its next advances.
+    pub drained: bool,
+}
+
+impl ReplicaSignals {
+    /// Estimated TTFT were `req` routed here now: the prefill backlog
+    /// plus the request's own prompt, at the estimator's per-token rate
+    /// (contended if a decode batch is resident), scaled by the
+    /// replica's learned slowdown — so on a heterogeneous or drifting
+    /// fleet the slo-slack router ranks replicas by their *calibrated*
+    /// speed, not the shared offline grid.  The slowdown (not a cell
+    /// lookup at this probe's shape) is used deliberately: calibration
+    /// cells are shape-local and the fixed probe shape may never have
+    /// been launched, while the slowdown aggregates every observed
+    /// cell.  Exactly 1.0 for calibration-free or unobserved replicas.
+    pub fn estimated_ttft(&self, req: &Request, perf: &PerfModel) -> f64 {
+        let contended = self.decode_batch > 0;
+        let reference = 2048usize;
+        let per_token =
+            perf.predict_prefill_layer(reference, 0, self.num_sms, contended) / reference as f64;
+        let tokens = (self.backlog_tokens + req.input_len) as f64;
+        tokens * per_token * self.n_layers as f64 * self.slowdown
+    }
+
+    /// The autoscaler's view of this replica.
+    pub fn health(&self) -> ReplicaHealth {
+        ReplicaHealth { id: self.id, slowdown: self.slowdown, calib: self.calib }
+    }
+
+    /// Fold a just-routed request into the snapshot: exactly the
+    /// injected-but-unadmitted contribution a live state read would see
+    /// ([`EngineCore::outstanding_kv_tokens`] / `queued_prefill_tokens`),
+    /// so same-instant arrivals observe prior routing decisions without
+    /// another barrier.
+    fn note_push(&mut self, r: &Request) {
+        self.outstanding_kv_tokens += r.input_len + r.output_len;
+        self.backlog_tokens += r.input_len;
     }
 }
 
@@ -307,149 +430,378 @@ impl FleetCtx<'_> {
     }
 }
 
-/// Serve `trace` on `cluster.replicas` instances of `system` behind the
-/// configured router.  With `cluster.autoscale.enabled`, the fleet is
-/// dynamic: see [`serve_cluster_autoscaled`].
-pub fn serve_cluster(
-    system: System,
-    cfg: &ServingConfig,
-    perf: &PerfModel,
-    gt: &GroundTruth,
-    trace: &[Request],
-    seed: u64,
-    cluster: &ClusterConfig,
-) -> ClusterOutput {
-    if cluster.autoscale.enabled {
-        return serve_cluster_autoscaled(system, cfg, perf, gt, trace, seed, cluster);
-    }
-    let n = cluster.replicas.max(1);
-    // Wedge guard that scales with the trace horizon: long-duration
-    // traces must not trip the single-GPU default cap.
-    let horizon = trace.last().map(|r| r.arrival).unwrap_or(0.0);
-    let max_virtual_time = CoreOptions::default().max_virtual_time.max(4.0 * horizon);
-    let ctx = FleetCtx { system, cfg, perf, gt, seed, max_virtual_time, cluster };
-    let mut replicas: Vec<Replica> = (0..n).map(|i| ctx.build_replica(i)).collect();
-    let mut dispatcher = Dispatcher::new(cluster.router);
-    let mut assignments = Vec::with_capacity(trace.len());
+/// How the dispatch loop drives the fleet.  Two implementations —
+/// [`SerialFleet`] and [`ParallelFleet`] — which must be observationally
+/// identical: the loop routes from [`ReplicaSignals`] snapshots only,
+/// and each replica's evolution is a pure function of its own command
+/// sequence, so where replicas live (this thread or a worker) cannot
+/// change any output bit.
+trait FleetBackend {
+    /// Replicas ever spawned (retired included).
+    fn replica_count(&self) -> usize;
+    /// Horizon barrier: every replica reaches virtual time `t` and the
+    /// signal snapshot of every non-drained replica is refreshed.
+    /// (A drained replica's signals cannot change while drained; its
+    /// cached snapshot stays valid — the idle fast-forward.)
+    fn advance_to(&mut self, t: f64);
+    /// Snapshots as of the last barrier, indexed by replica id.
+    fn signals(&self) -> &[ReplicaSignals];
+    /// Route request `r` to replica `id`.
+    fn push(&mut self, id: usize, r: Request);
+    /// Build and adopt the next replica; returns its id.
+    fn spawn(&mut self) -> usize;
+    /// Refresh replica `id`'s offline grid and its snapshot.
+    fn reprofile(&mut self, id: usize);
+    /// Drain every replica to completion; outputs ordered by id.
+    fn finish(self) -> Vec<EngineOutput>;
+}
 
-    for r in trace {
-        for rep in replicas.iter_mut() {
-            rep.advance_to(r.arrival);
-        }
-        let k = dispatcher.pick(&replicas, r, perf, &cfg.slo);
-        assignments.push((r.id, k));
-        replicas[k].push(r.clone());
-    }
+/// The `sim_threads = 1` backend: replicas live on the dispatch thread.
+struct SerialFleet<'a> {
+    ctx: FleetCtx<'a>,
+    replicas: Vec<Replica>,
+    signals: Vec<ReplicaSignals>,
+}
 
-    let per_replica: Vec<EngineOutput> = replicas.into_iter().map(Replica::finish).collect();
-    let records = merge_records(per_replica.iter().map(|o| o.records.as_slice()));
-    let virtual_duration = per_replica
-        .iter()
-        .map(|o| o.virtual_duration)
-        .fold(0.0, f64::max);
-    ClusterOutput {
-        records,
-        per_replica,
-        assignments,
-        virtual_duration,
-        scale_events: Vec::new(),
-        // a fixed fleet holds every replica for the whole run
-        replica_steps: n as f64 * virtual_duration,
+impl<'a> SerialFleet<'a> {
+    fn new(ctx: FleetCtx<'a>, init: usize) -> SerialFleet<'a> {
+        let replicas: Vec<Replica> = (0..init).map(|i| ctx.build_replica(i)).collect();
+        let signals = replicas.iter().map(Replica::signals).collect();
+        SerialFleet { ctx, replicas, signals }
     }
 }
 
-/// The dynamic-fleet dispatch loop: identical co-simulation to the
-/// fixed path, plus one [`Autoscaler`] evaluation per control interval.
-/// Spawned replicas join the live run with inherited hardware specs and
-/// seed derivation; retired replicas stop receiving traffic (their
-/// prefix-affinity sessions re-home) but keep draining to completion.
-fn serve_cluster_autoscaled(
-    system: System,
+impl FleetBackend for SerialFleet<'_> {
+    fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    fn advance_to(&mut self, t: f64) {
+        for r in self.replicas.iter_mut() {
+            if !r.drained {
+                r.advance_to(t);
+                self.signals[r.id] = r.signals();
+            }
+        }
+    }
+
+    fn signals(&self) -> &[ReplicaSignals] {
+        &self.signals
+    }
+
+    fn push(&mut self, id: usize, r: Request) {
+        self.signals[id].note_push(&r);
+        self.replicas[id].push(r);
+    }
+
+    fn spawn(&mut self) -> usize {
+        let id = self.replicas.len();
+        let r = self.ctx.build_replica(id);
+        self.signals.push(r.signals());
+        self.replicas.push(r);
+        id
+    }
+
+    fn reprofile(&mut self, id: usize) {
+        self.replicas[id].reprofile();
+        self.signals[id] = self.replicas[id].signals();
+    }
+
+    fn finish(self) -> Vec<EngineOutput> {
+        self.replicas.into_iter().map(Replica::finish).collect()
+    }
+}
+
+/// Commands a worker replays over its owned replicas, in dispatch
+/// order — the same calls `SerialFleet` makes directly.
+enum WorkerCmd {
+    /// Advance every owned non-drained replica to the horizon; reply
+    /// `Signals` for those that moved.
+    Advance(f64),
+    Push(usize, Request),
+    /// Take ownership of a freshly spawned replica.
+    Adopt(Box<Replica>),
+    /// Reprofile one replica; reply its refreshed `Signals`.
+    Reprofile(usize),
+    /// Drain all owned replicas; reply `Outputs`, then exit.
+    Finish,
+}
+
+enum WorkerReply {
+    Signals(Vec<ReplicaSignals>),
+    Outputs(Vec<(usize, EngineOutput)>),
+}
+
+/// A simulation worker: owns the replicas with `id % workers == w` and
+/// replays dispatch commands over them.  Per-worker command channels
+/// are FIFO, so each replica sees exactly the serial call sequence.
+fn fleet_worker(
+    rx: mpsc::Receiver<WorkerCmd>,
+    tx: mpsc::Sender<WorkerReply>,
+    mut owned: Vec<Replica>,
+) {
+    let find = |owned: &[Replica], id: usize| -> usize {
+        owned.iter().position(|r| r.id == id).expect("command for unowned replica")
+    };
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            WorkerCmd::Advance(t) => {
+                let mut moved = Vec::new();
+                for r in owned.iter_mut() {
+                    if !r.drained {
+                        r.advance_to(t);
+                        moved.push(r.signals());
+                    }
+                }
+                if tx.send(WorkerReply::Signals(moved)).is_err() {
+                    return;
+                }
+            }
+            WorkerCmd::Push(id, req) => {
+                let i = find(&owned, id);
+                owned[i].push(req);
+            }
+            WorkerCmd::Adopt(r) => owned.push(*r),
+            WorkerCmd::Reprofile(id) => {
+                let i = find(&owned, id);
+                owned[i].reprofile();
+                let sig = vec![owned[i].signals()];
+                if tx.send(WorkerReply::Signals(sig)).is_err() {
+                    return;
+                }
+            }
+            WorkerCmd::Finish => {
+                let outs = owned.drain(..).map(|r| (r.id, r.finish())).collect();
+                let _ = tx.send(WorkerReply::Outputs(outs));
+                return;
+            }
+        }
+    }
+}
+
+/// The `sim_threads > 1` backend: replicas are sharded `id % workers`
+/// across a persistent [`std::thread::scope`] pool; `advance_to` is the
+/// horizon barrier (fan out one `Advance`, collect one reply per live
+/// worker).  Replies are merged by replica id, so worker timing cannot
+/// reorder anything the dispatcher observes.
+struct ParallelFleet<'a> {
+    ctx: FleetCtx<'a>,
+    workers: usize,
+    cmd_tx: Vec<mpsc::Sender<WorkerCmd>>,
+    reply_rx: Vec<mpsc::Receiver<WorkerReply>>,
+    signals: Vec<ReplicaSignals>,
+    /// Main-thread mirror of each replica's drained flag (updated from
+    /// barrier replies and pushes), used to skip waking workers whose
+    /// replicas all provably cannot move.
+    drained: Vec<bool>,
+}
+
+impl<'a> ParallelFleet<'a> {
+    fn new<'scope, 'env>(
+        s: &'scope thread::Scope<'scope, 'env>,
+        workers: usize,
+        ctx: FleetCtx<'a>,
+        init: usize,
+    ) -> ParallelFleet<'a> {
+        // build on main, in id order, exactly like the serial backend —
+        // construction order is part of the determinism contract
+        let replicas: Vec<Replica> = (0..init).map(|i| ctx.build_replica(i)).collect();
+        let signals: Vec<ReplicaSignals> = replicas.iter().map(Replica::signals).collect();
+        let drained: Vec<bool> = replicas.iter().map(|r| r.drained).collect();
+        let mut shards: Vec<Vec<Replica>> = (0..workers).map(|_| Vec::new()).collect();
+        for r in replicas {
+            let w = r.id % workers;
+            shards[w].push(r);
+        }
+        let mut cmd_tx = Vec::with_capacity(workers);
+        let mut reply_rx = Vec::with_capacity(workers);
+        for shard in shards {
+            let (ctx_tx, cmd_rx) = mpsc::channel::<WorkerCmd>();
+            let (rep_tx, rep_rx) = mpsc::channel::<WorkerReply>();
+            s.spawn(move || fleet_worker(cmd_rx, rep_tx, shard));
+            cmd_tx.push(ctx_tx);
+            reply_rx.push(rep_rx);
+        }
+        ParallelFleet { ctx, workers, cmd_tx, reply_rx, signals, drained }
+    }
+
+    fn send(&self, w: usize, cmd: WorkerCmd) {
+        self.cmd_tx[w].send(cmd).expect("simulation worker died");
+    }
+
+    fn recv(&self, w: usize) -> WorkerReply {
+        self.reply_rx[w].recv().expect("simulation worker died")
+    }
+
+    fn merge_signals(&mut self, sigs: Vec<ReplicaSignals>) {
+        for s in sigs {
+            self.drained[s.id] = s.drained;
+            self.signals[s.id] = s;
+        }
+    }
+}
+
+impl FleetBackend for ParallelFleet<'_> {
+    fn replica_count(&self) -> usize {
+        self.signals.len()
+    }
+
+    fn advance_to(&mut self, t: f64) {
+        // wake only workers owning a live replica; an all-drained
+        // worker's replicas cannot move (the parallel form of the
+        // serial backend's skip)
+        let mut live = vec![false; self.workers];
+        for (id, &d) in self.drained.iter().enumerate() {
+            if !d {
+                live[id % self.workers] = true;
+            }
+        }
+        for w in 0..self.workers {
+            if live[w] {
+                self.send(w, WorkerCmd::Advance(t));
+            }
+        }
+        // the virtual-clock barrier: collected in worker order, merged
+        // by replica id — deterministic regardless of thread timing
+        for w in 0..self.workers {
+            if live[w] {
+                match self.recv(w) {
+                    WorkerReply::Signals(sigs) => self.merge_signals(sigs),
+                    WorkerReply::Outputs(_) => unreachable!("outputs before finish"),
+                }
+            }
+        }
+    }
+
+    fn signals(&self) -> &[ReplicaSignals] {
+        &self.signals
+    }
+
+    fn push(&mut self, id: usize, r: Request) {
+        self.signals[id].note_push(&r);
+        self.drained[id] = false;
+        self.send(id % self.workers, WorkerCmd::Push(id, r));
+    }
+
+    fn spawn(&mut self) -> usize {
+        let id = self.signals.len();
+        let r = self.ctx.build_replica(id);
+        self.signals.push(r.signals());
+        self.drained.push(r.drained);
+        self.send(id % self.workers, WorkerCmd::Adopt(Box::new(r)));
+        id
+    }
+
+    fn reprofile(&mut self, id: usize) {
+        let w = id % self.workers;
+        self.send(w, WorkerCmd::Reprofile(id));
+        match self.recv(w) {
+            WorkerReply::Signals(sigs) => self.merge_signals(sigs),
+            WorkerReply::Outputs(_) => unreachable!("outputs before finish"),
+        }
+    }
+
+    fn finish(self) -> Vec<EngineOutput> {
+        for w in 0..self.workers {
+            self.send(w, WorkerCmd::Finish);
+        }
+        let mut out: Vec<Option<EngineOutput>> = (0..self.signals.len()).map(|_| None).collect();
+        for w in 0..self.workers {
+            match self.recv(w) {
+                WorkerReply::Outputs(v) => {
+                    for (id, o) in v {
+                        out[id] = Some(o);
+                    }
+                }
+                WorkerReply::Signals(_) => unreachable!("signals after finish"),
+            }
+        }
+        out.into_iter().map(|o| o.expect("missing replica output")).collect()
+    }
+}
+
+/// The dispatch loop, generic over the backend: advance to each arrival
+/// (the horizon barrier), run the autoscaler control step if due, route
+/// from the signal snapshots, push.  Router reads, dispatch and scale
+/// actions are serial and ordered here on the calling thread — the
+/// backends only move replicas through virtual time.
+fn run_dispatch<F: FleetBackend>(
+    mut fleet: F,
     cfg: &ServingConfig,
     perf: &PerfModel,
-    gt: &GroundTruth,
     trace: &[Request],
-    seed: u64,
     cluster: &ClusterConfig,
 ) -> ClusterOutput {
-    let asc = &cluster.autoscale;
-    let min = asc.min_replicas.max(1);
-    let max = asc.max_replicas.max(min);
-    let init = cluster.replicas.clamp(min, max);
-    let horizon = trace.last().map(|r| r.arrival).unwrap_or(0.0);
-    let max_virtual_time = CoreOptions::default().max_virtual_time.max(4.0 * horizon);
-    let ctx = FleetCtx { system, cfg, perf, gt, seed, max_virtual_time, cluster };
-    let mut replicas: Vec<Replica> = (0..init).map(|i| ctx.build_replica(i)).collect();
+    let autoscaled = cluster.autoscale.enabled;
+    let init = fleet.replica_count();
+    let mut dispatcher = Dispatcher::new(cluster.router);
+    let mut scaler = autoscaled.then(|| Autoscaler::new(cluster.autoscale.clone()));
     let mut spawned_at: Vec<f64> = vec![0.0; init];
     let mut retired_at: Vec<Option<f64>> = vec![None; init];
-    let mut dispatcher = Dispatcher::new(cluster.router);
-    let mut scaler = Autoscaler::new(asc.clone());
+    let mut eligible: Vec<usize> = (0..init).collect();
     let mut scale_events: Vec<ScaleEvent> = Vec::new();
     let mut assignments = Vec::with_capacity(trace.len());
 
     for r in trace {
-        // co-advance EVERY replica — retired ones keep draining
-        for rep in replicas.iter_mut() {
-            rep.advance_to(r.arrival);
-        }
-        scaler.note_arrival(r.arrival, r.input_len, r.output_len);
+        // barrier: every replica reaches the dispatch horizon before
+        // the router or autoscaler observes fleet state (retired
+        // replicas keep draining through the same barriers)
+        fleet.advance_to(r.arrival);
 
-        // health snapshots and capacity pricing only when a control
-        // evaluation will actually run (evaluate re-checks the gate)
-        let decision = if scaler.due(r.arrival) {
-            let fleet: Vec<ReplicaHealth> = replicas
-                .iter()
-                .enumerate()
-                .filter(|(i, _)| retired_at[*i].is_none())
-                .map(|(i, rep)| ReplicaHealth {
-                    id: i,
-                    slowdown: rep.calibrated_slowdown(),
-                    calib: rep.calibration(),
-                })
-                .collect();
-            let nominal = service_capacity_tokens_per_s(perf, cfg, scaler.prefill_frac());
-            scaler.evaluate(r.arrival, nominal, &fleet)
-        } else {
-            None
-        };
-        if let Some(decision) = decision {
-            let target = match decision {
-                ScaleDecision::ScaleOut => {
-                    let id = replicas.len();
-                    replicas.push(ctx.build_replica(id));
-                    spawned_at.push(r.arrival);
-                    retired_at.push(None);
-                    id
-                }
-                ScaleDecision::ScaleIn(id) | ScaleDecision::Retire(id) => {
-                    retired_at[id] = Some(r.arrival);
-                    // sessions pinned here must re-home on their next turn
-                    dispatcher.unpin_replica(id);
-                    id
-                }
-                ScaleDecision::Reprofile(id) => {
-                    replicas[id].reprofile();
-                    id
-                }
+        if let Some(scaler) = scaler.as_mut() {
+            scaler.note_arrival(r.arrival, r.input_len, r.output_len);
+            // health snapshots and capacity pricing only when a control
+            // evaluation will actually run (evaluate re-checks the gate)
+            let decision = if scaler.due(r.arrival) {
+                let health: Vec<ReplicaHealth> = fleet
+                    .signals()
+                    .iter()
+                    .filter(|s| retired_at[s.id].is_none())
+                    .map(ReplicaSignals::health)
+                    .collect();
+                let nominal = service_capacity_tokens_per_s(perf, cfg, scaler.prefill_frac());
+                scaler.evaluate(r.arrival, nominal, &health)
+            } else {
+                None
             };
-            let fleet_after = retired_at.iter().filter(|t| t.is_none()).count();
-            scale_events.push(ScaleEvent {
-                t: r.arrival,
-                action: decision.action(),
-                replica: target,
-                fleet_after,
-            });
+            if let Some(decision) = decision {
+                let target = match decision {
+                    ScaleDecision::ScaleOut => {
+                        let id = fleet.spawn();
+                        spawned_at.push(r.arrival);
+                        retired_at.push(None);
+                        eligible.push(id);
+                        id
+                    }
+                    ScaleDecision::ScaleIn(id) | ScaleDecision::Retire(id) => {
+                        retired_at[id] = Some(r.arrival);
+                        eligible.retain(|&i| i != id);
+                        // sessions pinned here must re-home on their
+                        // next turn
+                        dispatcher.unpin_replica(id);
+                        id
+                    }
+                    ScaleDecision::Reprofile(id) => {
+                        fleet.reprofile(id);
+                        id
+                    }
+                };
+                let fleet_after = retired_at.iter().filter(|t| t.is_none()).count();
+                scale_events.push(ScaleEvent {
+                    t: r.arrival,
+                    action: decision.action(),
+                    replica: target,
+                    fleet_after,
+                });
+            }
         }
 
-        let eligible: Vec<usize> = (0..replicas.len())
-            .filter(|&i| retired_at[i].is_none())
-            .collect();
-        let k = dispatcher.pick_among(&replicas, &eligible, r, perf, &cfg.slo);
+        let k = dispatcher.pick_among(fleet.signals(), &eligible, r, perf, &cfg.slo);
         assignments.push((r.id, k));
-        replicas[k].push(r.clone());
+        fleet.push(k, r.clone());
     }
 
-    let mut per_replica: Vec<EngineOutput> = replicas.into_iter().map(Replica::finish).collect();
+    let mut per_replica = fleet.finish();
     // lifecycle events ride the targeted replica's own output/timeline
     for ev in &scale_events {
         per_replica[ev.replica].scale_events.push(*ev);
@@ -460,19 +812,24 @@ fn serve_cluster_autoscaled(
         .iter()
         .map(|o| o.virtual_duration)
         .fold(0.0, f64::max);
-    // seconds each replica was held: spawn → retirement (drain included)
-    // for retired replicas, spawn → end-of-run for surviving ones
-    let replica_steps: f64 = per_replica
-        .iter()
-        .enumerate()
-        .map(|(i, o)| {
-            let end = match retired_at[i] {
-                Some(t) => t.max(o.virtual_duration),
-                None => virtual_duration,
-            };
-            (end - spawned_at[i]).max(0.0)
-        })
-        .sum();
+    let replica_steps: f64 = if autoscaled {
+        // seconds each replica was held: spawn → retirement (drain
+        // included) for retired replicas, spawn → end-of-run otherwise
+        per_replica
+            .iter()
+            .enumerate()
+            .map(|(i, o)| {
+                let end = match retired_at[i] {
+                    Some(t) => t.max(o.virtual_duration),
+                    None => virtual_duration,
+                };
+                (end - spawned_at[i]).max(0.0)
+            })
+            .sum()
+    } else {
+        // a fixed fleet holds every replica for the whole run
+        init as f64 * virtual_duration
+    };
     ClusterOutput {
         records,
         per_replica,
@@ -480,6 +837,45 @@ fn serve_cluster_autoscaled(
         virtual_duration,
         scale_events,
         replica_steps,
+    }
+}
+
+/// Serve `trace` on `cluster.replicas` instances of `system` behind the
+/// configured router.  With `cluster.autoscale.enabled`, the fleet is
+/// dynamic: spawned replicas join the live run with inherited hardware
+/// specs and seed derivation; retired replicas stop receiving traffic
+/// (their prefix-affinity sessions re-home) but keep draining.  Replica
+/// advances run on `cluster.sim_threads` workers — any thread count
+/// yields bit-identical output (see module docs).
+pub fn serve_cluster(
+    system: System,
+    cfg: &ServingConfig,
+    perf: &PerfModel,
+    gt: &GroundTruth,
+    trace: &[Request],
+    seed: u64,
+    cluster: &ClusterConfig,
+) -> ClusterOutput {
+    let asc = &cluster.autoscale;
+    let init = if asc.enabled {
+        let min = asc.min_replicas.max(1);
+        let max = asc.max_replicas.max(min);
+        cluster.replicas.clamp(min, max)
+    } else {
+        cluster.replicas.max(1)
+    };
+    // Wedge guard that scales with the trace horizon: long-duration
+    // traces must not trip the single-GPU default cap.
+    let horizon = trace.last().map(|r| r.arrival).unwrap_or(0.0);
+    let max_virtual_time = CoreOptions::default().max_virtual_time.max(4.0 * horizon);
+    let ctx = FleetCtx { system, cfg, perf, gt, seed, max_virtual_time, cluster };
+    let workers = cluster.effective_sim_threads();
+    if workers <= 1 {
+        run_dispatch(SerialFleet::new(ctx, init), cfg, perf, trace, cluster)
+    } else {
+        thread::scope(|s| {
+            run_dispatch(ParallelFleet::new(s, workers, ctx, init), cfg, perf, trace, cluster)
+        })
     }
 }
 
@@ -536,6 +932,53 @@ mod tests {
         let b = serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 5, &ccfg);
         assert_eq!(a.records, b.records);
         assert_eq!(a.assignments, b.assignments);
+    }
+
+    #[test]
+    fn parallel_backend_is_bit_identical_to_serial() {
+        // the tentpole invariant, in-module form: the full matrix lives
+        // in tests/parallel_parity.rs
+        let (cfg, perf, gt) = setup();
+        let trace = generate_n_requests(&Dataset::sharegpt(), 12.0, 24, 23);
+        for router in RouterPolicy::all() {
+            let run = |threads| {
+                let ccfg = ClusterConfig {
+                    replicas: 4,
+                    router,
+                    sim_threads: threads,
+                    ..Default::default()
+                };
+                serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 6, &ccfg)
+            };
+            let serial = run(1);
+            let parallel = run(4);
+            assert_eq!(serial.records, parallel.records, "{}", router.label());
+            assert_eq!(serial.assignments, parallel.assignments, "{}", router.label());
+            assert_eq!(
+                serial.virtual_duration.to_bits(),
+                parallel.virtual_duration.to_bits(),
+                "{}",
+                router.label()
+            );
+        }
+    }
+
+    #[test]
+    fn effective_threads_cap_at_the_fleet_bound() {
+        let fixed = ClusterConfig { replicas: 3, sim_threads: 64, ..Default::default() };
+        assert_eq!(fixed.effective_sim_threads(), 3);
+        let serial = ClusterConfig { replicas: 8, sim_threads: 1, ..Default::default() };
+        assert_eq!(serial.effective_sim_threads(), 1);
+        let auto = ClusterConfig { replicas: 8, sim_threads: 0, ..Default::default() };
+        let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        assert_eq!(auto.effective_sim_threads(), avail.min(8));
+        let scaled = ClusterConfig {
+            replicas: 1,
+            sim_threads: 64,
+            autoscale: AutoscaleConfig::on(1, 6),
+            ..Default::default()
+        };
+        assert_eq!(scaled.effective_sim_threads(), 6);
     }
 
     #[test]

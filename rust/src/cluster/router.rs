@@ -15,8 +15,14 @@
 //!   least-kv).  Replica prefix caches are private, so spreading a
 //!   session across replicas forfeits every hit after the first turn —
 //!   stickiness IS the locality policy.
+//!
+//! Routing consumes [`ReplicaSignals`] snapshots — per-replica state
+//! frozen at the dispatch-horizon barrier — never live replicas.  That
+//! keeps the dispatcher a pure function of the snapshot vector (the
+//! cluster layer's determinism argument) and lets replicas live on
+//! simulation worker threads while routing stays serial on main.
 
-use crate::cluster::Replica;
+use crate::cluster::ReplicaSignals;
 use crate::config::SloSpec;
 use crate::perf::PerfModel;
 use crate::workload::Request;
@@ -62,16 +68,12 @@ impl RouterPolicy {
 }
 
 /// The dispatcher: picks a replica for each arrival.  Deterministic
-/// given the replica states, so cluster runs are reproducible.
+/// given the signal snapshots, so cluster runs are reproducible.
 pub struct Dispatcher {
     policy: RouterPolicy,
     rr_next: usize,
     /// prefix-affinity stickiness: session id → replica.
     session_map: BTreeMap<u64, usize>,
-    /// Cached `[0, 1, .., n)` index list for the fixed-fleet `pick`
-    /// path, so routing a request allocates nothing once the fleet
-    /// size is stable.
-    all_idx: Vec<usize>,
 }
 
 impl Dispatcher {
@@ -80,7 +82,6 @@ impl Dispatcher {
             policy,
             rr_next: 0,
             session_map: BTreeMap::new(),
-            all_idx: Vec::new(),
         }
     }
 
@@ -93,57 +94,40 @@ impl Dispatcher {
         self.session_map.len()
     }
 
-    /// Choose the replica for `req` from the full fleet.  Replica clocks
-    /// have been advanced to the arrival time, so state queries are
-    /// current.  (Thin wrapper over [`Dispatcher::pick_among`] with every
-    /// index eligible — one implementation, so the fixed-fleet and
-    /// autoscaled paths cannot drift apart.)
-    pub fn pick(
-        &mut self,
-        replicas: &[Replica],
-        req: &Request,
-        perf: &PerfModel,
-        slo: &SloSpec,
-    ) -> usize {
-        if self.all_idx.len() != replicas.len() {
-            self.all_idx = (0..replicas.len()).collect();
-        }
-        // take/restore the cached list so `pick_among` can borrow self
-        let all = std::mem::take(&mut self.all_idx);
-        let k = self.pick_among(replicas, &all, req, perf, slo);
-        self.all_idx = all;
-        k
-    }
-
-    /// Choose the replica for `req` among `eligible` indices — the
-    /// autoscaled path routes over the active (non-draining) subset.
-    /// A prefix-affinity session pinned to a now-ineligible replica is
-    /// RE-HOMED: the pin is dropped and the session re-sticks to the
-    /// least-loaded eligible replica (its cached prefix is forfeited —
-    /// retirement drains the KV with the replica).
+    /// Choose the replica for `req` among `eligible` indices into
+    /// `signals` (the autoscaled path routes over the active,
+    /// non-draining subset; the fixed fleet passes every index).
+    /// Snapshots were taken at this arrival's horizon barrier and
+    /// already fold in same-instant pushes, so state queries are
+    /// current.  A prefix-affinity session pinned to a now-ineligible
+    /// replica is RE-HOMED: the pin is dropped and the session
+    /// re-sticks to the least-loaded eligible replica (its cached
+    /// prefix is forfeited — retirement drains the KV with the
+    /// replica).
     pub fn pick_among(
         &mut self,
-        replicas: &[Replica],
+        signals: &[ReplicaSignals],
         eligible: &[usize],
         req: &Request,
         perf: &PerfModel,
         slo: &SloSpec,
     ) -> usize {
         assert!(!eligible.is_empty(), "no active replica to route to");
-        let least_kv =
-            |s: &[Replica], e: &[usize]| argmin_among(s, e, |r| r.outstanding_kv_tokens() as f64);
+        let least_kv = |s: &[ReplicaSignals], e: &[usize]| {
+            argmin_among(s, e, |r| r.outstanding_kv_tokens as f64)
+        };
         match self.policy {
             RouterPolicy::RoundRobin => {
                 let k = eligible[self.rr_next % eligible.len()];
                 self.rr_next = self.rr_next.wrapping_add(1);
                 k
             }
-            RouterPolicy::LeastKv => least_kv(replicas, eligible),
+            RouterPolicy::LeastKv => least_kv(signals, eligible),
             RouterPolicy::SloSlack => {
                 // max slack == min estimated TTFT for a single request,
                 // but keep the slack form: it is what a multi-model
                 // front-door would compare across heterogeneous SLOs.
-                argmin_among(replicas, eligible, |r| {
+                argmin_among(signals, eligible, |r| {
                     let est = r.estimated_ttft(req, perf);
                     -(slo.ttft_budget(req.input_len) - est)
                 })
@@ -151,7 +135,7 @@ impl Dispatcher {
             RouterPolicy::PrefixAffinity => {
                 let Some(sid) = req.session_id else {
                     // sessionless traffic: no prefix to chase
-                    return least_kv(replicas, eligible);
+                    return least_kv(signals, eligible);
                 };
                 if let Some(&k) = self.session_map.get(&sid) {
                     if eligible.contains(&k) {
@@ -162,7 +146,7 @@ impl Dispatcher {
                 }
                 // first (or re-homed) turn: balance by memory pressure,
                 // then stick
-                let k = least_kv(replicas, eligible);
+                let k = least_kv(signals, eligible);
                 self.session_map.insert(sid, k);
                 k
             }
@@ -181,11 +165,15 @@ impl Dispatcher {
 
 /// Eligible index minimizing `key` (first wins ties; `total_cmp` keeps
 /// degenerate estimates from panicking the dispatcher).
-fn argmin_among(replicas: &[Replica], eligible: &[usize], key: impl Fn(&Replica) -> f64) -> usize {
+fn argmin_among(
+    signals: &[ReplicaSignals],
+    eligible: &[usize],
+    key: impl Fn(&ReplicaSignals) -> f64,
+) -> usize {
     let mut best = eligible[0];
-    let mut best_key = key(&replicas[best]);
+    let mut best_key = key(&signals[best]);
     for &i in &eligible[1..] {
-        let k = key(&replicas[i]);
+        let k = key(&signals[i]);
         if k.total_cmp(&best_key) == std::cmp::Ordering::Less {
             best = i;
             best_key = k;

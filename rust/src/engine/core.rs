@@ -36,6 +36,16 @@
 //! drains — per-lane boundaries give Bullet's decoupled engines, while a
 //! policy that only plans when *all* lanes are idle gets lock-step
 //! (chunked prefill) or barrier-overlap (NanoFlow) semantics for free.
+//!
+//! Time-jump discipline: when the simulator is idle the pump advances
+//! the clock with [`Simulator::advance_idle_to`] — an ABSOLUTE jump —
+//! never with a relative `run_for`.  A relative jump makes the landing
+//! clock depend on the prior clock in floating point
+//! (`a + (t - a) ≠ t` in general), which would make an engine's state a
+//! function of how many idle horizons it visited; the absolute form
+//! keeps `run_until(t)` on a drained engine equivalent to one clock
+//! assignment, which the cluster layer exploits to skip drained
+//! replicas entirely.
 
 use crate::config::ServingConfig;
 use crate::gpu::kernel::KernelDesc;
@@ -132,7 +142,11 @@ impl Default for CoreOptions {
 /// idle ([`EngineCore::lane_idle`]).  `on_drain` fires when a lane's
 /// in-flight kernel count returns to zero and is where per-boundary
 /// lifecycle effects (layer-group credit, token ticks) belong.
-pub trait ServingPolicy {
+///
+/// `Send` is a supertrait so a boxed policy (and with it a whole cluster
+/// replica) can move to a simulation worker thread; policies are plain
+/// owned state, so this costs implementors nothing.
+pub trait ServingPolicy: Send {
     /// Display label for tables and logs.
     fn label(&self) -> String;
 
@@ -272,6 +286,20 @@ impl EngineCore {
     /// Every record emitted?
     pub fn finished(&self) -> bool {
         self.records.len() >= self.trace.len()
+    }
+
+    /// No queued, in-flight, or unadmitted work anywhere in the core.
+    /// (The policy may still hold private work — callers combine this
+    /// with [`ServingPolicy::has_private_work`].)  On a drained core,
+    /// `run_until(t)` reduces to one idle clock jump, so the cluster
+    /// layer can skip the call entirely without changing any state the
+    /// next jump or push would observe.
+    pub fn drained(&self) -> bool {
+        self.next_arrival >= self.trace.len()
+            && self.waiting.is_empty()
+            && self.decode.is_empty()
+            && self.pending_join.is_empty()
+            && self.sim.idle()
     }
 
     /// Inject a request after construction (cluster dispatch).  Arrivals
@@ -651,7 +679,7 @@ impl EngineCore {
                     if let Some(t) = until {
                         target = target.min(t);
                     }
-                    self.sim.run_for((target - now).max(0.0) + 1e-9);
+                    self.sim.advance_idle_to(target + 1e-9);
                     continue;
                 }
                 // No pending arrivals.
@@ -662,7 +690,7 @@ impl EngineCore {
                 {
                     if let Some(t) = until {
                         // Genuinely drained before the bound: idle to it.
-                        self.sim.run_for((t - now).max(0.0) + 1e-9);
+                        self.sim.advance_idle_to(t + 1e-9);
                         return;
                     }
                     unreachable!(
@@ -680,7 +708,7 @@ impl EngineCore {
                 }
                 if let Some(t) = until {
                     // Unrecoverable before the bound: idle up to it.
-                    self.sim.run_for((t - now).max(0.0) + 1e-9);
+                    self.sim.advance_idle_to(t + 1e-9);
                     return;
                 }
                 idle_spins += 1;

@@ -428,6 +428,21 @@ impl Simulator {
         }
     }
 
+    /// Jump an idle simulator's clock to the absolute instant `t` (no-op
+    /// when the clock is already past it).  Unlike [`Simulator::run_for`],
+    /// the resulting clock is a pure function of `t` — not of the current
+    /// clock — so an idle engine that skipped intermediate horizons lands
+    /// on bitwise-identical timestamps to one that visited every horizon.
+    /// The engine's idle-time jumps (and the cluster layer's
+    /// drained-replica fast-forward) rely on exactly this property.
+    /// Idle time accrues no utilization, matching `run_for` while empty.
+    pub fn advance_idle_to(&mut self, t: f64) {
+        debug_assert!(self.idle(), "advance_idle_to on a busy simulator");
+        if t > self.clock {
+            self.clock = t;
+        }
+    }
+
     /// Run until a specific stream is fully drained.
     pub fn run_until_stream_idle(&mut self, id: StreamId) {
         while !self.stream_idle(id) {
@@ -508,6 +523,32 @@ mod tests {
         assert_eq!(done.len(), 1);
         let dur = done[0].end - done[0].start;
         assert!((dur - expect).abs() / expect < 1e-9, "dur {dur} expect {expect}");
+    }
+
+    #[test]
+    fn advance_idle_to_is_history_free() {
+        // The jump must land on fl(t) no matter how many intermediate
+        // horizons were visited — the property the cluster layer's
+        // drained-replica skip depends on.
+        let mut a = sim();
+        let mut b = sim();
+        for t in [0.1, 0.3, 0.7] {
+            a.advance_idle_to(t);
+        }
+        b.advance_idle_to(0.7);
+        assert_eq!(a.now().to_bits(), b.now().to_bits());
+        // and it never rewinds
+        a.advance_idle_to(0.2);
+        assert_eq!(a.now().to_bits(), 0.7f64.to_bits());
+        // work submitted after identical jumps completes identically
+        let sa = a.create_stream(SmMask::first(108), "full");
+        let sb = b.create_stream(SmMask::first(108), "full");
+        a.submit(sa, gemm(1e12));
+        b.submit(sb, gemm(1e12));
+        a.run_until_idle();
+        b.run_until_idle();
+        let (ca, cb) = (a.take_completions(), b.take_completions());
+        assert_eq!(ca[0].end.to_bits(), cb[0].end.to_bits());
     }
 
     #[test]

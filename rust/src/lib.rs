@@ -52,10 +52,15 @@
 //!
 //! **Cluster** ([`cluster`]).  [`cluster::serve_cluster`] runs N
 //! replicas of any system behind a [`cluster::RouterPolicy`]; replicas
-//! co-advance along the global virtual timeline so state-aware routers
-//! see live load.  Surfaced through `BulletServer::serve_cluster`, the
-//! CLI (`--replicas N --router <policy>`) and
-//! `examples/cluster_scaling.rs`.
+//! co-advance along the global virtual timeline — in parallel on a
+//! `sim_threads` worker pool between dispatch horizons, with bitwise
+//! determinism as a tested invariant (`tests/parallel_parity.rs`) —
+//! and state-aware routers read [`cluster::ReplicaSignals`] snapshots
+//! frozen at each horizon barrier.  Surfaced through
+//! `BulletServer::serve_cluster`, the CLI (`--replicas N --router
+//! <policy> --sim-threads N`) and `examples/cluster_scaling.rs`;
+//! `examples/bench_runner.rs` records the perf trajectory
+//! (`BENCH_6.json`, gated by CI's `bench` job).
 //!
 //! **Performance modeling: offline profile → online calibration**
 //! ([`perf`]).  Prediction is consumed through the

@@ -8,6 +8,7 @@
 //!                [--router round-robin|least-kv|slo-slack|prefix-affinity]
 //!                [--calibration on|off] [--drift none|throttle|step|lottery|storm]
 //!                [--autoscale on|off] [--min-replicas N] [--max-replicas N]
+//!                [--sim-threads N]
 //! bullet live    [--requests N] [--artifacts DIR]   # real model via PJRT
 //! bullet profile [--grid coarse|paper]              # offline §3.2.2 pass
 //! bullet info                                        # config + artifact info
@@ -65,7 +66,10 @@ serve flags:  --system bullet|vllm-1024|sglang-1024|sglang-2048|nanoflow
               --autoscale on|off      (calibration-driven fleet control;
                                        --replicas is the starting fleet)
               --min-replicas N --max-replicas N
-                                      (fleet bounds with --autoscale on)";
+                                      (fleet bounds with --autoscale on)
+              --sim-threads N         (simulation worker threads; 0 = all
+                                       cores, 1 = serial — results are
+                                       bit-identical at any value)";
 
 /// The metric rows every serve table shares (single-GPU and cluster).
 fn summary_rows(t: &mut Table, s: &RunSummary) {
@@ -180,6 +184,9 @@ fn serve(args: &Args) {
     } else {
         AutoscaleConfig::off()
     };
+    // 0 = all available cores; 1 = the legacy serial path.  Any value
+    // yields bit-identical results — the flag trades wall-clock only.
+    let sim_threads = args.get_usize("sim-threads", 0);
     if autoscale_on && !cfg.calibration.enabled {
         eprintln!(
             "note: --autoscale on without --calibration on: scaling runs on \
@@ -204,7 +211,8 @@ fn serve(args: &Args) {
             router.label(),
             if autoscale_on { ", autoscaled" } else { "" }
         );
-        let ccfg = ClusterConfig { replicas, router, autoscale, ..Default::default() };
+        let ccfg =
+            ClusterConfig { replicas, router, autoscale, sim_threads, ..Default::default() };
         // direct call so --seed drives the replica simulators, exactly
         // like the single-replica path below
         let out = serve_cluster(sys, &cfg, server.perf(), &gt, &trace, seed, &ccfg);

@@ -1,0 +1,202 @@
+//! Parallel/serial bitwise-parity suite: the cluster simulator's
+//! tentpole invariant is that `sim_threads` NEVER changes output — for
+//! every engine family, router, and autoscale setting, the parallel
+//! backend's `ClusterOutput` is bit-identical to the serial backend's.
+//!
+//! The argument (see `cluster/mod.rs` docs): replicas are share-nothing
+//! between dispatch horizons, each replica's evolution is a pure
+//! function of its own command sequence, and routing consumes frozen
+//! signal snapshots — so thread placement cannot leak into any bit.
+//! This suite is the tripwire for anything that breaks one of those
+//! three legs (a hidden cross-replica read, a history-dependent clock
+//! jump, a signal computed off live state).
+
+use bullet::baselines::System;
+use bullet::cluster::{
+    serve_cluster, AutoscaleConfig, ClusterConfig, ClusterOutput, ReplicaSpec, RouterPolicy,
+};
+use bullet::config::{CalibrationConfig, DriftSpec, GpuSpec, ModelSpec, ServingConfig};
+use bullet::gpu::roofline::GroundTruth;
+use bullet::perf::PerfModel;
+use bullet::workload::{generate_n_requests, generate_sessions, Dataset, Request, SessionProfile};
+
+/// Full-output equality, field by field, down to float bits.  The
+/// records/assignments comparison alone would pass under a broken
+/// barrier that only skews timelines or per-replica accounting — so
+/// compare everything a run produces.
+fn assert_identical(a: &ClusterOutput, b: &ClusterOutput, label: &str) {
+    assert_eq!(a.records, b.records, "{label}: records diverge");
+    assert_eq!(a.assignments, b.assignments, "{label}: routing diverges");
+    assert_eq!(a.scale_events, b.scale_events, "{label}: scale events diverge");
+    assert_eq!(
+        a.virtual_duration.to_bits(),
+        b.virtual_duration.to_bits(),
+        "{label}: makespan diverges ({} vs {})",
+        a.virtual_duration,
+        b.virtual_duration
+    );
+    assert_eq!(
+        a.replica_steps.to_bits(),
+        b.replica_steps.to_bits(),
+        "{label}: replica-steps diverge"
+    );
+    assert_eq!(a.per_replica.len(), b.per_replica.len(), "{label}: fleet size diverges");
+    for (i, (x, y)) in a.per_replica.iter().zip(&b.per_replica).enumerate() {
+        let l = format!("{label}: replica {i}");
+        assert_eq!(x.records, y.records, "{l}: records");
+        assert_eq!(x.scale_events, y.scale_events, "{l}: scale events");
+        assert_eq!(x.timeline.samples(), y.timeline.samples(), "{l}: timeline samples");
+        assert_eq!(x.timeline.events(), y.timeline.events(), "{l}: timeline events");
+        assert_eq!(x.virtual_duration.to_bits(), y.virtual_duration.to_bits(), "{l}: duration");
+        assert_eq!(x.total_flops.to_bits(), y.total_flops.to_bits(), "{l}: flops");
+        assert_eq!(x.total_bytes.to_bits(), y.total_bytes.to_bits(), "{l}: bytes");
+        assert_eq!(x.peak_kv_blocks, y.peak_kv_blocks, "{l}: peak kv");
+        assert_eq!(x.reconfigs, y.reconfigs, "{l}: reconfigs");
+        assert_eq!(x.decode_pauses, y.decode_pauses, "{l}: decode pauses");
+        assert_eq!(x.prefix, y.prefix, "{l}: prefix stats");
+        assert_eq!(x.calibration, y.calibration, "{l}: calibration");
+    }
+}
+
+fn run_cell(
+    sys: System,
+    cfg: &ServingConfig,
+    trace: &[Request],
+    seed: u64,
+    ccfg: &ClusterConfig,
+    threads: usize,
+) -> ClusterOutput {
+    let perf = PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b());
+    let gt = GroundTruth::new(GpuSpec::a100());
+    let ccfg = ClusterConfig { sim_threads: threads, ..ccfg.clone() };
+    serve_cluster(sys, cfg, &perf, &gt, trace, seed, &ccfg)
+}
+
+/// Every engine × router × {autoscale off, on} cell at threads {1, 4}.
+#[test]
+fn every_engine_router_autoscale_cell_is_thread_invariant() {
+    let mut seed = 4200u64;
+    for sys in [System::Bullet, System::Sglang1024, System::Nanoflow] {
+        for router in RouterPolicy::all() {
+            for autoscaled in [false, true] {
+                seed += 1;
+                let label = format!(
+                    "{} x {} x autoscale={}",
+                    sys.label(),
+                    router.label(),
+                    autoscaled
+                );
+                let cfg = ServingConfig {
+                    // calibration feeds the autoscaler real health
+                    calibration: CalibrationConfig::on(),
+                    ..ServingConfig::default()
+                };
+                let autoscale = if autoscaled {
+                    AutoscaleConfig {
+                        control_interval_s: 0.5,
+                        rate_window_s: 2.0,
+                        cooldown_out_s: 1.0,
+                        cooldown_in_s: 4.0,
+                        ..AutoscaleConfig::on(1, 4)
+                    }
+                } else {
+                    AutoscaleConfig::off()
+                };
+                let ccfg = ClusterConfig { replicas: 3, router, autoscale, ..Default::default() };
+                // saturating enough that replicas stay busy across
+                // horizons (a drained-only fleet would vacuously pass)
+                let trace = generate_n_requests(&Dataset::sharegpt(), 14.0, 28, seed);
+                let serial = run_cell(sys, &cfg, &trace, seed, &ccfg, 1);
+                let parallel = run_cell(sys, &cfg, &trace, seed, &ccfg, 4);
+                assert_identical(&serial, &parallel, &label);
+                assert_eq!(serial.records.len(), trace.len(), "{label}: lost records");
+            }
+        }
+    }
+}
+
+/// The cell with the most cross-replica state: autoscaled fleet +
+/// prefix-affinity routing + session traffic + prefix caching.  Session
+/// pins, re-homing on retirement, private per-replica caches and scale
+/// events all have to line up bit-for-bit.
+#[test]
+fn autoscaled_prefix_affinity_sessions_are_thread_invariant() {
+    let cfg = ServingConfig {
+        prefix_cache: true,
+        calibration: CalibrationConfig::on(),
+        ..ServingConfig::default()
+    };
+    let ccfg = ClusterConfig {
+        replicas: 2,
+        router: RouterPolicy::PrefixAffinity,
+        autoscale: AutoscaleConfig {
+            control_interval_s: 0.5,
+            rate_window_s: 2.0,
+            cooldown_out_s: 1.0,
+            cooldown_in_s: 3.0,
+            ..AutoscaleConfig::on(1, 4)
+        },
+        ..Default::default()
+    };
+    let trace = generate_sessions(&SessionProfile::conversational(), 2.5, 16, 31);
+    let serial = run_cell(System::Bullet, &cfg, &trace, 8, &ccfg, 1);
+    for threads in [2, 3, 4, 8] {
+        let parallel = run_cell(System::Bullet, &cfg, &trace, 8, &ccfg, threads);
+        assert_identical(&serial, &parallel, &format!("affinity+autoscale @ {threads}t"));
+    }
+    // the cell must actually exercise the machinery it claims to
+    assert!(serial.prefix_stats().hits > 0, "no prefix hits — cell too cold");
+}
+
+/// Heterogeneous fleet under drift: per-replica GPUs, device-lottery
+/// noise and online calibration — the most state a replica can carry.
+#[test]
+fn heterogeneous_drifting_fleet_is_thread_invariant() {
+    let cfg = ServingConfig {
+        calibration: CalibrationConfig::on(),
+        ..ServingConfig::default()
+    };
+    let slow_gpu = GpuSpec {
+        peak_flops: GpuSpec::a100().peak_flops * 0.5,
+        peak_bandwidth: GpuSpec::a100().peak_bandwidth * 0.5,
+        ..GpuSpec::a100()
+    };
+    let ccfg = ClusterConfig {
+        replicas: 3,
+        router: RouterPolicy::SloSlack,
+        replica_specs: vec![
+            ReplicaSpec::default(),
+            ReplicaSpec { gpu: Some(slow_gpu), drift: None },
+            ReplicaSpec { gpu: None, drift: Some(DriftSpec::throttle()) },
+        ],
+        ..Default::default()
+    };
+    let trace = generate_n_requests(&Dataset::azure_code(), 12.0, 24, 37);
+    let serial = run_cell(System::Bullet, &cfg, &trace, 11, &ccfg, 1);
+    let parallel = run_cell(System::Bullet, &cfg, &trace, 11, &ccfg, 3);
+    assert_identical(&serial, &parallel, "hetero+drift");
+    let sd = serial.calibrated_slowdowns();
+    assert!(sd[1] > sd[0], "slow replica must calibrate apart: {sd:?}");
+}
+
+/// Oversubscription and odd shard shapes: more threads than replicas,
+/// threads that don't divide the fleet, and a single-replica fleet all
+/// reduce to the same bits.
+#[test]
+fn thread_count_never_changes_output_shape() {
+    let cfg = ServingConfig::default();
+    let trace = generate_n_requests(&Dataset::sharegpt(), 10.0, 15, 41);
+    for replicas in [1, 2, 5] {
+        let ccfg =
+            ClusterConfig { replicas, router: RouterPolicy::LeastKv, ..Default::default() };
+        let serial = run_cell(System::Bullet, &cfg, &trace, 13, &ccfg, 1);
+        for threads in [2, 3, 7, 64] {
+            let parallel = run_cell(System::Bullet, &cfg, &trace, 13, &ccfg, threads);
+            assert_identical(
+                &serial,
+                &parallel,
+                &format!("{replicas} replicas @ {threads} threads"),
+            );
+        }
+    }
+}

@@ -4,8 +4,10 @@
 //! a shipped serving scenario.
 //!
 //! Each cell asserts: the trace completes (non-empty, no lost records),
-//! every summary metric is finite, and two identical runs are bitwise
-//! identical (records AND routing decisions).
+//! every summary metric is finite, two identical runs are bitwise
+//! identical (records AND routing decisions), and the parallel
+//! simulation backend (`sim_threads = 4`) reproduces the serial
+//! backend (`sim_threads = 1`) bit-for-bit.
 //!
 //! The matrix is `#[ignore]`d in the default test run and executed by
 //! CI's dedicated `scenario-matrix` job (`cargo test --release --test
@@ -46,9 +48,12 @@ fn run_matrix(engines: &[System]) {
                 };
                 let trace = workload(wl, seed);
                 assert!(!trace.is_empty(), "{label}: empty trace");
-                let ccfg = ClusterConfig { replicas: 2, router, ..Default::default() };
+                let ccfg =
+                    ClusterConfig { replicas: 2, router, sim_threads: 1, ..Default::default() };
                 let a = serve_cluster(sys, &cfg, &perf, &gt, &trace, seed, &ccfg);
                 let b = serve_cluster(sys, &cfg, &perf, &gt, &trace, seed, &ccfg);
+                let par = ClusterConfig { sim_threads: 4, ..ccfg.clone() };
+                let c = serve_cluster(sys, &cfg, &perf, &gt, &trace, seed, &par);
 
                 // non-empty completions, nothing lost
                 assert_eq!(a.records.len(), trace.len(), "{label}: lost records");
@@ -59,6 +64,15 @@ fn run_matrix(engines: &[System]) {
                 // bitwise determinism across two runs
                 assert_eq!(a.records, b.records, "{label}: nondeterministic records");
                 assert_eq!(a.assignments, b.assignments, "{label}: nondeterministic routing");
+                // parallel/serial bitwise parity (sim_threads ∈ {1, 4})
+                assert_eq!(a.records, c.records, "{label}: parallel records diverge");
+                assert_eq!(a.assignments, c.assignments, "{label}: parallel routing diverges");
+                assert_eq!(
+                    a.virtual_duration.to_bits(),
+                    c.virtual_duration.to_bits(),
+                    "{label}: parallel makespan diverges"
+                );
+                assert!(c.scale_events.is_empty(), "{label}: fixed fleet scaled");
 
                 // finite metrics
                 let s = summarize(&a.records, &cfg.slo, Some(a.virtual_duration));

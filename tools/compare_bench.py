@@ -1,0 +1,105 @@
+#!/usr/bin/env python3
+"""Gate a fresh bench_runner artifact against the committed baseline.
+
+Usage: compare_bench.py BASELINE.json FRESH.json
+
+Three checks, in order of strictness:
+
+1. **Parity (always enforced).** The fresh run must report
+   ``cluster.parity: true`` — the parallel backend reproduced the serial
+   backend bit-for-bit during the bench itself.  A diverging build's
+   numbers are meaningless, so this fails hard.
+
+2. **Speedup floor (enforced on >=4-core hosts).** The tentpole's
+   acceptance bar is ~2x at 8 replicas on a 4-core runner.  Hosted CI
+   runners are noisy, so the hard floor is 1.3x with a warning band up
+   to 2.0x; below 4 cores the check is skipped (a 2-core runner cannot
+   hit 2x by construction).
+
+3. **Simulator-throughput regression (enforced only against a verified
+   baseline).** Fails when the fresh ``cluster.realtime_factor``
+   (virtual seconds simulated per wall second, parallel backend) drops
+   >15% below the baseline's.  The committed baseline starts with
+   ``verified: false`` (authored before any runner executed it); promote
+   a CI artifact to baseline — which flips ``verified`` to true — to arm
+   this gate.  Wall-clock numbers from unverified baselines are
+   estimates and must not fail builds.
+
+The deterministic ``cluster.virtual_makespan_s`` is also compared: a
+change there means simulation *semantics* changed (not just speed), so
+it is reported loudly but does not fail the job — intentional semantic
+changes land with an updated baseline.
+"""
+
+import json
+import sys
+
+REGRESSION_TOLERANCE = 0.15  # >15% realtime-factor drop fails
+SPEEDUP_HARD_FLOOR = 1.3
+SPEEDUP_SOFT_FLOOR = 2.0
+MIN_CORES_FOR_SPEEDUP_GATE = 4
+
+
+def die(msg: str) -> None:
+    print(f"FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main() -> None:
+    if len(sys.argv) != 3:
+        die(f"usage: {sys.argv[0]} BASELINE.json FRESH.json")
+    with open(sys.argv[1]) as f:
+        base = json.load(f)
+    with open(sys.argv[2]) as f:
+        fresh = json.load(f)
+
+    fc = fresh["cluster"]
+
+    # 1. parity: non-negotiable
+    if fc.get("parity") is not True:
+        die("fresh run reports parity=false: parallel backend diverged from serial")
+    print("parity: OK (parallel backend bit-identical to serial)")
+
+    # 2. speedup floor
+    cores = int(fresh.get("host", {}).get("cores", 0))
+    speedup = float(fc["speedup"])
+    if cores < MIN_CORES_FOR_SPEEDUP_GATE:
+        print(f"speedup: SKIPPED ({cores} cores < {MIN_CORES_FOR_SPEEDUP_GATE})")
+    elif speedup < SPEEDUP_HARD_FLOOR:
+        die(f"speedup {speedup:.2f}x below hard floor {SPEEDUP_HARD_FLOOR}x on {cores} cores")
+    elif speedup < SPEEDUP_SOFT_FLOOR:
+        print(
+            f"speedup: WARN {speedup:.2f}x (floor {SPEEDUP_HARD_FLOOR}x OK, "
+            f"target {SPEEDUP_SOFT_FLOOR}x missed on {cores} cores)"
+        )
+    else:
+        print(f"speedup: OK {speedup:.2f}x on {cores} cores")
+
+    # deterministic makespan: semantic-drift tripwire (report, don't fail)
+    bm = float(base["cluster"]["virtual_makespan_s"])
+    fm = float(fc["virtual_makespan_s"])
+    if bm != fm:
+        print(
+            f"NOTE: virtual makespan changed {bm:.3f}s -> {fm:.3f}s — simulation "
+            "semantics differ from baseline; update BENCH_6.json if intentional"
+        )
+    else:
+        print(f"virtual makespan: unchanged ({fm:.3f}s)")
+
+    # 3. throughput regression vs a verified baseline only
+    if base.get("verified") is not True:
+        print("regression: SKIPPED (baseline is unverified — promote a CI artifact to arm)")
+        return
+    brf = float(base["cluster"]["realtime_factor"])
+    frf = float(fc["realtime_factor"])
+    floor = brf * (1.0 - REGRESSION_TOLERANCE)
+    if frf < floor:
+        die(
+            f"simulator throughput regressed: realtime factor {frf:.2f} < {floor:.2f} "
+            f"(baseline {brf:.2f}, tolerance {REGRESSION_TOLERANCE:.0%})"
+        )
+    print(f"regression: OK (realtime factor {frf:.2f} vs baseline {brf:.2f})")
+
+
+if __name__ == "__main__":
+    main()
