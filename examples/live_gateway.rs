@@ -1,0 +1,213 @@
+//! Live serving gateway: the full request lifecycle under the virtual
+//! clock, asserted end to end.
+//!
+//! Three legs over the same ShareGPT trace, each proving one lifecycle
+//! mechanism on the wall-clock front door (run deterministically here on
+//! [`VirtualClock`]; pass `--live wall` to the CLI for real time):
+//!
+//! - **A — cancellation**: clients disconnect mid-stream
+//!   (`Request::cancel_at`); their KV blocks return to the pool before
+//!   the run ends and every stream still closes with a terminal chunk;
+//! - **B — deadlines**: a blanket deadline expires long-running
+//!   requests; expired requests are counted and never consume decode
+//!   iterations past their deadline;
+//! - **C — failure injection**: a replica crashes mid-trace; sessions
+//!   re-home to survivors, cold orphans re-queue (keeping their stream),
+//!   in-flight work is counted lost, and the ledger stays total:
+//!   `completed + cancelled + expired + lost == submitted`.
+//!
+//! Every leg is run twice and asserted bit-identical — the lifecycle
+//! machinery is deterministic under the virtual clock.
+//!
+//! ```bash
+//! cargo run --release --offline --example live_gateway
+//! ```
+
+use bullet::baselines::System;
+use bullet::cluster::RouterPolicy;
+use bullet::config::{GpuSpec, ModelSpec, ServingConfig};
+use bullet::gateway::{
+    serve_gateway, FailureSpec, GatewayConfig, GatewayOutput, VirtualClock,
+};
+use bullet::gpu::roofline::GroundTruth;
+use bullet::metrics::RequestOutcome;
+use bullet::perf::PerfModel;
+use bullet::workload::{
+    annotate_lifecycle, generate_n_requests, generate_sessions, Dataset, LifecycleProfile,
+    Request, SessionProfile,
+};
+
+fn run(
+    cfg: &ServingConfig,
+    perf: &PerfModel,
+    gt: &GroundTruth,
+    trace: &[Request],
+    gw: &GatewayConfig,
+    seed: u64,
+) -> GatewayOutput {
+    let mut clock = VirtualClock::new();
+    serve_gateway(System::Bullet, cfg, perf, gt, trace, seed, gw, &mut clock)
+}
+
+fn main() {
+    let cfg = ServingConfig::default();
+    let perf = PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b());
+    let gt = GroundTruth::new(GpuSpec::a100());
+
+    // ---- leg A: cancellation-heavy traffic ----
+    let mut trace = generate_n_requests(&Dataset::sharegpt(), 8.0, 40, 11);
+    annotate_lifecycle(&mut trace, &LifecycleProfile::cancellation_heavy(), 11);
+    let gw = GatewayConfig { replicas: 2, router: RouterPolicy::LeastKv, ..Default::default() };
+    let a = run(&cfg, &perf, &gt, &trace, &gw, 5);
+    let a2 = run(&cfg, &perf, &gt, &trace, &gw, 5);
+    assert_eq!(a.records, a2.records, "leg A must be deterministic");
+    assert_eq!(a.outcomes, a2.outcomes, "leg A must be deterministic");
+    assert_eq!(a.streams, a2.streams, "leg A must be deterministic");
+    let lc = a.lifecycle;
+    assert_eq!(lc.submitted(), trace.len(), "leg A ledger: {lc:?}");
+    assert!(lc.cancelled > 0, "cancellation-heavy trace must cancel: {lc:?}");
+    // (a) cancelled KV is back in the pool before the run ends: every
+    // cancel outcome lands strictly inside the run, and nothing leaks
+    for o in a.outcomes.iter().filter(|o| o.outcome == RequestOutcome::Cancelled) {
+        assert!(
+            o.t < a.virtual_duration,
+            "cancel of {} at {} must precede run end {}",
+            o.id,
+            o.t,
+            a.virtual_duration
+        );
+    }
+    for (i, o) in a.per_replica.iter().enumerate() {
+        assert_eq!(o.final_kv_blocks, 0, "replica {i} leaked KV blocks");
+    }
+    // stream sanity: every admitted request gets a closed stream
+    assert_eq!(a.streams.len(), trace.len());
+    for (id, chunks) in &a.streams {
+        assert!(
+            chunks.last().map(|c| c.done).unwrap_or(true),
+            "request {id} stream left open"
+        );
+        for w in chunks.windows(2) {
+            assert!(w[1].t >= w[0].t, "request {id} stream went backwards");
+        }
+    }
+    println!(
+        "leg A (cancellation): {} submitted = {} completed + {} cancelled; \
+         {} stream chunks, mean TTFB {:.0} ms, no KV leaks",
+        lc.submitted(),
+        lc.completed,
+        lc.cancelled,
+        a.stream.chunks,
+        a.stream.mean_ttfb * 1e3
+    );
+
+    // ---- leg B: deadlines, blanket and explicit ----
+    let mut trace = generate_n_requests(&Dataset::sharegpt(), 10.0, 40, 13);
+    // even ids carry a far-future explicit deadline (which the blanket
+    // must NOT override); odd ids carry none and inherit the gateway's
+    // 0.75s blanket — far too tight for a multi-hundred-token decode
+    for r in trace.iter_mut().filter(|r| r.id % 2 == 0) {
+        r.deadline = Some(r.arrival + 1e9);
+    }
+    let gw = GatewayConfig {
+        replicas: 2,
+        router: RouterPolicy::LeastKv,
+        default_deadline_s: Some(0.75),
+        ..Default::default()
+    };
+    let b = run(&cfg, &perf, &gt, &trace, &gw, 5);
+    let lc = b.lifecycle;
+    assert_eq!(lc.submitted(), trace.len(), "leg B ledger: {lc:?}");
+    assert!(lc.expired > 0, "the 0.75s blanket must expire long decodes: {lc:?}");
+    assert!(lc.completed > 0, "far-future deadlines must still finish: {lc:?}");
+    for o in &b.outcomes {
+        assert_eq!(o.id % 2, 1, "request {} expired against a 1e9s deadline", o.id);
+    }
+    // (b) expired requests stop early and consume no decode iterations
+    // past the deadline: the abort is the stream's last event, and the
+    // request never reaches its full output length
+    for o in b.outcomes.iter().filter(|o| o.outcome == RequestOutcome::Expired) {
+        let r = trace.iter().find(|r| r.id == o.id).unwrap();
+        let deadline = r.arrival + 0.75;
+        assert!(
+            o.tokens_out < r.output_len,
+            "expired request {} decoded to completion anyway",
+            o.id
+        );
+        let (_, chunks) = b.streams.iter().find(|(id, _)| *id == o.id).unwrap();
+        if let Some(last) = chunks.last() {
+            assert!(last.done);
+            assert!(
+                (last.t - o.t).abs() < 1e-9,
+                "stream of {} outlived its expiry: {} vs {}",
+                o.id,
+                last.t,
+                o.t
+            );
+        }
+        // tokens may land up to one in-flight iteration past the
+        // deadline; beyond the abort instant there is nothing
+        for c in chunks.iter().filter(|c| !c.done) {
+            assert!(
+                c.t <= o.t,
+                "request {} decoded at {} after its expiry at {} (deadline {})",
+                o.id,
+                c.t,
+                o.t,
+                deadline
+            );
+        }
+    }
+    for (i, o) in b.per_replica.iter().enumerate() {
+        assert_eq!(o.final_kv_blocks, 0, "replica {i} leaked KV blocks");
+    }
+    println!(
+        "leg B (deadlines): {} submitted = {} completed + {} expired; \
+         expired streams close at their abort instant",
+        lc.submitted(),
+        lc.completed,
+        lc.expired
+    );
+
+    // ---- leg C: replica crash mid-trace ----
+    let trace = generate_sessions(&SessionProfile::conversational(), 2.0, 14, 17);
+    let crash_at = trace[trace.len() / 2].arrival + 1e-3;
+    let gw = GatewayConfig {
+        replicas: 3,
+        router: RouterPolicy::PrefixAffinity,
+        failures: vec![FailureSpec { replica: 0, at: crash_at }],
+        ..Default::default()
+    };
+    let c = run(&cfg, &perf, &gt, &trace, &gw, 5);
+    let c2 = run(&cfg, &perf, &gt, &trace, &gw, 5);
+    assert_eq!(c.records, c2.records, "leg C must be deterministic");
+    assert_eq!(c.outcomes, c2.outcomes, "leg C must be deterministic");
+    let lc = c.lifecycle;
+    // (c) the ledger is total across the crash
+    assert_eq!(
+        lc.completed + lc.cancelled + lc.expired + lc.lost,
+        trace.len(),
+        "leg C ledger must be total: {lc:?}"
+    );
+    assert_eq!(c.scale_events.len(), 1);
+    assert!((c.scale_events[0].t - crash_at).abs() < 1e-12);
+    // sessions re-home: traffic arriving after the crash routes to
+    // survivors only
+    for &(id, k) in &c.assignments {
+        let r = trace.iter().find(|r| r.id == id).unwrap();
+        if r.arrival > crash_at {
+            assert_ne!(k, 0, "request {id} routed to the crashed replica");
+        }
+    }
+    // the dead replica's KV is fully torn down
+    assert_eq!(c.per_replica[0].final_kv_blocks, 0, "crashed replica leaked KV");
+    println!(
+        "leg C (crash @ {crash_at:.2}s): {} completed + {} lost of {} submitted; \
+         sessions re-homed off replica 0, no KV leaks",
+        lc.completed,
+        lc.lost,
+        trace.len()
+    );
+
+    println!("\nlive gateway lifecycle verified: cancellation, deadlines, crash re-homing.");
+}

@@ -13,11 +13,12 @@
 
 use bullet::config::SloSpec;
 use bullet::coordinator::Tokenizer;
-use bullet::engine::live_engine::{serve_live, LiveRequest};
+use bullet::engine::live_engine::serve_live;
 use bullet::metrics::summarize;
 use bullet::runtime::{ModelMeta, ModelRuntime};
 use bullet::util::rng::Rng;
 use bullet::util::stats;
+use bullet::workload::Request;
 
 fn main() {
     let dir = ModelMeta::default_dir();
@@ -51,17 +52,21 @@ fn main() {
     let rate = 4.0; // req/s
     let mut rng = Rng::new(2026);
     let mut t = 0.0;
-    let trace: Vec<LiveRequest> = (0..n as u64)
+    let mut prompts: Vec<Vec<i32>> = Vec::with_capacity(n);
+    let trace: Vec<Request> = (0..n as u64)
         .map(|i| {
             t += rng.exponential(rate);
             let text = corpus[i as usize % corpus.len()];
             let mut prompt = tok.encode(text);
             prompt.truncate(rt.max_prompt());
-            LiveRequest {
+            let input_len = prompt.len();
+            prompts.push(prompt);
+            Request {
                 id: i,
                 arrival: t,
-                prompt,
+                input_len,
                 output_len: 8 + (i as usize % 9),
+                ..Default::default()
             }
         })
         .collect();
@@ -69,7 +74,7 @@ fn main() {
     println!("\nserving {n} requests (~{rate} req/s Poisson, {total_out} output tokens) ...");
 
     let wall0 = std::time::Instant::now();
-    let (records, stats_live) = serve_live(rt, trace).unwrap();
+    let (records, stats_live) = serve_live(rt, trace, prompts).unwrap();
     let wall = wall0.elapsed().as_secs_f64();
 
     let slo = SloSpec::sharegpt();

@@ -358,6 +358,11 @@ impl ServingPolicy for ChunkedPolicy {
     fn has_private_work(&self) -> bool {
         self.batch.is_some()
     }
+
+    // the in-flight batch's assignments index into `core.waiting`
+    fn waiting_locked(&self) -> bool {
+        self.batch.is_some()
+    }
 }
 
 /// Serve `trace` with a chunked-prefill engine and return the full
@@ -499,6 +504,7 @@ mod tests {
             output_len: 2,
             block_hashes: hashes.clone(),
             session_id: Some(1),
+            ..Default::default()
         };
         let trace = vec![req(0, 0.0), req(1, 0.2)];
         let out = serve_chunked_output(&cfg, &ChunkedConfig::sglang_1024(), &gt, &trace, 5);
@@ -530,6 +536,7 @@ mod tests {
             output_len: 2,
             block_hashes: hashes.clone(),
             session_id: Some(1),
+            ..Default::default()
         };
         let mut core = EngineCore::new(cfg, gt, vec![warm], &CoreOptions::default());
         let mut policy = ChunkedPolicy::new(ChunkedConfig::sglang_1024());
@@ -542,6 +549,7 @@ mod tests {
             output_len: 2,
             block_hashes: hashes,
             session_id: Some(1),
+            ..Default::default()
         });
         core.sim.run_for(2.0);
         core.admit_arrivals();
@@ -578,6 +586,7 @@ mod tests {
             output_len: 2,
             block_hashes: hashes.clone(),
             session_id: Some(1),
+            ..Default::default()
         };
         // arrival 30 s: far past the first prompt's completion, so the
         // whole prefix is published and adopted at admission

@@ -95,6 +95,11 @@ impl ServingPolicy for NanoflowPolicy {
     fn has_private_work(&self) -> bool {
         self.batch.is_some()
     }
+
+    // the in-flight batch's assignments index into `core.waiting`
+    fn waiting_locked(&self) -> bool {
+        self.batch.is_some()
+    }
 }
 
 /// Serve `trace` with the NanoFlow engine and return the full engine

@@ -54,9 +54,10 @@ use crate::baselines::System;
 use crate::config::{derive_kv_capacity, DriftSpec, GpuSpec, ServingConfig};
 use crate::engine::core::{CoreOptions, EngineCore, EngineOutput, ServingPolicy};
 use crate::gpu::roofline::GroundTruth;
+use crate::gateway::stream::StreamChunk;
 use crate::kvcache::prefix::PrefixStats;
-use crate::metrics::timeline::ScaleEvent;
-use crate::metrics::{merge_records, RequestRecord};
+use crate::metrics::timeline::{ScaleAction, ScaleEvent};
+use crate::metrics::{merge_outcomes, merge_records, LifecycleStats, OutcomeRecord, RequestRecord};
 use crate::perf::{CalibrationStats, PerfModel, PerfPredictor};
 use crate::sched::policy::service_capacity_tokens_per_s;
 use crate::workload::Request;
@@ -74,9 +75,21 @@ pub struct ReplicaSpec {
     pub drift: Option<DriftSpec>,
 }
 
+/// A scheduled replica crash: replica `replica` is killed the first time
+/// the global dispatch clock reaches `at` — at the next arrival horizon,
+/// or after the last arrival if `at` lies beyond the trace.  The crash
+/// rides the retire machinery (no more traffic, prefix-affinity sessions
+/// re-home) but skips the drain: in-flight work is orphaned, re-queued
+/// where its prefill never started and counted `Lost` otherwise.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailureSpec {
+    pub replica: usize,
+    pub at: f64,
+}
+
 /// Cluster shape: replica count + routing policy (+ optional
 /// heterogeneous per-replica hardware, + the optional autoscaler,
-/// + the simulation thread budget).
+/// + the simulation thread budget, + optional failure injection).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterConfig {
     pub replicas: usize,
@@ -99,6 +112,12 @@ pub struct ClusterConfig {
     /// forces the serial backend.  Any value produces bit-identical
     /// output — this knob trades wall-clock only.
     pub sim_threads: usize,
+    /// Scheduled replica crashes (empty by default: the failure-free
+    /// dispatch path runs bit-identically to pre-injection behavior).
+    /// Processed in `(at, replica)` order; a failure naming an already
+    /// retired or crashed replica is a no-op, and killing the last live
+    /// replica is a configuration error (panics).
+    pub failures: Vec<FailureSpec>,
 }
 
 impl Default for ClusterConfig {
@@ -109,6 +128,7 @@ impl Default for ClusterConfig {
             replica_specs: Vec::new(),
             autoscale: AutoscaleConfig::off(),
             sim_threads: 0,
+            failures: Vec::new(),
         }
     }
 }
@@ -142,7 +162,9 @@ pub struct Replica {
     /// pure clock jump until the next push, so backends skip it (see
     /// module docs).  Maintained here — set by `advance_to`, cleared by
     /// `push` — so the serial and parallel backends cannot disagree.
-    drained: bool,
+    /// Crate-visible: the gateway's event loop skips drained replicas
+    /// the same way the backends do.
+    pub(crate) drained: bool,
 }
 
 impl Replica {
@@ -237,20 +259,44 @@ impl Replica {
         }
     }
 
-    fn advance_to(&mut self, t: f64) {
+    pub(crate) fn advance_to(&mut self, t: f64) {
         self.core.run_until(self.policy.as_mut(), t);
         self.drained = self.core.drained() && !self.policy.has_private_work();
     }
 
-    fn push(&mut self, r: Request) {
+    pub(crate) fn push(&mut self, r: Request) {
         self.drained = false;
         self.core.push_request(r);
     }
 
-    fn finish(mut self) -> EngineOutput {
+    /// Attach a token-streaming sink for a request routed here (gateway
+    /// admission, and sink re-attachment when an orphan re-homes).
+    pub(crate) fn attach_stream(&mut self, id: u64, tx: mpsc::Sender<StreamChunk>) {
+        self.core.attach_stream(id, tx);
+    }
+
+    /// Kill this replica at `t` (see [`EngineCore::crash`]): returns the
+    /// orphaned requests that can re-queue elsewhere.  The replica is
+    /// drained afterwards — `finish` returns immediately and `advance_to`
+    /// reduces to nothing.
+    pub(crate) fn crash(&mut self, t: f64) -> Vec<Request> {
+        let orphans = self.core.crash(t);
+        self.drained = true;
+        orphans
+    }
+
+    pub(crate) fn finish(mut self) -> EngineOutput {
         self.core.run(self.policy.as_mut());
         self.core.into_output()
     }
+}
+
+/// Replica `i`'s derived seed: distinct per-replica streams decorrelate
+/// simulator noise (and draw distinct device-lottery factors under
+/// drift).  Shared by the cluster fleet and the gateway so a request
+/// served through either front door lands on a bit-identical replica.
+pub(crate) fn replica_seed(seed: u64, i: usize) -> u64 {
+    seed.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(i as u64 + 1))
 }
 
 /// A replica's dispatcher-visible state, frozen at a horizon barrier.
@@ -310,7 +356,7 @@ impl ReplicaSignals {
     /// ([`EngineCore::outstanding_kv_tokens`] / `queued_prefill_tokens`),
     /// so same-instant arrivals observe prior routing decisions without
     /// another barrier.
-    fn note_push(&mut self, r: &Request) {
+    pub(crate) fn note_push(&mut self, r: &Request) {
         self.outstanding_kv_tokens += r.input_len + r.output_len;
         self.backlog_tokens += r.input_len;
     }
@@ -321,6 +367,10 @@ impl ReplicaSignals {
 pub struct ClusterOutput {
     /// All records, id-ordered (directly comparable with single-GPU runs).
     pub records: Vec<RequestRecord>,
+    /// Terminal events for requests that did not complete (cancelled,
+    /// expired, lost to a crash), id-ordered.  Empty for lifecycle-free
+    /// traces without failure injection.
+    pub outcomes: Vec<OutcomeRecord>,
     /// Per-replica engine outputs (replica index = vec index; with
     /// autoscaling, every replica ever spawned — retired ones included).
     pub per_replica: Vec<EngineOutput>,
@@ -341,6 +391,11 @@ pub struct ClusterOutput {
 }
 
 impl ClusterOutput {
+    /// Per-outcome counters; `submitted()` equals the trace length.
+    pub fn lifecycle_stats(&self) -> LifecycleStats {
+        LifecycleStats::from_parts(&self.records, &self.outcomes)
+    }
+
     /// Requests routed to each replica.
     pub fn per_replica_counts(&self) -> Vec<usize> {
         let n = self.per_replica.len();
@@ -396,11 +451,7 @@ impl FleetCtx<'_> {
     /// per-replica hardware spec.
     fn build_replica(&self, i: usize) -> Replica {
         let (system, cfg, perf, gt) = (self.system, self.cfg, self.perf, self.gt);
-        // distinct per-replica seeds decorrelate simulator noise
-        // (and draw distinct device-lottery factors under drift)
-        let rseed = self
-            .seed
-            .wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(i as u64 + 1));
+        let rseed = replica_seed(self.seed, i);
         // heterogeneous fleet: apply this replica's hardware spec
         match self.cluster.replica_specs.get(i) {
             None => Replica::new(i, system, cfg, perf, gt, rseed, self.max_virtual_time),
@@ -452,6 +503,10 @@ trait FleetBackend {
     fn spawn(&mut self) -> usize;
     /// Refresh replica `id`'s offline grid and its snapshot.
     fn reprofile(&mut self, id: usize);
+    /// Kill replica `id` at `t` (failure injection); returns the
+    /// orphaned requests that can re-queue elsewhere and refreshes the
+    /// snapshot (the dead replica reads as drained).
+    fn crash(&mut self, id: usize, t: f64) -> Vec<Request>;
     /// Drain every replica to completion; outputs ordered by id.
     fn finish(self) -> Vec<EngineOutput>;
 }
@@ -507,6 +562,12 @@ impl FleetBackend for SerialFleet<'_> {
         self.signals[id] = self.replicas[id].signals();
     }
 
+    fn crash(&mut self, id: usize, t: f64) -> Vec<Request> {
+        let orphans = self.replicas[id].crash(t);
+        self.signals[id] = self.replicas[id].signals();
+        orphans
+    }
+
     fn finish(self) -> Vec<EngineOutput> {
         self.replicas.into_iter().map(Replica::finish).collect()
     }
@@ -523,12 +584,15 @@ enum WorkerCmd {
     Adopt(Box<Replica>),
     /// Reprofile one replica; reply its refreshed `Signals`.
     Reprofile(usize),
+    /// Kill one replica at the instant; reply `Orphans`.
+    Crash(usize, f64),
     /// Drain all owned replicas; reply `Outputs`, then exit.
     Finish,
 }
 
 enum WorkerReply {
     Signals(Vec<ReplicaSignals>),
+    Orphans(Vec<Request>, ReplicaSignals),
     Outputs(Vec<(usize, EngineOutput)>),
 }
 
@@ -567,6 +631,14 @@ fn fleet_worker(
                 owned[i].reprofile();
                 let sig = vec![owned[i].signals()];
                 if tx.send(WorkerReply::Signals(sig)).is_err() {
+                    return;
+                }
+            }
+            WorkerCmd::Crash(id, t) => {
+                let i = find(&owned, id);
+                let orphans = owned[i].crash(t);
+                let sig = owned[i].signals();
+                if tx.send(WorkerReply::Orphans(orphans, sig)).is_err() {
                     return;
                 }
             }
@@ -667,7 +739,7 @@ impl FleetBackend for ParallelFleet<'_> {
             if live[w] {
                 match self.recv(w) {
                     WorkerReply::Signals(sigs) => self.merge_signals(sigs),
-                    WorkerReply::Outputs(_) => unreachable!("outputs before finish"),
+                    _ => unreachable!("non-signal reply at a barrier"),
                 }
             }
         }
@@ -697,7 +769,19 @@ impl FleetBackend for ParallelFleet<'_> {
         self.send(w, WorkerCmd::Reprofile(id));
         match self.recv(w) {
             WorkerReply::Signals(sigs) => self.merge_signals(sigs),
-            WorkerReply::Outputs(_) => unreachable!("outputs before finish"),
+            _ => unreachable!("non-signal reply to reprofile"),
+        }
+    }
+
+    fn crash(&mut self, id: usize, t: f64) -> Vec<Request> {
+        let w = id % self.workers;
+        self.send(w, WorkerCmd::Crash(id, t));
+        match self.recv(w) {
+            WorkerReply::Orphans(orphans, sig) => {
+                self.merge_signals(vec![sig]);
+                orphans
+            }
+            _ => unreachable!("non-orphan reply to crash"),
         }
     }
 
@@ -713,10 +797,61 @@ impl FleetBackend for ParallelFleet<'_> {
                         out[id] = Some(o);
                     }
                 }
-                WorkerReply::Signals(_) => unreachable!("signals after finish"),
+                _ => unreachable!("non-output reply after finish"),
             }
         }
         out.into_iter().map(|o| o.expect("missing replica output")).collect()
+    }
+}
+
+/// Process every injected failure due at or before `now`: crash the
+/// replica through the backend, route it out of eligibility exactly like
+/// a retire (prefix-affinity sessions re-home via `unpin_replica`), and
+/// re-dispatch the orphans the crash returned at arrival time `now`.
+/// Orphan re-routes append to `assignments` (a re-homed id appears
+/// twice: original route + re-route).
+#[allow(clippy::too_many_arguments)]
+fn process_due_failures<F: FleetBackend>(
+    fleet: &mut F,
+    dispatcher: &mut Dispatcher,
+    failures: &[FailureSpec],
+    next_failure: &mut usize,
+    now: f64,
+    cfg: &ServingConfig,
+    perf: &PerfModel,
+    retired_at: &mut [Option<f64>],
+    eligible: &mut Vec<usize>,
+    scale_events: &mut Vec<ScaleEvent>,
+    assignments: &mut Vec<(u64, usize)>,
+) {
+    while *next_failure < failures.len() && failures[*next_failure].at <= now {
+        let f = failures[*next_failure];
+        *next_failure += 1;
+        let id = f.replica;
+        assert!(id < retired_at.len(), "failure injection names unknown replica {id}");
+        if retired_at[id].is_some() {
+            continue; // already retired or crashed — nothing to kill
+        }
+        let orphans = fleet.crash(id, now);
+        retired_at[id] = Some(now);
+        eligible.retain(|&i| i != id);
+        dispatcher.unpin_replica(id);
+        assert!(
+            !eligible.is_empty(),
+            "failure injection killed the last live replica at t={now}"
+        );
+        let fleet_after = retired_at.iter().filter(|t| t.is_none()).count();
+        scale_events.push(ScaleEvent {
+            t: now,
+            action: ScaleAction::Crash,
+            replica: id,
+            fleet_after,
+        });
+        for o in orphans {
+            let k = dispatcher.pick_among(fleet.signals(), eligible, &o, perf, &cfg.slo);
+            assignments.push((o.id, k));
+            fleet.push(k, o);
+        }
     }
 }
 
@@ -741,12 +876,31 @@ fn run_dispatch<F: FleetBackend>(
     let mut eligible: Vec<usize> = (0..init).collect();
     let mut scale_events: Vec<ScaleEvent> = Vec::new();
     let mut assignments = Vec::with_capacity(trace.len());
+    // injected failures fire in (at, replica) order as the dispatch
+    // clock passes them
+    let mut failures = cluster.failures.clone();
+    failures.sort_by(|a, b| a.at.total_cmp(&b.at).then(a.replica.cmp(&b.replica)));
+    let mut next_failure = 0usize;
 
     for r in trace {
         // barrier: every replica reaches the dispatch horizon before
         // the router or autoscaler observes fleet state (retired
         // replicas keep draining through the same barriers)
         fleet.advance_to(r.arrival);
+
+        process_due_failures(
+            &mut fleet,
+            &mut dispatcher,
+            &failures,
+            &mut next_failure,
+            r.arrival,
+            cfg,
+            perf,
+            &mut retired_at,
+            &mut eligible,
+            &mut scale_events,
+            &mut assignments,
+        );
 
         if let Some(scaler) = scaler.as_mut() {
             scaler.note_arrival(r.arrival, r.input_len, r.output_len);
@@ -801,6 +955,26 @@ fn run_dispatch<F: FleetBackend>(
         fleet.push(k, r.clone());
     }
 
+    // failures scheduled past the last arrival still fire: advance the
+    // fleet to each remaining instant and process it there
+    while next_failure < failures.len() {
+        let t = failures[next_failure].at;
+        fleet.advance_to(t);
+        process_due_failures(
+            &mut fleet,
+            &mut dispatcher,
+            &failures,
+            &mut next_failure,
+            t,
+            cfg,
+            perf,
+            &mut retired_at,
+            &mut eligible,
+            &mut scale_events,
+            &mut assignments,
+        );
+    }
+
     let mut per_replica = fleet.finish();
     // lifecycle events ride the targeted replica's own output/timeline
     for ev in &scale_events {
@@ -808,11 +982,12 @@ fn run_dispatch<F: FleetBackend>(
         per_replica[ev.replica].timeline.push_event(*ev);
     }
     let records = merge_records(per_replica.iter().map(|o| o.records.as_slice()));
+    let outcomes = merge_outcomes(per_replica.iter().map(|o| o.outcomes.as_slice()));
     let virtual_duration = per_replica
         .iter()
         .map(|o| o.virtual_duration)
         .fold(0.0, f64::max);
-    let replica_steps: f64 = if autoscaled {
+    let replica_steps: f64 = if autoscaled || !cluster.failures.is_empty() {
         // seconds each replica was held: spawn → retirement (drain
         // included) for retired replicas, spawn → end-of-run otherwise
         per_replica
@@ -832,6 +1007,7 @@ fn run_dispatch<F: FleetBackend>(
     };
     ClusterOutput {
         records,
+        outcomes,
         per_replica,
         assignments,
         virtual_duration,
@@ -1121,5 +1297,73 @@ mod tests {
         assert_eq!(out.records.len(), 10);
         let s = summarize(&out.records, &cfg.slo, Some(out.virtual_duration));
         assert!(s.throughput_tok_s > 0.0);
+    }
+
+    #[test]
+    fn replica_crash_rehomes_traffic_and_accounts_every_request() {
+        let (cfg, perf, gt) = setup();
+        let trace = generate_n_requests(&Dataset::sharegpt(), 8.0, 24, 31);
+        let mid = trace[trace.len() / 2].arrival;
+        let ccfg = ClusterConfig {
+            replicas: 3,
+            router: RouterPolicy::LeastKv,
+            failures: vec![FailureSpec { replica: 0, at: mid }],
+            ..Default::default()
+        };
+        let out = serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 9, &ccfg);
+        // the crash is a timeline event on the dead replica
+        assert!(out
+            .scale_events
+            .iter()
+            .any(|e| e.action == ScaleAction::Crash && e.replica == 0));
+        // no traffic routes to the corpse after the crash instant: the
+        // crash fires before routing at its horizon, so every assignment
+        // to replica 0 predates it
+        for &(id, k) in &out.assignments {
+            if k == 0 {
+                let r = trace.iter().find(|r| r.id == id).unwrap();
+                assert!(r.arrival <= mid, "request {id} routed to dead replica");
+            }
+        }
+        // every submitted request ends exactly once: completed, or a
+        // terminal outcome (lost in the crash)
+        let stats = out.lifecycle_stats();
+        assert_eq!(stats.submitted(), trace.len());
+        assert_eq!(stats.cancelled, 0);
+        assert_eq!(stats.expired, 0);
+        // the crashed replica stops accruing replica-steps at the crash
+        assert!(
+            out.replica_steps < 3.0 * out.virtual_duration,
+            "steps {} vs 3x makespan {}",
+            out.replica_steps,
+            3.0 * out.virtual_duration
+        );
+    }
+
+    #[test]
+    fn crash_injection_is_thread_count_invariant() {
+        let (cfg, perf, gt) = setup();
+        let trace = generate_n_requests(&Dataset::sharegpt(), 10.0, 20, 37);
+        let mid = trace[trace.len() / 3].arrival;
+        let run = |threads| {
+            let ccfg = ClusterConfig {
+                replicas: 3,
+                router: RouterPolicy::PrefixAffinity,
+                sim_threads: threads,
+                failures: vec![FailureSpec { replica: 1, at: mid }],
+                ..Default::default()
+            };
+            serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 12, &ccfg)
+        };
+        let serial = run(1);
+        let parallel = run(4);
+        assert_eq!(serial.records, parallel.records);
+        assert_eq!(serial.outcomes, parallel.outcomes);
+        assert_eq!(serial.assignments, parallel.assignments);
+        assert_eq!(
+            serial.virtual_duration.to_bits(),
+            parallel.virtual_duration.to_bits()
+        );
+        assert_eq!(serial.lifecycle_stats().submitted(), trace.len());
     }
 }

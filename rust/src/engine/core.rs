@@ -48,6 +48,7 @@
 //! replicas entirely.
 
 use crate::config::ServingConfig;
+use crate::gateway::stream::StreamChunk;
 use crate::gpu::kernel::KernelDesc;
 use crate::gpu::roofline::GroundTruth;
 use crate::gpu::simulator::Simulator;
@@ -55,14 +56,16 @@ use crate::gpu::stream::StreamId;
 use crate::kvcache::prefix::{PrefixIndex, PrefixStats};
 use crate::kvcache::{KvPool, BLOCK_TOKENS};
 use crate::metrics::timeline::{ScaleEvent, Timeline, TimelineSample};
-use crate::metrics::RequestRecord;
+use crate::metrics::{OutcomeRecord, RequestOutcome, RequestRecord};
 use crate::perf::{CalibrationStats, PerfPredictor};
 use crate::resource::ResourceManager;
 use crate::sched::{
-    ActiveDecode, DecodeReqState, PrefillBatch, PrefillProgress, PrefillReq, SystemState,
+    deadline_should_drop, ActiveDecode, DecodeReqState, PrefillBatch, PrefillProgress, PrefillReq,
+    SystemState,
 };
 use crate::workload::Request;
 use std::collections::BTreeMap;
+use std::sync::mpsc;
 
 /// Per-request prefix bookkeeping between admission and prefill finish.
 #[derive(Debug)]
@@ -71,6 +74,15 @@ struct PrefixMeta {
     chain: Vec<u64>,
     /// Leading blocks already published at chunk boundaries.
     published: usize,
+}
+
+/// Per-request lifecycle annotations, tracked from admission until the
+/// request exits (by any path).  Only requests that carry at least one
+/// annotation get an entry, so lifecycle-free traces pay nothing.
+#[derive(Debug, Clone, Copy)]
+struct LifecycleMeta {
+    cancel_at: Option<f64>,
+    deadline: Option<f64>,
 }
 
 /// The two execution lanes of the serving core.
@@ -84,6 +96,10 @@ pub enum Lane {
 #[derive(Debug, Clone)]
 pub struct EngineOutput {
     pub records: Vec<RequestRecord>,
+    /// Terminal events for requests that did NOT complete (cancelled,
+    /// expired, lost to a crash).  Always empty for lifecycle-free
+    /// traces; `records` and `outcomes` together partition the trace.
+    pub outcomes: Vec<OutcomeRecord>,
     pub timeline: Timeline,
     pub reconfigs: u64,
     pub decode_pauses: u64,
@@ -92,6 +108,10 @@ pub struct EngineOutput {
     pub total_bytes: f64,
     pub virtual_duration: f64,
     pub peak_kv_blocks: usize,
+    /// Blocks still allocated at teardown.  Zero for any run that
+    /// completes (every exit path — finish, cancel, expiry, crash —
+    /// releases its KV); the leak detector lifecycle tests assert on.
+    pub final_kv_blocks: usize,
     /// Prefix-cache counters (all zero with `cfg.prefix_cache` off).
     pub prefix: PrefixStats,
     /// Online-calibration counters (all zero / identity with
@@ -172,6 +192,15 @@ pub trait ServingPolicy: Send {
         false
     }
 
+    /// Whether the policy currently holds INDICES into `core.waiting`
+    /// (e.g. a hybrid chunked batch in flight).  While locked, the core
+    /// defers lifecycle removals from the waiting queue — cancelling an
+    /// entry would shift the indices under the batch.  Deferred requests
+    /// are caught on a later turn (or after prefill, in `pending_join`).
+    fn waiting_locked(&self) -> bool {
+        false
+    }
+
     /// Prefill tokens held in private state (active batches) — used by
     /// cluster routers to estimate backlog.  Queue backlog is counted by
     /// the core itself.
@@ -216,8 +245,17 @@ pub struct EngineCore {
     /// migration: the KV stays put, only the handle moves).
     pub pending_join: Vec<ActiveDecode>,
     pub records: Vec<RequestRecord>,
+    /// Terminal events for non-completing requests (see
+    /// [`EngineOutput::outcomes`]).
+    pub outcomes: Vec<OutcomeRecord>,
     pub timeline: Timeline,
     pub stats: CoreStats,
+    /// Lifecycle annotations of live annotated requests, keyed by id.
+    lifecycle: BTreeMap<u64, LifecycleMeta>,
+    /// Streaming sinks attached by the gateway, keyed by request id.  A
+    /// chunk is sent per produced token and a terminal chunk on every
+    /// exit path; an empty map (no gateway) costs one branch per token.
+    sinks: BTreeMap<u64, mpsc::Sender<StreamChunk>>,
     trace: Vec<Request>,
     next_arrival: usize,
     inflight: [usize; 2],
@@ -255,8 +293,11 @@ impl EngineCore {
             decode: Vec::new(),
             pending_join: Vec::new(),
             records: Vec::new(),
+            outcomes: Vec::new(),
             timeline: Timeline::new(),
             stats: CoreStats::default(),
+            lifecycle: BTreeMap::new(),
+            sinks: BTreeMap::new(),
             trace,
             next_arrival: 0,
             inflight: [0, 0],
@@ -283,9 +324,11 @@ impl EngineCore {
         self.record_timeline
     }
 
-    /// Every record emitted?
+    /// Every request accounted for?  Completions emit records;
+    /// cancellations, expiries, and crash losses emit outcomes — the two
+    /// streams together must cover the trace.
     pub fn finished(&self) -> bool {
-        self.records.len() >= self.trace.len()
+        self.records.len() + self.outcomes.len() >= self.trace.len()
     }
 
     /// No queued, in-flight, or unadmitted work anywhere in the core.
@@ -362,6 +405,12 @@ impl EngineCore {
         while self.next_arrival < self.trace.len() && self.trace[self.next_arrival].arrival <= now {
             let (id, arrival, input_len, output_len) = {
                 let r = &self.trace[self.next_arrival];
+                if r.cancel_at.is_some() || r.deadline.is_some() {
+                    self.lifecycle.insert(
+                        r.id,
+                        LifecycleMeta { cancel_at: r.cancel_at, deadline: r.deadline },
+                    );
+                }
                 (r.id, r.arrival, r.input_len, r.output_len)
             };
             let mut cached = 0usize;
@@ -513,7 +562,10 @@ impl EngineCore {
                 prefill_start,
             });
             self.kv.release(req.id).expect("kv release at prefill finish");
+            self.lifecycle.remove(&req.id);
+            self.emit_chunk(req.id, 1, true, now);
         } else {
+            self.emit_chunk(req.id, 1, false, now);
             self.pending_join.push(ActiveDecode {
                 st: DecodeReqState {
                     id: req.id,
@@ -545,12 +597,15 @@ impl EngineCore {
         let token_time = self.sim.now();
         let mut i = 0;
         while i < self.decode.len() {
-            let d = &mut self.decode[i];
-            d.st.tokens_out += 1;
-            d.st.ctx_len += 1;
-            d.st.decode_elapsed += token_time - d.last_token_time;
-            d.last_token_time = token_time;
-            if d.st.finished() {
+            let (id, tokens_out, done) = {
+                let d = &mut self.decode[i];
+                d.st.tokens_out += 1;
+                d.st.ctx_len += 1;
+                d.st.decode_elapsed += token_time - d.last_token_time;
+                d.last_token_time = token_time;
+                (d.st.id, d.st.tokens_out, d.st.finished())
+            };
+            if done {
                 let d = self.decode.remove(i);
                 self.records.push(RequestRecord {
                     id: d.st.id,
@@ -562,10 +617,184 @@ impl EngineCore {
                     prefill_start: d.prefill_start,
                 });
                 self.kv.release(d.st.id).expect("kv release at finish");
+                self.lifecycle.remove(&id);
             } else {
                 i += 1;
             }
+            self.emit_chunk(id, tokens_out, done, token_time);
         }
+    }
+
+    /// Attach a streaming sink for a request (gateway admission).  Every
+    /// produced token is mirrored as a [`StreamChunk`]; a terminal chunk
+    /// closes the stream on any exit path.
+    pub fn attach_stream(&mut self, id: u64, tx: mpsc::Sender<StreamChunk>) {
+        self.sinks.insert(id, tx);
+    }
+
+    /// Mirror a token (or terminal event) to the request's sink, if any.
+    /// Send failures are ignored: a dropped receiver is exactly a client
+    /// that stopped listening, which the cancel path handles separately.
+    fn emit_chunk(&mut self, id: u64, tokens_out: usize, done: bool, t: f64) {
+        if self.sinks.is_empty() {
+            return;
+        }
+        if done {
+            if let Some(tx) = self.sinks.remove(&id) {
+                let _ = tx.send(StreamChunk { id, t, tokens_out, done: true });
+            }
+        } else if let Some(tx) = self.sinks.get(&id) {
+            let _ = tx.send(StreamChunk { id, t, tokens_out, done: false });
+        }
+    }
+
+    /// Terminate a request on a non-completion path: record the outcome,
+    /// drop its lifecycle entry, and close its stream.
+    fn abort(&mut self, id: u64, outcome: RequestOutcome, t: f64, tokens_out: usize) {
+        self.lifecycle.remove(&id);
+        self.outcomes.push(OutcomeRecord { id, outcome, t, tokens_out });
+        self.emit_chunk(id, tokens_out, true, t);
+    }
+
+    /// Enforce due lifecycle events (client disconnects, deadlines) at
+    /// the current virtual time.  Requests are removed from whichever
+    /// structure holds them and their KV is released — the cancel exit
+    /// path through the refcount/CoW invariants.  Two classes defer to a
+    /// later turn: waiting-queue entries while the policy holds indices
+    /// into the queue (`waiting_locked`) or while their prefill is
+    /// mid-flight (KV reserved by in-flight kernels), and requests held
+    /// in policy-private batches (invisible here; they resurface in
+    /// `pending_join` when the batch completes).
+    pub fn apply_lifecycle(&mut self, waiting_locked: bool) {
+        if self.lifecycle.is_empty() {
+            return;
+        }
+        let now = self.sim.now();
+        let due: Vec<(u64, RequestOutcome)> = self
+            .lifecycle
+            .iter()
+            .filter_map(|(&id, m)| {
+                if matches!(m.cancel_at, Some(t) if t <= now) {
+                    Some((id, RequestOutcome::Cancelled))
+                } else if deadline_should_drop(now, m.deadline, 0.0) {
+                    Some((id, RequestOutcome::Expired))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        for (id, outcome) in due {
+            if let Some(i) = self.waiting.iter().position(|w| w.req.id == id) {
+                if waiting_locked || self.waiting[i].prefill_start.is_some() {
+                    continue; // deferred: caught on a later turn
+                }
+                self.waiting.remove(i);
+                if self.kv.contains(id) {
+                    // adopted prefix blocks — unpin them
+                    self.kv.release(id).expect("kv release at queued cancel");
+                }
+                self.prefix_meta.remove(&id);
+                self.abort(id, outcome, now, 0);
+            } else if let Some(i) = self.pending_join.iter().position(|d| d.st.id == id) {
+                let d = self.pending_join.remove(i);
+                self.kv.release(id).expect("kv release at pending cancel");
+                self.abort(id, outcome, now, d.st.tokens_out);
+            } else if let Some(i) = self.decode.iter().position(|d| d.st.id == id) {
+                let d = self.decode.remove(i);
+                self.kv.release(id).expect("kv release at decode cancel");
+                self.abort(id, outcome, now, d.st.tokens_out);
+            }
+            // else: policy-private (active prefill batch) — deferred
+        }
+    }
+
+    /// Kill this engine at `t`: the replica-crash path.  Admitted
+    /// requests whose prefill never started are returned for re-queueing
+    /// elsewhere (arrival re-stamped to `t`), as is the
+    /// injected-but-unadmitted tail; everything with prefill progress on
+    /// this GPU — mid-prefill, pending-join, decoding, or held in a
+    /// policy-private batch — is unrecoverable and counted `Lost`.  All
+    /// KV is torn down (the pool dies with the GPU) and every remaining
+    /// stream is closed.  Afterwards the engine is drained and finished.
+    pub fn crash(&mut self, t: f64) -> Vec<Request> {
+        // Re-queue: waiting entries with no prefill progress...
+        let requeue_ids: Vec<u64> = self
+            .waiting
+            .iter()
+            .filter(|w| w.prefill_start.is_none())
+            .map(|w| w.req.id)
+            .collect();
+        let mut requeued: Vec<Request> = Vec::new();
+        for &id in &requeue_ids {
+            let mut r = self
+                .trace
+                .iter()
+                .find(|r| r.id == id)
+                .expect("waiting request must be in trace")
+                .clone();
+            // admission moved the hash chain into prefix_meta; restore
+            // it so the new home can re-match the prefix cache
+            if r.block_hashes.is_empty() {
+                if let Some(meta) = self.prefix_meta.get(&id) {
+                    r.block_hashes = meta.chain.clone();
+                }
+            }
+            r.arrival = t;
+            requeued.push(r);
+        }
+        // ...plus the injected-but-unadmitted tail.
+        let mut gone_ids = requeue_ids.clone();
+        for r in &self.trace[self.next_arrival.min(self.trace.len())..] {
+            gone_ids.push(r.id);
+            let mut r = r.clone();
+            r.arrival = t;
+            requeued.push(r);
+        }
+        // Everything else admitted but unaccounted is lost with the GPU.
+        let mut lost: Vec<(u64, usize)> = Vec::new();
+        for r in &self.trace[..self.next_arrival.min(self.trace.len())] {
+            let id = r.id;
+            if requeue_ids.contains(&id)
+                || self.records.iter().any(|rec| rec.id == id)
+                || self.outcomes.iter().any(|o| o.id == id)
+            {
+                continue;
+            }
+            let tokens = self
+                .pending_join
+                .iter()
+                .chain(self.decode.iter())
+                .find(|d| d.st.id == id)
+                .map(|d| d.st.tokens_out)
+                .unwrap_or(0);
+            lost.push((id, tokens));
+        }
+        for (id, tokens) in lost {
+            self.abort(id, RequestOutcome::Lost, t, tokens);
+        }
+        // Tear down: release every live sequence (including any a policy
+        // reserved privately), drop the cache, close surviving streams.
+        for id in self.kv.seq_ids() {
+            self.kv.release(id).expect("kv release at crash");
+        }
+        if let Some(ix) = self.prefix.as_mut() {
+            ix.clear(&mut self.kv);
+        }
+        debug_assert_eq!(self.kv.used_blocks(), 0, "crash must return the pool whole");
+        self.waiting.clear();
+        self.decode.clear();
+        self.pending_join.clear();
+        self.prefix_meta.clear();
+        self.lifecycle.clear();
+        self.sinks.clear();
+        self.trace.retain(|r| !gone_ids.contains(&r.id));
+        debug_assert_eq!(
+            self.trace.len(),
+            self.records.len() + self.outcomes.len(),
+            "crash left the trace unpartitioned"
+        );
+        self.next_arrival = self.trace.len();
+        requeued
     }
 
     /// Scheduler-visible snapshot (S_k of §3.3.2).  The policy passes its
@@ -670,6 +899,10 @@ impl EngineCore {
             }
 
             self.admit_arrivals();
+            self.apply_lifecycle(policy.waiting_locked());
+            if self.finished() {
+                return;
+            }
             policy.plan(self);
 
             if self.sim.idle() {
@@ -694,8 +927,8 @@ impl EngineCore {
                         return;
                     }
                     unreachable!(
-                        "no work left but {} records missing",
-                        self.trace.len() - self.records.len()
+                        "no work left but {} requests unaccounted",
+                        self.trace.len() - self.records.len() - self.outcomes.len()
                     );
                 }
                 // Work exists but nothing launched: let the policy
@@ -748,6 +981,7 @@ impl EngineCore {
             calibration: self.stats.calib,
             scale_events: Vec::new(),
             records: self.records,
+            outcomes: self.outcomes,
             timeline: self.timeline,
             reconfigs: self.rm.reconfig_count(),
             decode_pauses: self.stats.decode_pauses,
@@ -755,6 +989,7 @@ impl EngineCore {
             total_bytes: util.bytes,
             virtual_duration: self.sim.now(),
             peak_kv_blocks: self.kv.peak_used_blocks(),
+            final_kv_blocks: self.kv.used_blocks(),
         }
     }
 }
@@ -905,6 +1140,7 @@ mod tests {
                 output_len: 1,
                 block_hashes: hashes.clone(),
                 session_id: Some(77),
+                ..Default::default()
             })
             .collect();
         let mut core = EngineCore::new(cfg, gt, trace, &CoreOptions::default());
@@ -980,6 +1216,7 @@ mod tests {
             output_len: 4,
             block_hashes: hashes,
             session_id: None,
+            ..Default::default()
         });
         core.admit_arrivals();
         assert_eq!(core.waiting[0].req.cached_len, 2 * BLOCK_TOKENS);
@@ -1006,12 +1243,173 @@ mod tests {
             output_len: 1,
             block_hashes: chain(&[1, 2, 3, 4, 5, 6, 7, 8]),
             session_id: Some(1),
+            ..Default::default()
         }];
         let mut core = core_with(trace);
         core.admit_arrivals();
         assert!(core.prefix.is_none());
         assert_eq!(core.waiting[0].req.cached_len, 0);
         assert_eq!(core.waiting[0].done, 0);
+    }
+
+    /// A policy that never launches anything — for driving lifecycle
+    /// enforcement on queued work via bounded runs.
+    struct NeverLaunch;
+
+    impl ServingPolicy for NeverLaunch {
+        fn label(&self) -> String {
+            "never-launch".into()
+        }
+
+        fn plan(&mut self, _core: &mut EngineCore) {}
+
+        fn on_drain(&mut self, _lane: Lane, _core: &mut EngineCore) {}
+    }
+
+    #[test]
+    fn queued_request_cancels_without_ever_running() {
+        let mut core = core_with(vec![Request {
+            id: 0,
+            arrival: 0.0,
+            input_len: 64,
+            output_len: 8,
+            cancel_at: Some(0.5),
+            ..Default::default()
+        }]);
+        let mut p = NeverLaunch;
+        core.run_until(&mut p, 1.0);
+        assert!(core.now() >= 1.0 - 1e-9);
+        core.run_until(&mut p, 2.0);
+        assert!(core.finished());
+        assert!(core.waiting.is_empty());
+        assert_eq!(core.records.len(), 0);
+        assert_eq!(core.outcomes.len(), 1);
+        let o = &core.outcomes[0];
+        assert_eq!(o.outcome, RequestOutcome::Cancelled);
+        assert_eq!(o.tokens_out, 0);
+        assert!(o.t >= 0.5);
+        assert_eq!(core.kv.used_blocks(), 0);
+    }
+
+    #[test]
+    fn mid_decode_cancel_releases_kv_and_counts() {
+        let mut core = core_with(vec![Request {
+            id: 0,
+            arrival: 0.0,
+            input_len: 64,
+            output_len: 10_000,
+            cancel_at: Some(0.05),
+            ..Default::default()
+        }]);
+        core.run(&mut InstantPrefill);
+        assert_eq!(core.records.len(), 0, "cancelled request must not complete");
+        assert_eq!(core.outcomes.len(), 1);
+        let o = &core.outcomes[0];
+        assert_eq!(o.outcome, RequestOutcome::Cancelled);
+        assert!(o.tokens_out >= 1, "was decoding when the client left");
+        assert!(o.t >= 0.05);
+        let out = core.into_output();
+        assert_eq!(out.final_kv_blocks, 0, "cancel must return KV to the pool");
+    }
+
+    #[test]
+    fn deadline_expires_mid_decode() {
+        let mut core = core_with(vec![Request {
+            id: 0,
+            arrival: 0.0,
+            input_len: 64,
+            output_len: 10_000,
+            deadline: Some(0.05),
+            ..Default::default()
+        }]);
+        core.run(&mut InstantPrefill);
+        assert_eq!(core.outcomes.len(), 1);
+        assert_eq!(core.outcomes[0].outcome, RequestOutcome::Expired);
+        assert!(
+            core.outcomes[0].tokens_out < 10_000,
+            "expired request must not run to completion"
+        );
+        assert_eq!(core.kv.used_blocks(), 0);
+    }
+
+    #[test]
+    fn cancel_beats_deadline_when_both_due() {
+        let mut core = core_with(vec![Request {
+            id: 0,
+            arrival: 0.0,
+            input_len: 64,
+            output_len: 10_000,
+            cancel_at: Some(0.05),
+            deadline: Some(0.05),
+            ..Default::default()
+        }]);
+        core.run(&mut InstantPrefill);
+        assert_eq!(core.outcomes.len(), 1);
+        assert_eq!(core.outcomes[0].outcome, RequestOutcome::Cancelled);
+    }
+
+    #[test]
+    fn streams_mirror_every_token_and_close() {
+        let (tx, rx) = mpsc::channel();
+        let mut core = core_with(vec![Request {
+            id: 0,
+            arrival: 0.0,
+            input_len: 64,
+            output_len: 4,
+            ..Default::default()
+        }]);
+        core.attach_stream(0, tx);
+        core.run(&mut InstantPrefill);
+        let chunks: Vec<StreamChunk> = rx.try_iter().collect();
+        assert_eq!(chunks.len(), 4, "one chunk per output token");
+        assert!(chunks.windows(2).all(|w| w[0].t <= w[1].t));
+        assert!(chunks.last().unwrap().done);
+        assert_eq!(chunks.last().unwrap().tokens_out, 4);
+        assert_eq!(chunks[0].t, core.records[0].first_token_time);
+        assert_eq!(chunks.last().unwrap().t, core.records[0].finish_time);
+    }
+
+    #[test]
+    fn crash_requeues_cold_work_and_loses_inflight() {
+        let mut core = core_with(vec![
+            Request { id: 0, arrival: 0.0, input_len: 64, output_len: 10_000, ..Default::default() },
+            Request { id: 1, arrival: 500.0, input_len: 32, output_len: 4, ..Default::default() },
+        ]);
+        let mut p = InstantPrefill;
+        core.run_until(&mut p, 0.05);
+        assert!(!core.decode.is_empty(), "id 0 must be decoding at crash time");
+        let t = core.now();
+        let requeued = core.crash(t);
+        // id 1 never reached this GPU: re-queued with arrival re-stamped
+        assert_eq!(requeued.len(), 1);
+        assert_eq!(requeued[0].id, 1);
+        assert_eq!(requeued[0].arrival, t);
+        // id 0 had decode progress here: lost with the GPU
+        assert_eq!(core.outcomes.len(), 1);
+        assert_eq!(core.outcomes[0].outcome, RequestOutcome::Lost);
+        assert!(core.outcomes[0].tokens_out >= 1);
+        assert_eq!(core.kv.used_blocks(), 0, "crash returns the pool whole");
+        assert!(core.finished());
+        assert!(core.drained());
+    }
+
+    #[test]
+    fn lifecycle_free_trace_is_untouched_by_enforcement() {
+        let trace: Vec<Request> = (0..5)
+            .map(|i| Request {
+                id: i,
+                arrival: i as f64 * 0.01,
+                input_len: 64,
+                output_len: 4,
+                ..Default::default()
+            })
+            .collect();
+        let mut core = core_with(trace);
+        core.run(&mut InstantPrefill);
+        let out = core.into_output();
+        assert_eq!(out.records.len(), 5);
+        assert!(out.outcomes.is_empty());
+        assert_eq!(out.final_kv_blocks, 0);
     }
 
     #[test]

@@ -7,29 +7,30 @@
 //! KV pool inside [`ModelRuntime`], mirroring the paper's
 //! shared-GPU-memory design.
 //!
+//! Requests are the same [`workload::Request`] the simulators consume
+//! (prompt token ids travel alongside, index-aligned), so one trace —
+//! lifecycle annotations included — drives the simulator, the gateway,
+//! and the real model: `cancel_at` (the client disconnect) and
+//! `deadline` are honored on both engine threads, releasing KV and
+//! counting the request instead of recording it.
+//!
 //! Honest scope note: the CPU PJRT client executes one computation at a
 //! time, so the runtime sits behind a mutex and the *spatial* sharing of
 //! compute is the simulator's domain (`sim_engine`).  What live mode
 //! proves end-to-end is the paper's system architecture: decentralized
 //! engines, metadata-buffer coordination, copy-free prefill→decode
 //! migration, continuous batching, and Python-free serving.
+//!
+//! [`workload::Request`]: crate::workload::Request
 
 use crate::engine::metadata::{Handoff, MetadataBuffer};
 use crate::metrics::RequestRecord;
 use crate::runtime::ModelRuntime;
 use crate::util::error::Result;
+use crate::workload::Request;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
-
-/// A request for the live server (already tokenized).
-#[derive(Debug, Clone)]
-pub struct LiveRequest {
-    pub id: u64,
-    /// Arrival offset from serve start, seconds.
-    pub arrival: f64,
-    pub prompt: Vec<i32>,
-    pub output_len: usize,
-}
 
 /// Live serving statistics beyond the per-request records.
 #[derive(Debug, Clone, Default)]
@@ -37,6 +38,10 @@ pub struct LiveStats {
     pub decode_iterations: u64,
     pub max_batch_seen: usize,
     pub handoff_latency_mean: f64,
+    /// Requests whose client disconnected (`Request::cancel_at`).
+    pub cancelled: usize,
+    /// Requests dropped at their `Request::deadline`.
+    pub expired: usize,
 }
 
 /// Mutex-guarded runtime that may cross threads.
@@ -58,14 +63,34 @@ impl SharedRuntime {
     }
 }
 
+/// True when the lifecycle says this request is over at `now`:
+/// cancellation first (the disconnect already happened), deadline next.
+/// Returns `Some(true)` for cancel, `Some(false)` for expiry.
+fn lifecycle_due(cancel_at: Option<f64>, deadline: Option<f64>, now: f64) -> Option<bool> {
+    if matches!(cancel_at, Some(t) if t <= now) {
+        return Some(true);
+    }
+    if matches!(deadline, Some(d) if d <= now) {
+        return Some(false);
+    }
+    None
+}
+
 /// Serve a trace on the live engines; blocks until completion.
+/// `prompts[i]` holds the already-tokenized prompt of `trace[i]`.
+/// Completed requests yield records; cancelled/expired ones are counted
+/// in [`LiveStats`] — every submitted request ends exactly once.
 pub fn serve_live(
     runtime: ModelRuntime,
-    trace: Vec<LiveRequest>,
+    trace: Vec<Request>,
+    prompts: Vec<Vec<i32>>,
 ) -> Result<(Vec<RequestRecord>, LiveStats)> {
+    assert_eq!(trace.len(), prompts.len(), "one prompt per request");
     let rt = Arc::new(SharedRuntime(Mutex::new(runtime)));
     let meta = Arc::new(MetadataBuffer::new());
     let records = Arc::new(Mutex::new(Vec::<RequestRecord>::new()));
+    let cancelled = Arc::new(AtomicUsize::new(0));
+    let expired = Arc::new(AtomicUsize::new(0));
     let t0 = Instant::now();
     let n_requests = trace.len();
     let max_batch = rt.lock().max_batch();
@@ -74,10 +99,12 @@ pub fn serve_live(
     let p_rt = rt.clone();
     let p_meta = meta.clone();
     let p_records = records.clone();
+    let p_cancelled = cancelled.clone();
+    let p_expired = expired.clone();
     let prefill = std::thread::Builder::new()
         .name("bullet-prefill".into())
         .spawn(move || -> Result<()> {
-            for req in trace {
+            for (req, prompt) in trace.into_iter().zip(prompts) {
                 // wait for arrival
                 loop {
                     let now = t0.elapsed().as_secs_f64();
@@ -88,20 +115,43 @@ pub fn serve_live(
                         (req.arrival - now).min(0.002),
                     ));
                 }
-                p_meta.publish_prefill(req.prompt.len(), 0, 0);
+                // lifecycle check before any GPU work: a disconnected or
+                // already-expired request never prefills
+                match lifecycle_due(req.cancel_at, req.deadline, t0.elapsed().as_secs_f64()) {
+                    Some(true) => {
+                        p_cancelled.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                    Some(false) => {
+                        p_expired.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                    None => {}
+                }
+                p_meta.publish_prefill(prompt.len(), 0, 0);
                 let prefill_start = t0.elapsed().as_secs_f64();
                 let first = {
                     let mut rt = p_rt.lock();
-                    rt.prefill(req.id, &req.prompt)?
+                    rt.prefill(req.id, &prompt)?
                 };
                 let first_token_time = t0.elapsed().as_secs_f64();
-                if req.output_len <= 1 {
+                // the disconnect/deadline may have landed mid-prefill:
+                // release the KV instead of migrating a dead request
+                if let Some(cancel) = lifecycle_due(req.cancel_at, req.deadline, first_token_time) {
+                    let mut rt = p_rt.lock();
+                    rt.release(req.id)?;
+                    if cancel {
+                        p_cancelled.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        p_expired.fetch_add(1, Ordering::Relaxed);
+                    }
+                } else if req.output_len <= 1 {
                     let mut rt = p_rt.lock();
                     rt.release(req.id)?;
                     p_records.lock().unwrap().push(RequestRecord {
                         id: req.id,
                         arrival: req.arrival,
-                        input_len: req.prompt.len(),
+                        input_len: prompt.len(),
                         output_len: req.output_len,
                         first_token_time,
                         finish_time: first_token_time,
@@ -112,12 +162,14 @@ pub fn serve_live(
                     p_meta.push_handoff(Handoff {
                         req_id: req.id,
                         seq_id: req.id,
-                        input_len: req.prompt.len(),
+                        input_len: prompt.len(),
                         output_len: req.output_len,
                         first_token: first,
                         first_token_time,
                         arrival: req.arrival,
                         prefill_start,
+                        cancel_at: req.cancel_at,
+                        deadline: req.deadline,
                     });
                 }
                 p_meta.publish_prefill(0, 0, 0);
@@ -131,6 +183,8 @@ pub fn serve_live(
     let d_rt = rt.clone();
     let d_meta = meta.clone();
     let d_records = records.clone();
+    let d_cancelled = cancelled.clone();
+    let d_expired = expired.clone();
     let decode = std::thread::Builder::new()
         .name("bullet-decode".into())
         .spawn(move || -> Result<LiveStats> {
@@ -151,6 +205,28 @@ pub fn serve_live(
                         tokens_out: 1,
                         h,
                     });
+                }
+                // lifecycle sweep at the iteration boundary: cancelled
+                // or expired slots release their KV mid-decode and leave
+                // the batch before the next iteration is launched
+                let sweep_t = t0.elapsed().as_secs_f64();
+                let mut i = 0;
+                while i < batch.len() {
+                    match lifecycle_due(batch[i].h.cancel_at, batch[i].h.deadline, sweep_t) {
+                        Some(cancel) => {
+                            let a = batch.remove(i);
+                            {
+                                let mut rt = d_rt.lock();
+                                rt.release(a.h.seq_id)?;
+                            }
+                            if cancel {
+                                d_cancelled.fetch_add(1, Ordering::Relaxed);
+                            } else {
+                                d_expired.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        None => i += 1,
+                    }
                 }
                 if batch.is_empty() {
                     if d_meta.is_shutdown() && d_meta.pending_handoffs() == 0 {
@@ -211,11 +287,17 @@ pub fn serve_live(
         .expect("spawn decode");
 
     prefill.join().expect("prefill panicked")?;
-    let stats = decode.join().expect("decode panicked")?;
+    let mut stats = decode.join().expect("decode panicked")?;
     let records = Arc::try_unwrap(records)
         .expect("records still shared")
         .into_inner()
         .unwrap();
-    assert_eq!(records.len(), n_requests, "live engine lost requests");
+    stats.cancelled = cancelled.load(Ordering::Relaxed);
+    stats.expired = expired.load(Ordering::Relaxed);
+    assert_eq!(
+        records.len() + stats.cancelled + stats.expired,
+        n_requests,
+        "live engine lost requests"
+    );
     Ok((records, stats))
 }

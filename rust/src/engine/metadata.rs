@@ -26,6 +26,10 @@ pub struct Handoff {
     pub first_token_time: f64,
     pub arrival: f64,
     pub prefill_start: f64,
+    /// Lifecycle carried across the migration: the decode engine honors
+    /// the client disconnect and the deadline at iteration boundaries.
+    pub cancel_at: Option<f64>,
+    pub deadline: Option<f64>,
 }
 
 /// The shared status board.
@@ -118,6 +122,8 @@ mod tests {
             first_token_time: 1.0,
             arrival: 0.0,
             prefill_start: 0.5,
+            cancel_at: None,
+            deadline: None,
         }
     }
 

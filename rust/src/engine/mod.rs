@@ -10,7 +10,9 @@
 //! - **live** (`live_engine`): real prefill/decode threads over the PJRT
 //!   runtime with a shared metadata buffer (`metadata`) and the shared KV
 //!   pool — proves the decentralized-engines design composes end-to-end
-//!   on real compute (examples/serve_real_model.rs).
+//!   on real compute (examples/serve_real_model.rs).  Live mode consumes
+//!   the same [`crate::workload::Request`] as the simulators (prompts
+//!   travel index-aligned), lifecycle annotations included.
 
 pub mod core;
 pub mod live_engine;
@@ -18,5 +20,5 @@ pub mod metadata;
 pub mod sim_engine;
 
 pub use self::core::{CoreOptions, CoreStats, EngineCore, EngineOutput, Lane, ServingPolicy};
-pub use live_engine::{serve_live, LiveRequest, LiveStats};
+pub use live_engine::{serve_live, LiveStats};
 pub use sim_engine::{serve_bullet, BulletPolicy, Features, SimEngineOptions};

@@ -1,0 +1,106 @@
+//! Clock abstraction behind the gateway: one lifecycle code path, two
+//! time sources.
+//!
+//! [`VirtualClock`] jumps instantly to each requested instant, so the
+//! entire gateway — admission, streaming, cancellation, deadlines,
+//! failure injection — runs bit-deterministically in CI.  [`WallClock`]
+//! sleeps until the same instants on the host monotonic clock, turning
+//! the identical event loop into a real-time front door.  Nothing above
+//! this trait knows which one is driving.
+
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Time source the gateway schedules lifecycle events against.  Times
+/// are seconds from the gateway's epoch (trace t=0).
+pub trait GatewayClock {
+    /// Current time, seconds since epoch.
+    fn now(&self) -> f64;
+    /// Block (or jump) until at least `t`.  Must be monotone: calling
+    /// with a `t` in the past returns immediately.
+    fn wait_until(&mut self, t: f64);
+}
+
+/// Deterministic clock: `wait_until` teleports.  The default for tests,
+/// CI, and every reproducibility assertion.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VirtualClock {
+    now: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock::default()
+    }
+}
+
+impl GatewayClock for VirtualClock {
+    fn now(&self) -> f64 {
+        self.now
+    }
+
+    fn wait_until(&mut self, t: f64) {
+        if t > self.now {
+            self.now = t;
+        }
+    }
+}
+
+/// Host monotonic clock: `wait_until` sleeps the calling thread.  Shares
+/// every line of lifecycle logic with [`VirtualClock`].
+#[derive(Debug, Clone, Copy)]
+pub struct WallClock {
+    t0: Instant,
+}
+
+impl WallClock {
+    /// Epoch is the moment of construction.
+    pub fn new() -> WallClock {
+        WallClock { t0: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> WallClock {
+        WallClock::new()
+    }
+}
+
+impl GatewayClock for WallClock {
+    fn now(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    fn wait_until(&mut self, t: f64) {
+        let target = self.t0 + Duration::from_secs_f64(t.max(0.0));
+        if let Some(d) = target.checked_duration_since(Instant::now()) {
+            thread::sleep(d);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_jumps_and_is_monotone() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.wait_until(2.5);
+        assert_eq!(c.now(), 2.5);
+        c.wait_until(1.0); // past: no-op
+        assert_eq!(c.now(), 2.5);
+    }
+
+    #[test]
+    fn wall_clock_advances_and_past_waits_return() {
+        let mut c = WallClock::new();
+        let a = c.now();
+        c.wait_until(0.0); // already past — must not sleep
+        c.wait_until(0.002);
+        let b = c.now();
+        assert!(b >= a, "wall clock went backwards: {a} -> {b}");
+        assert!(b >= 0.002, "wait_until(0.002) returned at {b}");
+    }
+}

@@ -1,0 +1,410 @@
+//! Live serving gateway: the wall-clock front door over the simulated
+//! fleet.
+//!
+//! Offline runs replay a trace as fast as the simulator can integrate
+//! it.  The gateway instead walks the same trace as a *request
+//! lifecycle*: each arrival is admitted at its instant on a pluggable
+//! clock ([`GatewayClock`]), routed across replicas by the same
+//! [`Dispatcher`] the cluster layer uses, streamed back token-by-token
+//! over an in-tree mpsc channel ([`StreamChunk`]), and torn down on any
+//! of four exits — completion, client cancellation (`Request::cancel_at`,
+//! the disconnect model: KV blocks decref immediately, mid-decode),
+//! deadline expiry (`Request::deadline`, enforced inside the engine
+//! scheduler via [`crate::sched::deadline_should_drop`]), or replica
+//! crash ([`FailureSpec`]).
+//!
+//! A crash rides the retire machinery from the autoscaling PR: the dead
+//! replica leaves the eligible set, its prefix-affinity sessions re-home
+//! through [`Dispatcher::unpin_replica`], orphans whose prefill never
+//! started re-queue on a surviving replica (their streaming sink is
+//! re-attached so the client keeps its connection), and in-flight work is
+//! counted [`RequestOutcome::Lost`].  Accounting is total on every path:
+//! `completed + cancelled + expired + lost == submitted`.
+//!
+//! Clock duality is the determinism story: [`VirtualClock`] teleports
+//! between events, so the entire lifecycle — admission order, routing,
+//! cancellation races, crash re-homing — is a pure function of
+//! `(trace, seed, config)` and CI asserts it bitwise.  [`WallClock`]
+//! sleeps to the same instants, turning the identical loop into a
+//! real-time server without a single branch on the clock flavor.
+//!
+//! [`RequestOutcome::Lost`]: crate::metrics::RequestOutcome::Lost
+
+pub mod clock;
+pub mod stream;
+
+pub use clock::{GatewayClock, VirtualClock, WallClock};
+pub use stream::{stream_stats, StreamChunk, StreamStats};
+
+pub use crate::cluster::FailureSpec;
+
+use crate::baselines::System;
+use crate::cluster::{replica_seed, Dispatcher, Replica, ReplicaSignals, RouterPolicy};
+use crate::config::ServingConfig;
+use crate::engine::core::{CoreOptions, EngineOutput};
+use crate::gpu::roofline::GroundTruth;
+use crate::metrics::timeline::{ScaleAction, ScaleEvent};
+use crate::metrics::{
+    merge_outcomes, merge_records, LifecycleStats, OutcomeRecord, RequestRecord,
+};
+use crate::perf::PerfModel;
+use crate::workload::Request;
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+
+/// Gateway shape: fleet size, routing, failure schedule, and an optional
+/// blanket deadline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GatewayConfig {
+    /// Homogeneous replicas behind the front door.
+    pub replicas: usize,
+    pub router: RouterPolicy,
+    /// Scheduled replica crashes, fired at their exact instants on the
+    /// gateway clock (between arrivals if need be — a live front door
+    /// does not wait for traffic to notice a dead machine).
+    pub failures: Vec<FailureSpec>,
+    /// Deadline applied to every request that does not carry its own:
+    /// `arrival + default_deadline_s`.  `None` (default) adds nothing.
+    pub default_deadline_s: Option<f64>,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            replicas: 1,
+            router: RouterPolicy::RoundRobin,
+            failures: Vec::new(),
+            default_deadline_s: None,
+        }
+    }
+}
+
+/// Everything a gateway run produces.
+#[derive(Debug)]
+pub struct GatewayOutput {
+    /// Completed requests, id-ordered.
+    pub records: Vec<RequestRecord>,
+    /// Terminal events for requests that did not complete, id-ordered.
+    pub outcomes: Vec<OutcomeRecord>,
+    /// Per-outcome counters; `submitted()` equals the trace length.
+    pub lifecycle: LifecycleStats,
+    /// Aggregate stream-quality statistics (TTFB, inter-chunk gaps).
+    pub stream: StreamStats,
+    /// Every request's drained stream, `(id, chunks)` in admission order.
+    pub streams: Vec<(u64, Vec<StreamChunk>)>,
+    /// (request id, replica index) routing decisions, in event order
+    /// (orphan re-routes append a second entry for the same id).
+    pub assignments: Vec<(u64, usize)>,
+    /// Per-replica engine outputs (replica index = vec index).
+    pub per_replica: Vec<EngineOutput>,
+    /// Crash events on the global timeline.
+    pub scale_events: Vec<ScaleEvent>,
+    /// Global makespan on the trace clock.
+    pub virtual_duration: f64,
+}
+
+/// One gateway event: a scheduled failure or a trace arrival.  Failures
+/// sort before arrivals at the same instant — a request arriving exactly
+/// at a crash must not route to the corpse.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum EventKind {
+    Failure,
+    Arrival,
+}
+
+/// Serve `trace` through the live gateway on `clock`.
+///
+/// The loop walks the merged (failure ∪ arrival) event list in time
+/// order; per event it waits for the instant on the clock, advances
+/// every non-drained replica to it (the same horizon barrier as the
+/// cluster dispatch loop, so routing signals are live), then either
+/// crashes the target replica or admits the request: route via
+/// [`Dispatcher::pick_among`], attach a streaming sink, push.  With no
+/// failures and no lifecycle annotations this is observationally the
+/// cluster's serial dispatch loop plus a channel per request — routing
+/// and records are bit-identical to [`crate::cluster::serve_cluster`].
+#[allow(clippy::too_many_arguments)]
+pub fn serve_gateway<C: GatewayClock>(
+    system: System,
+    cfg: &ServingConfig,
+    perf: &PerfModel,
+    gt: &GroundTruth,
+    trace: &[Request],
+    seed: u64,
+    gw: &GatewayConfig,
+    clock: &mut C,
+) -> GatewayOutput {
+    // blanket deadline for requests that carry none of their own
+    let trace: Vec<Request> = trace
+        .iter()
+        .map(|r| {
+            let mut r = r.clone();
+            if r.deadline.is_none() {
+                if let Some(d) = gw.default_deadline_s {
+                    r.deadline = Some(r.arrival + d);
+                }
+            }
+            r
+        })
+        .collect();
+
+    let n = gw.replicas.max(1);
+    let horizon = trace.last().map(|r| r.arrival).unwrap_or(0.0);
+    let max_virtual_time = CoreOptions::default().max_virtual_time.max(4.0 * horizon);
+    let mut replicas: Vec<Replica> = (0..n)
+        .map(|i| Replica::new(i, system, cfg, perf, gt, replica_seed(seed, i), max_virtual_time))
+        .collect();
+    let mut signals: Vec<ReplicaSignals> = replicas.iter().map(Replica::signals).collect();
+    let mut dispatcher = Dispatcher::new(gw.router);
+    let mut eligible: Vec<usize> = (0..n).collect();
+    let mut dead: Vec<bool> = vec![false; n];
+
+    // merged event list: (t, kind, index into failures/trace)
+    let mut failures = gw.failures.clone();
+    failures.sort_by(|a, b| a.at.total_cmp(&b.at).then(a.replica.cmp(&b.replica)));
+    let mut events: Vec<(f64, EventKind, usize)> =
+        Vec::with_capacity(failures.len() + trace.len());
+    for (i, f) in failures.iter().enumerate() {
+        events.push((f.at, EventKind::Failure, i));
+    }
+    for (i, r) in trace.iter().enumerate() {
+        events.push((r.arrival, EventKind::Arrival, i));
+    }
+    events.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
+
+    let mut assignments: Vec<(u64, usize)> = Vec::with_capacity(trace.len());
+    let mut scale_events: Vec<ScaleEvent> = Vec::new();
+    // connection table: receiver drained at teardown, sender clone kept
+    // so an orphan re-homed by a crash keeps its stream
+    let mut conns: Vec<(u64, f64, mpsc::Receiver<StreamChunk>)> = Vec::with_capacity(trace.len());
+    let mut senders: BTreeMap<u64, mpsc::Sender<StreamChunk>> = BTreeMap::new();
+
+    for (t, kind, i) in events {
+        clock.wait_until(t);
+        // horizon barrier: live routing signals at the event instant
+        for r in replicas.iter_mut() {
+            if !r.drained {
+                r.advance_to(t);
+                signals[r.id] = r.signals();
+            }
+        }
+        match kind {
+            EventKind::Failure => {
+                let id = failures[i].replica;
+                assert!(id < n, "failure injection names unknown replica {id}");
+                if dead[id] {
+                    continue; // double kill is a no-op
+                }
+                let orphans = replicas[id].crash(t);
+                signals[id] = replicas[id].signals();
+                dead[id] = true;
+                eligible.retain(|&k| k != id);
+                dispatcher.unpin_replica(id);
+                assert!(
+                    !eligible.is_empty(),
+                    "failure injection killed the last live replica at t={t}"
+                );
+                scale_events.push(ScaleEvent {
+                    t,
+                    action: ScaleAction::Crash,
+                    replica: id,
+                    fleet_after: eligible.len(),
+                });
+                for o in orphans {
+                    let k = dispatcher.pick_among(&signals, &eligible, &o, perf, &cfg.slo);
+                    assignments.push((o.id, k));
+                    // the client's connection survives the re-home
+                    if let Some(tx) = senders.get(&o.id) {
+                        replicas[k].attach_stream(o.id, tx.clone());
+                    }
+                    signals[k].note_push(&o);
+                    replicas[k].push(o);
+                }
+            }
+            EventKind::Arrival => {
+                let r = &trace[i];
+                let k = dispatcher.pick_among(&signals, &eligible, r, perf, &cfg.slo);
+                assignments.push((r.id, k));
+                let (tx, rx) = mpsc::channel();
+                conns.push((r.id, r.arrival, rx));
+                senders.insert(r.id, tx.clone());
+                replicas[k].attach_stream(r.id, tx);
+                signals[k].note_push(r);
+                replicas[k].push(r.clone());
+            }
+        }
+    }
+
+    let mut per_replica: Vec<EngineOutput> =
+        replicas.into_iter().map(Replica::finish).collect();
+    for ev in &scale_events {
+        per_replica[ev.replica].scale_events.push(*ev);
+        per_replica[ev.replica].timeline.push_event(*ev);
+    }
+    // all engines are torn down: every sink has sent its terminal chunk
+    drop(senders);
+    let mut streams = Vec::with_capacity(conns.len());
+    let mut per_stream = Vec::with_capacity(conns.len());
+    for (id, arrival, rx) in conns {
+        let chunks: Vec<StreamChunk> = rx.try_iter().collect();
+        per_stream.push((arrival, chunks.clone()));
+        streams.push((id, chunks));
+    }
+    let stream = stream_stats(&per_stream);
+
+    let records = merge_records(per_replica.iter().map(|o| o.records.as_slice()));
+    let outcomes = merge_outcomes(per_replica.iter().map(|o| o.outcomes.as_slice()));
+    let lifecycle = LifecycleStats::from_parts(&records, &outcomes);
+    let virtual_duration = per_replica
+        .iter()
+        .map(|o| o.virtual_duration)
+        .fold(0.0, f64::max);
+    GatewayOutput {
+        records,
+        outcomes,
+        lifecycle,
+        stream,
+        streams,
+        assignments,
+        per_replica,
+        scale_events,
+        virtual_duration,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{serve_cluster, ClusterConfig};
+    use crate::config::{GpuSpec, ModelSpec};
+    use crate::workload::{annotate_lifecycle, generate_n_requests, Dataset, LifecycleProfile};
+
+    fn setup() -> (ServingConfig, PerfModel, GroundTruth) {
+        let cfg = ServingConfig::default();
+        let perf = PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b());
+        let gt = GroundTruth::new(GpuSpec::a100());
+        (cfg, perf, gt)
+    }
+
+    #[test]
+    fn inert_gateway_matches_the_cluster_bit_for_bit() {
+        // no lifecycle annotations, no failures: the gateway is the
+        // cluster's serial dispatch loop plus streaming channels
+        let (cfg, perf, gt) = setup();
+        let trace = generate_n_requests(&Dataset::sharegpt(), 8.0, 16, 41);
+        let gw = GatewayConfig {
+            replicas: 2,
+            router: RouterPolicy::LeastKv,
+            ..Default::default()
+        };
+        let mut clock = VirtualClock::new();
+        let live = serve_gateway(System::Bullet, &cfg, &perf, &gt, &trace, 3, &gw, &mut clock);
+        let ccfg = ClusterConfig {
+            replicas: 2,
+            router: RouterPolicy::LeastKv,
+            sim_threads: 1,
+            ..Default::default()
+        };
+        let off = serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 3, &ccfg);
+        assert_eq!(live.records, off.records);
+        assert_eq!(live.assignments, off.assignments);
+        assert_eq!(
+            live.virtual_duration.to_bits(),
+            off.virtual_duration.to_bits()
+        );
+        assert!(live.outcomes.is_empty());
+        // every request streamed: a first-token chunk at minimum, and a
+        // terminal chunk closing each stream
+        assert_eq!(live.streams.len(), 16);
+        for (id, chunks) in &live.streams {
+            assert!(!chunks.is_empty(), "request {id} never streamed");
+            assert!(chunks.last().unwrap().done, "request {id} stream left open");
+        }
+        assert_eq!(live.stream.streams, 16);
+        assert!(live.stream.mean_ttfb > 0.0);
+    }
+
+    #[test]
+    fn gateway_runs_are_deterministic_under_virtual_clock() {
+        let (cfg, perf, gt) = setup();
+        let mut trace = generate_n_requests(&Dataset::sharegpt(), 10.0, 20, 43);
+        annotate_lifecycle(&mut trace, &LifecycleProfile::cancellation_heavy(), 43);
+        let mid = trace[10].arrival;
+        let gw = GatewayConfig {
+            replicas: 3,
+            router: RouterPolicy::LeastKv,
+            failures: vec![FailureSpec { replica: 2, at: mid }],
+            default_deadline_s: Some(30.0),
+        };
+        let run = || {
+            let mut clock = VirtualClock::new();
+            serve_gateway(System::Bullet, &cfg, &perf, &gt, &trace, 7, &gw, &mut clock)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.records, b.records);
+        assert_eq!(a.outcomes, b.outcomes);
+        assert_eq!(a.assignments, b.assignments);
+        assert_eq!(a.streams, b.streams);
+        assert_eq!(a.lifecycle, b.lifecycle);
+        assert_eq!(a.lifecycle.submitted(), trace.len());
+    }
+
+    #[test]
+    fn default_deadline_expires_slow_requests() {
+        let (cfg, perf, gt) = setup();
+        let trace = generate_n_requests(&Dataset::sharegpt(), 20.0, 12, 47);
+        let gw = GatewayConfig {
+            replicas: 1,
+            // far too tight for any prefill to finish
+            default_deadline_s: Some(1e-6),
+            ..Default::default()
+        };
+        let mut clock = VirtualClock::new();
+        let out = serve_gateway(System::Bullet, &cfg, &perf, &gt, &trace, 5, &gw, &mut clock);
+        assert_eq!(out.lifecycle.expired, 12, "{:?}", out.lifecycle);
+        assert_eq!(out.records.len(), 0);
+        // expiry still closes every stream with a terminal chunk
+        for (id, chunks) in &out.streams {
+            assert!(
+                chunks.last().map(|c| c.done).unwrap_or(true),
+                "request {id} stream left open"
+            );
+        }
+        // and leaks nothing
+        for o in &out.per_replica {
+            assert_eq!(o.final_kv_blocks, 0);
+        }
+    }
+
+    #[test]
+    fn crash_between_arrivals_rehomes_and_accounts() {
+        let (cfg, perf, gt) = setup();
+        let trace = generate_n_requests(&Dataset::sharegpt(), 6.0, 14, 53);
+        // crash strictly between two arrivals: the live gateway fires it
+        // at its own instant, not at the next arrival horizon
+        let at = (trace[6].arrival + trace[7].arrival) / 2.0;
+        let gw = GatewayConfig {
+            replicas: 2,
+            router: RouterPolicy::RoundRobin,
+            failures: vec![FailureSpec { replica: 0, at }],
+            default_deadline_s: None,
+        };
+        let mut clock = VirtualClock::new();
+        let out = serve_gateway(System::Bullet, &cfg, &perf, &gt, &trace, 11, &gw, &mut clock);
+        assert_eq!(out.scale_events.len(), 1);
+        assert_eq!(out.scale_events[0].action, ScaleAction::Crash);
+        assert!((out.scale_events[0].t - at).abs() < 1e-12);
+        let stats = out.lifecycle;
+        assert_eq!(stats.submitted(), trace.len());
+        // post-crash traffic all routes to the survivor
+        for &(id, k) in &out.assignments {
+            let r = trace.iter().find(|r| r.id == id).unwrap();
+            if r.arrival > at {
+                assert_eq!(k, 1, "request {id} routed to the dead replica");
+            }
+        }
+        // the dead replica leaks nothing
+        assert_eq!(out.per_replica[0].final_kv_blocks, 0);
+    }
+}

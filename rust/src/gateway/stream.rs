@@ -1,0 +1,104 @@
+//! Token streaming: per-request output chunks over in-tree mpsc
+//! channels, plus the stream-quality statistics (TTFB, inter-chunk
+//! gaps) the gateway reports.
+//!
+//! The engine core owns the [`std::sync::mpsc::Sender`] side (attached
+//! at admission) and emits one [`StreamChunk`] per produced token; the
+//! gateway holds the receiver in its connection table and drains it
+//! after the run (virtual clock) or live (wall clock).  A terminal chunk
+//! (`done == true`) is sent on every exit path — completion,
+//! cancellation, expiry, or replica crash — so a client never waits on a
+//! stream that will not produce.
+
+/// One streamed output event for a request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StreamChunk {
+    pub id: u64,
+    /// Instant the token (or terminal event) was produced, trace clock.
+    pub t: f64,
+    /// Cumulative output tokens produced so far, including this one.
+    pub tokens_out: usize,
+    /// Final chunk for this request: the stream is closed after it.
+    pub done: bool,
+}
+
+/// Aggregate stream-quality statistics over a run.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StreamStats {
+    /// Streams that produced at least one chunk.
+    pub streams: usize,
+    /// Total chunks across all streams.
+    pub chunks: usize,
+    /// Mean time-to-first-byte: first chunk time minus arrival, s.
+    pub mean_ttfb: f64,
+    /// Mean gap between consecutive chunks within a stream, s.
+    pub mean_gap: f64,
+    /// Largest observed intra-stream gap, s.
+    pub max_gap: f64,
+}
+
+/// Compute stream statistics from `(arrival, chunks)` per stream.
+/// Streams with no chunks are skipped; gaps need at least two chunks.
+pub fn stream_stats(per_stream: &[(f64, Vec<StreamChunk>)]) -> StreamStats {
+    let mut s = StreamStats::default();
+    let mut ttfb_sum = 0.0;
+    let mut gap_sum = 0.0;
+    let mut gap_n = 0usize;
+    for (arrival, chunks) in per_stream {
+        if chunks.is_empty() {
+            continue;
+        }
+        s.streams += 1;
+        s.chunks += chunks.len();
+        ttfb_sum += chunks[0].t - arrival;
+        for w in chunks.windows(2) {
+            let gap = w[1].t - w[0].t;
+            gap_sum += gap;
+            gap_n += 1;
+            if gap > s.max_gap {
+                s.max_gap = gap;
+            }
+        }
+    }
+    if s.streams > 0 {
+        s.mean_ttfb = ttfb_sum / s.streams as f64;
+    }
+    if gap_n > 0 {
+        s.mean_gap = gap_sum / gap_n as f64;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chunk(id: u64, t: f64, tokens_out: usize, done: bool) -> StreamChunk {
+        StreamChunk { id, t, tokens_out, done }
+    }
+
+    #[test]
+    fn empty_input_yields_zeroed_stats() {
+        let s = stream_stats(&[]);
+        assert_eq!(s, StreamStats::default());
+        let s = stream_stats(&[(1.0, vec![])]);
+        assert_eq!(s.streams, 0);
+        assert_eq!(s.mean_ttfb, 0.0);
+    }
+
+    #[test]
+    fn ttfb_and_gaps() {
+        let per = vec![
+            (0.0, vec![chunk(0, 0.5, 1, false), chunk(0, 0.7, 2, false), chunk(0, 1.3, 3, true)]),
+            (1.0, vec![chunk(1, 1.1, 1, true)]),
+        ];
+        let s = stream_stats(&per);
+        assert_eq!(s.streams, 2);
+        assert_eq!(s.chunks, 4);
+        // ttfb: (0.5 + 0.1) / 2
+        assert!((s.mean_ttfb - 0.3).abs() < 1e-12, "ttfb {}", s.mean_ttfb);
+        // gaps: 0.2 and 0.6 within stream 0 only
+        assert!((s.mean_gap - 0.4).abs() < 1e-12, "gap {}", s.mean_gap);
+        assert!((s.max_gap - 0.6).abs() < 1e-12, "max gap {}", s.max_gap);
+    }
+}

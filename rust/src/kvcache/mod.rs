@@ -143,6 +143,14 @@ impl KvPool {
         self.seqs.len()
     }
 
+    /// Ids of all live sequences, ascending.  The teardown sweep for
+    /// crash/cancel exit paths: callers that must return the pool whole
+    /// release every listed id (the engine cannot otherwise enumerate
+    /// sequences policies reserved privately).
+    pub fn seq_ids(&self) -> Vec<u64> {
+        self.seqs.keys().copied().collect()
+    }
+
     pub fn contains(&self, seq_id: u64) -> bool {
         self.seqs.contains_key(&seq_id)
     }

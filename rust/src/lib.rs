@@ -115,6 +115,28 @@
 //! and goodput under a drift storm while consuming fewer replica-steps
 //! than static max provisioning.
 //!
+//! **Live serving** ([`gateway`]).  [`gateway::serve_gateway`] is the
+//! wall-clock front door over the same fleet: each trace arrival is
+//! admitted at its instant on a pluggable [`gateway::GatewayClock`],
+//! routed by the cluster's [`cluster::Dispatcher`], and streamed back
+//! token-by-token over an in-tree mpsc channel
+//! ([`gateway::StreamChunk`]).  Requests carry an optional lifecycle —
+//! `Request::cancel_at` models the client disconnect (KV blocks decref
+//! immediately, mid-decode) and `Request::deadline` is enforced inside
+//! the engine ([`sched::deadline_should_drop`]); both are annotated onto
+//! traces by [`workload::annotate_lifecycle`].  Failure injection
+//! ([`cluster::FailureSpec`], also on the offline
+//! [`cluster::ClusterConfig`]) crashes a replica at a chosen instant and
+//! rides the retire machinery: prefix-affinity sessions re-home, cold
+//! orphans re-queue on survivors (keeping their stream), in-flight work
+//! is counted `Lost`, and accounting stays total —
+//! `completed + cancelled + expired + lost == submitted`.  Under
+//! [`gateway::VirtualClock`] the whole lifecycle is bit-deterministic
+//! (CI asserts it); [`gateway::WallClock`] sleeps to the same instants
+//! for real-time serving (`--live wall`, `examples/live_gateway.rs`).
+//! All of it is off by default: lifecycle-free traces without failures
+//! run bit-identically to the pre-gateway paths.
+//!
 //! **Session & prefix reuse** ([`kvcache`], [`workload::sessions`]).
 //! The KV pool refcounts physical blocks, so sequences can share them:
 //! [`kvcache::KvPool::fork`] clones a sequence copy-on-write and
@@ -162,6 +184,7 @@ pub mod engine;
 pub mod coordinator;
 pub mod baselines;
 pub mod cluster;
+pub mod gateway;
 pub mod workload;
 pub mod metrics;
 pub mod runtime;

@@ -8,7 +8,8 @@
 //!                [--router round-robin|least-kv|slo-slack|prefix-affinity]
 //!                [--calibration on|off] [--drift none|throttle|step|lottery|storm]
 //!                [--autoscale on|off] [--min-replicas N] [--max-replicas N]
-//!                [--sim-threads N]
+//!                [--sim-threads N] [--live off|virtual|wall]
+//!                [--deadline-ms N] [--fail-replica ID@T]
 //! bullet live    [--requests N] [--artifacts DIR]   # real model via PJRT
 //! bullet profile [--grid coarse|paper]              # offline §3.2.2 pass
 //! bullet info                                        # config + artifact info
@@ -18,7 +19,8 @@ use bullet::baselines::{run_system_output, System};
 use bullet::cluster::{serve_cluster, AutoscaleConfig, ClusterConfig, RouterPolicy};
 use bullet::config::{CalibrationConfig, DriftSpec, ServingConfig, SloSpec};
 use bullet::coordinator::{BuildOptions, BulletServer, Tokenizer};
-use bullet::engine::live_engine::{serve_live, LiveRequest};
+use bullet::engine::live_engine::serve_live;
+use bullet::gateway::{serve_gateway, FailureSpec, GatewayConfig, VirtualClock, WallClock};
 use bullet::kvcache::prefix::PrefixStats;
 use bullet::metrics::timeline::ScaleAction;
 use bullet::metrics::{summarize, RunSummary};
@@ -26,7 +28,7 @@ use bullet::perf::CalibrationStats;
 use bullet::runtime::{ModelMeta, ModelRuntime};
 use bullet::util::cli::Args;
 use bullet::util::tbl::{f, ms, Table};
-use bullet::workload::trace_by_name;
+use bullet::workload::{trace_by_name, Request};
 use std::path::PathBuf;
 
 fn main() {
@@ -69,7 +71,21 @@ serve flags:  --system bullet|vllm-1024|sglang-1024|sglang-2048|nanoflow
                                       (fleet bounds with --autoscale on)
               --sim-threads N         (simulation worker threads; 0 = all
                                        cores, 1 = serial — results are
-                                       bit-identical at any value)";
+                                       bit-identical at any value)
+              --live off|virtual|wall (serve through the lifecycle
+                                       gateway: token streaming,
+                                       cancellation, deadlines; `virtual`
+                                       teleports between events —
+                                       bit-deterministic — while `wall`
+                                       sleeps to each instant for
+                                       real-time serving)
+              --deadline-ms N         (with --live: blanket per-request
+                                       deadline of N ms past arrival for
+                                       requests carrying none)
+              --fail-replica ID@T     (with --live: crash replica ID at
+                                       T seconds; sessions re-home, cold
+                                       orphans re-queue, in-flight work
+                                       is counted lost)";
 
 /// The metric rows every serve table shares (single-GPU and cluster).
 fn summary_rows(t: &mut Table, s: &RunSummary) {
@@ -102,6 +118,17 @@ fn calibration_rows(t: &mut Table, cs: &CalibrationStats) {
     ]);
     t.row(&["calib drift events".to_string(), cs.drift_events.to_string()]);
     t.row(&["calibrated slowdown".to_string(), f(cs.slowdown, 3) + "x"]);
+}
+
+/// Parse a `--fail-replica ID@T` spec.
+fn parse_failure(s: &str) -> FailureSpec {
+    let parsed = s.split_once('@').and_then(|(id, at)| {
+        Some(FailureSpec { replica: id.parse().ok()?, at: at.parse().ok()? })
+    });
+    parsed.unwrap_or_else(|| {
+        eprintln!("bad --fail-replica '{s}' (want ID@T, e.g. 0@1.5)");
+        std::process::exit(2);
+    })
 }
 
 fn workload_slo(name: &str) -> SloSpec {
@@ -199,6 +226,80 @@ fn serve(args: &Args) {
     // The offline profile runs on the CLEAN ground truth (that is the
     // point); the drift regime applies only to the serving-time GPU.
     let gt = server.ground_truth().clone().with_drift(drift.clone());
+
+    let live_mode = args.get_or("live", "off").to_string();
+    if live_mode != "off" {
+        let failures: Vec<FailureSpec> = match args.get("fail-replica") {
+            Some(s) => vec![parse_failure(s)],
+            None => Vec::new(),
+        };
+        let deadline_ms = args.get_f64("deadline-ms", 0.0);
+        let gw = GatewayConfig {
+            replicas,
+            router,
+            failures,
+            default_deadline_s: (deadline_ms > 0.0).then_some(deadline_ms / 1000.0),
+        };
+        eprintln!(
+            "serving {} requests of {} at {} req/s through the {} gateway ({} on {} replicas)...",
+            n,
+            name,
+            rate,
+            live_mode,
+            sys.label(),
+            replicas
+        );
+        let out = match live_mode.as_str() {
+            "virtual" => {
+                let mut clock = VirtualClock::new();
+                serve_gateway(sys, &cfg, server.perf(), &gt, &trace, seed, &gw, &mut clock)
+            }
+            "wall" => {
+                let mut clock = WallClock::new();
+                serve_gateway(sys, &cfg, server.perf(), &gt, &trace, seed, &gw, &mut clock)
+            }
+            other => {
+                eprintln!("unknown --live '{other}' (use off|virtual|wall)");
+                std::process::exit(2);
+            }
+        };
+        let mut t = Table::new(&format!(
+            "{} behind the {} gateway on {} @ {} req/s",
+            sys.label(),
+            live_mode,
+            name,
+            rate
+        ))
+        .header(&["metric", "value"]);
+        if !out.records.is_empty() {
+            let s = summarize(&out.records, &cfg.slo, Some(out.virtual_duration));
+            summary_rows(&mut t, &s);
+        }
+        let lc = out.lifecycle;
+        t.row(&["submitted".to_string(), lc.submitted().to_string()]);
+        t.row(&[
+            "completed/cancelled/expired/lost".to_string(),
+            format!("{}/{}/{}/{}", lc.completed, lc.cancelled, lc.expired, lc.lost),
+        ]);
+        t.row(&["streams".to_string(), out.stream.streams.to_string()]);
+        t.row(&["stream chunks".to_string(), out.stream.chunks.to_string()]);
+        t.row(&["mean TTFB (ms)".to_string(), ms(out.stream.mean_ttfb)]);
+        t.row(&["mean chunk gap (ms)".to_string(), ms(out.stream.mean_gap)]);
+        t.row(&["max chunk gap (ms)".to_string(), ms(out.stream.max_gap)]);
+        t.row(&["makespan (s)".to_string(), f(out.virtual_duration, 2)]);
+        if !out.scale_events.is_empty() {
+            t.row(&[
+                "crashes".to_string(),
+                out.scale_events
+                    .iter()
+                    .map(|e| format!("replica {} @ {:.2}s", e.replica, e.t))
+                    .collect::<Vec<_>>()
+                    .join(", "),
+            ]);
+        }
+        t.print();
+        return;
+    }
 
     if replicas > 1 || autoscale_on {
         eprintln!(
@@ -316,15 +417,19 @@ fn live(args: &Args) {
         "What limits chunked prefill?",
         "How do prefill and decode differ?",
     ];
-    let trace: Vec<LiveRequest> = (0..n as u64)
-        .map(|i| LiveRequest {
+    let token_ids: Vec<Vec<i32>> = (0..n)
+        .map(|i| tok.encode(prompts[i % prompts.len()]))
+        .collect();
+    let trace: Vec<Request> = (0..n as u64)
+        .map(|i| Request {
             id: i,
             arrival: i as f64 * 0.05,
-            prompt: tok.encode(prompts[i as usize % prompts.len()]),
+            input_len: token_ids[i as usize].len(),
             output_len: 12,
+            ..Default::default()
         })
         .collect();
-    let (records, stats) = serve_live(rt, trace).unwrap();
+    let (records, stats) = serve_live(rt, trace, token_ids).unwrap();
     let slo = SloSpec::sharegpt();
     let s = summarize(&records, &slo, None);
     let mut t = Table::new("live serving (tiny model, PJRT CPU)").header(&["metric", "value"]);

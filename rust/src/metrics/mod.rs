@@ -53,6 +53,75 @@ impl RequestRecord {
     }
 }
 
+/// Why a request left the system without completing.  Completed requests
+/// produce a [`RequestRecord`]; every other exit produces an
+/// [`OutcomeRecord`] instead — the two streams partition the trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestOutcome {
+    /// Client disconnected (`Request::cancel_at`); KV released mid-flight.
+    Cancelled,
+    /// Completion deadline passed (`Request::deadline`) before the request
+    /// finished; dropped rather than serving a late answer.
+    Expired,
+    /// In flight on a replica that crashed and not recoverable by
+    /// re-queueing (prefill progress was lost with the replica).
+    Lost,
+}
+
+/// Terminal event for a request that did not complete.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OutcomeRecord {
+    pub id: u64,
+    pub outcome: RequestOutcome,
+    /// Instant the request left the system (virtual-clock seconds).
+    pub t: f64,
+    /// Output tokens already produced (and streamed) before the exit.
+    pub tokens_out: usize,
+}
+
+/// Per-outcome counters for one run; `submitted()` is the conservation
+/// check every lifecycle test asserts.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LifecycleStats {
+    pub completed: usize,
+    pub cancelled: usize,
+    pub expired: usize,
+    pub lost: usize,
+}
+
+impl LifecycleStats {
+    /// Count outcomes: every submitted request is exactly one of
+    /// completed / cancelled / expired / lost.
+    pub fn from_parts(records: &[RequestRecord], outcomes: &[OutcomeRecord]) -> LifecycleStats {
+        let mut s = LifecycleStats {
+            completed: records.len(),
+            ..LifecycleStats::default()
+        };
+        for o in outcomes {
+            match o.outcome {
+                RequestOutcome::Cancelled => s.cancelled += 1,
+                RequestOutcome::Expired => s.expired += 1,
+                RequestOutcome::Lost => s.lost += 1,
+            }
+        }
+        s
+    }
+
+    pub fn submitted(&self) -> usize {
+        self.completed + self.cancelled + self.expired + self.lost
+    }
+}
+
+/// Merge per-replica outcome streams into one id-ordered stream, the
+/// non-completion counterpart of [`merge_records`].
+pub fn merge_outcomes<'a>(
+    parts: impl IntoIterator<Item = &'a [OutcomeRecord]>,
+) -> Vec<OutcomeRecord> {
+    let mut out: Vec<OutcomeRecord> = parts.into_iter().flat_map(|p| p.iter().copied()).collect();
+    out.sort_by_key(|o| o.id);
+    out
+}
+
 /// Aggregated results for one serving run.
 #[derive(Debug, Clone)]
 pub struct RunSummary {
@@ -225,6 +294,32 @@ mod tests {
         ];
         let g = goodput_req_s(&records, &slo, Some(2.0));
         assert!((g - 0.5).abs() < 1e-12, "goodput {g}");
+    }
+
+    #[test]
+    fn lifecycle_stats_partition_submitted() {
+        let records = vec![rec(0.0, 0.0, 0.1, 0.5, 10, 2)];
+        let outcomes = vec![
+            OutcomeRecord { id: 1, outcome: RequestOutcome::Cancelled, t: 0.3, tokens_out: 1 },
+            OutcomeRecord { id: 2, outcome: RequestOutcome::Expired, t: 0.4, tokens_out: 0 },
+            OutcomeRecord { id: 3, outcome: RequestOutcome::Lost, t: 0.5, tokens_out: 2 },
+            OutcomeRecord { id: 4, outcome: RequestOutcome::Cancelled, t: 0.6, tokens_out: 0 },
+        ];
+        let s = LifecycleStats::from_parts(&records, &outcomes);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.cancelled, 2);
+        assert_eq!(s.expired, 1);
+        assert_eq!(s.lost, 1);
+        assert_eq!(s.submitted(), 5);
+    }
+
+    #[test]
+    fn merge_outcomes_orders_by_id() {
+        let a = vec![OutcomeRecord { id: 7, outcome: RequestOutcome::Lost, t: 1.0, tokens_out: 0 }];
+        let b = vec![OutcomeRecord { id: 3, outcome: RequestOutcome::Cancelled, t: 0.5, tokens_out: 1 }];
+        let merged = merge_outcomes([a.as_slice(), b.as_slice()]);
+        let ids: Vec<u64> = merged.iter().map(|o| o.id).collect();
+        assert_eq!(ids, vec![3, 7]);
     }
 
     #[test]

@@ -41,6 +41,10 @@ pub enum ScaleAction {
     /// Refresh a replica's offline perf grid in place (converged
     /// calibrator, persistently high residual).  Fleet size unchanged.
     Reprofile,
+    /// Replica killed by failure injection: no drain, prefix-affinity
+    /// sessions re-home via the retire machinery, and in-flight requests
+    /// either re-queue elsewhere or are counted lost.
+    Crash,
 }
 
 /// One autoscaler decision, stamped on the global virtual timeline.

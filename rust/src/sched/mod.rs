@@ -4,7 +4,7 @@
 pub mod policy;
 pub mod state;
 
-pub use policy::{service_capacity_tokens_per_s, Decision, SloScheduler};
+pub use policy::{deadline_should_drop, service_capacity_tokens_per_s, Decision, SloScheduler};
 pub use state::{
     ActiveDecode, DecodeReqState, PrefillBatch, PrefillProgress, PrefillReq, SystemState,
 };

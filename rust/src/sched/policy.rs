@@ -51,6 +51,19 @@ pub fn service_capacity_tokens_per_s<P: PerfPredictor>(
     1.0 / (f / rate_p.max(1e-9) + (1.0 - f) / rate_d.max(1e-9))
 }
 
+/// Deadline-aware drop-or-serve decision: `true` when the request cannot
+/// produce its first token before `deadline` and should be dropped as
+/// `Expired` instead of consuming GPU work it can never convert into a
+/// within-deadline answer.  `est_first_token_s` is the scheduler's
+/// estimate of remaining time to first token (0 for a request already
+/// decoding, where any elapsed deadline expires it immediately).
+pub fn deadline_should_drop(now: f64, deadline: Option<f64>, est_first_token_s: f64) -> bool {
+    match deadline {
+        Some(d) => now + est_first_token_s.max(0.0) >= d,
+        None => false,
+    }
+}
+
 /// The SLO-aware scheduler.  Generic over the prediction source: the
 /// frozen offline [`PerfModel`] (the default, and the pre-calibration
 /// behavior) or any other [`PerfPredictor`] such as the feedback-driven
@@ -593,6 +606,16 @@ mod tests {
         );
         // degenerate mixes are clamped, not propagated
         assert!(s.capacity_tokens_per_s(f64::NAN).is_finite());
+    }
+
+    #[test]
+    fn deadline_drop_decision() {
+        assert!(!deadline_should_drop(5.0, None, 100.0));
+        assert!(!deadline_should_drop(5.0, Some(6.0), 0.5));
+        assert!(deadline_should_drop(5.0, Some(6.0), 1.0));
+        assert!(deadline_should_drop(7.0, Some(6.0), 0.0));
+        // negative estimates are clamped, not allowed to rescue a late request
+        assert!(deadline_should_drop(7.0, Some(6.0), -3.0));
     }
 
     #[test]

@@ -1,0 +1,123 @@
+//! Lifecycle annotation: deterministic cancellation times and deadlines
+//! stamped onto an existing trace.
+//!
+//! The gateway (and, underneath it, [`crate::engine::EngineCore`])
+//! enforces two per-request lifecycle events beyond completion: a client
+//! disconnect (`Request::cancel_at`) and a completion deadline
+//! (`Request::deadline`).  This module draws those instants from a
+//! [`LifecycleProfile`] with the trace's own RNG discipline, so
+//! lifecycle-heavy scenarios are exactly as reproducible as the arrival
+//! process itself — a (trace, profile, seed) triple is one bitwise
+//! run.  Arrival order and every pre-existing field are left untouched:
+//! annotation composes with any generator in this module tree.
+
+use crate::util::rng::Rng;
+use crate::workload::Request;
+
+/// Distribution of lifecycle events over a trace.  Fractions are
+/// per-request probabilities; times are drawn relative to each request's
+/// own arrival, so the profile is rate-independent.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LifecycleProfile {
+    /// Probability a request's client disconnects before completion.
+    pub cancel_frac: f64,
+    /// Lognormal (mu, sigma) of the disconnect delay after arrival, s.
+    pub cancel_mu: f64,
+    pub cancel_sigma: f64,
+    /// Probability a request carries a completion deadline.
+    pub deadline_frac: f64,
+    /// Lognormal (mu, sigma) of the deadline slack after arrival, s.
+    pub deadline_mu: f64,
+    pub deadline_sigma: f64,
+}
+
+impl LifecycleProfile {
+    /// Impatient-client regime: roughly half the trace disconnects, most
+    /// within a couple of seconds of arriving — the cancel path carries
+    /// real load.  No deadlines.
+    pub fn cancellation_heavy() -> LifecycleProfile {
+        LifecycleProfile {
+            cancel_frac: 0.5,
+            cancel_mu: 0.0, // median 1 s
+            cancel_sigma: 0.8,
+            deadline_frac: 0.0,
+            deadline_mu: 0.0,
+            deadline_sigma: 0.0,
+        }
+    }
+
+    /// Interactive-SLA regime: every request must complete within a tight
+    /// budget (median ~1.5 s) or be dropped as expired.  No disconnects.
+    pub fn deadline_tight() -> LifecycleProfile {
+        LifecycleProfile {
+            cancel_frac: 0.0,
+            cancel_mu: 0.0,
+            cancel_sigma: 0.0,
+            deadline_frac: 1.0,
+            deadline_mu: 0.4, // median ~1.5 s
+            deadline_sigma: 0.4,
+        }
+    }
+}
+
+/// Stamp lifecycle annotations onto `trace` in place, deterministically
+/// from `seed`.  Each request draws its lottery and delays from a
+/// per-request fork of the stream, so inserting or removing requests
+/// elsewhere in the trace cannot shift another request's annotations.
+pub fn annotate_lifecycle(trace: &mut [Request], p: &LifecycleProfile, seed: u64) {
+    let base = seed ^ 0x11FE_C7C1_E5EED;
+    for r in trace.iter_mut() {
+        let mut rr = Rng::new(base ^ r.id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        if rr.f64() < p.cancel_frac {
+            r.cancel_at = Some(r.arrival + rr.lognormal(p.cancel_mu, p.cancel_sigma));
+        }
+        if rr.f64() < p.deadline_frac {
+            r.deadline = Some(r.arrival + rr.lognormal(p.deadline_mu, p.deadline_sigma));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{generate_n_requests, Dataset};
+
+    #[test]
+    fn annotation_is_deterministic_and_in_range() {
+        let base = generate_n_requests(&Dataset::sharegpt(), 5.0, 40, 3);
+        let mut a = base.clone();
+        let mut b = base.clone();
+        annotate_lifecycle(&mut a, &LifecycleProfile::cancellation_heavy(), 9);
+        annotate_lifecycle(&mut b, &LifecycleProfile::cancellation_heavy(), 9);
+        assert_eq!(a, b);
+        let cancelled = a.iter().filter(|r| r.cancel_at.is_some()).count();
+        assert!(cancelled > 0 && cancelled < a.len(), "cancel lottery degenerate: {cancelled}");
+        for r in &a {
+            if let Some(t) = r.cancel_at {
+                assert!(t > r.arrival, "cancel before arrival: {t} vs {}", r.arrival);
+            }
+            assert!(r.deadline.is_none(), "cancellation-heavy profile sets no deadlines");
+        }
+    }
+
+    #[test]
+    fn deadline_profile_covers_every_request() {
+        let mut t = generate_n_requests(&Dataset::sharegpt(), 5.0, 20, 4);
+        annotate_lifecycle(&mut t, &LifecycleProfile::deadline_tight(), 11);
+        for r in &t {
+            let d = r.deadline.expect("deadline_tight stamps every request");
+            assert!(d > r.arrival);
+            assert!(r.cancel_at.is_none());
+        }
+    }
+
+    #[test]
+    fn annotations_are_per_request_stable() {
+        // removing a request must not shift its neighbors' draws
+        let mut full = generate_n_requests(&Dataset::sharegpt(), 5.0, 10, 5);
+        let mut tail: Vec<Request> = full[1..].to_vec();
+        annotate_lifecycle(&mut full, &LifecycleProfile::cancellation_heavy(), 2);
+        annotate_lifecycle(&mut tail, &LifecycleProfile::cancellation_heavy(), 2);
+        assert_eq!(&full[1..], &tail[..]);
+    }
+}

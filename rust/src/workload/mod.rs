@@ -10,8 +10,10 @@
 //! (arrival time, input_len, output_len), so this preserves everything
 //! the experiments measure.
 
+pub mod lifecycle;
 pub mod sessions;
 
+pub use lifecycle::{annotate_lifecycle, LifecycleProfile};
 pub use sessions::{generate_conversational, generate_n_turns, generate_sessions, SessionProfile};
 
 use crate::util::rng::Rng;
@@ -35,6 +37,16 @@ pub struct Request {
     /// re-send earlier context, and the prefix-affinity router uses this
     /// to pin a session to the replica already holding its KV.
     pub session_id: Option<u64>,
+    /// Absolute instant (trace clock) the client disconnects and the
+    /// request should be cancelled, freeing its KV mid-flight.  `None`
+    /// (the default) means the client waits forever — lifecycle-free
+    /// traces behave bit-identically to before the field existed.
+    /// Produced by [`lifecycle::annotate_lifecycle`].
+    pub cancel_at: Option<f64>,
+    /// Absolute completion deadline: past this instant the request is
+    /// dropped as `Expired` instead of consuming further GPU work.
+    /// `None` (the default) disables the deadline.
+    pub deadline: Option<f64>,
 }
 
 /// Dataset model: clipped-lognormal input/output token lengths.
@@ -147,6 +159,8 @@ pub fn generate_trace(dataset: &Dataset, rate: f64, duration: f64, seed: u64) ->
             output_len: dataset.sample_output(&mut rng),
             block_hashes: Vec::new(),
             session_id: None,
+            cancel_at: None,
+            deadline: None,
         });
         id += 1;
     }
@@ -169,6 +183,8 @@ pub fn generate_n_requests(dataset: &Dataset, rate: f64, n: usize, seed: u64) ->
             output_len: dataset.sample_output(&mut rng),
             block_hashes: Vec::new(),
             session_id: None,
+            cancel_at: None,
+            deadline: None,
         });
     }
     out
@@ -211,6 +227,8 @@ pub fn generate_bursty_trace(
             output_len: dataset.sample_output(&mut rng),
             block_hashes: Vec::new(),
             session_id: None,
+            cancel_at: None,
+            deadline: None,
         });
         id += 1;
     }

@@ -186,6 +186,8 @@ pub fn generate_sessions(
                 output_len,
                 block_hashes: hash_chain(p.system_prompt_tokens, tenant_seed, content_seed, input_len),
                 session_id: Some(session_id),
+                cancel_at: None,
+                deadline: None,
             });
             history = input_len + output_len;
             arrival += rng.lognormal(p.think_mu, p.think_sigma);

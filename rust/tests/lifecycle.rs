@@ -1,0 +1,178 @@
+//! Request-lifecycle integration: cancellation, deadlines, and failure
+//! injection hold the same ledger across every serving layer — single
+//! engine, cluster, and the live gateway — and never leak KV.
+
+use bullet::baselines::System;
+use bullet::cluster::{serve_cluster, ClusterConfig, FailureSpec, RouterPolicy};
+use bullet::config::{GpuSpec, ModelSpec, ServingConfig};
+use bullet::engine::sim_engine::{serve_bullet, SimEngineOptions};
+use bullet::gateway::{serve_gateway, GatewayConfig, VirtualClock};
+use bullet::gpu::roofline::GroundTruth;
+use bullet::metrics::RequestOutcome;
+use bullet::perf::PerfModel;
+use bullet::workload::{
+    annotate_lifecycle, generate_n_requests, Dataset, LifecycleProfile, Request,
+};
+
+fn setup() -> (ServingConfig, PerfModel, GroundTruth) {
+    (
+        ServingConfig::default(),
+        PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b()),
+        GroundTruth::new(GpuSpec::a100()),
+    )
+}
+
+/// Ids in `records` ∪ `outcomes` must be exactly the trace's ids, each
+/// appearing once — the ledger is a partition, not just a count match.
+fn assert_partition(
+    trace: &[Request],
+    records: &[bullet::metrics::RequestRecord],
+    outcomes: &[bullet::metrics::OutcomeRecord],
+) {
+    let mut ids: Vec<u64> = records.iter().map(|r| r.id).collect();
+    ids.extend(outcomes.iter().map(|o| o.id));
+    ids.sort_unstable();
+    let mut expect: Vec<u64> = trace.iter().map(|r| r.id).collect();
+    expect.sort_unstable();
+    assert_eq!(ids, expect, "records+outcomes must partition the trace");
+}
+
+/// Annotations that can never fire (cancel/deadline eons after arrival)
+/// must leave the run bit-identical to the un-annotated trace: the
+/// lifecycle sweep is pure bookkeeping until an instant actually passes.
+#[test]
+fn never_firing_annotations_are_inert() {
+    let (cfg, perf, gt) = setup();
+    let trace = generate_n_requests(&Dataset::sharegpt(), 8.0, 30, 61);
+    let mut annotated = trace.clone();
+    for r in annotated.iter_mut() {
+        r.cancel_at = Some(r.arrival + 1e9);
+        r.deadline = Some(r.arrival + 1e9);
+    }
+    let plain = serve_bullet(&cfg, &perf, &gt, &trace, &SimEngineOptions::default());
+    let noted = serve_bullet(&cfg, &perf, &gt, &annotated, &SimEngineOptions::default());
+    assert_eq!(plain.records, noted.records);
+    assert!(noted.outcomes.is_empty());
+    assert_eq!(
+        plain.virtual_duration.to_bits(),
+        noted.virtual_duration.to_bits()
+    );
+}
+
+/// Cancellation mid-run releases KV: the pool drains to zero and the
+/// ledger partitions the trace between completions and cancel outcomes.
+#[test]
+fn cancellation_releases_kv_and_partitions_the_trace() {
+    let (cfg, perf, gt) = setup();
+    let mut trace = generate_n_requests(&Dataset::sharegpt(), 10.0, 40, 67);
+    annotate_lifecycle(&mut trace, &LifecycleProfile::cancellation_heavy(), 67);
+    let out = serve_bullet(&cfg, &perf, &gt, &trace, &SimEngineOptions::default());
+    assert_partition(&trace, &out.records, &out.outcomes);
+    let cancelled = out
+        .outcomes
+        .iter()
+        .filter(|o| o.outcome == RequestOutcome::Cancelled)
+        .count();
+    assert!(cancelled > 0, "cancellation-heavy trace cancelled nothing");
+    assert_eq!(out.final_kv_blocks, 0, "cancelled KV never returned to the pool");
+    for o in &out.outcomes {
+        let r = trace.iter().find(|r| r.id == o.id).unwrap();
+        assert!(o.t >= r.arrival, "outcome for {} precedes its arrival", o.id);
+        assert!(
+            o.tokens_out < r.output_len,
+            "cancelled request {} decoded to completion anyway",
+            o.id
+        );
+    }
+}
+
+/// Tight deadlines expire requests without leaks, on the Bullet engine
+/// and both chunked-prefill baselines (they share the core's lifecycle
+/// sweep through `waiting_locked`).
+#[test]
+fn deadline_expiry_is_leak_free_across_systems() {
+    let (cfg, perf, gt) = setup();
+    let mut trace = generate_n_requests(&Dataset::sharegpt(), 12.0, 30, 71);
+    annotate_lifecycle(&mut trace, &LifecycleProfile::deadline_tight(), 71);
+    for sys in [System::Bullet, System::Sglang1024, System::Nanoflow] {
+        let ccfg = ClusterConfig {
+            replicas: 1,
+            sim_threads: 1,
+            ..Default::default()
+        };
+        let out = serve_cluster(sys, &cfg, &perf, &gt, &trace, 13, &ccfg);
+        assert_partition(&trace, &out.records, &out.outcomes);
+        let lc = out.lifecycle_stats();
+        assert!(
+            lc.expired > 0,
+            "{}: tight deadlines expired nothing: {lc:?}",
+            sys.label()
+        );
+        for o in &out.per_replica {
+            assert_eq!(o.final_kv_blocks, 0, "{} leaked KV blocks", sys.label());
+        }
+    }
+}
+
+/// The same annotated trace flows through the single engine, the cluster
+/// dispatch loop, and the live gateway; every layer closes the same total
+/// ledger, and the gateway agrees with the serial cluster bit-for-bit.
+#[test]
+fn ledger_is_total_across_engine_cluster_and_gateway() {
+    let (cfg, perf, gt) = setup();
+    let mut trace = generate_n_requests(&Dataset::sharegpt(), 10.0, 36, 73);
+    annotate_lifecycle(&mut trace, &LifecycleProfile::cancellation_heavy(), 73);
+    annotate_lifecycle(&mut trace, &LifecycleProfile::deadline_tight(), 79);
+
+    let single = serve_bullet(&cfg, &perf, &gt, &trace, &SimEngineOptions::default());
+    assert_partition(&trace, &single.records, &single.outcomes);
+
+    let ccfg = ClusterConfig {
+        replicas: 2,
+        router: RouterPolicy::LeastKv,
+        sim_threads: 1,
+        ..Default::default()
+    };
+    let cluster = serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 17, &ccfg);
+    assert_partition(&trace, &cluster.records, &cluster.outcomes);
+
+    let gw = GatewayConfig {
+        replicas: 2,
+        router: RouterPolicy::LeastKv,
+        ..Default::default()
+    };
+    let mut clock = VirtualClock::new();
+    let live = serve_gateway(System::Bullet, &cfg, &perf, &gt, &trace, 17, &gw, &mut clock);
+    assert_partition(&trace, &live.records, &live.outcomes);
+
+    // same fleet, same seed, same router: the gateway IS the serial
+    // dispatch loop plus streaming, so lifecycle outcomes match exactly
+    assert_eq!(live.records, cluster.records);
+    assert_eq!(live.outcomes, cluster.outcomes);
+    assert_eq!(live.assignments, cluster.assignments);
+}
+
+/// Failure injection composes with lifecycle annotations: a mid-trace
+/// crash adds `lost` to the ledger without disturbing its totality, and
+/// the crashed replica tears down every KV block.
+#[test]
+fn crash_composes_with_lifecycle_annotations() {
+    let (cfg, perf, gt) = setup();
+    let mut trace = generate_n_requests(&Dataset::sharegpt(), 10.0, 36, 83);
+    annotate_lifecycle(&mut trace, &LifecycleProfile::cancellation_heavy(), 83);
+    let at = trace[trace.len() / 2].arrival;
+    let ccfg = ClusterConfig {
+        replicas: 2,
+        router: RouterPolicy::LeastKv,
+        sim_threads: 1,
+        failures: vec![FailureSpec { replica: 0, at }],
+        ..Default::default()
+    };
+    let out = serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 19, &ccfg);
+    assert_partition(&trace, &out.records, &out.outcomes);
+    let lc = out.lifecycle_stats();
+    assert_eq!(lc.submitted(), trace.len(), "{lc:?}");
+    for o in &out.per_replica {
+        assert_eq!(o.final_kv_blocks, 0, "crash path leaked KV blocks");
+    }
+}

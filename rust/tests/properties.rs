@@ -3,6 +3,7 @@
 
 use bullet::cluster::{AutoscaleConfig, Autoscaler, ReplicaHealth, ScaleDecision};
 use bullet::config::{CalibrationConfig, GpuSpec, ModelSpec, ServingConfig};
+use bullet::engine::sim_engine::{serve_bullet, SimEngineOptions};
 use bullet::gpu::roofline::GroundTruth;
 use bullet::gpu::simulator::Simulator;
 use bullet::gpu::stream::SmMask;
@@ -17,6 +18,7 @@ use bullet::sched::{DecodeReqState, PrefillBatch, PrefillReq, SloScheduler, Syst
 use bullet::testing::content_chain;
 use bullet::testing::prop::{check, forall};
 use bullet::util::stats;
+use bullet::workload::{annotate_lifecycle, generate_n_requests, Dataset, LifecycleProfile};
 
 #[test]
 fn prop_wave_quantization_bounds_and_alignment() {
@@ -128,7 +130,7 @@ fn prop_kv_pool_never_leaks_or_double_books() {
 }
 
 /// Refcounted-sharing invariants under a randomized
-/// grow / fork / release / cache-insert / evict sequence:
+/// grow / fork / release / cache-insert / adopt / evict sequence:
 /// - `used_blocks + free_blocks == capacity_blocks` at every step;
 /// - every block's refcount equals its holder count (sequences listing
 ///   it + the prefix index), so no block is ever double-owned or leaked;
@@ -142,7 +144,7 @@ fn prop_kv_refcount_share_invariants() {
         let mut live: Vec<u64> = Vec::new();
         let mut next_id = 0u64;
         for _step in 0..g.usize_in(10, 60) {
-            match g.usize_in(0, 5) {
+            match g.usize_in(0, 6) {
                 0 | 1 => {
                     // grow a new or existing sequence
                     let id = if live.is_empty() || g.bool() {
@@ -188,6 +190,17 @@ fn prop_kv_refcount_share_invariants() {
                             (0..nb as u64).map(|b| (id << 32) | b).collect();
                         let chain = content_chain(&contents);
                         index.insert(&mut pool, &chain, &seq_blocks);
+                    }
+                }
+                5 => {
+                    // adopt a run of cached blocks as a new sequence —
+                    // the prefix-hit admission path shares, not copies
+                    let cached = index.cached_block_ids();
+                    if !cached.is_empty() {
+                        let k = g.usize_in(1, cached.len());
+                        next_id += 1;
+                        pool.adopt(next_id, &cached[..k]).map_err(|e| e.to_string())?;
+                        live.push(next_id);
                     }
                 }
                 _ => {
@@ -564,6 +577,46 @@ fn prop_fleet_capacity_monotone_in_slowdown() {
         check(
             c2 < c1 || fleet.is_empty(),
             format!("removing replica {} did not reduce capacity", gone.id),
+        )
+    });
+}
+
+/// Engine-level lifecycle leak detector: whatever mix of cancellations
+/// and deadlines a random profile stamps onto a random trace, a full
+/// Bullet run (a) partitions the trace between records and outcomes and
+/// (b) hands every KV block back to the pool by teardown.
+#[test]
+fn prop_lifecycle_runs_never_leak_kv() {
+    let cfg = ServingConfig::default();
+    let perf = PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b());
+    let gt = GroundTruth::new(GpuSpec::a100());
+    forall(113, 14, |g| {
+        let n = g.usize_in(8, 24);
+        let rate = g.f64_in(4.0, 14.0);
+        let seed = g.u64_in(0, 1 << 20);
+        let mut trace = generate_n_requests(&Dataset::sharegpt(), rate, n, seed);
+        let profile = LifecycleProfile {
+            cancel_frac: g.f64_in(0.0, 0.8),
+            cancel_mu: g.f64_in(-1.0, 1.0),
+            cancel_sigma: g.f64_in(0.2, 1.0),
+            deadline_frac: g.f64_in(0.0, 1.0),
+            deadline_mu: g.f64_in(-0.5, 1.0),
+            deadline_sigma: g.f64_in(0.2, 0.8),
+        };
+        annotate_lifecycle(&mut trace, &profile, seed ^ 0xA5A5);
+        let out = serve_bullet(&cfg, &perf, &gt, &trace, &SimEngineOptions::default());
+        check(
+            out.records.len() + out.outcomes.len() == trace.len(),
+            format!(
+                "ledger not total: {} records + {} outcomes != {} submitted",
+                out.records.len(),
+                out.outcomes.len(),
+                trace.len()
+            ),
+        )?;
+        check(
+            out.final_kv_blocks == 0,
+            format!("{} KV blocks leaked at teardown", out.final_kv_blocks),
         )
     });
 }

@@ -15,12 +15,14 @@
 //! from unit failures.  Run it locally the same way.
 
 use bullet::baselines::System;
-use bullet::cluster::{serve_cluster, ClusterConfig, RouterPolicy};
+use bullet::cluster::{serve_cluster, ClusterConfig, FailureSpec, RouterPolicy};
 use bullet::config::{GpuSpec, ModelSpec, ServingConfig};
 use bullet::gpu::roofline::GroundTruth;
 use bullet::metrics::summarize;
 use bullet::perf::PerfModel;
-use bullet::workload::{generate_bursty_trace, trace_by_name, Dataset, Request};
+use bullet::workload::{
+    annotate_lifecycle, generate_bursty_trace, trace_by_name, Dataset, LifecycleProfile, Request,
+};
 
 const WORKLOADS: [&str; 4] = ["sharegpt", "azure-code", "conversational", "bursty"];
 
@@ -97,6 +99,85 @@ fn run_matrix(engines: &[System]) {
     }
 }
 
+/// The request-lifecycle axis: each engine family runs a
+/// cancellation-heavy cell, a deadline-tight cell, and a mid-run
+/// replica-crash cell.  Every cell asserts the same bar as the base
+/// matrix — bitwise determinism across runs AND across `sim_threads`
+/// 1 vs 4 — plus lifecycle totality (`completed + cancelled + expired +
+/// lost == submitted`) and a leak-free KV pool on every replica.
+fn run_lifecycle_matrix(engines: &[System]) {
+    let perf = PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b());
+    let gt = GroundTruth::new(GpuSpec::a100());
+    let cfg = ServingConfig::default();
+    let mut seed = 9500u64;
+    for &sys in engines {
+        for cell in ["cancellation-heavy", "deadline-tight", "crash"] {
+            seed += 1;
+            let label = format!("{} x {}", sys.label(), cell);
+            // heavier than the base matrix: enough queueing that the
+            // annotated cancels and deadlines actually fire mid-run
+            let mut trace = trace_by_name("sharegpt", 10.0, 24, seed).expect("cataloged workload");
+            let mut failures = Vec::new();
+            match cell {
+                "cancellation-heavy" => {
+                    annotate_lifecycle(&mut trace, &LifecycleProfile::cancellation_heavy(), seed)
+                }
+                "deadline-tight" => {
+                    annotate_lifecycle(&mut trace, &LifecycleProfile::deadline_tight(), seed)
+                }
+                _ => failures.push(FailureSpec {
+                    replica: 0,
+                    at: trace[trace.len() / 2].arrival,
+                }),
+            }
+            let ccfg = ClusterConfig {
+                replicas: 2,
+                router: RouterPolicy::LeastKv,
+                sim_threads: 1,
+                failures,
+                ..Default::default()
+            };
+            let a = serve_cluster(sys, &cfg, &perf, &gt, &trace, seed, &ccfg);
+            let b = serve_cluster(sys, &cfg, &perf, &gt, &trace, seed, &ccfg);
+            let par = ClusterConfig { sim_threads: 4, ..ccfg.clone() };
+            let c = serve_cluster(sys, &cfg, &perf, &gt, &trace, seed, &par);
+
+            // lifecycle ledger is total, and the cell exercises its path
+            let lc = a.lifecycle_stats();
+            assert_eq!(lc.submitted(), trace.len(), "{label}: ledger not total: {lc:?}");
+            match cell {
+                "cancellation-heavy" => {
+                    assert!(lc.cancelled > 0, "{label}: nothing cancelled: {lc:?}")
+                }
+                "deadline-tight" => assert!(lc.expired > 0, "{label}: nothing expired: {lc:?}"),
+                _ => assert_eq!(
+                    a.scale_events.len(),
+                    1,
+                    "{label}: crash event missing: {:?}",
+                    a.scale_events
+                ),
+            }
+            for (i, o) in a.per_replica.iter().enumerate() {
+                assert_eq!(o.final_kv_blocks, 0, "{label}: replica {i} leaked KV");
+            }
+
+            // bitwise determinism across two runs
+            assert_eq!(a.records, b.records, "{label}: nondeterministic records");
+            assert_eq!(a.outcomes, b.outcomes, "{label}: nondeterministic outcomes");
+            assert_eq!(a.assignments, b.assignments, "{label}: nondeterministic routing");
+            // parallel/serial bitwise parity (sim_threads ∈ {1, 4})
+            assert_eq!(a.records, c.records, "{label}: parallel records diverge");
+            assert_eq!(a.outcomes, c.outcomes, "{label}: parallel outcomes diverge");
+            assert_eq!(a.assignments, c.assignments, "{label}: parallel routing diverges");
+            assert_eq!(
+                a.virtual_duration.to_bits(),
+                c.virtual_duration.to_bits(),
+                "{label}: parallel makespan diverges"
+            );
+        }
+    }
+}
+
 #[test]
 #[ignore = "scenario matrix: run via CI's scenario-matrix job (cargo test --test scenario_matrix -- --ignored)"]
 fn matrix_bullet() {
@@ -113,4 +194,22 @@ fn matrix_chunked() {
 #[ignore = "scenario matrix: run via CI's scenario-matrix job (cargo test --test scenario_matrix -- --ignored)"]
 fn matrix_nanoflow() {
     run_matrix(&[System::Nanoflow]);
+}
+
+#[test]
+#[ignore = "scenario matrix: run via CI's scenario-matrix job (cargo test --test scenario_matrix -- --ignored)"]
+fn lifecycle_bullet() {
+    run_lifecycle_matrix(&[System::Bullet]);
+}
+
+#[test]
+#[ignore = "scenario matrix: run via CI's scenario-matrix job (cargo test --test scenario_matrix -- --ignored)"]
+fn lifecycle_chunked() {
+    run_lifecycle_matrix(&[System::Sglang1024]);
+}
+
+#[test]
+#[ignore = "scenario matrix: run via CI's scenario-matrix job (cargo test --test scenario_matrix -- --ignored)"]
+fn lifecycle_nanoflow() {
+    run_lifecycle_matrix(&[System::Nanoflow]);
 }

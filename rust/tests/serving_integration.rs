@@ -5,13 +5,13 @@
 use bullet::baselines::{run_system, System};
 use bullet::config::{GpuSpec, ModelSpec, ServingConfig, SloSpec};
 use bullet::coordinator::{BuildOptions, BulletServer};
-use bullet::engine::live_engine::{serve_live, LiveRequest};
+use bullet::engine::live_engine::serve_live;
 use bullet::engine::sim_engine::{serve_bullet, SimEngineOptions};
 use bullet::gpu::roofline::GroundTruth;
 use bullet::metrics::{goodput_req_s, summarize};
 use bullet::perf::PerfModel;
 use bullet::runtime::ModelRuntime;
-use bullet::workload::{generate_n_requests, generate_sessions, Dataset, SessionProfile};
+use bullet::workload::{generate_n_requests, generate_sessions, Dataset, Request, SessionProfile};
 use std::path::PathBuf;
 
 /// The conversational stress trace shared by the prefix-reuse tests: 30
@@ -221,15 +221,19 @@ fn artifacts() -> Option<PathBuf> {
 fn live_engine_serves_real_model() {
     let Some(dir) = artifacts() else { return };
     let rt = ModelRuntime::load(&dir, 7).unwrap();
-    let trace: Vec<LiveRequest> = (0..6)
-        .map(|i| LiveRequest {
+    let prompts: Vec<Vec<i32>> = (0..6)
+        .map(|i| (3..(20 + i as i32 * 7)).collect())
+        .collect();
+    let trace: Vec<Request> = (0..6u64)
+        .map(|i| Request {
             id: i,
             arrival: i as f64 * 0.01,
-            prompt: (3..(20 + i as i32 * 7)).collect(),
+            input_len: prompts[i as usize].len(),
             output_len: 5 + (i as usize % 3),
+            ..Default::default()
         })
         .collect();
-    let (records, stats) = serve_live(rt, trace).unwrap();
+    let (records, stats) = serve_live(rt, trace, prompts).unwrap();
     assert_eq!(records.len(), 6);
     for r in &records {
         assert!(r.first_token_time >= r.prefill_start);
@@ -246,19 +250,48 @@ fn live_engine_continuous_batching_overlaps_requests() {
     let rt = ModelRuntime::load(&dir, 7).unwrap();
     // all arrive at once with long outputs: the decode batch must grow
     // beyond 1 (continuous batching), proving concurrent membership.
-    let trace: Vec<LiveRequest> = (0..4)
-        .map(|i| LiveRequest {
+    let prompts: Vec<Vec<i32>> = (0..4).map(|_| (3..30).collect()).collect();
+    let trace: Vec<Request> = (0..4u64)
+        .map(|i| Request {
             id: i,
             arrival: 0.0,
-            prompt: (3..30).collect(),
+            input_len: 27,
             output_len: 24,
+            ..Default::default()
         })
         .collect();
-    let (records, stats) = serve_live(rt, trace).unwrap();
+    let (records, stats) = serve_live(rt, trace, prompts).unwrap();
     assert_eq!(records.len(), 4);
     assert!(
         stats.max_batch_seen >= 2,
         "expected batched decode, max batch {}",
         stats.max_batch_seen
     );
+}
+
+#[test]
+fn live_engine_honors_cancellation_and_deadlines() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load(&dir, 7).unwrap();
+    let prompts: Vec<Vec<i32>> = (0..4).map(|_| (3..24).collect()).collect();
+    // 0 completes; 1 is cancelled before it ever runs; 2 expires on a
+    // deadline already in the past; 3 completes
+    let trace: Vec<Request> = (0..4u64)
+        .map(|i| Request {
+            id: i,
+            arrival: 0.0,
+            input_len: 21,
+            output_len: 6,
+            cancel_at: (i == 1).then_some(0.0),
+            deadline: (i == 2).then_some(0.0),
+            ..Default::default()
+        })
+        .collect();
+    let (records, stats) = serve_live(rt, trace, prompts).unwrap();
+    assert_eq!(stats.cancelled, 1);
+    assert_eq!(stats.expired, 1);
+    assert_eq!(records.len(), 2);
+    let mut ids: Vec<u64> = records.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![0, 3]);
 }
