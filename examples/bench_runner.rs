@@ -1,19 +1,24 @@
 //! Recorded perf trajectory: replay a saturating azure-code trace on an
 //! 8-replica cluster through BOTH simulation backends, verify bitwise
-//! parity in-run, time each, and emit the numbers as `BENCH_6.json` —
-//! the artifact CI's `bench` job uploads and gates on.
+//! parity in-run (threads AND memoization), time each, and emit the
+//! numbers as `BENCH_7.json` — the artifact CI's `bench` job uploads
+//! and gates on.
 //!
 //! What gets recorded:
 //! - `cluster.virtual_makespan_s` — deterministic simulated makespan
 //!   (bit-identical across machines for the same code), the
 //!   semantics-drift tripwire;
 //! - `cluster.serial_wall_s` / `parallel_wall_s` / `speedup` — the
-//!   tentpole's wall-clock win (serial = `--sim-threads 1`, parallel =
-//!   all cores);
+//!   parallel-backend wall-clock win (serial = `--sim-threads 1`,
+//!   parallel = all cores);
 //! - `cluster.parity` — whether the two backends produced identical
 //!   records, routing and makespan bits THIS run;
-//! - `hotpath.*_us` — perf_hotpath micro-numbers for the per-arrival
-//!   router decision on a 64-replica fleet.
+//! - `cluster.memo_parity` — whether the memoization-off reference run
+//!   (`ServingConfig::memo = false`) reproduced the same bits;
+//! - `hotpath.*` — perf_hotpath micro-numbers: the per-arrival router
+//!   decision on a 64-replica fleet, the full scheduler cycle at 512
+//!   waiting (memoized and reference), simulator step throughput, and
+//!   the calibrated-prediction memo.
 //!
 //! ```bash
 //! cargo run --release --offline --example bench_runner -- \
@@ -26,9 +31,14 @@
 
 use bullet::baselines::System;
 use bullet::cluster::{serve_cluster, ClusterConfig, Dispatcher, ReplicaSignals, RouterPolicy};
-use bullet::config::{GpuSpec, ModelSpec, ServingConfig, SloSpec};
+use bullet::config::{CalibrationConfig, GpuSpec, ModelSpec, ServingConfig, SloSpec};
 use bullet::gpu::roofline::GroundTruth;
-use bullet::perf::{CalibrationStats, PerfModel};
+use bullet::gpu::simulator::Simulator;
+use bullet::gpu::stream::SmMask;
+use bullet::gpu::{KernelDesc, OpClass};
+use bullet::perf::{CalibrationStats, OnlineCalibrator, PerfModel, PerfPredictor};
+use bullet::resource::Partition;
+use bullet::sched::{DecodeReqState, PrefillBatch, PrefillReq, SloScheduler, SystemState};
 use bullet::testing::bench::{bench, black_box};
 use bullet::util::cli::Args;
 use bullet::util::json::Value;
@@ -78,6 +88,51 @@ fn pretty(v: &Value, indent: usize, out: &mut String) {
     }
 }
 
+/// Heavy scheduler state for the cycle micro-bench: 128-request decode
+/// batch, an in-flight prefill, and `n_waiting` queued requests
+/// (mirrors `perf_hotpath` case 8 at its largest depth).
+fn loaded_state(n_waiting: u64) -> SystemState {
+    let decode: Vec<DecodeReqState> = (0..128)
+        .map(|i| DecodeReqState {
+            id: i,
+            input_len: 1024,
+            ctx_len: 1024 + (i as usize * 13) % 4096,
+            tokens_out: 10 + (i as usize % 50),
+            output_len: 200,
+            decode_elapsed: 0.5,
+        })
+        .collect();
+    let waiting: Vec<PrefillReq> = (0..n_waiting)
+        .map(|i| PrefillReq {
+            id: 500 + i,
+            arrival: i as f64 * 0.01,
+            input_len: 512 + (i as usize * 731) % 8192,
+            output_len: 128,
+            ..Default::default()
+        })
+        .collect();
+    SystemState {
+        now: 5.0,
+        prefill: Some(PrefillBatch {
+            reqs: vec![PrefillReq {
+                id: 1,
+                arrival: 4.0,
+                input_len: 6000,
+                output_len: 100,
+                ..Default::default()
+            }],
+            n_tokens: 6000,
+            layers_done: 10,
+            started_at: 4.5,
+            ..Default::default()
+        }),
+        decode,
+        waiting,
+        partition: Partition::split(&GpuSpec::a100(), 72),
+        total_layers: 32,
+    }
+}
+
 fn main() {
     let args = Args::from_env();
     let replicas = args.get_usize("replicas", 8);
@@ -85,7 +140,7 @@ fn main() {
     // saturating by construction: arrivals outpace the fleet's prefill
     // capacity, so every replica stays busy between dispatch horizons
     let rate = args.get_f64("rate", 12.0 * replicas as f64);
-    let out_path = args.get_or("out", "BENCH_6.json").to_string();
+    let out_path = args.get_or("out", "BENCH_7.json").to_string();
 
     let cfg = ServingConfig {
         slo: SloSpec::azure_code(),
@@ -112,17 +167,27 @@ fn main() {
     let parallel = serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 42, &parallel_cfg);
     let parallel_wall = t0.elapsed().as_secs_f64();
 
+    // memoization-off reference run (parallel backend): the hot-path
+    // caches must be pure accelerations — comparing against the serial
+    // memoized run checks the memo AND thread axes in one leg
+    let cfg_off = ServingConfig { memo: false, ..cfg.clone() };
+    let memo_off = serve_cluster(System::Bullet, &cfg_off, &perf, &gt, &trace, 42, &parallel_cfg);
+
     // bitwise parity is part of the recorded result, not just the test
     // suite: a bench artifact from a diverging build must say so
     let parity = serial.records == parallel.records
         && serial.assignments == parallel.assignments
         && serial.virtual_duration.to_bits() == parallel.virtual_duration.to_bits();
+    let memo_parity = serial.records == memo_off.records
+        && serial.assignments == memo_off.assignments
+        && serial.virtual_duration.to_bits() == memo_off.virtual_duration.to_bits();
     let speedup = serial_wall / parallel_wall;
     let makespan = serial.virtual_duration;
     let out_tokens: usize = serial.records.iter().map(|r| r.output_len).sum();
     println!(
         "cluster: makespan {makespan:.2} virtual s | serial {serial_wall:.2}s, \
-         parallel {parallel_wall:.2}s = {speedup:.2}x | parity {parity}"
+         parallel {parallel_wall:.2}s = {speedup:.2}x | parity {parity} | \
+         memo parity {memo_parity}"
     );
 
     // hotpath micro-numbers: the per-arrival router decision on a
@@ -142,7 +207,7 @@ fn main() {
         .collect();
     let eligible: Vec<usize> = (0..fleet.len()).collect();
     let route_req = Request { input_len: 2048, output_len: 128, ..Default::default() };
-    let mut hotpath = Vec::new();
+    let mut hotpath: Vec<(String, f64)> = Vec::new();
     for policy in [RouterPolicy::LeastKv, RouterPolicy::SloSlack] {
         let mut d = Dispatcher::new(policy);
         let r = bench(&format!("router pick_among ({}, 64 replicas)", policy.label()), 2000, || {
@@ -155,7 +220,66 @@ fn main() {
             ));
         });
         println!("{}", r.report());
-        hotpath.push((policy.label(), r.mean_us()));
+        let key = format!("router_pick_{}_us", policy.label().replace('-', "_"));
+        hotpath.push((key, r.mean_us()));
+    }
+
+    // scheduler full cycle at 512 waiting: hoisted per-cycle aggregates
+    // (memo on) vs the reference evaluator (memo off) — same decisions
+    // by construction, so only the wall time differs
+    let loaded = loaded_state(512);
+    let mk_perf = || PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b());
+    let sched_on = SloScheduler::new(cfg.clone(), mk_perf());
+    let sched_off = SloScheduler::new(cfg_off.clone(), mk_perf());
+    let r_on = bench("schedule() memo on (512 waiting)", 200, || {
+        let mut s = loaded.clone();
+        black_box(sched_on.schedule(&mut s));
+    });
+    let r_off = bench("schedule() memo off (512 waiting)", 200, || {
+        let mut s = loaded.clone();
+        black_box(sched_off.schedule(&mut s));
+    });
+    println!("{}", r_on.report());
+    println!("{}", r_off.report());
+    hotpath.push(("sched_cycle_512_us".to_string(), r_on.mean_us()));
+    hotpath.push(("sched_cycle_512_speedup".to_string(), r_off.min_s / r_on.min_s));
+
+    // simulator step throughput (2 overlapping streams, completion-driven
+    // so this exercises rate-table invalidation, not just reuse)
+    let t0 = Instant::now();
+    let mut events = 0usize;
+    let mut sim = Simulator::new(gt.clone(), 1);
+    let sa = sim.create_stream(SmMask::first(72), "a");
+    let sb = sim.create_stream(SmMask::last(36, 108), "b");
+    for _ in 0..20_000 {
+        sim.submit(sa, KernelDesc::new(OpClass::GemmMlp, 1e11, 1e8, 512));
+        sim.submit(sb, KernelDesc::new(OpClass::AttnDecode, 1e9, 5e8, 64));
+    }
+    while sim.step() {
+        events += 1;
+    }
+    let sim_rate = events as f64 / t0.elapsed().as_secs_f64();
+    println!("simulator: {events} completions = {sim_rate:.0} events/s");
+    hotpath.push(("sim_step_events_per_s".to_string(), sim_rate));
+
+    // calibrated prediction, memoized vs cold (64-probe cycle, the shape
+    // of one scheduling cycle's candidate scan)
+    let mut cal = OnlineCalibrator::new(perf.clone(), CalibrationConfig::on());
+    let obs_base = PerfModel::predict_prefill_layer(cal.offline(), 2048, 0, 72, true);
+    for _ in 0..20 {
+        cal.observe_prefill(2048, 0, 72, true, 1, obs_base * 1.4);
+    }
+    for (key, memo) in [("calib_predict_memo_us", true), ("calib_predict_cold_us", false)] {
+        cal.set_memo(memo);
+        let r = bench(&format!("calibrated predict (memo={memo}, 64 probes)"), 2000, || {
+            let mut acc = 0.0;
+            for i in 0..64usize {
+                acc += cal.predict_prefill_layer(512 + (i * 97) % 4096, 0, 12 * (1 + i % 9), true);
+            }
+            black_box(acc);
+        });
+        println!("{}", r.report());
+        hotpath.push((key.to_string(), r.mean_us()));
     }
 
     let round = |x: f64| (x * 1000.0).round() / 1000.0;
@@ -177,18 +301,13 @@ fn main() {
         ("realtime_factor", Value::Num(round(makespan / parallel_wall))),
         ("throughput_tok_s", Value::Num(round(out_tokens as f64 / makespan))),
         ("parity", Value::Bool(parity)),
+        ("memo_parity", Value::Bool(memo_parity)),
     ]);
     let micro = Value::Obj(
-        hotpath
-            .iter()
-            .map(|(label, us)| {
-                let key = format!("router_pick_{}_us", label.replace('-', "_"));
-                (key, Value::Num(round(*us)))
-            })
-            .collect(),
+        hotpath.iter().map(|(key, v)| (key.clone(), Value::Num(round(*v)))).collect(),
     );
     let doc = obj(vec![
-        ("bench_id", Value::Num(6.0)),
+        ("bench_id", Value::Num(7.0)),
         // true = produced by an actual run (CI or local); the committed
         // baseline starts false (desk-estimated) and flips true once a
         // CI artifact is promoted to baseline
@@ -204,4 +323,5 @@ fn main() {
     std::fs::write(&out_path, &text).expect("write bench artifact");
     println!("wrote {out_path}");
     assert!(parity, "parallel backend diverged from serial — bench artifact is invalid");
+    assert!(memo_parity, "memo-off reference diverged — a hot-path cache leaked into output");
 }

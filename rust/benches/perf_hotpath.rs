@@ -14,12 +14,18 @@
 //!      grids stay off the decision budget.
 //!   7. cluster-router decision latency on a 64-replica fleet — the
 //!      front-door cost every arrival pays; routing reads frozen
-//!      `ReplicaSignals` snapshots, so this is a pure argmin scan (plus
-//!      one perf-estimator probe per replica for slo-slack).
+//!      `ReplicaSignals` snapshots, so this is a pure argmin scan (the
+//!      slo-slack perf-estimator probe is memoized per (sms, contended)
+//!      key, so steady-state routing is probe-free).
+//!   8. scheduler full-cycle latency vs queue depth ({8, 64, 512}
+//!      waiting), hoisted per-cycle aggregates (`memo` on) vs the
+//!      reference evaluator — asserts ≥2x at 512 waiting.
+//!   9. simulator step throughput at {2, 8} concurrent streams.
+//!   10. calibrated prediction, memoized vs cold `OnlineCalibrator`.
 //! EXPERIMENTS.md §Perf records before/after for each optimization.
 
 use bullet::cluster::{Dispatcher, ReplicaSignals, RouterPolicy};
-use bullet::config::{GpuSpec, ModelSpec, ServingConfig};
+use bullet::config::{CalibrationConfig, GpuSpec, ModelSpec, ServingConfig};
 use bullet::coordinator::{BuildOptions, BulletServer};
 use bullet::engine::{BulletPolicy, CoreOptions, EngineCore, Features, ServingPolicy};
 use bullet::gpu::roofline::GroundTruth;
@@ -28,8 +34,7 @@ use bullet::gpu::stream::SmMask;
 use bullet::gpu::{KernelDesc, OpClass};
 use bullet::kvcache::prefix::PrefixIndex;
 use bullet::kvcache::{KvPool, BLOCK_TOKENS};
-use bullet::perf::CalibrationStats;
-use bullet::perf::PerfModel;
+use bullet::perf::{CalibrationStats, OnlineCalibrator, PerfModel, PerfPredictor};
 use bullet::resource::Partition;
 use bullet::sched::{DecodeReqState, PrefillBatch, PrefillReq, SloScheduler, SystemState};
 use bullet::testing::bench::{bench, black_box};
@@ -38,6 +43,10 @@ use bullet::workload::{generate_n_requests, Dataset, Request};
 use std::time::Instant;
 
 fn loaded_state() -> SystemState {
+    loaded_state_with(16)
+}
+
+fn loaded_state_with(n_waiting: u64) -> SystemState {
     let decode: Vec<DecodeReqState> = (0..128)
         .map(|i| DecodeReqState {
             id: i,
@@ -48,7 +57,7 @@ fn loaded_state() -> SystemState {
             decode_elapsed: 0.5,
         })
         .collect();
-    let waiting: Vec<PrefillReq> = (0..16)
+    let waiting: Vec<PrefillReq> = (0..n_waiting)
         .map(|i| PrefillReq {
             id: 500 + i,
             arrival: i as f64 * 0.01,
@@ -259,6 +268,89 @@ fn main() {
                 &perf3,
                 &cfg.slo,
             ));
+        });
+        println!("{}", r.report());
+    }
+
+    // 8. scheduler full-cycle latency vs queue depth, hoisted per-cycle
+    //    aggregates (memo on, the default) vs the reference evaluator
+    //    (memo off).  Identical decisions by construction (the parity
+    //    tests assert it bit-for-bit); this case measures the speedup
+    //    and enforces the PR-8 floor: ≥2x at 512 waiting.
+    for n_wait in [8u64, 64, 512] {
+        let st = loaded_state_with(n_wait);
+        let mk_perf = || PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b());
+        let sched_on = SloScheduler::new(cfg.clone(), mk_perf());
+        let cfg_off = ServingConfig { memo: false, ..cfg.clone() };
+        let sched_off = SloScheduler::new(cfg_off, mk_perf());
+        let r_on = bench(&format!("schedule() memo on ({n_wait} waiting)"), 200, || {
+            let mut s = st.clone();
+            black_box(sched_on.schedule(&mut s));
+        });
+        let r_off = bench(&format!("schedule() memo off ({n_wait} waiting)"), 200, || {
+            let mut s = st.clone();
+            black_box(sched_off.schedule(&mut s));
+        });
+        let speedup = r_off.min_s / r_on.min_s;
+        println!("{}", r_on.report());
+        println!("{}", r_off.report());
+        println!("scheduler cycle speedup @ {n_wait} waiting: {speedup:.2}x");
+        if n_wait == 512 {
+            assert!(
+                speedup >= 2.0,
+                "scheduler hoisting must be ≥2x at 512 waiting, got {speedup:.2}x"
+            );
+        }
+    }
+
+    // 9. simulator step throughput at {2, 8} concurrent streams:
+    //    overlapping masks, mixed compute/memory kernels, step-to-
+    //    completion driving (each step lands on a completion, so this
+    //    exercises invalidation, not steady-state reuse).
+    for n_streams in [2usize, 8] {
+        let t0 = Instant::now();
+        let mut events = 0usize;
+        let mut sim = Simulator::new(gt.clone(), 1);
+        let ids: Vec<_> = (0..n_streams)
+            .map(|i| sim.create_stream(SmMask::first(36 + (i * 9) % 72), &format!("s{i}")))
+            .collect();
+        for j in 0..(40_000 / n_streams) {
+            for (i, &s) in ids.iter().enumerate() {
+                let k = if (i + j) % 2 == 0 {
+                    KernelDesc::new(OpClass::GemmMlp, 1e11, 1e8, 512)
+                } else {
+                    KernelDesc::new(OpClass::AttnDecode, 1e9, 5e8, 64)
+                };
+                sim.submit(s, k);
+            }
+        }
+        while sim.step() {
+            events += 1;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "simulator ({n_streams} streams): {events} completions in {dt:.2}s = {:.0} events/s",
+            events as f64 / dt
+        );
+    }
+
+    // 10. calibrated prediction, memoized vs cold.  Cells are warmed
+    //     first so blend() does real work; the 64-shape probe set mimics
+    //     one scheduling cycle's candidate scan (few distinct shapes,
+    //     many repeats).
+    let mut cal = OnlineCalibrator::new(perf3.clone(), CalibrationConfig::on());
+    let obs_base = PerfModel::predict_prefill_layer(cal.offline(), 2048, 0, 72, true);
+    for _ in 0..20 {
+        cal.observe_prefill(2048, 0, 72, true, 1, obs_base * 1.4);
+    }
+    for (label, memo) in [("memoized", true), ("cold", false)] {
+        cal.set_memo(memo);
+        let r = bench(&format!("calibrated predict ({label}, 64-probe cycle)"), 5000, || {
+            let mut acc = 0.0;
+            for i in 0..64usize {
+                acc += cal.predict_prefill_layer(512 + (i * 97) % 4096, 0, 12 * (1 + i % 9), true);
+            }
+            black_box(acc);
         });
         println!("{}", r.report());
     }

@@ -60,6 +60,7 @@ use crate::metrics::timeline::{ScaleAction, ScaleEvent};
 use crate::metrics::{merge_outcomes, merge_records, LifecycleStats, OutcomeRecord, RequestRecord};
 use crate::perf::{CalibrationStats, PerfModel, PerfPredictor};
 use crate::sched::policy::service_capacity_tokens_per_s;
+use crate::util::memo::MemoCounters;
 use crate::workload::Request;
 use std::sync::mpsc;
 use std::thread;
@@ -338,10 +339,22 @@ impl ReplicaSignals {
     /// been launched, while the slowdown aggregates every observed
     /// cell.  Exactly 1.0 for calibration-free or unobserved replicas.
     pub fn estimated_ttft(&self, req: &Request, perf: &PerfModel) -> f64 {
+        self.estimated_ttft_with(self.probe_per_token(perf), req)
+    }
+
+    /// The slo-slack router's per-prompt-token probe: one fixed-shape
+    /// prefill-layer prediction, normalized per token.  Depends only on
+    /// `(num_sms, decode_batch > 0)`, which is exactly what the
+    /// [`crate::cluster::router::Dispatcher`] memoizes across arrivals.
+    pub fn probe_per_token(&self, perf: &PerfModel) -> f64 {
         let contended = self.decode_batch > 0;
         let reference = 2048usize;
-        let per_token =
-            perf.predict_prefill_layer(reference, 0, self.num_sms, contended) / reference as f64;
+        perf.predict_prefill_layer(reference, 0, self.num_sms, contended) / reference as f64
+    }
+
+    /// [`ReplicaSignals::estimated_ttft`] with the probe already in hand
+    /// (the dispatcher's memoized path).  Same arithmetic, same order.
+    pub fn estimated_ttft_with(&self, per_token: f64, req: &Request) -> f64 {
         let tokens = (self.backlog_tokens + req.input_len) as f64;
         tokens * per_token * self.n_layers as f64 * self.slowdown
     }
@@ -388,6 +401,9 @@ pub struct ClusterOutput {
     /// is beating `max_replicas × virtual_duration` while also beating
     /// the fixed fleet's latency.
     pub replica_steps: f64,
+    /// slo-slack probe-memo counters (observability only — never part
+    /// of any bit-parity comparison; all zero for other routers).
+    pub router_memo: MemoCounters,
 }
 
 impl ClusterOutput {
@@ -422,6 +438,24 @@ impl ClusterOutput {
         let mut total = CalibrationStats::default();
         for o in &self.per_replica {
             total.merge(&o.calibration);
+        }
+        total
+    }
+
+    /// Cluster-wide simulator rate-table memo counters (summed).
+    pub fn rate_memo_stats(&self) -> MemoCounters {
+        let mut total = MemoCounters::default();
+        for o in &self.per_replica {
+            total.merge(&o.rate_memo);
+        }
+        total
+    }
+
+    /// Cluster-wide calibrated-prediction memo counters (summed).
+    pub fn predict_memo_stats(&self) -> MemoCounters {
+        let mut total = MemoCounters::default();
+        for o in &self.per_replica {
+            total.merge(&o.predict_memo);
         }
         total
     }
@@ -870,6 +904,7 @@ fn run_dispatch<F: FleetBackend>(
     let autoscaled = cluster.autoscale.enabled;
     let init = fleet.replica_count();
     let mut dispatcher = Dispatcher::new(cluster.router);
+    dispatcher.set_memo(cfg.memo);
     let mut scaler = autoscaled.then(|| Autoscaler::new(cluster.autoscale.clone()));
     let mut spawned_at: Vec<f64> = vec![0.0; init];
     let mut retired_at: Vec<Option<f64>> = vec![None; init];
@@ -1013,6 +1048,7 @@ fn run_dispatch<F: FleetBackend>(
         virtual_duration,
         scale_events,
         replica_steps,
+        router_memo: dispatcher.probe_memo_counters(),
     }
 }
 

@@ -25,6 +25,7 @@
 use crate::cluster::ReplicaSignals;
 use crate::config::SloSpec;
 use crate::perf::PerfModel;
+use crate::util::memo::MemoCounters;
 use crate::workload::Request;
 use std::collections::BTreeMap;
 
@@ -74,6 +75,15 @@ pub struct Dispatcher {
     rr_next: usize,
     /// prefix-affinity stickiness: session id → replica.
     session_map: BTreeMap<u64, usize>,
+    /// Hot-path memoization toggle ([`crate::config::ServingConfig::memo`]).
+    memo: bool,
+    /// slo-slack probe memo: the per-prompt-token probe depends only on
+    /// `(num_sms, contended)` against the FROZEN offline model every
+    /// call site passes, so one probe per distinct key serves the whole
+    /// run — no invalidation needed.  (A caller that swapped `perf`
+    /// between calls would have to toggle the memo off.)
+    probe_memo: BTreeMap<(usize, bool), f64>,
+    probe_counters: MemoCounters,
 }
 
 impl Dispatcher {
@@ -82,7 +92,23 @@ impl Dispatcher {
             policy,
             rr_next: 0,
             session_map: BTreeMap::new(),
+            memo: true,
+            probe_memo: BTreeMap::new(),
+            probe_counters: MemoCounters::default(),
         }
+    }
+
+    /// Toggle probe memoization (reference path when off; bit-identical
+    /// by construction — a hit replays the stored probe value, which is
+    /// the exact f64 the reference path computes).
+    pub fn set_memo(&mut self, on: bool) {
+        self.memo = on;
+        self.probe_memo.clear();
+    }
+
+    /// Hit/miss counters for the slo-slack probe memo.
+    pub fn probe_memo_counters(&self) -> MemoCounters {
+        self.probe_counters
     }
 
     pub fn policy(&self) -> RouterPolicy {
@@ -127,8 +153,28 @@ impl Dispatcher {
                 // max slack == min estimated TTFT for a single request,
                 // but keep the slack form: it is what a multi-model
                 // front-door would compare across heterogeneous SLOs.
+                let memo = self.memo;
+                let probe_memo = &mut self.probe_memo;
+                let counters = &mut self.probe_counters;
                 argmin_among(signals, eligible, |r| {
-                    let est = r.estimated_ttft(req, perf);
+                    let per_token = if memo {
+                        let key = (r.num_sms, r.decode_batch > 0);
+                        match probe_memo.get(&key) {
+                            Some(&v) => {
+                                counters.hits += 1;
+                                v
+                            }
+                            None => {
+                                counters.misses += 1;
+                                let v = r.probe_per_token(perf);
+                                probe_memo.insert(key, v);
+                                v
+                            }
+                        }
+                    } else {
+                        r.probe_per_token(perf)
+                    };
+                    let est = r.estimated_ttft_with(per_token, req);
                     -(slo.ttft_budget(req.input_len) - est)
                 })
             }
@@ -164,11 +210,12 @@ impl Dispatcher {
 }
 
 /// Eligible index minimizing `key` (first wins ties; `total_cmp` keeps
-/// degenerate estimates from panicking the dispatcher).
+/// degenerate estimates from panicking the dispatcher).  `FnMut` so
+/// memoizing keys can update their cache as they scan.
 fn argmin_among(
     signals: &[ReplicaSignals],
     eligible: &[usize],
-    key: impl Fn(&ReplicaSignals) -> f64,
+    mut key: impl FnMut(&ReplicaSignals) -> f64,
 ) -> usize {
     let mut best = eligible[0];
     let mut best_key = key(&signals[best]);

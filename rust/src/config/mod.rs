@@ -378,6 +378,12 @@ pub struct ServingConfig {
     /// Online performance-model calibration (disabled by default: the
     /// scheduler consults the offline model unchanged).
     pub calibration: CalibrationConfig,
+    /// Hot-path memoization (simulator rate table, scheduler per-cycle
+    /// aggregates, calibrated-prediction memo, router probe memo).  On
+    /// by default; off runs the reference recomputing paths.  Both legs
+    /// are bit-identical — this flag exists so the parity tests can say
+    /// so, and so a suspected memo bug can be ruled out in the field.
+    pub memo: bool,
 }
 
 impl Default for ServingConfig {
@@ -400,6 +406,7 @@ impl Default for ServingConfig {
             allow_sm_overlap: true,
             prefix_cache: false,
             calibration: CalibrationConfig::default(),
+            memo: true,
         }
     }
 }
@@ -449,6 +456,9 @@ impl ServingConfig {
         }
         if let Some(x) = v.get("calibration").and_then(Value::as_bool) {
             cfg.calibration.enabled = x;
+        }
+        if let Some(x) = v.get("memo").and_then(Value::as_bool) {
+            cfg.memo = x;
         }
         cfg
     }
@@ -538,6 +548,13 @@ mod tests {
         assert!(ServingConfig::from_json(&v).calibration.enabled);
         let on = CalibrationConfig::on();
         assert!(on.enabled && on.ratio_min > 0.0 && on.ratio_max.is_finite());
+    }
+
+    #[test]
+    fn memo_default_on_and_json_toggle() {
+        assert!(ServingConfig::default().memo);
+        let v = json::parse(r#"{"memo": false}"#).unwrap();
+        assert!(!ServingConfig::from_json(&v).memo);
     }
 
     #[test]

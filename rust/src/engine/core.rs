@@ -59,6 +59,7 @@ use crate::metrics::timeline::{ScaleEvent, Timeline, TimelineSample};
 use crate::metrics::{OutcomeRecord, RequestOutcome, RequestRecord};
 use crate::perf::{CalibrationStats, PerfPredictor};
 use crate::resource::ResourceManager;
+use crate::util::memo::MemoCounters;
 use crate::sched::{
     deadline_should_drop, ActiveDecode, DecodeReqState, PrefillBatch, PrefillProgress, PrefillReq,
     SystemState,
@@ -122,6 +123,14 @@ pub struct EngineOutput {
     /// single-GPU and fixed-fleet runs.  The same events also ride
     /// `timeline.events()`.
     pub scale_events: Vec<ScaleEvent>,
+    /// Simulator rate-table memo counters (hot-path observability only —
+    /// never part of any bit-parity comparison).  The hit rate is the
+    /// fraction of steps that reused the cached per-kernel rate table.
+    pub rate_memo: MemoCounters,
+    /// Calibrated-prediction memo counters from the policy's
+    /// [`crate::perf::OnlineCalibrator`] (zero for calibration-free
+    /// policies; observability only).
+    pub predict_memo: MemoCounters,
 }
 
 /// Run-level counters policies may bump.
@@ -132,6 +141,10 @@ pub struct CoreStats {
     /// each observation (the core surfaces them in [`EngineOutput`] and
     /// the timeline).
     pub calib: CalibrationStats,
+    /// Calibrated-prediction memo counters, synced by calibrating
+    /// policies alongside `calib` (observability only — excluded from
+    /// every parity comparison).
+    pub predict_memo: MemoCounters,
 }
 
 /// Core construction options (engine-agnostic subset of the old
@@ -280,6 +293,7 @@ impl EngineCore {
     ) -> EngineCore {
         debug_assert!(trace.windows(2).all(|w| w[0].arrival <= w[1].arrival));
         let mut sim = Simulator::new(gt, opts.seed);
+        sim.set_memo(cfg.memo);
         let rm = ResourceManager::new(&mut sim, &cfg.gpu);
         let kv = KvPool::new(cfg.kv_capacity_tokens);
         let prefix = cfg.prefix_cache.then(PrefixIndex::new);
@@ -980,6 +994,8 @@ impl EngineCore {
             prefix,
             calibration: self.stats.calib,
             scale_events: Vec::new(),
+            rate_memo: self.sim.rate_memo_counters(),
+            predict_memo: self.stats.predict_memo,
             records: self.records,
             outcomes: self.outcomes,
             timeline: self.timeline,

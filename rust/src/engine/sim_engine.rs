@@ -173,7 +173,8 @@ pub struct BulletPolicy {
 
 impl BulletPolicy {
     pub fn new(cfg: &ServingConfig, perf: &PerfModel, features: Features) -> BulletPolicy {
-        let calibrator = OnlineCalibrator::new(perf.clone(), cfg.calibration.clone());
+        let mut calibrator = OnlineCalibrator::new(perf.clone(), cfg.calibration.clone());
+        calibrator.set_memo(cfg.memo);
         BulletPolicy {
             sched: SloScheduler::new(cfg.clone(), calibrator),
             features,
@@ -377,6 +378,9 @@ impl ServingPolicy for BulletPolicy {
         if core.lane_idle(Lane::Decode) {
             self.decode_cycle(core);
         }
+        // keep the memo observability counters current (never parity-
+        // compared; syncing costs one Copy)
+        core.stats.predict_memo = self.sched.perf.memo_counters();
     }
 
     fn on_drain(&mut self, lane: Lane, core: &mut EngineCore) {
@@ -416,6 +420,7 @@ impl ServingPolicy for BulletPolicy {
                 core.advance_decode_token()
             }
         }
+        core.stats.predict_memo = self.sched.perf.memo_counters();
     }
 
     fn on_stall(&mut self, _core: &mut EngineCore) -> bool {

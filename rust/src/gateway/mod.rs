@@ -156,6 +156,7 @@ pub fn serve_gateway<C: GatewayClock>(
         .collect();
     let mut signals: Vec<ReplicaSignals> = replicas.iter().map(Replica::signals).collect();
     let mut dispatcher = Dispatcher::new(gw.router);
+    dispatcher.set_memo(cfg.memo);
     let mut eligible: Vec<usize> = (0..n).collect();
     let mut dead: Vec<bool> = vec![false; n];
 

@@ -20,6 +20,7 @@ use crate::config::GpuSpec;
 use crate::gpu::kernel::KernelDesc;
 use crate::gpu::roofline::GroundTruth;
 use crate::gpu::stream::{SmMask, Stream, StreamId};
+use crate::util::memo::MemoCounters;
 use crate::util::rng::Rng;
 use std::collections::VecDeque;
 
@@ -95,6 +96,49 @@ struct StreamState {
     running: Option<Running>,
 }
 
+/// Solo-time row for one running kernel (first pass of the rate
+/// computation); kept as reusable scratch in [`RateCache`].
+#[derive(Debug, Clone, Copy)]
+struct SoloRow {
+    idx: usize,
+    tc: f64,
+    tb: f64,
+    noise: f64,
+    flops: f64,
+    bytes: f64,
+}
+
+/// Memoized rate table plus the scratch buffers behind it.
+///
+/// The table is a pure function of the *running set* (which streams
+/// have a kernel in flight, their masks and launch noise) and — under a
+/// drift regime — of the clock.  It is invalidated whenever a kernel
+/// starts ([`Simulator::try_start`]), finishes (`advance_by`), or a
+/// mask changes ([`Simulator::set_stream_mask`]); between those events
+/// `step`/`run_for` reuse it, making steady-state stepping O(1) and
+/// allocation-free instead of an O(running²) mask-overlap rescan with
+/// fresh `Vec`s per step.  `busy_sms` folds the old double scan
+/// (`rates()` + `busy_sms()` both walked `effective_sms`) into one.
+#[derive(Debug, Default)]
+struct RateCache {
+    /// (stream idx, rate, flops_rate, bytes_rate) — same rows in the
+    /// same order as the reference recomputation.
+    rates: Vec<(usize, f64, f64, f64)>,
+    /// Sum of effective SMs over running kernels.
+    busy_sms: f64,
+    valid: bool,
+    /// Clock the table was computed at; only consulted under a drift
+    /// regime, where rates are time-varying.
+    at_clock: f64,
+    counters: MemoCounters,
+    // reusable scratch for the recomputation
+    running: Vec<usize>,
+    eff: Vec<(usize, f64)>,
+    solo: Vec<SoloRow>,
+    demands: Vec<f64>,
+    finished: Vec<usize>,
+}
+
 /// The simulator.
 pub struct Simulator {
     pub gt: GroundTruth,
@@ -108,6 +152,11 @@ pub struct Simulator {
     completions: Vec<Completion>,
     window: UtilSample,
     total: UtilSample,
+    /// Reuse the rate table between invalidating events (default on).
+    /// Off recomputes every step — the reference path; both legs are
+    /// bit-identical because the recomputation is the same code.
+    memo: bool,
+    cache: RateCache,
 }
 
 impl Simulator {
@@ -135,7 +184,22 @@ impl Simulator {
             completions: Vec::new(),
             window: UtilSample::default(),
             total: UtilSample::default(),
+            memo: true,
+            cache: RateCache::default(),
         }
+    }
+
+    /// Toggle rate-table memoization (`ServingConfig.memo`).  Off runs
+    /// the reference recompute-every-step path; output is bit-identical
+    /// either way.
+    pub fn set_memo(&mut self, on: bool) {
+        self.memo = on;
+        self.invalidate_rates();
+    }
+
+    /// Rate-table reuse counters (hits = steps served from the cache).
+    pub fn rate_memo_counters(&self) -> MemoCounters {
+        self.cache.counters
     }
 
     /// Time-varying COMPUTE-side slowdown of the drift regime at virtual
@@ -197,6 +261,7 @@ impl Simulator {
     /// Applies to kernels *not yet started*.
     pub fn set_stream_mask(&mut self, id: StreamId, mask: SmMask) {
         self.streams[id.0].stream.mask = mask;
+        self.invalidate_rates();
     }
 
     pub fn stream_mask(&self, id: StreamId) -> SmMask {
@@ -233,7 +298,9 @@ impl Simulator {
             .all(|s| s.queue.is_empty() && s.running.is_none())
     }
 
-    /// Drain accumulated completion records.
+    /// Drain accumulated completion records.  Draining an empty buffer
+    /// is allocation-free (`mem::take` of an empty `Vec` never touches
+    /// the heap), so idle polling costs nothing.
     pub fn take_completions(&mut self) -> Vec<Completion> {
         std::mem::take(&mut self.completions)
     }
@@ -262,71 +329,94 @@ impl Simulator {
                     remaining: 1.0,
                     noise,
                 });
+                self.invalidate_rates();
             }
         }
     }
 
-    /// Effective SM count for each running kernel given mask overlaps.
-    fn effective_sms(&self) -> Vec<(usize, f64)> {
-        // (stream index, effective SMs)
-        let running: Vec<usize> = self
-            .streams
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| s.running.is_some())
-            .map(|(i, _)| i)
-            .collect();
-        let mut out = Vec::with_capacity(running.len());
-        for &i in &running {
-            let mi = self.streams[i].stream.mask;
+    /// Drop the memoized rate table (the running set or a mask changed).
+    fn invalidate_rates(&mut self) {
+        if self.cache.valid {
+            self.cache.valid = false;
+            self.cache.counters.invalidations += 1;
+        }
+    }
+
+    /// Ensure `self.cache` holds the rate table for the current state.
+    /// Reuses the memoized table when nothing invalidated it (and, under
+    /// a drift regime, only at the exact clock it was computed for —
+    /// drift makes rates time-varying, so any clock motion recomputes).
+    fn refresh_rates(&mut self) {
+        let fresh = self.memo
+            && self.cache.valid
+            && (self.gt.drift.is_none() || self.cache.at_clock.to_bits() == self.clock.to_bits());
+        if fresh {
+            self.cache.counters.hits += 1;
+            return;
+        }
+        self.cache.counters.misses += 1;
+        self.compute_rates();
+        self.cache.valid = true;
+        self.cache.at_clock = self.clock;
+    }
+
+    /// Recompute the rate table into `self.cache` (scratch buffers, no
+    /// allocation in steady state).  The arithmetic — every operation
+    /// and its order — is exactly the pre-memo `effective_sms()` +
+    /// `rates()` code, so a recompute-every-step run (memo off) and a
+    /// memoized run produce bit-identical trajectories.
+    fn compute_rates(&mut self) {
+        // Drift: throttle/co-tenant stretch the COMPUTE term only; the
+        // device lottery scales the whole kernel.  Both are exactly 1.0
+        // with drift off, so multiplication is bit-identical.
+        let drift_c = if self.gt.drift.is_none() {
+            1.0
+        } else {
+            self.drift_compute_factor_at(self.clock)
+        };
+        let run_noise = self.run_noise;
+        let lottery = self.lottery;
+        let Simulator { gt, streams, cache, .. } = self;
+        // Effective SM count for each running kernel given mask overlaps.
+        cache.running.clear();
+        cache.running.extend(
+            streams.iter().enumerate().filter(|(_, s)| s.running.is_some()).map(|(i, _)| i),
+        );
+        cache.eff.clear();
+        for &i in &cache.running {
+            let mi = streams[i].stream.mask;
             // count sharers per SM: exclusive SMs count 1, shared count 1/n.
             let mut eff = mi.count() as f64;
-            for &j in &running {
+            for &j in &cache.running {
                 if j == i {
                     continue;
                 }
-                let shared = mi.overlap(&self.streams[j].stream.mask) as f64;
+                let shared = mi.overlap(&streams[j].stream.mask) as f64;
                 // each shared SM is split; subtract the lost half (pairwise
                 // approximation — exact for the two-phase case we model).
                 eff -= shared * 0.5;
             }
-            out.push((i, eff.max(1.0)));
+            cache.eff.push((i, eff.max(1.0)));
         }
-        out
-    }
-
-    /// Per-running-kernel progress rates (fraction of kernel work per
-    /// second) under the current contention state.
-    fn rates(&self) -> Vec<(usize, f64, f64, f64)> {
-        // (stream idx, rate, flops_rate, bytes_rate)
-        let eff = self.effective_sms();
-        if eff.is_empty() {
-            return Vec::new();
+        cache.busy_sms = cache.eff.iter().map(|(_, s)| s).sum();
+        cache.rates.clear();
+        if cache.eff.is_empty() {
+            return;
         }
         // First pass: solo times on effective SMs.
-        struct Tmp {
-            idx: usize,
-            tc: f64,
-            tb: f64,
-            noise: f64,
-            flops: f64,
-            bytes: f64,
-            sms: f64,
-        }
-        let mut tmp = Vec::with_capacity(eff.len());
-        for &(i, sms) in &eff {
-            let r = self.streams[i].running.as_ref().unwrap();
+        cache.solo.clear();
+        for &(i, sms) in &cache.eff {
+            let r = streams[i].running.as_ref().unwrap();
             let sms_i = sms.round().max(1.0) as usize;
-            let tc = self.gt.compute_time(&r.kernel, sms_i) + self.gt.gpu.launch_overhead;
-            let tb = self.gt.memory_time(&r.kernel, sms_i);
-            tmp.push(Tmp {
+            let tc = gt.compute_time(&r.kernel, sms_i) + gt.gpu.launch_overhead;
+            let tb = gt.memory_time(&r.kernel, sms_i);
+            cache.solo.push(SoloRow {
                 idx: i,
                 tc,
                 tb,
                 noise: r.noise,
                 flops: r.kernel.flops,
                 bytes: r.kernel.bytes,
-                sms,
             });
         }
         // Bandwidth contention: (a) hard cap — if aggregate demand exceeds
@@ -336,60 +426,41 @@ impl Simulator {
         // partition camping): the memory term inflates by
         // `1 + GAMMA * other_demand / peak`.
         const GAMMA: f64 = 0.35;
-        let demands: Vec<f64> = tmp
-            .iter()
-            .map(|t| {
-                let solo = t.tc.max(t.tb);
-                if solo > 0.0 {
-                    t.bytes / solo
-                } else {
-                    0.0
-                }
-            })
-            .collect();
-        let total_demand: f64 = demands.iter().sum();
-        let bw_scale = if total_demand > self.gt.gpu.peak_bandwidth {
-            self.gt.gpu.peak_bandwidth / total_demand
+        cache.demands.clear();
+        cache.demands.extend(cache.solo.iter().map(|t| {
+            let solo = t.tc.max(t.tb);
+            if solo > 0.0 {
+                t.bytes / solo
+            } else {
+                0.0
+            }
+        }));
+        let total_demand: f64 = cache.demands.iter().sum();
+        let bw_scale = if total_demand > gt.gpu.peak_bandwidth {
+            gt.gpu.peak_bandwidth / total_demand
         } else {
             1.0
         };
-        // Drift: throttle/co-tenant stretch the COMPUTE term only; the
-        // device lottery scales the whole kernel.  Both are exactly 1.0
-        // with drift off, so multiplication is bit-identical.
-        let drift_c = if self.gt.drift.is_none() {
-            1.0
-        } else {
-            self.drift_compute_factor_at(self.clock)
-        };
-        tmp.iter()
-            .zip(&demands)
-            .map(|(t, &demand)| {
-                let other = (total_demand - demand).max(0.0);
-                let interference = 1.0 + GAMMA * other / self.gt.gpu.peak_bandwidth;
-                let tb = t.tb * interference / bw_scale;
-                let t_eff = ((t.tc * drift_c).max(tb)) * t.noise * self.run_noise * self.lottery;
-                let rate = if t_eff > 0.0 { 1.0 / t_eff } else { f64::INFINITY };
-                (
-                    t.idx,
-                    rate,
-                    t.flops * rate,
-                    t.bytes * rate,
-                )
-            })
-            .map(|(i, r, fr, br)| (i, r, fr, br))
-            .collect()
-    }
-
-    fn busy_sms(&self) -> f64 {
-        self.effective_sms().iter().map(|(_, s)| s).sum()
+        cache.rates.extend(cache.solo.iter().zip(&cache.demands).map(|(t, &demand)| {
+            let other = (total_demand - demand).max(0.0);
+            let interference = 1.0 + GAMMA * other / gt.gpu.peak_bandwidth;
+            let tb = t.tb * interference / bw_scale;
+            let t_eff = ((t.tc * drift_c).max(tb)) * t.noise * run_noise * lottery;
+            let rate = if t_eff > 0.0 { 1.0 / t_eff } else { f64::INFINITY };
+            (t.idx, rate, t.flops * rate, t.bytes * rate)
+        }));
     }
 
     /// Advance to the next kernel completion (or return false if idle).
     pub fn step(&mut self) -> bool {
-        let rates = self.rates();
-        if rates.is_empty() {
+        self.refresh_rates();
+        if self.cache.rates.is_empty() {
             return false;
         }
+        // Borrow dance: lend the table out of the cache for the advance,
+        // then put the buffer back (capacity retained; the `valid` flag,
+        // not the buffer, decides reuse).
+        let rates = std::mem::take(&mut self.cache.rates);
         // Time until first completion.
         let mut dt = f64::INFINITY;
         for &(i, rate, _, _) in &rates {
@@ -401,6 +472,7 @@ impl Simulator {
         assert!(dt.is_finite() && dt >= 0.0, "simulator stuck: dt={dt}");
         let dt = self.cap_at_step_boundary(dt);
         self.advance_by(dt, &rates);
+        self.cache.rates = rates;
         true
     }
 
@@ -409,13 +481,14 @@ impl Simulator {
     pub fn run_for(&mut self, dt_target: f64) {
         let deadline = self.clock + dt_target;
         while self.clock < deadline - 1e-15 {
-            let rates = self.rates();
-            if rates.is_empty() {
+            self.refresh_rates();
+            if self.cache.rates.is_empty() {
                 // idle: jump straight to deadline
                 self.clock = deadline;
                 self.window.dt += 0.0;
                 return;
             }
+            let rates = std::mem::take(&mut self.cache.rates);
             let mut dt = deadline - self.clock;
             for &(i, rate, _, _) in &rates {
                 let rem = self.streams[i].running.as_ref().unwrap().remaining;
@@ -425,6 +498,7 @@ impl Simulator {
             }
             let dt = self.cap_at_step_boundary(dt);
             self.advance_by(dt, &rates);
+            self.cache.rates = rates;
         }
     }
 
@@ -458,10 +532,14 @@ impl Simulator {
     }
 
     fn advance_by(&mut self, dt: f64, rates: &[(usize, f64, f64, f64)]) {
-        let busy = self.busy_sms();
+        // The fold of effective SMs was computed alongside the rate
+        // table (same pre-advance state the old separate `busy_sms()`
+        // scan read), so the double scan per step is gone.
+        let busy = self.cache.busy_sms;
         let mut flops = 0.0;
         let mut bytes = 0.0;
-        let mut finished: Vec<usize> = Vec::new();
+        let mut finished = std::mem::take(&mut self.cache.finished);
+        finished.clear();
         for &(i, rate, frate, brate) in rates {
             let r = self.streams[i].running.as_mut().unwrap();
             let progress = rate * dt;
@@ -481,7 +559,10 @@ impl Simulator {
         };
         self.window.merge(&sample);
         self.total.merge(&sample);
-        for i in finished {
+        if !finished.is_empty() {
+            self.invalidate_rates();
+        }
+        for &i in &finished {
             let r = self.streams[i].running.take().unwrap();
             self.completions.push(Completion {
                 stream: StreamId(i),
@@ -491,6 +572,8 @@ impl Simulator {
             });
             self.try_start(i);
         }
+        finished.clear();
+        self.cache.finished = finished;
     }
 }
 
@@ -832,6 +915,76 @@ mod tests {
             .windows(2)
             .any(|w| (w[0] - w[1]).abs() / w[0] > 1e-6);
         assert!(distinct, "device lottery produced identical devices: {draws:?}");
+    }
+
+    #[test]
+    fn memo_off_is_bit_identical_across_drift_regimes() {
+        use crate::config::DriftSpec;
+        // Overlapping masks, launch noise, a mid-run remask, mixed
+        // step/run_for driving — the memoized run must reproduce the
+        // recompute-every-step run bit for bit under every regime.
+        let regimes: [(&str, DriftSpec); 4] = [
+            ("none", DriftSpec::none()),
+            ("throttle", DriftSpec::throttle()),
+            ("step", DriftSpec { step_at_s: 0.002, step_factor: 1.8, ..DriftSpec::none() }),
+            ("storm", DriftSpec::storm()),
+        ];
+        for (label, drift) in regimes {
+            let gt = GroundTruth::new(GpuSpec::a100()).with_drift(drift);
+            let run = |memo: bool| {
+                let mut s = Simulator::new(gt.clone(), 11);
+                s.set_memo(memo);
+                let a = s.create_stream(SmMask::first(72), "a");
+                let b = s.create_stream(SmMask::last(54, 108), "b");
+                for i in 0..6 {
+                    s.submit(a, gemm(5e11 + i as f64 * 1e10));
+                    s.submit(b, mem_kernel(2e9));
+                }
+                s.run_for(0.001);
+                s.set_stream_mask(a, SmMask::first(54));
+                s.run_until_idle();
+                let ends: Vec<u64> =
+                    s.take_completions().iter().map(|c| c.end.to_bits()).collect();
+                let u = s.total_util();
+                (
+                    ends,
+                    u.flops.to_bits(),
+                    u.bytes.to_bits(),
+                    u.sm_busy.to_bits(),
+                    s.now().to_bits(),
+                )
+            };
+            assert_eq!(run(true), run(false), "memo parity broke under drift regime {label}");
+        }
+    }
+
+    #[test]
+    fn rate_table_reused_between_completions() {
+        let mut s = sim();
+        let a = s.create_stream(SmMask::first(54), "a");
+        let b = s.create_stream(SmMask::last(54, 108), "b");
+        s.submit(a, gemm(2e12));
+        s.submit(b, mem_kernel(4e9));
+        // fine-grained slicing: many segments share one rate table
+        for _ in 0..200 {
+            s.run_for(1e-5);
+        }
+        s.run_until_idle();
+        let c = s.rate_memo_counters();
+        assert!(c.hits > c.misses, "expected steady-state reuse, got {c:?}");
+        assert!(c.invalidations > 0, "completions must invalidate: {c:?}");
+        // memo off: every refresh recomputes (counted as a miss)
+        let mut s2 = sim();
+        s2.set_memo(false);
+        let st = s2.create_stream(SmMask::first(108), "x");
+        s2.submit(st, gemm(1e12));
+        for _ in 0..50 {
+            s2.run_for(1e-5);
+        }
+        s2.run_until_idle();
+        let c2 = s2.rate_memo_counters();
+        assert_eq!(c2.hits, 0, "memo off must never hit: {c2:?}");
+        assert!(c2.misses >= 50);
     }
 
     #[test]

@@ -60,7 +60,24 @@
 //! `BulletServer::serve_cluster`, the CLI (`--replicas N --router
 //! <policy> --sim-threads N`) and `examples/cluster_scaling.rs`;
 //! `examples/bench_runner.rs` records the perf trajectory
-//! (`BENCH_6.json`, gated by CI's `bench` job).
+//! (`BENCH_7.json`, gated by CI's `bench` job).
+//!
+//! **Hot-path caches** (`ServingConfig::memo`, default on).  Three
+//! memoizations keep per-event work off the serving fast path: the
+//! simulator's rate table ([`gpu::simulator`] — per-stream rates are a
+//! pure function of active kernels, masks and the drift clock, so
+//! steady-state stepping reuses one cached table, allocation-free),
+//! the scheduler's hoisted per-cycle aggregates ([`sched::policy`] —
+//! candidate-independent per-request terms computed once per cycle),
+//! and the calibrated-prediction / router-probe memos ([`perf`],
+//! [`cluster`] — predictions keyed behind a calibration epoch, the
+//! slo-slack probe keyed on `(num_sms, contended)` against the frozen
+//! fleet model).  All are pure accelerations: `--memo off` disables
+//! every one and the parity suites (`tests/parallel_parity.rs`,
+//! `tests/scenario_matrix.rs`) assert bit-identical output; hit/miss/
+//! invalidation counters surface as observability (never
+//! parity-compared), and `benches/perf_hotpath.rs` cases 8–10 record
+//! the wins.
 //!
 //! **Performance modeling: offline profile → online calibration**
 //! ([`perf`]).  Prediction is consumed through the

@@ -27,6 +27,7 @@ use bullet::metrics::{summarize, RunSummary};
 use bullet::perf::CalibrationStats;
 use bullet::runtime::{ModelMeta, ModelRuntime};
 use bullet::util::cli::Args;
+use bullet::util::memo::MemoCounters;
 use bullet::util::tbl::{f, ms, Table};
 use bullet::workload::{trace_by_name, Request};
 use std::path::PathBuf;
@@ -85,7 +86,12 @@ serve flags:  --system bullet|vllm-1024|sglang-1024|sglang-2048|nanoflow
               --fail-replica ID@T     (with --live: crash replica ID at
                                        T seconds; sessions re-home, cold
                                        orphans re-queue, in-flight work
-                                       is counted lost)";
+                                       is counted lost)
+              --memo on|off           (hot-path memoization: rate-table,
+                                       predictor and router-probe caches;
+                                       off runs the reference paths —
+                                       results are bit-identical either
+                                       way)";
 
 /// The metric rows every serve table shares (single-GPU and cluster).
 fn summary_rows(t: &mut Table, s: &RunSummary) {
@@ -118,6 +124,33 @@ fn calibration_rows(t: &mut Table, cs: &CalibrationStats) {
     ]);
     t.row(&["calib drift events".to_string(), cs.drift_events.to_string()]);
     t.row(&["calibrated slowdown".to_string(), f(cs.slowdown, 3) + "x"]);
+}
+
+/// Hot-path memoization rows (rate-table / predictor / router-probe
+/// reuse), appended when `--memo on` (the default).
+fn memo_rows(
+    t: &mut Table,
+    rate: &MemoCounters,
+    predict: &MemoCounters,
+    router: Option<&MemoCounters>,
+) {
+    let cell = |c: &MemoCounters| {
+        if c.lookups() == 0 {
+            "-".to_string()
+        } else {
+            format!(
+                "{}% of {} ({} inval)",
+                f(c.hit_rate() * 100.0, 1),
+                c.lookups(),
+                c.invalidations
+            )
+        }
+    };
+    t.row(&["rate-table reuse".to_string(), cell(rate)]);
+    t.row(&["predictor memo hits".to_string(), cell(predict)]);
+    if let Some(r) = router {
+        t.row(&["router probe reuse".to_string(), cell(r)]);
+    }
 }
 
 /// Parse a `--fail-replica ID@T` spec.
@@ -170,10 +203,19 @@ fn serve(args: &Args) {
         eprintln!("unknown --drift '{drift_name}' (use none|throttle|step|lottery|storm)");
         std::process::exit(2);
     });
+    let memo = match args.get_or("memo", "on") {
+        "on" => true,
+        "off" => false,
+        other => {
+            eprintln!("unknown --memo '{other}' (use on|off)");
+            std::process::exit(2);
+        }
+    };
     let cfg = ServingConfig {
         slo: workload_slo(&name),
         prefix_cache,
         calibration,
+        memo,
         ..ServingConfig::default()
     };
 
@@ -374,6 +416,14 @@ fn serve(args: &Args) {
                 format!("[{}]", slowdowns.join(", ")),
             ]);
         }
+        if cfg.memo {
+            memo_rows(
+                &mut t,
+                &out.rate_memo_stats(),
+                &out.predict_memo_stats(),
+                Some(&out.router_memo),
+            );
+        }
         t.print();
         return;
     }
@@ -393,6 +443,9 @@ fn serve(args: &Args) {
     }
     if cfg.calibration.enabled {
         calibration_rows(&mut t, &out.calibration);
+    }
+    if cfg.memo {
+        memo_rows(&mut t, &out.rate_memo, &out.predict_memo, None);
     }
     t.print();
 }

@@ -30,7 +30,9 @@
 use crate::config::CalibrationConfig;
 use crate::perf::estimator::PerfModel;
 use crate::perf::PerfPredictor;
-use std::collections::{BTreeMap, VecDeque};
+use crate::util::memo::MemoCounters;
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 
 /// Run-level calibration counters (surfaced in `EngineOutput` and the
 /// CLI tables; merged cluster-wide like `PrefixStats`).
@@ -153,6 +155,29 @@ struct Cell {
     samples: u64,
 }
 
+/// Exact-argument key for the corrected-prediction memo:
+/// (phase tag 0/1, size, ctx, sms, contended).
+type PredictKey = (u8, usize, usize, usize, bool);
+
+/// Keep the memo bounded; predictions cluster on a handful of shapes ×
+/// candidate partitions per cycle, so this is never reached in practice.
+const PREDICT_MEMO_CAP: usize = 4096;
+
+/// Calibrated-prediction memo, valid for one calibration epoch.  A
+/// prediction is a pure function of (args, cells, grid refresh), and
+/// the latter two only change when a sample updates a cell or a
+/// re-profile folds the grid — both bump the epoch, which clears the
+/// map lazily on the next lookup.  A hit returns the exact f64 the
+/// blend produced earlier, so memoized and fresh predictions are
+/// bitwise identical.  `HashMap` is safe here: its iteration order is
+/// never observed.
+#[derive(Debug, Clone, Default)]
+struct PredictMemo {
+    epoch: u64,
+    map: HashMap<PredictKey, f64>,
+    counters: MemoCounters,
+}
+
 /// The feedback-calibrated predictor (see module docs).
 #[derive(Debug, Clone)]
 pub struct OnlineCalibrator {
@@ -170,6 +195,15 @@ pub struct OnlineCalibrator {
     /// grid.
     grid_refresh: f64,
     stats: CalibrationStats,
+    /// Calibration epoch: bumped whenever learned state that feeds
+    /// predictions changes (a cell EWMA update, a grid re-profile).
+    /// The prediction memo is valid only within one epoch.
+    epoch: u64,
+    /// Hot-path memoization toggle ([`crate::config::ServingConfig::memo`]).
+    /// Off runs the reference (always-recompute) path; both are
+    /// bit-identical by construction.
+    memo_enabled: bool,
+    memo: RefCell<PredictMemo>,
 }
 
 impl OnlineCalibrator {
@@ -182,7 +216,53 @@ impl OnlineCalibrator {
             boost_left: 0,
             grid_refresh: 1.0,
             stats: CalibrationStats::default(),
+            epoch: 0,
+            memo_enabled: true,
+            memo: RefCell::new(PredictMemo::default()),
         }
+    }
+
+    /// Toggle the corrected-prediction memo (reference path when off).
+    pub fn set_memo(&mut self, on: bool) {
+        self.memo_enabled = on;
+        let mut m = self.memo.borrow_mut();
+        m.map.clear();
+        m.epoch = self.epoch;
+    }
+
+    /// Hit/miss/invalidation counters for the prediction memo.
+    pub fn memo_counters(&self) -> MemoCounters {
+        self.memo.borrow().counters
+    }
+
+    /// Memo lookup for the current epoch; lazily clears a stale map.
+    fn memo_get(&self, key: PredictKey) -> Option<f64> {
+        let mut m = self.memo.borrow_mut();
+        if m.epoch != self.epoch {
+            if !m.map.is_empty() {
+                m.counters.invalidations += 1;
+                m.map.clear();
+            }
+            m.epoch = self.epoch;
+        }
+        match m.map.get(&key) {
+            Some(&v) => {
+                m.counters.hits += 1;
+                Some(v)
+            }
+            None => {
+                m.counters.misses += 1;
+                None
+            }
+        }
+    }
+
+    fn memo_put(&self, key: PredictKey, v: f64) {
+        let mut m = self.memo.borrow_mut();
+        if m.map.len() >= PREDICT_MEMO_CAP {
+            m.map.clear();
+        }
+        m.map.insert(key, v);
     }
 
     /// The wrapped offline model.
@@ -241,6 +321,7 @@ impl OnlineCalibrator {
         self.boost_left = 0;
         self.stats.reprofiles += 1;
         self.stats.recent_abs_residual = 0.0;
+        self.epoch += 1; // grid moved: memoized predictions are stale
         fold
     }
 
@@ -335,6 +416,7 @@ impl OnlineCalibrator {
             cell.ratio += alpha * (sample_ratio - cell.ratio);
             cell.ratio = cell.ratio.clamp(ratio_min, ratio_max);
             cell.samples += 1;
+            self.epoch += 1; // a cell moved: memoized predictions are stale
         }
 
         Some(SampleOutcome {
@@ -379,15 +461,35 @@ impl OnlineCalibrator {
 
 impl PerfPredictor for OnlineCalibrator {
     fn predict_prefill_layer(&self, sl: usize, ctx: usize, pm: usize, contended: bool) -> f64 {
+        let key = (0u8, sl, ctx, pm, contended);
+        if self.memo_enabled {
+            if let Some(v) = self.memo_get(key) {
+                return v;
+            }
+        }
         let base =
             self.refreshed(PerfModel::predict_prefill_layer(&self.inner, sl, ctx, pm, contended));
-        self.blend(&CellKey::prefill(sl, ctx, pm), base)
+        let v = self.blend(&CellKey::prefill(sl, ctx, pm), base);
+        if self.memo_enabled {
+            self.memo_put(key, v);
+        }
+        v
     }
 
     fn predict_decode_step(&self, bs: usize, cl: usize, dm: usize, contended: bool) -> f64 {
+        let key = (1u8, bs, cl, dm, contended);
+        if self.memo_enabled {
+            if let Some(v) = self.memo_get(key) {
+                return v;
+            }
+        }
         let base =
             self.refreshed(PerfModel::predict_decode_step(&self.inner, bs, cl, dm, contended));
-        self.blend(&CellKey::decode(bs, cl, dm), base)
+        let v = self.blend(&CellKey::decode(bs, cl, dm), base);
+        if self.memo_enabled {
+            self.memo_put(key, v);
+        }
+        v
     }
 
     fn calibrated_slowdown(&self) -> f64 {
@@ -582,5 +684,60 @@ mod tests {
         let mut idle = calibrator(CalibrationConfig::on());
         assert_eq!(idle.reprofile(), 1.0);
         assert_eq!(idle.grid_refresh(), 1.0);
+    }
+
+    #[test]
+    fn memoized_predictions_are_bit_identical_to_reference() {
+        let mut on = calibrator(CalibrationConfig::on());
+        let mut off = calibrator(CalibrationConfig::on());
+        off.set_memo(false);
+        let base = PerfModel::predict_prefill_layer(on.offline(), 2048, 0, 54, true);
+        // interleave observations (which invalidate the memo) with
+        // repeated predictions (which hit it) and compare bits
+        let shapes = [(128usize, 24usize), (2048, 54), (2048, 72), (8192, 108)];
+        for round in 0..12 {
+            for &(sl, pm) in &shapes {
+                for _ in 0..3 {
+                    let a = PerfPredictor::predict_prefill_layer(&on, sl, 0, pm, true);
+                    let b = PerfPredictor::predict_prefill_layer(&off, sl, 0, pm, true);
+                    assert_eq!(a.to_bits(), b.to_bits(), "prefill {sl}x{pm} round {round}");
+                    let a = PerfPredictor::predict_decode_step(&on, 64, 2048, pm, false);
+                    let b = PerfPredictor::predict_decode_step(&off, 64, 2048, pm, false);
+                    assert_eq!(a.to_bits(), b.to_bits(), "decode {pm} round {round}");
+                }
+            }
+            on.observe_prefill(2048, 0, 54, true, 1, base * 1.5);
+            off.observe_prefill(2048, 0, 54, true, 1, base * 1.5);
+            if round == 6 {
+                on.reprofile();
+                off.reprofile();
+            }
+        }
+        let c_on = on.memo_counters();
+        let c_off = off.memo_counters();
+        assert!(c_on.hits > 0, "repeats must hit the memo: {c_on:?}");
+        assert!(c_on.misses > 0, "first lookups must miss: {c_on:?}");
+        assert!(
+            c_on.invalidations > 0,
+            "ingest/reprofile must invalidate: {c_on:?}"
+        );
+        assert_eq!(c_off.hits + c_off.misses, 0, "memo-off must never consult the map");
+    }
+
+    #[test]
+    fn ingest_invalidates_the_prediction_memo() {
+        let mut c = calibrator(CalibrationConfig::on());
+        let base = PerfModel::predict_prefill_layer(c.offline(), 2048, 0, 54, true);
+        let cold = PerfPredictor::predict_prefill_layer(&c, 2048, 0, 54, true);
+        // second lookup hits and returns the identical bits
+        let hit = PerfPredictor::predict_prefill_layer(&c, 2048, 0, 54, true);
+        assert_eq!(cold.to_bits(), hit.to_bits());
+        assert_eq!(c.memo_counters().hits, 1);
+        // a sample moves the cell; the stale memoized value must NOT survive
+        for _ in 0..10 {
+            c.observe_prefill(2048, 0, 54, true, 1, base * 2.0);
+        }
+        let after = PerfPredictor::predict_prefill_layer(&c, 2048, 0, 54, true);
+        assert!(after > cold, "calibration must show through the memo");
     }
 }

@@ -18,6 +18,7 @@ use crate::perf::{PerfModel, PerfPredictor};
 use crate::resource::Partition;
 use crate::sched::state::SystemState;
 use crate::util::stats;
+use std::cell::RefCell;
 
 /// Scheduler output for one cycle.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -72,11 +73,41 @@ pub fn deadline_should_drop(now: f64, deadline: Option<f64>, est_first_token_s: 
 pub struct SloScheduler<P: PerfPredictor = PerfModel> {
     pub cfg: ServingConfig,
     pub perf: P,
+    /// Per-cycle hoisted TTFT terms + percentile scratch (memo on).
+    /// `RefCell` keeps `schedule(&self)` — the scratch is interior
+    /// state, never observable output; `Send` (not `Sync`) matches the
+    /// one-policy-per-worker-thread cluster model.
+    cycle: RefCell<TtftCycle>,
+}
+
+/// Request terms that are invariant across the candidate partitions of
+/// one `schedule()` call, hoisted so each candidate evaluation replays
+/// only the partition-dependent arithmetic (one `predict_prefill_layer`
+/// plus an O(n) fold) instead of re-walking request structs and
+/// re-deriving SLO budgets — and reads its percentile by in-place
+/// selection instead of clone + sort.
+#[derive(Debug, Default)]
+struct TtftCycle {
+    /// Hoisting happened for the current `schedule()` call (false when
+    /// memo is off — evaluations then take the reference path).
+    prepared: bool,
+    /// Active-batch requests: (wait = now - arrival, clamped budget).
+    batch: Vec<(f64, f64)>,
+    /// Waiting queue, post-reorder: (wait, clamped budget, suffix tokens).
+    waiting: Vec<(f64, f64, f64)>,
+    /// Uncached suffix of the queue head (reference rate when no batch).
+    head_r: usize,
+    /// `st.total_layers as f64`.
+    layers_f: f64,
+    /// Percentile scratch for TTFT ratios.
+    ratios: Vec<f64>,
+    /// Percentile scratch for observed TPOTs.
+    obs: Vec<f64>,
 }
 
 impl<P: PerfPredictor> SloScheduler<P> {
     pub fn new(cfg: ServingConfig, perf: P) -> SloScheduler<P> {
-        SloScheduler { cfg, perf }
+        SloScheduler { cfg, perf, cycle: RefCell::new(TtftCycle::default()) }
     }
 
     /// This scheduler's whole-GPU serving capacity in tokens/s for a
@@ -101,11 +132,16 @@ impl<P: PerfPredictor> SloScheduler<P> {
     /// Covers the active batch AND the waiting queue (whose requests must
     /// first wait for the active batch — the cascading-congestion term).
     ///
-    /// Hot path: called once per candidate partition in the searches.
     /// One `predict_prefill_layer` per candidate; each waiting request's
     /// own prefill time is scaled from that single prediction (per-token
     /// rate) rather than re-predicted — the queue estimate is coarse by
     /// nature (§3.3.2's q_i), and this keeps the decision microseconds.
+    ///
+    /// This is the REFERENCE evaluation (memo off): it re-walks every
+    /// request and re-derives every budget per candidate.  The hot path
+    /// is [`Self::ttft_ratio_p90_hoisted`], which replays this exact
+    /// arithmetic over per-cycle hoisted terms — any edit here must be
+    /// mirrored there or the bit-parity tests fail.
     fn ttft_ratio_p90(&self, st: &SystemState, pm: usize, contended: bool) -> f64 {
         let (rem, per_token_layer) = match &st.prefill {
             None => (0.0, {
@@ -156,14 +192,100 @@ impl<P: PerfPredictor> SloScheduler<P> {
         }
     }
 
+    /// Hoist this cycle's partition-invariant TTFT terms (no-op with
+    /// memo off).  Must run after `reorder_waiting` — the queue order is
+    /// part of the cascading-congestion accumulation.
+    fn prepare_cycle(&self, st: &SystemState) {
+        let mut cy = self.cycle.borrow_mut();
+        let cy = &mut *cy;
+        cy.prepared = self.cfg.memo;
+        if !cy.prepared {
+            return;
+        }
+        cy.batch.clear();
+        if let Some(b) = &st.prefill {
+            cy.batch.extend(
+                b.reqs
+                    .iter()
+                    .map(|r| (st.now - r.arrival, self.cfg.slo.ttft_budget(r.input_len).max(1e-9))),
+            );
+        }
+        cy.waiting.clear();
+        cy.waiting.extend(st.waiting.iter().map(|r| {
+            (
+                st.now - r.arrival,
+                self.cfg.slo.ttft_budget(r.input_len).max(1e-9),
+                (r.input_len - r.cached_len).max(1) as f64,
+            )
+        }));
+        cy.head_r = st.waiting.first().map(|w| (w.input_len - w.cached_len).max(1)).unwrap_or(2048);
+        cy.layers_f = st.total_layers as f64;
+    }
+
+    /// Candidate TTFT evaluation over the hoisted terms: replays the
+    /// exact arithmetic of [`Self::ttft_ratio_p90`] (same operations in
+    /// the same order, so the result is bit-identical) but touches no
+    /// request structs, performs no allocation, and takes the percentile
+    /// by in-place selection.
+    fn ttft_ratio_p90_hoisted(&self, st: &SystemState, pm: usize, contended: bool) -> f64 {
+        let mut cy = self.cycle.borrow_mut();
+        let cy = &mut *cy;
+        let (rem, per_token_layer) = match &st.prefill {
+            None => {
+                let r = cy.head_r;
+                (0.0, self.perf.predict_prefill_layer(r, 0, pm, contended) / r as f64)
+            }
+            Some(b) => {
+                let layer = self.perf.predict_prefill_layer(b.n_tokens, 0, pm, contended);
+                let layers_left = st.total_layers.saturating_sub(b.layers_done);
+                (layer * layers_left as f64, layer / b.n_tokens.max(1) as f64)
+            }
+        };
+        cy.ratios.clear();
+        for &(wait, bud) in &cy.batch {
+            cy.ratios.push((wait + rem) / bud);
+        }
+        let mut queue_ahead = rem;
+        for &(wait, bud, suffix) in &cy.waiting {
+            let own = per_token_layer * suffix * cy.layers_f;
+            cy.ratios.push((wait + queue_ahead + own) / bud);
+            queue_ahead += own;
+        }
+        if cy.ratios.is_empty() {
+            0.0
+        } else {
+            stats::percentile_select(&mut cy.ratios, self.cfg.slo_percentile)
+        }
+    }
+
+    /// Per-candidate TTFT ratio: the hoisted fast path when this cycle
+    /// was prepared (memo on), the reference walk otherwise.
+    fn ttft_ratio_p90_cycle(&self, st: &SystemState, pm: usize, contended: bool) -> f64 {
+        if self.cycle.borrow().prepared {
+            self.ttft_ratio_p90_hoisted(st, pm, contended)
+        } else {
+            self.ttft_ratio_p90(st, pm, contended)
+        }
+    }
+
     /// P90 of observed per-request TPOT (partition-independent; computed
-    /// once per scheduling cycle).
+    /// once per scheduling cycle).  Memo on reuses the percentile
+    /// scratch and selects in place; memo off is the reference
+    /// clone-and-sort.  Both are bit-identical.
     fn observed_tpot_p90(&self, st: &SystemState) -> f64 {
         if st.decode.is_empty() {
             return 0.0;
         }
-        let obs: Vec<f64> = st.decode.iter().map(|d| d.observed_tpot()).collect();
-        stats::percentile(&obs, self.cfg.slo_percentile)
+        if self.cfg.memo {
+            let mut cy = self.cycle.borrow_mut();
+            let cy = &mut *cy;
+            cy.obs.clear();
+            cy.obs.extend(st.decode.iter().map(|d| d.observed_tpot()));
+            stats::percentile_select(&mut cy.obs, self.cfg.slo_percentile)
+        } else {
+            let obs: Vec<f64> = st.decode.iter().map(|d| d.observed_tpot()).collect();
+            stats::percentile(&obs, self.cfg.slo_percentile)
+        }
     }
 
     /// P90 TPOT violation ratio under a candidate `dm`.  Blends the
@@ -188,10 +310,6 @@ impl<P: PerfPredictor> SloScheduler<P> {
         projected / budget
     }
 
-    fn tpot_ratio_p90(&self, st: &SystemState, dm: usize, contended: bool) -> f64 {
-        self.tpot_ratio_p90_with(st, dm, contended, self.observed_tpot_p90(st))
-    }
-
     /// SLO slack of a waiting request at virtual time `now` (negative ⇒
     /// already past its TTFT budget).
     pub fn ttft_slack(&self, r: &crate::sched::state::PrefillReq, now: f64) -> f64 {
@@ -210,19 +328,28 @@ impl<P: PerfPredictor> SloScheduler<P> {
     }
 
     /// Candidate SM counts, descending from `from`, at mask granularity.
-    fn steps_down(&self, from: usize, to_min: usize) -> Vec<usize> {
+    /// Lazy iterator (captures only three integers) — no `Vec` per scan.
+    /// Coarse `3 × granularity` steps keep the search O(#SMs/6), §3.3.3.
+    fn steps_down(&self, from: usize, to_min: usize) -> impl Iterator<Item = usize> {
         let g = self.cfg.gpu.sm_granularity.max(1);
-        let mut v = Vec::new();
-        let mut x = self.cfg.gpu.quantize_sms(from);
         let lo = self.cfg.gpu.quantize_sms(to_min);
-        while x >= lo {
-            v.push(x);
-            if x < g + lo {
-                break;
+        let mut x = self.cfg.gpu.quantize_sms(from);
+        let mut done = x < lo;
+        std::iter::from_fn(move || {
+            if done {
+                return None;
             }
-            x -= g * 3; // coarse steps keep the search O(#SMs/6), as §3.3.3
-        }
-        v
+            let cur = x;
+            if x < g + lo {
+                done = true;
+            } else {
+                x -= g * 3;
+                if x < lo {
+                    done = true;
+                }
+            }
+            Some(cur)
+        })
     }
 
     /// The main decision procedure (Algorithm 1).
@@ -244,12 +371,17 @@ impl<P: PerfPredictor> SloScheduler<P> {
             };
         }
 
+        // Hoist the partition-invariant per-request terms once; every
+        // candidate evaluation below is then O(n) folds over plain f64s
+        // (memo off: evaluations re-walk the structs — the reference).
+        self.prepare_cycle(st);
+
         let contended = true; // both phases active below this point
         let cur = st.partition;
         let cur_pm = cur.prefill_sms.max(self.cfg.min_prefill_sms);
         let cur_dm = cur.decode_sms.max(self.cfg.min_decode_sms);
         let obs_p90 = self.observed_tpot_p90(st);
-        let ttft_viol = self.ttft_ratio_p90(st, cur_pm, contended) > 1.0;
+        let ttft_viol = self.ttft_ratio_p90_cycle(st, cur_pm, contended) > 1.0;
         let tpot_viol = self.tpot_ratio_p90_with(st, cur_dm, contended, obs_p90) > 1.0;
 
         match (ttft_viol, tpot_viol) {
@@ -282,7 +414,7 @@ impl<P: PerfPredictor> SloScheduler<P> {
         if let Some((pm, dm)) = best {
             // TPOT fine at the floor but TTFT still violated → borrow all
             // SMs: pause decode for one cycle (§3.3.3, Fig. 8a-②).
-            let still_violated = self.ttft_ratio_p90(st, pm, true) > 1.0;
+            let still_violated = self.ttft_ratio_p90_cycle(st, pm, true) > 1.0;
             let tpot_headroom = self.tpot_ratio_p90_with(st, dm, true, obs_p90) <= 0.8;
             if still_violated && tpot_headroom {
                 return Decision {
@@ -329,7 +461,7 @@ impl<P: PerfPredictor> SloScheduler<P> {
         while pm + self.cfg.min_decode_sms <= gpu_sms {
             let dm = gpu_sms - pm;
             let score = self
-                .ttft_ratio_p90(st, pm, true)
+                .ttft_ratio_p90_cycle(st, pm, true)
                 .max(self.tpot_ratio_p90_with(st, dm, true, obs_p90));
             if score < best_score {
                 best_score = score;
@@ -616,6 +748,103 @@ mod tests {
         assert!(deadline_should_drop(7.0, Some(6.0), 0.0));
         // negative estimates are clamped, not allowed to rescue a late request
         assert!(deadline_should_drop(7.0, Some(6.0), -3.0));
+    }
+
+    #[test]
+    fn hoisted_ttft_is_bit_identical_to_reference() {
+        // Across candidate partitions, batch/no-batch states, cached
+        // prefixes and a deep waiting queue, the hoisted evaluation must
+        // reproduce the reference walk bit for bit.
+        let s = scheduler();
+        assert!(s.cfg.memo);
+        let waiting: Vec<PrefillReq> = (0..64)
+            .map(|i| PrefillReq {
+                id: 100 + i,
+                arrival: i as f64 * 0.013,
+                input_len: 256 + (i as usize * 731) % 6000,
+                output_len: 64,
+                cached_len: if i % 3 == 0 { 128 } else { 0 },
+                ..Default::default()
+            })
+            .collect();
+        for prefill_tokens in [0usize, 4096] {
+            let mut st = state_with(
+                prefill_tokens,
+                7,
+                vec![decode_req(1, 900, 0.03)],
+                waiting.clone(),
+                2.0,
+            );
+            s.reorder_waiting(&mut st);
+            s.prepare_cycle(&st);
+            for pm in [24usize, 54, 84, 108] {
+                let reference = s.ttft_ratio_p90(&st, pm, true);
+                let hoisted = s.ttft_ratio_p90_hoisted(&st, pm, true);
+                assert_eq!(
+                    hoisted.to_bits(),
+                    reference.to_bits(),
+                    "pm={pm} prefill={prefill_tokens}: hoisted {hoisted} vs ref {reference}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_is_bit_identical_memo_on_vs_off() {
+        let on = scheduler();
+        let off = SloScheduler::new(
+            ServingConfig { memo: false, ..ServingConfig::default() },
+            PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b()),
+        );
+        let waiting: Vec<PrefillReq> = (0..48)
+            .map(|i| PrefillReq {
+                id: 500 + i,
+                arrival: i as f64 * 0.01,
+                input_len: 512 + (i as usize * 977) % 8192,
+                output_len: 128,
+                ..Default::default()
+            })
+            .collect();
+        // healthy, TTFT-violated, TPOT-violated, and both-violated states
+        let states: Vec<SystemState> = vec![
+            state_with(1024, 16, vec![decode_req(1, 200, 0.02)], waiting.clone(), 0.05),
+            state_with(16384, 0, vec![decode_req(1, 200, 0.02)], waiting.clone(), 30.0),
+            state_with(1024, 30, (0..64).map(|i| decode_req(i, 8000, 0.3)).collect(), vec![], 0.01),
+            state_with(16384, 0, (0..128).map(|i| decode_req(i, 6000, 0.2)).collect(), waiting, 40.0),
+        ];
+        for (k, st) in states.into_iter().enumerate() {
+            let da = on.schedule(&mut st.clone());
+            let db = off.schedule(&mut st.clone());
+            assert_eq!(da, db, "state {k}: memo-on {da:?} vs memo-off {db:?}");
+            // the partition-independent observed-TPOT percentile too
+            assert_eq!(
+                on.observed_tpot_p90(&st).to_bits(),
+                off.observed_tpot_p90(&st).to_bits(),
+                "state {k}: observed TPOT p90 diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn steps_down_iterator_matches_legacy_sequence() {
+        let s = scheduler();
+        // legacy semantics: descend by 3*granularity, stop once within
+        // one granule of the floor, never emit below the floor
+        for (from, to_min) in [(96usize, 12usize), (108, 24), (13, 12), (12, 12), (10, 12)] {
+            let got: Vec<usize> = s.steps_down(from, to_min).collect();
+            let g = s.cfg.gpu.sm_granularity.max(1);
+            let mut want = Vec::new();
+            let mut x = s.cfg.gpu.quantize_sms(from);
+            let lo = s.cfg.gpu.quantize_sms(to_min);
+            while x >= lo {
+                want.push(x);
+                if x < g + lo {
+                    break;
+                }
+                x -= g * 3;
+            }
+            assert_eq!(got, want, "from={from} to_min={to_min}");
+        }
     }
 
     #[test]

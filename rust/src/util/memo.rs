@@ -1,0 +1,66 @@
+//! Hit/miss/invalidation counters shared by the hot-path memo layers
+//! (simulator rate table, calibrated-prediction memo, router probe
+//! memo).  Counters are observability only: they are **excluded** from
+//! every bitwise-parity comparison, because the memo-on and memo-off
+//! legs of a parity run legitimately differ in hit counts while
+//! producing bit-identical physics.
+
+/// Cache-effectiveness counters for one memoized hot path.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemoCounters {
+    /// Lookups served from the cache (no recomputation performed).
+    pub hits: u64,
+    /// Lookups that recomputed and (re)filled the cache.  With memo
+    /// disabled every lookup counts as a miss, so `hits + misses` is
+    /// the total lookup volume either way.
+    pub misses: u64,
+    /// Times the cache was discarded while it held a valid entry.
+    pub invalidations: u64,
+}
+
+impl MemoCounters {
+    /// Fold another counter set into this one (for cluster roll-ups).
+    pub fn merge(&mut self, other: &MemoCounters) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.invalidations += other.invalidations;
+    }
+
+    /// Hits as a fraction of all lookups; 0.0 when nothing was looked up.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Total lookups observed.
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_rate_handles_empty_and_partial() {
+        let mut c = MemoCounters::default();
+        assert_eq!(c.hit_rate(), 0.0);
+        c.hits = 3;
+        c.misses = 1;
+        assert!((c.hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(c.lookups(), 4);
+    }
+
+    #[test]
+    fn merge_accumulates_all_fields() {
+        let mut a = MemoCounters { hits: 1, misses: 2, invalidations: 3 };
+        let b = MemoCounters { hits: 10, misses: 20, invalidations: 30 };
+        a.merge(&b);
+        assert_eq!(a, MemoCounters { hits: 11, misses: 22, invalidations: 33 });
+    }
+}

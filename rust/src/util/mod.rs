@@ -6,6 +6,7 @@
 pub mod cli;
 pub mod error;
 pub mod json;
+pub mod memo;
 pub mod rng;
 pub mod stats;
 pub mod tbl;

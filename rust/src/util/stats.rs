@@ -30,6 +30,31 @@ pub fn percentile_sorted(v: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Percentile by in-place selection instead of a full sort: O(n)
+/// expected versus O(n log n), and no allocation — the caller's scratch
+/// buffer is reordered in place.  Bit-identical to [`percentile`] for
+/// NaN-free input without negative zeros: both read the same two order
+/// statistics under the same total order and apply the same linear
+/// interpolation, and equal non-zero f64 values are bitwise equal.
+pub fn percentile_select(xs: &mut [f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let p = p.clamp(0.0, 100.0);
+    let rank = p / 100.0 * (xs.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let (_, lo_v, rest) = xs.select_nth_unstable_by(lo, |a, b| a.partial_cmp(b).unwrap());
+    let lo_v = *lo_v;
+    if lo == hi {
+        return lo_v;
+    }
+    // hi == lo + 1, so sorted v[hi] is the minimum of the suffix
+    let hi_v = rest.iter().cloned().fold(f64::INFINITY, f64::min);
+    let frac = rank - lo as f64;
+    lo_v * (1.0 - frac) + hi_v * frac
+}
+
 /// Arithmetic mean (NaN on empty).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -203,6 +228,26 @@ mod tests {
     #[test]
     fn percentile_empty_nan() {
         assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_select_is_bit_identical_to_percentile() {
+        // awkward sizes, duplicates, irrational-ish values, and the
+        // exact percentiles the scheduler asks for
+        let mut xs: Vec<f64> = (0..257)
+            .map(|i| ((i * 7919 % 257) as f64).sqrt() * 0.3127 + (i % 5) as f64)
+            .collect();
+        xs.push(xs[13]); // force duplicates
+        xs.push(xs[13]);
+        for p in [0.0, 10.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            let want = percentile(&xs, p);
+            let mut scratch = xs.clone();
+            let got = percentile_select(&mut scratch, p);
+            assert_eq!(got.to_bits(), want.to_bits(), "p={p}");
+        }
+        let mut one = [7.25];
+        assert_eq!(percentile_select(&mut one, 90.0).to_bits(), 7.25f64.to_bits());
+        assert!(percentile_select(&mut [], 50.0).is_nan());
     }
 
     #[test]

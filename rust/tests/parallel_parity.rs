@@ -179,6 +179,62 @@ fn heterogeneous_drifting_fleet_is_thread_invariant() {
     assert!(sd[1] > sd[0], "slow replica must calibrate apart: {sd:?}");
 }
 
+/// PR 8 invariant: the hot-path caches (simulator rate table,
+/// calibrated-prediction memo, router probe memo) are pure
+/// accelerations — turning them all off (`ServingConfig::memo = false`)
+/// reproduces every output bit.  Runs the cells that exercise all three
+/// caches at once: slo-slack routing (probe memo) + calibration
+/// (prediction memo) + drift (the rate table's hardest invalidation
+/// regime), then an autoscaled cell on the parallel backend so memo
+/// parity composes with thread parity.
+#[test]
+fn memo_off_is_bit_identical_to_memo_on() {
+    let base = ServingConfig {
+        calibration: CalibrationConfig::on(),
+        ..ServingConfig::default()
+    };
+    let cfg_off = ServingConfig { memo: false, ..base.clone() };
+    let trace = generate_n_requests(&Dataset::sharegpt(), 12.0, 24, 51);
+
+    let drifty = ClusterConfig {
+        replicas: 3,
+        router: RouterPolicy::SloSlack,
+        replica_specs: vec![
+            ReplicaSpec::default(),
+            ReplicaSpec { gpu: None, drift: Some(DriftSpec::throttle()) },
+            ReplicaSpec { gpu: None, drift: Some(DriftSpec::storm()) },
+        ],
+        ..Default::default()
+    };
+    let on = run_cell(System::Bullet, &base, &trace, 17, &drifty, 1);
+    let off = run_cell(System::Bullet, &cfg_off, &trace, 17, &drifty, 1);
+    assert_identical(&on, &off, "memo on/off (drifting slo-slack fleet)");
+    // the memoized run must actually have exercised its caches, and the
+    // reference run must never have consulted them
+    assert!(on.router_memo.hits > 0, "probe memo never hit: {:?}", on.router_memo);
+    assert!(on.rate_memo_stats().hits > 0, "rate table never reused");
+    assert!(on.predict_memo_stats().hits > 0, "prediction memo never hit");
+    assert_eq!(off.router_memo.lookups(), 0, "memo-off consulted the probe memo");
+    assert_eq!(off.rate_memo_stats().hits, 0, "memo-off reused the rate table");
+    assert_eq!(off.predict_memo_stats().lookups(), 0, "memo-off consulted the memo");
+
+    let scaled = ClusterConfig {
+        replicas: 2,
+        router: RouterPolicy::SloSlack,
+        autoscale: AutoscaleConfig {
+            control_interval_s: 0.5,
+            rate_window_s: 2.0,
+            cooldown_out_s: 1.0,
+            cooldown_in_s: 4.0,
+            ..AutoscaleConfig::on(1, 4)
+        },
+        ..Default::default()
+    };
+    let on = run_cell(System::Bullet, &base, &trace, 17, &scaled, 4);
+    let off = run_cell(System::Bullet, &cfg_off, &trace, 17, &scaled, 4);
+    assert_identical(&on, &off, "memo on/off (autoscaled, 4 threads)");
+}
+
 /// Oversubscription and odd shard shapes: more threads than replicas,
 /// threads that don't divide the fleet, and a single-replica fleet all
 /// reduce to the same bits.

@@ -5,9 +5,11 @@
 //!
 //! Each cell asserts: the trace completes (non-empty, no lost records),
 //! every summary metric is finite, two identical runs are bitwise
-//! identical (records AND routing decisions), and the parallel
-//! simulation backend (`sim_threads = 4`) reproduces the serial
-//! backend (`sim_threads = 1`) bit-for-bit.
+//! identical (records AND routing decisions), the parallel simulation
+//! backend (`sim_threads = 4`) reproduces the serial backend
+//! (`sim_threads = 1`) bit-for-bit, and the memoization-off reference
+//! paths (`ServingConfig::memo = false`) reproduce the memoized run
+//! bit-for-bit.
 //!
 //! The matrix is `#[ignore]`d in the default test run and executed by
 //! CI's dedicated `scenario-matrix` job (`cargo test --release --test
@@ -56,6 +58,10 @@ fn run_matrix(engines: &[System]) {
                 let b = serve_cluster(sys, &cfg, &perf, &gt, &trace, seed, &ccfg);
                 let par = ClusterConfig { sim_threads: 4, ..ccfg.clone() };
                 let c = serve_cluster(sys, &cfg, &perf, &gt, &trace, seed, &par);
+                // leg d: reference (memoization-off) paths — the hot-path
+                // caches must be invisible in every output bit
+                let cfg_off = ServingConfig { memo: false, ..cfg.clone() };
+                let d = serve_cluster(sys, &cfg_off, &perf, &gt, &trace, seed, &ccfg);
 
                 // non-empty completions, nothing lost
                 assert_eq!(a.records.len(), trace.len(), "{label}: lost records");
@@ -75,6 +81,14 @@ fn run_matrix(engines: &[System]) {
                     "{label}: parallel makespan diverges"
                 );
                 assert!(c.scale_events.is_empty(), "{label}: fixed fleet scaled");
+                // memo-on/off bitwise parity
+                assert_eq!(a.records, d.records, "{label}: memo-off records diverge");
+                assert_eq!(a.assignments, d.assignments, "{label}: memo-off routing diverges");
+                assert_eq!(
+                    a.virtual_duration.to_bits(),
+                    d.virtual_duration.to_bits(),
+                    "{label}: memo-off makespan diverges"
+                );
 
                 // finite metrics
                 let s = summarize(&a.records, &cfg.slo, Some(a.virtual_duration));

@@ -27,10 +27,21 @@ Three checks, in order of strictness:
    this gate.  Wall-clock numbers from unverified baselines are
    estimates and must not fail builds.
 
+4. **Hotpath micro-benchmarks (soft, with one armed gate).** Every
+   shared ``hotpath.*`` key is compared and any regression beyond the
+   tolerance prints a WARN — micro-benchmarks on shared runners are too
+   noisy to hard-gate wholesale.  The exception is
+   ``router_pick_slo_slack_us`` (the per-arrival front-door cost PR 8
+   memoized): against a *verified* baseline a >15% regression fails
+   hard, because that number reverting means the probe memo stopped
+   working.
+
 The deterministic ``cluster.virtual_makespan_s`` is also compared: a
 change there means simulation *semantics* changed (not just speed), so
 it is reported loudly but does not fail the job — intentional semantic
-changes land with an updated baseline.
+changes land with an updated baseline.  ``cluster.memo_parity`` (the
+memoization-off reference run reproduced the memoized bits) is enforced
+like ``parity`` whenever the fresh artifact reports it.
 """
 
 import json
@@ -61,6 +72,10 @@ def main() -> None:
     if fc.get("parity") is not True:
         die("fresh run reports parity=false: parallel backend diverged from serial")
     print("parity: OK (parallel backend bit-identical to serial)")
+    if "memo_parity" in fc:
+        if fc["memo_parity"] is not True:
+            die("fresh run reports memo_parity=false: a hot-path cache leaked into output")
+        print("memo parity: OK (memoization-off reference bit-identical)")
 
     # 2. speedup floor
     cores = int(fresh.get("host", {}).get("cores", 0))
@@ -83,13 +98,38 @@ def main() -> None:
     if bm != fm:
         print(
             f"NOTE: virtual makespan changed {bm:.3f}s -> {fm:.3f}s — simulation "
-            "semantics differ from baseline; update BENCH_6.json if intentional"
+            "semantics differ from baseline; update BENCH_7.json if intentional"
         )
     else:
         print(f"virtual makespan: unchanged ({fm:.3f}s)")
 
+    # 4. hotpath micro-numbers: soft warnings, except the armed
+    # slo-slack router gate (the PR-8 memoized front-door cost)
+    verified = base.get("verified") is True
+    bh = base.get("hotpath", {})
+    fh = fresh.get("hotpath", {})
+    for key in sorted(set(bh) & set(fh)):
+        bv, fv = float(bh[key]), float(fh[key])
+        if bv <= 0.0:
+            continue
+        # throughput-style keys regress downward; latency keys upward
+        if key.endswith("_per_s") or key.endswith("_speedup"):
+            regressed = fv < bv * (1.0 - REGRESSION_TOLERANCE)
+        else:
+            regressed = fv > bv * (1.0 + REGRESSION_TOLERANCE)
+        if not regressed:
+            print(f"hotpath {key}: OK ({fv:g} vs baseline {bv:g})")
+        elif key == "router_pick_slo_slack_us" and verified:
+            die(
+                f"hotpath {key} regressed {bv:g} -> {fv:g} "
+                f"(> {REGRESSION_TOLERANCE:.0%} over a verified baseline — "
+                "the router probe memo stopped paying for itself)"
+            )
+        else:
+            print(f"hotpath {key}: WARN regressed {bv:g} -> {fv:g} (soft — micro-bench noise)")
+
     # 3. throughput regression vs a verified baseline only
-    if base.get("verified") is not True:
+    if not verified:
         print("regression: SKIPPED (baseline is unverified — promote a CI artifact to arm)")
         return
     brf = float(base["cluster"]["realtime_factor"])
