@@ -1,7 +1,7 @@
 //! Recorded perf trajectory: replay a saturating azure-code trace on an
 //! 8-replica cluster through BOTH simulation backends, verify bitwise
 //! parity in-run (threads AND memoization), time each, and emit the
-//! numbers as `BENCH_7.json` — the artifact CI's `bench` job uploads
+//! numbers as `BENCH_8.json` — the artifact CI's `bench` job uploads
 //! and gates on.
 //!
 //! What gets recorded:
@@ -18,7 +18,12 @@
 //! - `hotpath.*` — perf_hotpath micro-numbers: the per-arrival router
 //!   decision on a 64-replica fleet, the full scheduler cycle at 512
 //!   waiting (memoized and reference), simulator step throughput, and
-//!   the calibrated-prediction memo.
+//!   the calibrated-prediction memo;
+//! - `systems.*` — the Fig. 11/13-style competitor legs against the
+//!   intra-GPU P/D disaggregation baselines: per-system goodput and P90
+//!   TTFT on a single-GPU azure-code trace (Bullet must match or beat
+//!   every disaggregation baseline on goodput), and static vs proactive
+//!   P90 TTFT under a bursty trace (the moving boundary must win).
 //!
 //! ```bash
 //! cargo run --release --offline --example bench_runner -- \
@@ -29,8 +34,10 @@
 //! baseline (skipping wall-clock comparisons when the baseline was not
 //! produced by a verified runner — see the `verified` flag).
 
-use bullet::baselines::System;
+use bullet::baselines::{run_system_output, System};
 use bullet::cluster::{serve_cluster, ClusterConfig, Dispatcher, ReplicaSignals, RouterPolicy};
+use bullet::metrics::{goodput_req_s, summarize};
+use bullet::workload::generate_bursty_trace;
 use bullet::config::{CalibrationConfig, GpuSpec, ModelSpec, ServingConfig, SloSpec};
 use bullet::gpu::roofline::GroundTruth;
 use bullet::gpu::simulator::Simulator;
@@ -140,7 +147,7 @@ fn main() {
     // saturating by construction: arrivals outpace the fleet's prefill
     // capacity, so every replica stays busy between dispatch horizons
     let rate = args.get_f64("rate", 12.0 * replicas as f64);
-    let out_path = args.get_or("out", "BENCH_7.json").to_string();
+    let out_path = args.get_or("out", "BENCH_8.json").to_string();
 
     let cfg = ServingConfig {
         slo: SloSpec::azure_code(),
@@ -282,6 +289,74 @@ fn main() {
         hotpath.push((key.to_string(), r.mean_us()));
     }
 
+    // Fig. 11-style competitor leg: single-GPU azure-code, Bullet vs the
+    // intra-GPU P/D disaggregation family.  Goodput (SLO-attained req/s)
+    // is the paper's headline axis; the adaptive spatial-temporal policy
+    // must match or beat every fixed/predicted/time-sliced split.
+    let fig11_trace = generate_n_requests(&Dataset::azure_code(), 6.0, 300, 42);
+    let mut systems: Vec<(String, f64)> = Vec::new();
+    let mut fig11_goodput: Vec<(System, f64)> = Vec::new();
+    for sys in [
+        System::StaticSplit,
+        System::ProactiveSplit,
+        System::TemporalMux,
+        System::Bullet,
+    ] {
+        let out = run_system_output(sys, &cfg, &perf, &gt, &fig11_trace, 42);
+        let s = summarize(&out.records, &cfg.slo, Some(out.virtual_duration));
+        let gp = goodput_req_s(&out.records, &cfg.slo, out.virtual_duration);
+        println!(
+            "fig11 azure-code: {:<16} goodput {:.2} req/s | p90 ttft {:.0} ms",
+            sys.label(),
+            gp,
+            s.p90_ttft * 1e3
+        );
+        let key = sys.label().to_lowercase().replace('-', "_");
+        systems.push((format!("fig11_azure_goodput_{key}_req_s"), gp));
+        systems.push((format!("fig11_azure_p90_ttft_{key}_ms"), s.p90_ttft * 1e3));
+        fig11_goodput.push((sys, gp));
+    }
+    let bullet_goodput = fig11_goodput
+        .iter()
+        .find(|(s, _)| *s == System::Bullet)
+        .map(|(_, g)| *g)
+        .unwrap();
+    for (sys, gp) in &fig11_goodput {
+        assert!(
+            bullet_goodput >= *gp,
+            "Bullet goodput {bullet_goodput:.3} below {} at {gp:.3} — \
+             spatial-temporal sharing lost to a disaggregation baseline",
+            sys.label()
+        );
+    }
+
+    // Fig. 13-style burst leg: a prefill surge over a steady decode
+    // floor.  The proactive boundary repartitions ahead of the surge;
+    // the frozen split queues it — tail TTFT is where that shows.
+    let slo_share = SloSpec::sharegpt();
+    let cfg_share = ServingConfig { slo: slo_share, ..ServingConfig::default() };
+    let fig13_trace = generate_bursty_trace(&Dataset::sharegpt(), 3.0, 18.0, 16.0, 5.0, 4.0, 11);
+    let st = run_system_output(System::StaticSplit, &cfg_share, &perf, &gt, &fig13_trace, 42);
+    let pr = run_system_output(System::ProactiveSplit, &cfg_share, &perf, &gt, &fig13_trace, 42);
+    let st_s = summarize(&st.records, &cfg_share.slo, Some(st.virtual_duration));
+    let pr_s = summarize(&pr.records, &cfg_share.slo, Some(pr.virtual_duration));
+    println!(
+        "fig13 bursty: static p90 ttft {:.0} ms | proactive p90 ttft {:.0} ms",
+        st_s.p90_ttft * 1e3,
+        pr_s.p90_ttft * 1e3
+    );
+    systems.push(("fig13_bursty_p90_ttft_static_split_ms".to_string(), st_s.p90_ttft * 1e3));
+    systems.push((
+        "fig13_bursty_p90_ttft_proactive_split_ms".to_string(),
+        pr_s.p90_ttft * 1e3,
+    ));
+    assert!(
+        pr_s.p90_ttft < st_s.p90_ttft,
+        "proactive split p90 ttft {:.1} ms did not beat static {:.1} ms under burst",
+        pr_s.p90_ttft * 1e3,
+        st_s.p90_ttft * 1e3
+    );
+
     let round = |x: f64| (x * 1000.0).round() / 1000.0;
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let host = obj(vec![("cores", Value::Num(cores as f64))]);
@@ -306,8 +381,11 @@ fn main() {
     let micro = Value::Obj(
         hotpath.iter().map(|(key, v)| (key.clone(), Value::Num(round(*v)))).collect(),
     );
+    let systems_obj = Value::Obj(
+        systems.iter().map(|(key, v)| (key.clone(), Value::Num(round(*v)))).collect(),
+    );
     let doc = obj(vec![
-        ("bench_id", Value::Num(7.0)),
+        ("bench_id", Value::Num(8.0)),
         // true = produced by an actual run (CI or local); the committed
         // baseline starts false (desk-estimated) and flips true once a
         // CI artifact is promoted to baseline
@@ -316,6 +394,7 @@ fn main() {
         ("config", config),
         ("cluster", cluster),
         ("hotpath", micro),
+        ("systems", systems_obj),
     ]);
     let mut text = String::new();
     pretty(&doc, 0, &mut text);

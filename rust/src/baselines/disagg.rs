@@ -1,0 +1,811 @@
+//! Intra-GPU prefill/decode disaggregation baselines: the strongest
+//! published competitors to Bullet's spatial-temporal sharing (§2.3.2,
+//! PAPERS.md — RAPID-Serve, Nexus, prefill-decode multiplexing).
+//!
+//! All three share Bullet's decoupled two-lane execution on the shared
+//! serving core — prefill and decode run concurrently on SM-masked
+//! streams — but differ in how the SM boundary between the phases is
+//! chosen:
+//!
+//! - [`StaticSplitPolicy`] (RAPID-Serve style): one fixed disjoint
+//!   partition for the whole run, the split ratio a config knob
+//!   (`ServingConfig::pd_split`, CLI `--pd-split R`).  Zero decision
+//!   overhead, but any phase-mix shift strands SMs on the quiet side.
+//! - [`ProactiveSplitPolicy`] (Nexus style): repartitions *ahead* of
+//!   the predicted phase mix — at every planning boundary it prices the
+//!   queued-but-unlaunched prefill work against the resident decode
+//!   batch's remaining work through the same [`PerfPredictor`] the
+//!   Bullet scheduler uses (an [`OnlineCalibrator`], so `--calibration
+//!   on` applies to the competitor too) and moves the boundary toward
+//!   the phase that is about to need it.  Unlike Bullet it knows only
+//!   the phase mix, not per-request SLO slack, and it never pauses
+//!   decode.
+//! - [`TemporalMuxPolicy`]: time-sliced alternation — whole-prompt
+//!   all-SM prefill epochs alternate with bounded all-SM decode epochs,
+//!   and the phases NEVER co-schedule.  No SM is ever idle while the
+//!   active phase runs, but each phase's latency absorbs the other's
+//!   epoch (TTFT waits out decode epochs, TPOT waits out prompts).
+//!
+//! Riding the shared core means prefix caching, lifecycle/cancellation
+//! and hot-path memoization compose with every policy here for free,
+//! so evaluation differences are *decisions only*.
+
+use crate::config::ServingConfig;
+use crate::engine::core::{CoreOptions, EngineCore, EngineOutput, Lane, ServingPolicy};
+use crate::gpu::roofline::GroundTruth;
+use crate::model::phases::{decode_all_layers, prefill_layer_kernels, PhaseShape};
+use crate::perf::{OnlineCalibrator, PerfModel, PerfPredictor};
+use crate::resource::Partition;
+use crate::sched::{PrefillBatch, PrefillReq};
+use crate::workload::Request;
+
+/// Decode iterations per temporal-multiplexing decode epoch.
+const DECODE_EPOCH_ITERS: usize = 8;
+
+/// The fixed disjoint P/D partition `cfg.pd_split` asks for: the
+/// prefill share of the GPU, clamped into
+/// `[min_prefill_sms, num_sms - min_decode_sms]` and quantized to the
+/// mask granularity.
+pub fn split_partition(cfg: &ServingConfig) -> Partition {
+    let sms = cfg.gpu.num_sms;
+    let frac = if cfg.pd_split.is_finite() { cfg.pd_split.clamp(0.0, 1.0) } else { 0.5 };
+    let lo = cfg.min_prefill_sms.min(sms);
+    let hi = sms.saturating_sub(cfg.min_decode_sms).max(lo);
+    let pm = ((frac * sms as f64).round() as usize).clamp(lo, hi);
+    Partition::split(&cfg.gpu, pm)
+}
+
+/// Whole-prompt FCFS prefill admission, shared by the disaggregation
+/// policies: KV-reserved (input + output minus the prefix-cached
+/// prefix), TTFT-first batching under `prefill_batch_tokens` — the same
+/// admission contract as the Bullet engine, minus the SLO-slack
+/// reorder.  Panics loudly when the head request can never fit (nothing
+/// in flight could free the pool), like every other engine here.
+fn form_prefill_batch(core: &mut EngineCore) -> Option<PrefillBatch> {
+    if core.waiting.is_empty() {
+        return None;
+    }
+    let now = core.now();
+    let mut batch_reqs: Vec<PrefillReq> = Vec::new();
+    let mut tokens = 0usize;
+    let mut i = 0;
+    while i < core.waiting.len() {
+        let r = core.waiting[i].req.clone();
+        // charge only the uncached suffix (prefix-cache adoption)
+        let suffix = r.input_len - r.cached_len;
+        let reserve = r.input_len + r.output_len - r.cached_len;
+        let fits_policy =
+            batch_reqs.is_empty() || tokens + suffix <= core.cfg.prefill_batch_tokens;
+        if fits_policy && tokens + suffix <= core.cfg.max_prefill_tokens && core.kv_room(r.id, reserve)
+        {
+            core.kv.grow(r.id, reserve).expect("kv reserve");
+            tokens += suffix;
+            core.waiting.remove(i);
+            batch_reqs.push(r);
+        } else if batch_reqs.is_empty() && core.decode.is_empty() && core.pending_join.is_empty() {
+            // nothing running that could free memory (and `kv_room`
+            // already evicted every reclaimable cached block)
+            panic!(
+                "request {} needs {} KV tokens but pool holds {}",
+                r.id,
+                reserve,
+                core.kv.capacity_tokens()
+            );
+        } else {
+            i += 1;
+        }
+    }
+    if batch_reqs.is_empty() {
+        None
+    } else {
+        Some(PrefillBatch::new(batch_reqs, now))
+    }
+}
+
+/// Launch one decode iteration over the resident batch on `stream`'s
+/// SMs; returns `(bs, cl)` for callers that record launch shapes.
+fn launch_decode_iteration(core: &mut EngineCore, stream_sms: Option<usize>) -> (usize, usize) {
+    let bs = core.decode.len();
+    let cl = (core.decode.iter().map(|d| d.st.ctx_len).sum::<usize>() / bs).max(1);
+    let kernels = decode_all_layers(&core.cfg.model, PhaseShape { tokens: bs, context: cl });
+    let stream = match stream_sms {
+        Some(sms) => core.rm.decode_stream_for(sms),
+        None => core.rm.decode_stream(),
+    };
+    core.submit(Lane::Decode, stream, kernels);
+    (bs, cl)
+}
+
+/// Kernels for `layers` prefill layers of the active batch's shape.
+fn prefill_layers_kernels(
+    core: &EngineCore,
+    b: &PrefillBatch,
+    layers: usize,
+) -> Vec<crate::gpu::kernel::KernelDesc> {
+    let shape = PhaseShape { tokens: b.n_tokens, context: b.ctx_cached };
+    let mut kernels = Vec::new();
+    for _ in 0..layers {
+        kernels.extend(prefill_layer_kernels(&core.cfg.model, shape));
+    }
+    kernels
+}
+
+// ---------------------------------------------------------------------------
+// Static split (RAPID-Serve style)
+// ---------------------------------------------------------------------------
+
+/// Fixed prefill/decode SM partition: the boundary is chosen once from
+/// `cfg.pd_split` and never moves.  Both lanes run concurrently on
+/// their disjoint masks; prompts prefill whole (all layers in one
+/// launch — with a frozen partition there is no decision to revisit at
+/// group boundaries).
+pub struct StaticSplitPolicy {
+    split: Partition,
+    applied: bool,
+    active_prefill: Option<PrefillBatch>,
+}
+
+impl StaticSplitPolicy {
+    pub fn new(cfg: &ServingConfig) -> StaticSplitPolicy {
+        StaticSplitPolicy {
+            split: split_partition(cfg),
+            applied: false,
+            active_prefill: None,
+        }
+    }
+
+    /// The partition this policy pins (test/observability hook).
+    pub fn partition(&self) -> Partition {
+        self.split
+    }
+
+    fn prefill_cycle(&mut self, core: &mut EngineCore) {
+        let total = core.cfg.model.n_layers;
+        if self
+            .active_prefill
+            .as_ref()
+            .map(|b| b.layers_done >= total)
+            .unwrap_or(false)
+        {
+            let b = self.active_prefill.take().unwrap();
+            for r in &b.reqs {
+                core.finish_prefill(r.clone(), b.started_at);
+            }
+        }
+        if self.active_prefill.is_none() {
+            self.active_prefill = form_prefill_batch(core);
+        }
+        if let Some(b) = &self.active_prefill {
+            core.sample_timeline(b.n_tokens);
+            let kernels = prefill_layers_kernels(core, b, total - b.layers_done);
+            let stream = core.rm.prefill_stream();
+            core.submit(Lane::Prefill, stream, kernels);
+        }
+    }
+}
+
+impl ServingPolicy for StaticSplitPolicy {
+    fn label(&self) -> String {
+        "Static-Split".into()
+    }
+
+    fn plan(&mut self, core: &mut EngineCore) {
+        if !self.applied {
+            // the one and only reconfiguration (a no-op when the knob
+            // matches the resource manager's initial 50/50 split)
+            core.rm.reconfigure(self.split);
+            self.applied = true;
+        }
+        if core.lane_idle(Lane::Prefill) {
+            self.prefill_cycle(core);
+        }
+        if core.lane_idle(Lane::Decode) {
+            core.join_pending(core.cfg.max_decode_batch);
+            if !core.decode.is_empty() {
+                launch_decode_iteration(core, None);
+            }
+        }
+    }
+
+    fn on_drain(&mut self, lane: Lane, core: &mut EngineCore) {
+        match lane {
+            Lane::Prefill => {
+                if let Some(b) = &mut self.active_prefill {
+                    b.layers_done = core.cfg.model.n_layers;
+                }
+            }
+            Lane::Decode => core.advance_decode_token(),
+        }
+    }
+
+    fn has_private_work(&self) -> bool {
+        self.active_prefill.is_some()
+    }
+
+    fn private_backlog_tokens(&self) -> usize {
+        self.active_prefill.as_ref().map(|b| b.n_tokens).unwrap_or(0)
+    }
+
+    fn probe_prefill_sms(&self) -> Option<usize> {
+        Some(self.split.prefill_sms)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Proactive split (Nexus style)
+// ---------------------------------------------------------------------------
+
+/// Prefill launch shape in flight, replayed at the drain boundary as a
+/// calibration sample (mirrors the Bullet policy's feedback loop).
+#[derive(Debug, Clone, Copy)]
+struct PrefillShape {
+    sl: usize,
+    ctx: usize,
+    pm: usize,
+    contended: bool,
+    layers: usize,
+}
+
+/// Decode launch shape in flight.
+#[derive(Debug, Clone, Copy)]
+struct DecodeShape {
+    bs: usize,
+    cl: usize,
+    dm: usize,
+    contended: bool,
+}
+
+/// Nexus-style proactive repartitioning: at every planning boundary the
+/// policy predicts the *imminent* phase mix — queued-but-unlaunched
+/// prefill work versus the decode batch's remaining work, both priced
+/// in full-GPU seconds by the shared [`PerfPredictor`] — and moves the
+/// SM boundary toward the phase that is about to need it, before that
+/// phase's kernels launch.  Prefill runs in layer groups (like Bullet)
+/// so mid-prompt group boundaries can pick the move up.
+pub struct ProactiveSplitPolicy {
+    perf: OnlineCalibrator,
+    current: Partition,
+    active_prefill: Option<PrefillBatch>,
+    group_size: usize,
+    prefill_launch: Option<PrefillShape>,
+    decode_launch: Option<DecodeShape>,
+}
+
+impl ProactiveSplitPolicy {
+    pub fn new(cfg: &ServingConfig, perf: &PerfModel) -> ProactiveSplitPolicy {
+        let mut calibrator = OnlineCalibrator::new(perf.clone(), cfg.calibration.clone());
+        calibrator.set_memo(cfg.memo);
+        ProactiveSplitPolicy {
+            perf: calibrator,
+            current: split_partition(cfg),
+            active_prefill: None,
+            group_size: 0,
+            prefill_launch: None,
+            decode_launch: None,
+        }
+    }
+
+    /// Predicted prefill share of the imminent phase mix, in [0, 1]:
+    /// full-GPU seconds of pending prefill work (queue + active batch
+    /// remainder — work that has not run yet, which is what makes the
+    /// split *proactive*) over total pending work, with the decode side
+    /// priced as the resident batch's mean remaining tokens.
+    pub fn phase_mix_share(&self, core: &EngineCore) -> f64 {
+        let sms = core.cfg.gpu.num_sms;
+        let total_layers = core.cfg.model.n_layers;
+        let queued: usize = core
+            .waiting
+            .iter()
+            .map(|w| (w.req.input_len - w.req.cached_len).saturating_sub(w.done))
+            .sum();
+        let active = self
+            .active_prefill
+            .as_ref()
+            .map(|b| b.n_tokens * total_layers.saturating_sub(b.layers_done) / total_layers.max(1))
+            .unwrap_or(0);
+        let prefill_tokens = queued + active;
+        let prefill_work = if prefill_tokens == 0 {
+            0.0
+        } else {
+            self.perf
+                .predict_prefill_remaining(prefill_tokens, 0, sms, total_layers, false)
+        };
+        let decode_members = core.decode.iter().chain(core.pending_join.iter());
+        let (mut bs, mut remaining, mut ctx) = (0usize, 0usize, 0usize);
+        for d in decode_members {
+            bs += 1;
+            remaining += d.st.output_len.saturating_sub(d.st.tokens_out);
+            ctx += d.st.ctx_len;
+        }
+        let decode_work = if bs == 0 || remaining == 0 {
+            0.0
+        } else {
+            let cl = (ctx / bs).max(1);
+            let steps = (remaining as f64 / bs as f64).ceil();
+            self.perf.predict_decode_step(bs, cl, sms, false) * steps
+        };
+        if prefill_work + decode_work <= 0.0 {
+            0.0
+        } else {
+            prefill_work / (prefill_work + decode_work)
+        }
+    }
+
+    /// The partition the predicted phase mix asks for (clamped and
+    /// quantized like [`split_partition`]).
+    pub fn target_partition(&self, core: &EngineCore) -> Partition {
+        let cfg = &core.cfg;
+        let sms = cfg.gpu.num_sms;
+        let lo = cfg.min_prefill_sms.min(sms);
+        let hi = sms.saturating_sub(cfg.min_decode_sms).max(lo);
+        let pm = ((self.phase_mix_share(core) * sms as f64).round() as usize).clamp(lo, hi);
+        Partition::split(&cfg.gpu, pm)
+    }
+
+    fn prefill_cycle(&mut self, core: &mut EngineCore) {
+        let total = core.cfg.model.n_layers;
+        if self
+            .active_prefill
+            .as_ref()
+            .map(|b| b.layers_done >= total)
+            .unwrap_or(false)
+        {
+            let b = self.active_prefill.take().unwrap();
+            for r in &b.reqs {
+                core.finish_prefill(r.clone(), b.started_at);
+            }
+        }
+        if self.active_prefill.is_none() {
+            self.active_prefill = form_prefill_batch(core);
+        }
+        if let Some(b) = &self.active_prefill {
+            core.sample_timeline(b.n_tokens);
+            let layers = core
+                .cfg
+                .prefill_layer_group
+                .max(1)
+                .min(total - b.layers_done);
+            let kernels = prefill_layers_kernels(core, b, layers);
+            let stream = core.rm.prefill_stream();
+            let (sl, ctx) = (b.n_tokens, b.ctx_cached);
+            core.submit(Lane::Prefill, stream, kernels);
+            self.group_size = layers;
+            self.prefill_launch = Some(PrefillShape {
+                sl,
+                ctx,
+                pm: core.rm.partition().prefill_sms,
+                contended: !core.decode.is_empty(),
+                layers,
+            });
+        }
+    }
+}
+
+impl ServingPolicy for ProactiveSplitPolicy {
+    fn label(&self) -> String {
+        "Proactive-Split".into()
+    }
+
+    fn plan(&mut self, core: &mut EngineCore) {
+        // Repartition AHEAD of the predicted mix, before either lane
+        // launches.  In-flight kernels keep their old masks until they
+        // drain (the §3.4.2 transition-overlap semantics Bullet also
+        // uses); `reconfigure` counts only actual moves.
+        let target = self.target_partition(core);
+        core.rm.reconfigure(target);
+        self.current = core.rm.partition();
+        if core.lane_idle(Lane::Prefill) {
+            self.prefill_cycle(core);
+        }
+        if core.lane_idle(Lane::Decode) {
+            core.join_pending(core.cfg.max_decode_batch);
+            if !core.decode.is_empty() {
+                let contended = self.active_prefill.is_some();
+                let (bs, cl) = launch_decode_iteration(core, None);
+                self.decode_launch = Some(DecodeShape {
+                    bs,
+                    cl,
+                    dm: core.rm.partition().decode_sms,
+                    contended,
+                });
+            }
+        }
+        core.stats.predict_memo = self.perf.memo_counters();
+    }
+
+    fn on_drain(&mut self, lane: Lane, core: &mut EngineCore) {
+        // Close the calibration loop exactly like the Bullet policy:
+        // the drain instant gives the observed duration of the shape
+        // recorded at launch (no-op samples with calibration off).
+        match lane {
+            Lane::Prefill => {
+                if let Some(l) = self.prefill_launch.take() {
+                    let observed = core.lane_busy_span(Lane::Prefill);
+                    let fed = self
+                        .perf
+                        .observe_prefill(l.sl, l.ctx, l.pm, l.contended, l.layers, observed);
+                    if fed.is_some() {
+                        core.note_calibration(self.perf.stats());
+                    }
+                }
+                if let Some(b) = &mut self.active_prefill {
+                    b.layers_done += self.group_size;
+                }
+            }
+            Lane::Decode => {
+                if let Some(l) = self.decode_launch.take() {
+                    let observed = core.lane_busy_span(Lane::Decode);
+                    let fed = self.perf.observe_decode(l.bs, l.cl, l.dm, l.contended, observed);
+                    if fed.is_some() {
+                        core.note_calibration(self.perf.stats());
+                    }
+                }
+                core.advance_decode_token();
+            }
+        }
+        core.stats.predict_memo = self.perf.memo_counters();
+    }
+
+    fn has_private_work(&self) -> bool {
+        self.active_prefill.is_some()
+    }
+
+    fn private_backlog_tokens(&self) -> usize {
+        self.active_prefill.as_ref().map(|b| b.n_tokens).unwrap_or(0)
+    }
+
+    fn predictor(&self) -> Option<&dyn PerfPredictor> {
+        Some(&self.perf)
+    }
+
+    fn reprofile(&mut self) -> bool {
+        if !self.perf.enabled() {
+            return false;
+        }
+        self.perf.reprofile();
+        true
+    }
+
+    fn probe_prefill_sms(&self) -> Option<usize> {
+        Some(self.current.prefill_sms)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Temporal multiplexing
+// ---------------------------------------------------------------------------
+
+/// Time-sliced P/D alternation: whole-prompt all-SM prefill epochs
+/// alternate with decode epochs of [`DECODE_EPOCH_ITERS`] iterations,
+/// and the two phases never run concurrently (plans only when ALL
+/// lanes are idle, and launches at most one lane per plan).
+pub struct TemporalMuxPolicy {
+    active_prefill: Option<PrefillBatch>,
+    /// Decode iterations left in the current decode epoch.
+    decode_epoch_left: usize,
+}
+
+impl TemporalMuxPolicy {
+    pub fn new() -> TemporalMuxPolicy {
+        TemporalMuxPolicy {
+            active_prefill: None,
+            decode_epoch_left: 0,
+        }
+    }
+}
+
+impl Default for TemporalMuxPolicy {
+    fn default() -> Self {
+        TemporalMuxPolicy::new()
+    }
+}
+
+impl ServingPolicy for TemporalMuxPolicy {
+    fn label(&self) -> String {
+        "Temporal-Mux".into()
+    }
+
+    fn plan(&mut self, core: &mut EngineCore) {
+        if !core.all_idle() {
+            return; // strict temporal multiplexing: one phase at a time
+        }
+        let total = core.cfg.model.n_layers;
+        if self
+            .active_prefill
+            .as_ref()
+            .map(|b| b.layers_done >= total)
+            .unwrap_or(false)
+        {
+            let b = self.active_prefill.take().unwrap();
+            for r in &b.reqs {
+                core.finish_prefill(r.clone(), b.started_at);
+            }
+            // a finished prefill epoch hands the GPU to decode
+            self.decode_epoch_left = DECODE_EPOCH_ITERS;
+        }
+        core.join_pending(core.cfg.max_decode_batch);
+        let sms = core.cfg.gpu.num_sms;
+        let prefill_pending = self.active_prefill.is_some() || !core.waiting.is_empty();
+        // Decode epoch: consume the budget, or run freely while no
+        // prefill is pending.
+        if !core.decode.is_empty() && (self.decode_epoch_left > 0 || !prefill_pending) {
+            if self.decode_epoch_left == 0 {
+                self.decode_epoch_left = DECODE_EPOCH_ITERS;
+            }
+            launch_decode_iteration(core, Some(sms));
+            self.decode_epoch_left -= 1;
+            return;
+        }
+        // Prefill epoch: one whole-prompt batch on every SM.
+        if self.active_prefill.is_none() {
+            self.active_prefill = form_prefill_batch(core);
+        }
+        if let Some(b) = &self.active_prefill {
+            core.sample_timeline(b.n_tokens);
+            let kernels = prefill_layers_kernels(core, b, total - b.layers_done);
+            let stream = core.rm.prefill_stream_for(sms);
+            core.submit(Lane::Prefill, stream, kernels);
+            return;
+        }
+        // Admission blocked on KV: let decode run another epoch to
+        // drain the pool (it is the only thing that can free blocks).
+        if !core.decode.is_empty() {
+            self.decode_epoch_left = DECODE_EPOCH_ITERS - 1;
+            launch_decode_iteration(core, Some(sms));
+        }
+    }
+
+    fn on_drain(&mut self, lane: Lane, core: &mut EngineCore) {
+        match lane {
+            Lane::Prefill => {
+                if let Some(b) = &mut self.active_prefill {
+                    b.layers_done = core.cfg.model.n_layers;
+                }
+            }
+            Lane::Decode => core.advance_decode_token(),
+        }
+    }
+
+    fn has_private_work(&self) -> bool {
+        self.active_prefill.is_some()
+    }
+
+    fn private_backlog_tokens(&self) -> usize {
+        self.active_prefill.as_ref().map(|b| b.n_tokens).unwrap_or(0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serve wrappers
+// ---------------------------------------------------------------------------
+
+/// Serve `trace` under a fixed P/D SM split (`cfg.pd_split`).
+pub fn serve_static_split(
+    cfg: &ServingConfig,
+    gt: &GroundTruth,
+    trace: &[Request],
+    seed: u64,
+) -> EngineOutput {
+    let opts = CoreOptions { seed, ..CoreOptions::default() };
+    let mut core = EngineCore::new(cfg.clone(), gt.clone(), trace.to_vec(), &opts);
+    let mut policy = StaticSplitPolicy::new(cfg);
+    core.run(&mut policy);
+    core.into_output()
+}
+
+/// Serve `trace` under Nexus-style proactive P/D repartitioning.
+pub fn serve_proactive_split(
+    cfg: &ServingConfig,
+    perf: &PerfModel,
+    gt: &GroundTruth,
+    trace: &[Request],
+    seed: u64,
+) -> EngineOutput {
+    let opts = CoreOptions { seed, ..CoreOptions::default() };
+    let mut core = EngineCore::new(cfg.clone(), gt.clone(), trace.to_vec(), &opts);
+    let mut policy = ProactiveSplitPolicy::new(cfg, perf);
+    core.run(&mut policy);
+    core.into_output()
+}
+
+/// Serve `trace` under time-sliced P/D multiplexing.
+pub fn serve_temporal_mux(
+    cfg: &ServingConfig,
+    gt: &GroundTruth,
+    trace: &[Request],
+    seed: u64,
+) -> EngineOutput {
+    let opts = CoreOptions { seed, ..CoreOptions::default() };
+    let mut core = EngineCore::new(cfg.clone(), gt.clone(), trace.to_vec(), &opts);
+    let mut policy = TemporalMuxPolicy::new();
+    core.run(&mut policy);
+    core.into_output()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuSpec;
+    use crate::workload::{generate_bursty_trace, generate_n_requests, Dataset};
+
+    fn setup() -> (ServingConfig, PerfModel, GroundTruth) {
+        let cfg = ServingConfig::default();
+        let gt = GroundTruth::new(GpuSpec::a100());
+        let perf = PerfModel::analytical(cfg.gpu.clone(), cfg.model.clone());
+        (cfg, perf, gt)
+    }
+
+    #[test]
+    fn split_partition_clamps_and_quantizes() {
+        let cfg = ServingConfig::default();
+        let p = split_partition(&cfg);
+        assert_eq!(p.prefill_sms, 54); // 0.5 of 108
+        assert_eq!(p.decode_sms, 54);
+        let quarter = ServingConfig { pd_split: 0.25, ..ServingConfig::default() };
+        assert_eq!(split_partition(&quarter).prefill_sms, 26); // 27 quantized down
+        let zero = ServingConfig { pd_split: 0.0, ..ServingConfig::default() };
+        assert_eq!(split_partition(&zero).prefill_sms, 24); // min_prefill_sms floor
+        let one = ServingConfig { pd_split: 1.0, ..ServingConfig::default() };
+        assert_eq!(split_partition(&one).prefill_sms, 96); // num_sms - min_decode_sms
+        let nan = ServingConfig { pd_split: f64::NAN, ..ServingConfig::default() };
+        assert_eq!(split_partition(&nan).prefill_sms, 54); // NaN falls back to 0.5
+    }
+
+    #[test]
+    fn static_split_serves_all_and_never_repartitions() {
+        let (cfg, _, gt) = setup();
+        let trace = generate_n_requests(&Dataset::sharegpt(), 5.0, 25, 17);
+        let mut core = EngineCore::new(cfg.clone(), gt, trace, &CoreOptions::default());
+        let mut policy = StaticSplitPolicy::new(&cfg);
+        core.run(&mut policy);
+        let expected = policy.partition();
+        assert_eq!(core.rm.partition(), expected, "partition pinned for the whole run");
+        // the one initial reconfigure is a no-op at the default 50/50
+        assert_eq!(core.rm.reconfig_count(), 0, "static split must never move");
+        let out = core.into_output();
+        assert_eq!(out.records.len(), 25);
+    }
+
+    #[test]
+    fn static_split_honors_pd_split_knob() {
+        let (cfg, _, gt) = setup();
+        let cfg = ServingConfig { pd_split: 0.75, ..cfg };
+        let trace = generate_n_requests(&Dataset::sharegpt(), 5.0, 10, 17);
+        let mut core = EngineCore::new(cfg.clone(), gt, trace, &CoreOptions::default());
+        let mut policy = StaticSplitPolicy::new(&cfg);
+        core.run(&mut policy);
+        assert_eq!(core.rm.partition().prefill_sms, 80); // 81 quantized down
+        assert_eq!(core.rm.reconfig_count(), 1, "one move from the initial 50/50, then pinned");
+    }
+
+    #[test]
+    fn static_split_is_deterministic() {
+        let (cfg, _, gt) = setup();
+        let trace = generate_n_requests(&Dataset::sharegpt(), 6.0, 20, 29);
+        let a = serve_static_split(&cfg, &gt, &trace, 3);
+        let b = serve_static_split(&cfg, &gt, &trace, 3);
+        assert_eq!(a.records, b.records);
+        assert_eq!(a.reconfigs, b.reconfigs);
+    }
+
+    #[test]
+    fn proactive_split_tracks_the_phase_mix_estimate() {
+        let (cfg, perf, gt) = setup();
+        // all-prefill pending state: the target must sit at the prefill
+        // ceiling (num_sms - min_decode_sms)
+        let trace = generate_n_requests(&Dataset::azure_code(), 50.0, 8, 5);
+        let mut core = EngineCore::new(cfg.clone(), gt.clone(), trace, &CoreOptions::default());
+        let mut policy = ProactiveSplitPolicy::new(&cfg, &perf);
+        core.sim.run_for(1.0);
+        core.admit_arrivals();
+        assert!(!core.waiting.is_empty());
+        assert!((policy.phase_mix_share(&core) - 1.0).abs() < 1e-12);
+        assert_eq!(policy.target_partition(&core).prefill_sms, 96);
+        // after the run drains there is no pending prefill: the applied
+        // partition must have followed the estimate down to the floor
+        core.run(&mut policy);
+        assert_eq!(policy.phase_mix_share(&core), 0.0);
+        assert_eq!(core.rm.partition(), policy.target_partition(&core));
+        assert_eq!(core.rm.partition().prefill_sms, cfg.min_prefill_sms);
+        assert!(core.rm.reconfig_count() > 1, "proactive split must move with the mix");
+    }
+
+    #[test]
+    fn proactive_split_serves_all_and_is_deterministic() {
+        let (cfg, perf, gt) = setup();
+        let trace = generate_n_requests(&Dataset::sharegpt(), 6.0, 25, 31);
+        let a = serve_proactive_split(&cfg, &perf, &gt, &trace, 3);
+        let b = serve_proactive_split(&cfg, &perf, &gt, &trace, 3);
+        assert_eq!(a.records.len(), 25);
+        assert_eq!(a.records, b.records);
+        assert_eq!(a.reconfigs, b.reconfigs);
+    }
+
+    #[test]
+    fn proactive_split_feeds_its_calibrator() {
+        use crate::config::CalibrationConfig;
+        let (mut cfg, perf, gt) = setup();
+        cfg.calibration = CalibrationConfig::on();
+        let trace = generate_n_requests(&Dataset::sharegpt(), 5.0, 15, 13);
+        let out = serve_proactive_split(&cfg, &perf, &gt, &trace, 7);
+        assert_eq!(out.records.len(), 15);
+        assert!(out.calibration.samples > 10, "{:?}", out.calibration);
+    }
+
+    #[test]
+    fn proactive_beats_static_on_bursty_p90_ttft() {
+        // the fig13-style claim the bench gates: under a bursty trace a
+        // boundary that moves ahead of the phase mix clears prefill
+        // surges that a frozen 50/50 split queues behind.
+        use crate::metrics::summarize;
+        let (cfg, perf, gt) = setup();
+        let trace = generate_bursty_trace(&Dataset::sharegpt(), 2.0, 12.0, 4.0, 1.5, 1.0, 11);
+        let n = trace.len();
+        let st = serve_static_split(&cfg, &gt, &trace, 3);
+        let pr = serve_proactive_split(&cfg, &perf, &gt, &trace, 3);
+        assert_eq!(st.records.len(), n);
+        assert_eq!(pr.records.len(), n);
+        let s = summarize(&st.records, &cfg.slo, Some(st.virtual_duration));
+        let p = summarize(&pr.records, &cfg.slo, Some(pr.virtual_duration));
+        assert!(
+            p.p90_ttft < s.p90_ttft,
+            "proactive p90 ttft {} vs static {}",
+            p.p90_ttft,
+            s.p90_ttft
+        );
+    }
+
+    /// Delegating wrapper that asserts the phases never co-schedule:
+    /// at every policy callback at most one lane may be in flight.
+    struct AssertExclusive(TemporalMuxPolicy);
+
+    impl AssertExclusive {
+        fn check(core: &EngineCore) {
+            assert!(
+                core.lane_idle(Lane::Prefill) || core.lane_idle(Lane::Decode),
+                "temporal mux co-scheduled prefill and decode"
+            );
+        }
+    }
+
+    impl ServingPolicy for AssertExclusive {
+        fn label(&self) -> String {
+            self.0.label()
+        }
+        fn plan(&mut self, core: &mut EngineCore) {
+            Self::check(core);
+            self.0.plan(core);
+            Self::check(core);
+        }
+        fn on_drain(&mut self, lane: Lane, core: &mut EngineCore) {
+            Self::check(core);
+            self.0.on_drain(lane, core);
+        }
+        fn has_private_work(&self) -> bool {
+            self.0.has_private_work()
+        }
+        fn private_backlog_tokens(&self) -> usize {
+            self.0.private_backlog_tokens()
+        }
+    }
+
+    #[test]
+    fn temporal_mux_never_coschedules_phases() {
+        let (cfg, _, gt) = setup();
+        let trace = generate_n_requests(&Dataset::sharegpt(), 8.0, 30, 23);
+        let mut core = EngineCore::new(cfg.clone(), gt, trace, &CoreOptions::default());
+        let mut policy = AssertExclusive(TemporalMuxPolicy::new());
+        core.run(&mut policy);
+        let out = core.into_output();
+        assert_eq!(out.records.len(), 30);
+    }
+
+    #[test]
+    fn temporal_mux_is_deterministic() {
+        let (cfg, _, gt) = setup();
+        let trace = generate_n_requests(&Dataset::sharegpt(), 6.0, 20, 37);
+        let a = serve_temporal_mux(&cfg, &gt, &trace, 3);
+        let b = serve_temporal_mux(&cfg, &gt, &trace, 3);
+        assert_eq!(a.records, b.records);
+    }
+}

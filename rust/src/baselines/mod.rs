@@ -6,14 +6,23 @@
 //!   KV-reload costs);
 //! - [`nanoflow`]: NanoFlow-style nano-batch overlap on top of chunked
 //!   prefill;
+//! - [`disagg`]: intra-GPU prefill/decode disaggregation — a fixed SM
+//!   split (RAPID-Serve style), Nexus-style proactive repartitioning
+//!   ahead of the predicted phase mix, and strict temporal
+//!   multiplexing;
 //! - fixed-quota spatial sharing (MuxServe-like) and the Fig. 14
 //!   ablations are expressed through [`crate::engine::sim_engine::Features`]
 //!   (see [`systems`]).
 
 pub mod chunked;
+pub mod disagg;
 pub mod nanoflow;
 pub mod systems;
 
 pub use chunked::{serve_chunked, serve_chunked_output, ChunkedConfig, ChunkedPolicy};
+pub use disagg::{
+    serve_proactive_split, serve_static_split, serve_temporal_mux, ProactiveSplitPolicy,
+    StaticSplitPolicy, TemporalMuxPolicy,
+};
 pub use nanoflow::{serve_nanoflow, serve_nanoflow_output, NanoflowPolicy};
 pub use systems::{run_system, run_system_output, System};

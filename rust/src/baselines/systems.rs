@@ -3,6 +3,10 @@
 //! any of them across replicas.
 
 use crate::baselines::chunked::{serve_chunked_output, ChunkedConfig, ChunkedPolicy};
+use crate::baselines::disagg::{
+    serve_proactive_split, serve_static_split, serve_temporal_mux, ProactiveSplitPolicy,
+    StaticSplitPolicy, TemporalMuxPolicy,
+};
 use crate::baselines::nanoflow::{serve_nanoflow_output, NanoflowPolicy};
 use crate::config::ServingConfig;
 use crate::engine::core::{EngineOutput, ServingPolicy};
@@ -20,6 +24,15 @@ pub enum System {
     Sglang1024,
     Sglang2048,
     Nanoflow,
+    /// Fixed intra-GPU P/D disaggregation: a pinned prefill/decode SM
+    /// split (RAPID-Serve style); the ratio comes from `cfg.pd_split`.
+    StaticSplit,
+    /// Nexus-style proactive P/D repartitioning ahead of the predicted
+    /// phase mix (same calibrated predictor as Bullet).
+    ProactiveSplit,
+    /// Time-sliced P/D alternation: all-SM prefill epochs alternate
+    /// with all-SM decode epochs; phases never co-schedule.
+    TemporalMux,
     /// Fixed prefill SM quota, decode on the whole GPU (Fig. 13 / MuxServe-like).
     FixedSm(usize),
     /// Ablations (Fig. 14).
@@ -36,6 +49,9 @@ impl System {
             System::Sglang1024 => "SGLang-1024".into(),
             System::Sglang2048 => "SGLang-2048".into(),
             System::Nanoflow => "NanoFlow".into(),
+            System::StaticSplit => "Static-Split".into(),
+            System::ProactiveSplit => "Proactive-Split".into(),
+            System::TemporalMux => "Temporal-Mux".into(),
             System::FixedSm(n) => format!("SM-{n}"),
             System::Naive => "Naive".into(),
             System::WithPartition => "w/Partition".into(),
@@ -51,6 +67,9 @@ impl System {
             "sglang-1024" => Some(System::Sglang1024),
             "sglang-2048" => Some(System::Sglang2048),
             "nanoflow" => Some(System::Nanoflow),
+            "static-split" => Some(System::StaticSplit),
+            "proactive-split" => Some(System::ProactiveSplit),
+            "temporal-mux" => Some(System::TemporalMux),
             _ => None,
         }
     }
@@ -62,6 +81,9 @@ impl System {
             System::Sglang1024,
             System::Sglang2048,
             System::Nanoflow,
+            System::StaticSplit,
+            System::ProactiveSplit,
+            System::TemporalMux,
             System::Bullet,
         ]
     }
@@ -102,6 +124,9 @@ impl System {
             System::Sglang1024 => Box::new(ChunkedPolicy::new(ChunkedConfig::sglang_1024())),
             System::Sglang2048 => Box::new(ChunkedPolicy::new(ChunkedConfig::sglang_2048())),
             System::Nanoflow => Box::new(NanoflowPolicy::new(ChunkedConfig::sglang_1024())),
+            System::StaticSplit => Box::new(StaticSplitPolicy::new(cfg)),
+            System::ProactiveSplit => Box::new(ProactiveSplitPolicy::new(cfg, perf)),
+            System::TemporalMux => Box::new(TemporalMuxPolicy::new()),
             _ => unreachable!("bullet-family systems handled above"),
         }
     }
@@ -143,6 +168,9 @@ pub fn run_system_output(
         System::Nanoflow => {
             serve_nanoflow_output(cfg, &ChunkedConfig::sglang_1024(), gt, trace, seed)
         }
+        System::StaticSplit => serve_static_split(cfg, gt, trace, seed),
+        System::ProactiveSplit => serve_proactive_split(cfg, perf, gt, trace, seed),
+        System::TemporalMux => serve_temporal_mux(cfg, gt, trace, seed),
     }
 }
 
@@ -183,6 +211,9 @@ mod tests {
             System::Sglang1024,
             System::Sglang2048,
             System::Nanoflow,
+            System::StaticSplit,
+            System::ProactiveSplit,
+            System::TemporalMux,
             System::FixedSm(84),
             System::Naive,
             System::WithPartition,

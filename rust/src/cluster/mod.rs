@@ -246,13 +246,21 @@ impl Replica {
 
     /// Snapshot every dispatcher-visible signal.  Taken at each horizon
     /// barrier so routing and autoscaling read frozen, thread-free state.
+    /// `num_sms` is the SM count the prefill probe prices against: the
+    /// policy's pinned prefill partition when it keeps one
+    /// ([`ServingPolicy::probe_prefill_sms`] — the P/D disaggregation
+    /// baselines), else the replica's full GPU.
     pub fn signals(&self) -> ReplicaSignals {
         ReplicaSignals {
             id: self.id,
             outstanding_kv_tokens: self.outstanding_kv_tokens(),
             backlog_tokens: self.backlog_tokens(),
             decode_batch: self.decode_batch(),
-            num_sms: self.core.cfg.gpu.num_sms,
+            num_sms: self
+                .policy
+                .probe_prefill_sms()
+                .unwrap_or(self.core.cfg.gpu.num_sms)
+                .min(self.core.cfg.gpu.num_sms),
             n_layers: self.core.cfg.model.n_layers,
             slowdown: self.calibrated_slowdown(),
             calib: self.calibration(),

@@ -384,6 +384,13 @@ pub struct ServingConfig {
     /// are bit-identical — this flag exists so the parity tests can say
     /// so, and so a suspected memo bug can be ruled out in the field.
     pub memo: bool,
+    /// Prefill share of the fixed SM split used by the intra-GPU P/D
+    /// disaggregation baselines (`--system static-split`, and the
+    /// starting point of `proactive-split`).  Fraction of `gpu.num_sms`
+    /// in (0, 1), quantized to the mask granularity and clamped between
+    /// `min_prefill_sms` and `num_sms - min_decode_sms` at use.  Ignored
+    /// by every other system.
+    pub pd_split: f64,
 }
 
 impl Default for ServingConfig {
@@ -407,6 +414,7 @@ impl Default for ServingConfig {
             prefix_cache: false,
             calibration: CalibrationConfig::default(),
             memo: true,
+            pd_split: 0.5,
         }
     }
 }
@@ -459,6 +467,9 @@ impl ServingConfig {
         }
         if let Some(x) = v.get("memo").and_then(Value::as_bool) {
             cfg.memo = x;
+        }
+        if let Some(x) = v.get("pd_split").and_then(Value::as_f64) {
+            cfg.pd_split = x;
         }
         cfg
     }
@@ -555,6 +566,13 @@ mod tests {
         assert!(ServingConfig::default().memo);
         let v = json::parse(r#"{"memo": false}"#).unwrap();
         assert!(!ServingConfig::from_json(&v).memo);
+    }
+
+    #[test]
+    fn pd_split_default_and_json_override() {
+        assert_eq!(ServingConfig::default().pd_split, 0.5);
+        let v = json::parse(r#"{"pd_split": 0.25}"#).unwrap();
+        assert_eq!(ServingConfig::from_json(&v).pd_split, 0.25);
     }
 
     #[test]

@@ -236,6 +236,17 @@ pub trait ServingPolicy: Send {
     fn reprofile(&mut self) -> bool {
         false
     }
+
+    /// SM count the router's prefill probe should price new arrivals
+    /// against.  Policies that pin prefill to a fixed SM partition (the
+    /// intra-GPU P/D disaggregation baselines) report it here so
+    /// slo-slack routing sees the partition, not the whole GPU; `None`
+    /// (the default) means prefill can reach every SM eventually —
+    /// Bullet repartitions on demand, chunked/NanoFlow run full-GPU —
+    /// and the probe uses the replica's total SM count.
+    fn probe_prefill_sms(&self) -> Option<usize> {
+        None
+    }
 }
 
 /// The shared serving core (see module docs).

@@ -453,4 +453,15 @@ mod tests {
         total.merge(s);
         assert_eq!(total.lookups, 4);
     }
+
+    #[test]
+    fn empty_stats_ratios_are_zero_not_nan() {
+        // zero-denominator guard: a cold run (cache off, or no
+        // cacheable requests) must report 0.0 ratios, never NaN — the
+        // CLI tables print these raw.
+        let s = PrefixStats::default();
+        assert_eq!(s.hit_rate(), 0.0);
+        assert_eq!(s.cached_token_ratio(), 0.0);
+        assert_eq!(s.tokens_saved(), 0);
+    }
 }

@@ -27,8 +27,10 @@
 //!              core + policy
 //!  policies  ─ decisions only: BulletPolicy (dynamic SM partitioning,
 //!              Algorithm 1), ChunkedPolicy (vLLM/SGLang lock-step),
-//!              NanoflowPolicy (nano-batch overlap), plus Bullet feature
-//!              masks for the ablations and MuxServe-style fixed quotas
+//!              NanoflowPolicy (nano-batch overlap), the intra-GPU P/D
+//!              disaggregation family (static / proactive / temporal-mux
+//!              splits), plus Bullet feature masks for the ablations and
+//!              MuxServe-style fixed quotas
 //!  core      ─ mechanisms only: EngineCore owns the virtual-clock event
 //!              loop, admission (incl. the prefix-cache fast path), KV
 //!              reserve/release, prefill→decode migration, timeline
@@ -60,7 +62,41 @@
 //! `BulletServer::serve_cluster`, the CLI (`--replicas N --router
 //! <policy> --sim-threads N`) and `examples/cluster_scaling.rs`;
 //! `examples/bench_runner.rs` records the perf trajectory
-//! (`BENCH_7.json`, gated by CI's `bench` job).
+//! (`BENCH_8.json`, gated by CI's `bench` job).
+//!
+//! **Competitor baselines** ([`baselines`]).  Five non-Bullet systems
+//! share the core, each the strongest version of one resource-sharing
+//! doctrine, and each has a regime where it is the one to beat:
+//!
+//! - *Chunked prefill* ([`baselines::chunked`], vLLM-1024 /
+//!   SGLang-1024 / SGLang-2048): lock-step hybrid batches under a token
+//!   budget.  Wins on decode-dominated steady state, where lock-step
+//!   amortizes and TTFT pressure is low; loses TTFT whenever prompts
+//!   must trickle through the chunk budget.
+//! - *NanoFlow* ([`baselines::nanoflow`]): nano-batch overlap on top of
+//!   chunked prefill.  Wins back intra-iteration idle time at high
+//!   utilization; still inherits the chunk-budget TTFT floor.
+//! - *Static split* ([`baselines::disagg::StaticSplitPolicy`],
+//!   RAPID-Serve style, `--pd-split R`): a frozen disjoint SM
+//!   partition.  Wins when the phase mix is stationary and known —
+//!   dial the knob to the workload and nothing beats zero decision
+//!   overhead; strands SMs the moment the mix shifts.
+//! - *Proactive split* ([`baselines::disagg::ProactiveSplitPolicy`],
+//!   Nexus style): repartitions ahead of the predicted phase mix using
+//!   the same calibrated [`perf::PerfPredictor`] Bullet plans with.
+//!   Wins under slow phase-mix swings (bursty arrivals, shifting
+//!   prompt mixes); lacks per-request SLO slack, so it cannot
+//!   prioritize the request that is about to miss.
+//! - *Temporal mux* ([`baselines::disagg::TemporalMuxPolicy`]):
+//!   all-SM prefill epochs alternating with all-SM decode epochs.
+//!   Wins on single-phase extremes (pure-prefill or pure-decode
+//!   traffic) where any static split wastes the other side's SMs;
+//!   each phase's tail absorbs the other's epoch everywhere else.
+//!
+//! Bullet's spatial-temporal sharing subsumes the disaggregation
+//! family: the partition moves like proactive, pauses like temporal
+//! mux, and is driven by per-request SLO slack none of them see.  The
+//! `bench` job's fig11/fig13 legs gate that ordering.
 //!
 //! **Hot-path caches** (`ServingConfig::memo`, default on).  Three
 //! memoizations keep per-event work off the serving fast path: the

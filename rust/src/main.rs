@@ -3,7 +3,9 @@
 //! ```text
 //! bullet serve   [--workload sharegpt|azure-code|arxiv-summary|conversational]
 //!                [--rate R] [--requests N] [--system bullet|vllm-1024|
-//!                 sglang-1024|sglang-2048|nanoflow] [--profile coarse|paper]
+//!                 sglang-1024|sglang-2048|nanoflow|static-split|
+//!                 proactive-split|temporal-mux] [--pd-split R]
+//!                [--profile coarse|paper]
 //!                [--seed S] [--prefix-cache on|off] [--replicas N]
 //!                [--router round-robin|least-kv|slo-slack|prefix-affinity]
 //!                [--calibration on|off] [--drift none|throttle|step|lottery|storm]
@@ -55,7 +57,12 @@ subcommands:
   info     print configuration and artifact status
 
 common flags: --workload NAME --rate R --requests N --seed S
-serve flags:  --system bullet|vllm-1024|sglang-1024|sglang-2048|nanoflow
+serve flags:  --system bullet|vllm-1024|sglang-1024|sglang-2048|nanoflow|
+                       static-split|proactive-split|temporal-mux
+              --pd-split R            (prefill share of the fixed P/D SM
+                                       split, in (0,1); static-split pins
+                                       it, proactive-split starts there;
+                                       default 0.5)
               --profile coarse|paper
               --prefix-cache on|off   (shared-prefix KV reuse; pairs with
                                        --workload conversational)
@@ -211,11 +218,17 @@ fn serve(args: &Args) {
             std::process::exit(2);
         }
     };
+    let pd_split = args.get_f64("pd-split", 0.5);
+    if !(pd_split > 0.0 && pd_split < 1.0) {
+        eprintln!("bad --pd-split '{pd_split}' (want a fraction in (0, 1))");
+        std::process::exit(2);
+    }
     let cfg = ServingConfig {
         slo: workload_slo(&name),
         prefix_cache,
         calibration,
         memo,
+        pd_split,
         ..ServingConfig::default()
     };
 

@@ -644,6 +644,9 @@ mod tests {
         c.merge(&CalibrationStats::default());
         assert_eq!(c.samples, 0);
         assert_eq!(c.slowdown, 1.0);
+        // zero-denominator guard: a sample-free calibrator reports 0.0
+        // mean residual, never NaN — the CLI tables print this raw
+        assert_eq!(c.mean_abs_residual(), 0.0);
     }
 
     #[test]

@@ -57,11 +57,19 @@ pub fn bench(name: &str, target_samples: usize, mut f: impl FnMut()) -> BenchRes
         }
         samples.push(t0.elapsed().as_secs_f64() / batch as f64);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    finalize(name, batch, samples)
+}
+
+/// Sort the raw samples and fold them into a [`BenchResult`].  The sort
+/// is `total_cmp`: a degenerate sample (a zero-batch division or an
+/// arithmetic NaN from a future harness change) must not panic the
+/// whole bench binary mid-run.
+fn finalize(name: &str, batch: usize, mut samples: Vec<f64>) -> BenchResult {
+    samples.sort_by(f64::total_cmp);
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
     BenchResult {
         name: name.to_string(),
-        iters: batch * target_samples,
+        iters: batch * samples.len(),
         mean_s: mean,
         p50_s: crate::util::stats::percentile_sorted(&samples, 50.0),
         p90_s: crate::util::stats::percentile_sorted(&samples, 90.0),
@@ -91,5 +99,18 @@ mod tests {
         assert!(r.p90_s >= r.p50_s);
         assert!(r.min_s <= r.mean_s * 1.5);
         assert!(r.report().contains("spin"));
+    }
+
+    #[test]
+    fn bench_timer_sort_tolerates_nan_samples() {
+        // regression: the sample sort used to be
+        // `partial_cmp().unwrap()`, so one NaN sample panicked the
+        // whole bench run.  total_cmp ranks NaN at the top instead:
+        // p50 of mostly-finite samples stays finite and min is real.
+        let r = finalize("nan", 1, vec![3e-6, f64::NAN, 1e-6, 2e-6]);
+        assert_eq!(r.min_s, 1e-6);
+        assert!((r.p50_s - 2.5e-6).abs() < 1e-12);
+        assert!(r.p90_s.is_nan(), "NaN ranks at the top percentile");
+        assert!(r.report().contains("nan"));
     }
 }

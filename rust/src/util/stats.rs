@@ -3,17 +3,22 @@
 //! Welford accumulator.
 
 /// Percentile of a sample (linear interpolation, like numpy's default).
-/// `p` in [0, 100]. Returns NaN on an empty slice.
+/// `p` is clamped into [0, 100] (p < 0 reads the minimum, p > 100 the
+/// maximum). Returns NaN on an empty slice.  The sort is `total_cmp`,
+/// so NaN-bearing input ranks NaNs at the top instead of panicking —
+/// a NaN then only surfaces in the result when the requested rank
+/// actually touches one.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     percentile_sorted(&v, p)
 }
 
-/// Percentile over an already-sorted slice.
+/// Percentile over an already-sorted slice (`p` clamped like
+/// [`percentile`]).
 pub fn percentile_sorted(v: &[f64], p: f64) -> f64 {
     if v.is_empty() {
         return f64::NAN;
@@ -33,9 +38,10 @@ pub fn percentile_sorted(v: &[f64], p: f64) -> f64 {
 /// Percentile by in-place selection instead of a full sort: O(n)
 /// expected versus O(n log n), and no allocation — the caller's scratch
 /// buffer is reordered in place.  Bit-identical to [`percentile`] for
-/// NaN-free input without negative zeros: both read the same two order
-/// statistics under the same total order and apply the same linear
-/// interpolation, and equal non-zero f64 values are bitwise equal.
+/// input without negative zeros (NaN included): both read the same two
+/// order statistics under the `total_cmp` total order and apply the
+/// same linear interpolation, and equal non-zero f64 values are bitwise
+/// equal.  `p` is clamped like [`percentile`].
 pub fn percentile_select(xs: &mut [f64], p: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
@@ -44,13 +50,19 @@ pub fn percentile_select(xs: &mut [f64], p: f64) -> f64 {
     let rank = p / 100.0 * (xs.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
-    let (_, lo_v, rest) = xs.select_nth_unstable_by(lo, |a, b| a.partial_cmp(b).unwrap());
+    let (_, lo_v, rest) = xs.select_nth_unstable_by(lo, f64::total_cmp);
     let lo_v = *lo_v;
     if lo == hi {
         return lo_v;
     }
-    // hi == lo + 1, so sorted v[hi] is the minimum of the suffix
-    let hi_v = rest.iter().cloned().fold(f64::INFINITY, f64::min);
+    // hi == lo + 1, so sorted v[hi] is the suffix minimum — under the
+    // same total order as the sort (a NaN-skipping f64::min here would
+    // disagree with the sorted path on NaN-bearing input).
+    let hi_v = rest
+        .iter()
+        .copied()
+        .min_by(|a, b| a.total_cmp(b))
+        .expect("hi < len, so the suffix is non-empty");
     let frac = rank - lo as f64;
     lo_v * (1.0 - frac) + hi_v * frac
 }
@@ -248,6 +260,58 @@ mod tests {
         let mut one = [7.25];
         assert_eq!(percentile_select(&mut one, 90.0).to_bits(), 7.25f64.to_bits());
         assert!(percentile_select(&mut [], 50.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_samples() {
+        // regression: a NaN-bearing sample used to panic the
+        // `partial_cmp().unwrap()` sort (same class as the
+        // `SloScheduler::reorder_waiting` fix).  total_cmp ranks NaN at
+        // the top, so low/mid percentiles of mostly-finite data stay
+        // finite and nothing panics.
+        assert_eq!(percentile(&[1.0, f64::NAN], 0.0), 1.0);
+        let _ = percentile(&[1.0, f64::NAN], 90.0); // must not panic
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+        assert!(percentile(&xs, 100.0).is_nan());
+        let _ = percentile(&[f64::NAN, f64::NAN], 50.0); // must not panic
+    }
+
+    #[test]
+    fn percentile_select_agrees_with_percentile_on_nan_input() {
+        // the select path must use the SAME total order as the sort
+        // path, including the suffix-min step (a NaN-skipping f64::min
+        // there would diverge).
+        let xs = [5.0, f64::NAN, 1.0, 4.0, f64::NAN, 2.0, 3.0];
+        for p in [0.0, 25.0, 50.0, 75.0, 90.0, 100.0] {
+            let want = percentile(&xs, p);
+            let mut scratch = xs.to_vec();
+            let got = percentile_select(&mut scratch, p);
+            assert_eq!(got.to_bits(), want.to_bits(), "p={p}");
+        }
+    }
+
+    #[test]
+    fn percentile_clamps_out_of_range_p_consistently() {
+        // shared edge-case pin: p < 0 clamps to the minimum, p > 100 to
+        // the maximum, across all three entry points; single-element
+        // and all-equal inputs are rank-independent.
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        let sorted = [1.0, 2.0, 3.0, 4.0];
+        for (p, want) in [(-10.0, 1.0), (-0.0001, 1.0), (100.0001, 4.0), (250.0, 4.0)] {
+            assert_eq!(percentile(&xs, p), want, "percentile p={p}");
+            assert_eq!(percentile_sorted(&sorted, p), want, "sorted p={p}");
+            let mut scratch = xs.to_vec();
+            assert_eq!(percentile_select(&mut scratch, p), want, "select p={p}");
+        }
+        for p in [-50.0, 0.0, 37.5, 100.0, 400.0] {
+            assert_eq!(percentile(&[7.0], p), 7.0, "single p={p}");
+            let all_equal = [2.5; 6];
+            assert_eq!(percentile(&all_equal, p), 2.5, "all-equal p={p}");
+            let mut scratch = all_equal.to_vec();
+            assert_eq!(percentile_select(&mut scratch, p), 2.5, "all-equal select p={p}");
+        }
     }
 
     #[test]

@@ -212,6 +212,24 @@ fn matrix_nanoflow() {
 
 #[test]
 #[ignore = "scenario matrix: run via CI's scenario-matrix job (cargo test --test scenario_matrix -- --ignored)"]
+fn matrix_static_split() {
+    run_matrix(&[System::StaticSplit]);
+}
+
+#[test]
+#[ignore = "scenario matrix: run via CI's scenario-matrix job (cargo test --test scenario_matrix -- --ignored)"]
+fn matrix_proactive_split() {
+    run_matrix(&[System::ProactiveSplit]);
+}
+
+#[test]
+#[ignore = "scenario matrix: run via CI's scenario-matrix job (cargo test --test scenario_matrix -- --ignored)"]
+fn matrix_temporal_mux() {
+    run_matrix(&[System::TemporalMux]);
+}
+
+#[test]
+#[ignore = "scenario matrix: run via CI's scenario-matrix job (cargo test --test scenario_matrix -- --ignored)"]
 fn lifecycle_bullet() {
     run_lifecycle_matrix(&[System::Bullet]);
 }

@@ -27,7 +27,18 @@ Three checks, in order of strictness:
    this gate.  Wall-clock numbers from unverified baselines are
    estimates and must not fail builds.
 
-4. **Hotpath micro-benchmarks (soft, with one armed gate).** Every
+4. **Competitor-system legs (ordering enforced, drift soft).** The
+   ``systems.*`` keys record the Fig. 11/13-style comparison against the
+   intra-GPU P/D disaggregation baselines.  Two *ordering* invariants
+   are enforced on the fresh artifact (they are deterministic outcomes
+   of the simulation, not wall-clock noise): Bullet's azure-code goodput
+   must be >= every disaggregation baseline's, and the proactive split's
+   bursty P90 TTFT must beat the static split's.  Per-key drift against
+   the baseline is reported as soft WARNs only — these are simulated
+   metrics, so they move whenever simulation semantics intentionally
+   change (like the makespan tripwire).
+
+5. **Hotpath micro-benchmarks (soft, with one armed gate).** Every
    shared ``hotpath.*`` key is compared and any regression beyond the
    tolerance prints a WARN — micro-benchmarks on shared runners are too
    noisy to hard-gate wholesale.  The exception is
@@ -98,12 +109,52 @@ def main() -> None:
     if bm != fm:
         print(
             f"NOTE: virtual makespan changed {bm:.3f}s -> {fm:.3f}s — simulation "
-            "semantics differ from baseline; update BENCH_7.json if intentional"
+            "semantics differ from baseline; update BENCH_8.json if intentional"
         )
     else:
         print(f"virtual makespan: unchanged ({fm:.3f}s)")
 
-    # 4. hotpath micro-numbers: soft warnings, except the armed
+    # 4. competitor-system legs: enforce the ordering invariants on the
+    # fresh artifact, soft-compare per-key drift against the baseline
+    fs = fresh.get("systems", {})
+    if fs:
+        bullet_gp = fs.get("fig11_azure_goodput_bullet_req_s")
+        if bullet_gp is not None:
+            for key, val in sorted(fs.items()):
+                if key.startswith("fig11_azure_goodput_") and float(val) > float(bullet_gp):
+                    die(
+                        f"systems {key} = {float(val):g} exceeds Bullet's goodput "
+                        f"{float(bullet_gp):g} — a disaggregation baseline beat "
+                        "spatial-temporal sharing"
+                    )
+            print(f"systems: OK (Bullet goodput {float(bullet_gp):g} req/s tops the fig11 leg)")
+        pro = fs.get("fig13_bursty_p90_ttft_proactive_split_ms")
+        sta = fs.get("fig13_bursty_p90_ttft_static_split_ms")
+        if pro is not None and sta is not None:
+            if float(pro) >= float(sta):
+                die(
+                    f"systems fig13 P90 TTFT: proactive {float(pro):g} ms >= static "
+                    f"{float(sta):g} ms — the moving P/D boundary stopped beating "
+                    "the frozen split"
+                )
+            print(f"systems: OK (bursty P90 TTFT proactive {float(pro):g} < static {float(sta):g} ms)")
+        bs = base.get("systems", {})
+        for key in sorted(set(bs) & set(fs)):
+            bv, fv = float(bs[key]), float(fs[key])
+            if bv <= 0.0:
+                continue
+            # goodput regresses downward; latency (ttft) regresses upward
+            if "_goodput_" in key:
+                regressed = fv < bv * (1.0 - REGRESSION_TOLERANCE)
+            else:
+                regressed = fv > bv * (1.0 + REGRESSION_TOLERANCE)
+            if regressed:
+                print(
+                    f"systems {key}: WARN drifted {bv:g} -> {fv:g} (soft — simulated "
+                    "metric; moves with intentional semantic changes)"
+                )
+
+    # 5. hotpath micro-numbers: soft warnings, except the armed
     # slo-slack router gate (the PR-8 memoized front-door cost)
     verified = base.get("verified") is True
     bh = base.get("hotpath", {})
