@@ -39,9 +39,6 @@ use crate::resource::Partition;
 use crate::sched::{PrefillBatch, PrefillReq};
 use crate::workload::Request;
 
-/// Decode iterations per temporal-multiplexing decode epoch.
-const DECODE_EPOCH_ITERS: usize = 8;
-
 /// The fixed disjoint P/D partition `cfg.pd_split` asks for: the
 /// prefill share of the GPU, clamped into
 /// `[min_prefill_sms, num_sms - min_decode_sms]` and quantized to the
@@ -476,27 +473,26 @@ impl ServingPolicy for ProactiveSplitPolicy {
 // ---------------------------------------------------------------------------
 
 /// Time-sliced P/D alternation: whole-prompt all-SM prefill epochs
-/// alternate with decode epochs of [`DECODE_EPOCH_ITERS`] iterations,
-/// and the two phases never run concurrently (plans only when ALL
-/// lanes are idle, and launches at most one lane per plan).
+/// alternate with decode epochs of `cfg.decode_epoch_iters` iterations
+/// (CLI `--decode-epoch N`), and the two phases never run concurrently
+/// (plans only when ALL lanes are idle, and launches at most one lane
+/// per plan).  Small epochs favor TTFT, large epochs favor TPOT — the
+/// sweep test below pins that trade-off down.
 pub struct TemporalMuxPolicy {
     active_prefill: Option<PrefillBatch>,
+    /// Decode iterations per epoch (`cfg.decode_epoch_iters`, >= 1).
+    epoch_iters: usize,
     /// Decode iterations left in the current decode epoch.
     decode_epoch_left: usize,
 }
 
 impl TemporalMuxPolicy {
-    pub fn new() -> TemporalMuxPolicy {
+    pub fn new(cfg: &ServingConfig) -> TemporalMuxPolicy {
         TemporalMuxPolicy {
             active_prefill: None,
+            epoch_iters: cfg.decode_epoch_iters.max(1),
             decode_epoch_left: 0,
         }
-    }
-}
-
-impl Default for TemporalMuxPolicy {
-    fn default() -> Self {
-        TemporalMuxPolicy::new()
     }
 }
 
@@ -521,7 +517,7 @@ impl ServingPolicy for TemporalMuxPolicy {
                 core.finish_prefill(r.clone(), b.started_at);
             }
             // a finished prefill epoch hands the GPU to decode
-            self.decode_epoch_left = DECODE_EPOCH_ITERS;
+            self.decode_epoch_left = self.epoch_iters;
         }
         core.join_pending(core.cfg.max_decode_batch);
         let sms = core.cfg.gpu.num_sms;
@@ -530,7 +526,7 @@ impl ServingPolicy for TemporalMuxPolicy {
         // prefill is pending.
         if !core.decode.is_empty() && (self.decode_epoch_left > 0 || !prefill_pending) {
             if self.decode_epoch_left == 0 {
-                self.decode_epoch_left = DECODE_EPOCH_ITERS;
+                self.decode_epoch_left = self.epoch_iters;
             }
             launch_decode_iteration(core, Some(sms));
             self.decode_epoch_left -= 1;
@@ -550,7 +546,7 @@ impl ServingPolicy for TemporalMuxPolicy {
         // Admission blocked on KV: let decode run another epoch to
         // drain the pool (it is the only thing that can free blocks).
         if !core.decode.is_empty() {
-            self.decode_epoch_left = DECODE_EPOCH_ITERS - 1;
+            self.decode_epoch_left = self.epoch_iters - 1;
             launch_decode_iteration(core, Some(sms));
         }
     }
@@ -617,7 +613,7 @@ pub fn serve_temporal_mux(
 ) -> EngineOutput {
     let opts = CoreOptions { seed, ..CoreOptions::default() };
     let mut core = EngineCore::new(cfg.clone(), gt.clone(), trace.to_vec(), &opts);
-    let mut policy = TemporalMuxPolicy::new();
+    let mut policy = TemporalMuxPolicy::new(cfg);
     core.run(&mut policy);
     core.into_output()
 }
@@ -794,7 +790,7 @@ mod tests {
         let (cfg, _, gt) = setup();
         let trace = generate_n_requests(&Dataset::sharegpt(), 8.0, 30, 23);
         let mut core = EngineCore::new(cfg.clone(), gt, trace, &CoreOptions::default());
-        let mut policy = AssertExclusive(TemporalMuxPolicy::new());
+        let mut policy = AssertExclusive(TemporalMuxPolicy::new(&cfg));
         core.run(&mut policy);
         let out = core.into_output();
         assert_eq!(out.records.len(), 30);
@@ -807,5 +803,40 @@ mod tests {
         let a = serve_temporal_mux(&cfg, &gt, &trace, 3);
         let b = serve_temporal_mux(&cfg, &gt, &trace, 3);
         assert_eq!(a.records, b.records);
+    }
+
+    #[test]
+    fn decode_epoch_sweep_trades_ttft_against_tpot() {
+        // The knob's whole point: short decode epochs let queued
+        // prefills in sooner (TTFT down) at the cost of interrupting
+        // decode more often (TPOT up); long epochs do the reverse.
+        // Assert the endpoints of a {2, 8, 32} sweep on a contended
+        // trace move in opposite directions.
+        use crate::metrics::summarize;
+        let (cfg, _, gt) = setup();
+        let trace = generate_n_requests(&Dataset::sharegpt(), 10.0, 40, 23);
+        let run = |iters: usize| {
+            let cfg = ServingConfig { decode_epoch_iters: iters, ..cfg.clone() };
+            let out = serve_temporal_mux(&cfg, &gt, &trace, 3);
+            assert_eq!(out.records.len(), trace.len());
+            summarize(&out.records, &cfg.slo, Some(out.virtual_duration))
+        };
+        let short = run(2);
+        let mid = run(8);
+        let long = run(32);
+        assert!(
+            short.mean_ttft < long.mean_ttft,
+            "short epochs must win TTFT: {} vs {}",
+            short.mean_ttft,
+            long.mean_ttft
+        );
+        assert!(
+            short.mean_tpot > long.mean_tpot,
+            "long epochs must win TPOT: {} vs {}",
+            short.mean_tpot,
+            long.mean_tpot
+        );
+        // the default sits between the endpoints on at least one axis
+        assert!(mid.mean_ttft <= long.mean_ttft || mid.mean_tpot <= short.mean_tpot);
     }
 }

@@ -126,7 +126,7 @@ impl System {
             System::Nanoflow => Box::new(NanoflowPolicy::new(ChunkedConfig::sglang_1024())),
             System::StaticSplit => Box::new(StaticSplitPolicy::new(cfg)),
             System::ProactiveSplit => Box::new(ProactiveSplitPolicy::new(cfg, perf)),
-            System::TemporalMux => Box::new(TemporalMuxPolicy::new()),
+            System::TemporalMux => Box::new(TemporalMuxPolicy::new(cfg)),
             _ => unreachable!("bullet-family systems handled above"),
         }
     }

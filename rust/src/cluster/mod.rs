@@ -473,6 +473,17 @@ impl ClusterOutput {
     pub fn calibrated_slowdowns(&self) -> Vec<f64> {
         self.per_replica.iter().map(|o| o.calibration.slowdown).collect()
     }
+
+    /// Cluster-wide SM-second attribution ledger (summed over replicas;
+    /// each per-replica ledger is already finalized, so the aggregate
+    /// stays conserved: categories sum to Σ num_sms × makespan).
+    pub fn ledger(&self) -> crate::obs::SmLedger {
+        let mut total = crate::obs::SmLedger::default();
+        for o in &self.per_replica {
+            total.merge(&o.ledger);
+        }
+        total
+    }
 }
 
 /// Everything replica construction needs — shared by the fixed-fleet

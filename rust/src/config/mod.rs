@@ -4,6 +4,7 @@
 //! Llama-3.1-8B), and can be overridden from JSON files via
 //! [`ServingConfig::from_json`].
 
+use crate::obs::trace::TraceSpec;
 use crate::util::json::Value;
 
 /// Physical GPU description (defaults: NVIDIA A100-PCIe-80GB as in §4.1).
@@ -391,6 +392,17 @@ pub struct ServingConfig {
     /// `min_prefill_sms` and `num_sms - min_decode_sms` at use.  Ignored
     /// by every other system.
     pub pd_split: f64,
+    /// Decode iterations per temporal-multiplexing epoch (`--system
+    /// temporal-mux`): each epoch drains one queued prefill, then runs
+    /// this many whole-GPU decode iterations before the next prefill
+    /// turn.  Smaller favors TTFT (prefills wait less), larger favors
+    /// TPOT (longer uninterrupted decode runs).  Ignored by every other
+    /// system.  Must be >= 1; the default 8 reproduces the historical
+    /// constant bit-for-bit.
+    pub decode_epoch_iters: usize,
+    /// Structured trace recording (`--trace out.json`).  Off by default
+    /// and bit-identical-off.
+    pub trace: TraceSpec,
 }
 
 impl Default for ServingConfig {
@@ -415,6 +427,8 @@ impl Default for ServingConfig {
             calibration: CalibrationConfig::default(),
             memo: true,
             pd_split: 0.5,
+            decode_epoch_iters: 8,
+            trace: TraceSpec::default(),
         }
     }
 }
@@ -470,6 +484,12 @@ impl ServingConfig {
         }
         if let Some(x) = v.get("pd_split").and_then(Value::as_f64) {
             cfg.pd_split = x;
+        }
+        if let Some(x) = v.get("decode_epoch_iters").and_then(Value::as_usize) {
+            cfg.decode_epoch_iters = x.max(1);
+        }
+        if let Some(x) = v.get("trace").and_then(Value::as_bool) {
+            cfg.trace.enabled = x;
         }
         cfg
     }
@@ -573,6 +593,23 @@ mod tests {
         assert_eq!(ServingConfig::default().pd_split, 0.5);
         let v = json::parse(r#"{"pd_split": 0.25}"#).unwrap();
         assert_eq!(ServingConfig::from_json(&v).pd_split, 0.25);
+    }
+
+    #[test]
+    fn decode_epoch_default_and_json_override() {
+        assert_eq!(ServingConfig::default().decode_epoch_iters, 8);
+        let v = json::parse(r#"{"decode_epoch_iters": 32}"#).unwrap();
+        assert_eq!(ServingConfig::from_json(&v).decode_epoch_iters, 32);
+        // validated >= 1 on the JSON path, same as the CLI flag
+        let v = json::parse(r#"{"decode_epoch_iters": 0}"#).unwrap();
+        assert_eq!(ServingConfig::from_json(&v).decode_epoch_iters, 1);
+    }
+
+    #[test]
+    fn trace_default_off_and_json_toggle() {
+        assert!(!ServingConfig::default().trace.enabled);
+        let v = json::parse(r#"{"trace": true}"#).unwrap();
+        assert!(ServingConfig::from_json(&v).trace.enabled);
     }
 
     #[test]

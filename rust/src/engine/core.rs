@@ -51,12 +51,14 @@ use crate::config::ServingConfig;
 use crate::gateway::stream::StreamChunk;
 use crate::gpu::kernel::KernelDesc;
 use crate::gpu::roofline::GroundTruth;
-use crate::gpu::simulator::Simulator;
+use crate::gpu::simulator::{IdleTag, Simulator};
 use crate::gpu::stream::StreamId;
 use crate::kvcache::prefix::{PrefixIndex, PrefixStats};
 use crate::kvcache::{KvPool, BLOCK_TOKENS};
 use crate::metrics::timeline::{ScaleEvent, Timeline, TimelineSample};
 use crate::metrics::{OutcomeRecord, RequestOutcome, RequestRecord};
+use crate::obs::ledger::SmLedger;
+use crate::obs::trace::EngineTraceEvent;
 use crate::perf::{CalibrationStats, PerfPredictor};
 use crate::resource::ResourceManager;
 use crate::util::memo::MemoCounters;
@@ -131,6 +133,16 @@ pub struct EngineOutput {
     /// [`crate::perf::OnlineCalibrator`] (zero for calibration-free
     /// policies; observability only).
     pub predict_memo: MemoCounters,
+    /// SM-second attribution ledger, finalized at teardown: the seven
+    /// categories sum to `num_sms × virtual_duration` (tested invariant).
+    /// Observability only — excluded from bit-parity comparisons of the
+    /// serving outputs, but itself deterministic and parity-checked.
+    pub ledger: SmLedger,
+    /// Structured engine trace events ([`TraceSpec`]-gated; empty with
+    /// tracing off, which is the default).
+    ///
+    /// [`TraceSpec`]: crate::obs::trace::TraceSpec
+    pub trace_events: Vec<EngineTraceEvent>,
 }
 
 /// Run-level counters policies may bump.
@@ -291,6 +303,17 @@ pub struct EngineCore {
     lane_started: [f64; 2],
     record_timeline: bool,
     max_virtual_time: f64,
+    /// Did any `kv_room` call fail since the top of the current pump
+    /// turn?  Feeds the idle-tag heuristic: a stall turn that saw KV
+    /// pressure charges its idle span to `KvBlocked`.
+    kv_blocked_turn: bool,
+    /// `rm.reconfig_count()` snapshot at the top of the current pump
+    /// turn — a plan that repartitioned but launched nothing charges its
+    /// idle span to `Repartition` (the transition gap).
+    reconfigs_seen: u64,
+    /// `cfg.trace.enabled` hoisted; false is the bit-identical default.
+    trace_enabled: bool,
+    trace_buf: Vec<EngineTraceEvent>,
 }
 
 impl EngineCore {
@@ -329,6 +352,10 @@ impl EngineCore {
             lane_started: [0.0, 0.0],
             record_timeline: opts.record_timeline,
             max_virtual_time: opts.max_virtual_time,
+            kv_blocked_turn: false,
+            reconfigs_seen: 0,
+            trace_enabled: cfg.trace.enabled,
+            trace_buf: Vec::new(),
             cfg,
         }
     }
@@ -403,6 +430,13 @@ impl EngineCore {
         }
         if n > 0 && self.inflight[lane as usize] == 0 {
             self.lane_started[lane as usize] = self.sim.now();
+        }
+        if n > 0 && self.trace_enabled {
+            self.trace_buf.push(EngineTraceEvent::Launch {
+                t: self.sim.now(),
+                lane: lane as usize as u8,
+                kernels: n,
+            });
         }
         self.inflight[lane as usize] += n;
     }
@@ -482,6 +516,7 @@ impl EngineCore {
             return true;
         }
         if self.prefix.is_none() {
+            self.note_kv_blocked();
             return false;
         }
         let need = self
@@ -519,7 +554,17 @@ impl EngineCore {
         }
         // every mutation above re-checked and returned on success, so
         // reaching here means the reservation still cannot fit
+        self.note_kv_blocked();
         false
+    }
+
+    /// A KV reservation just failed: flag the turn for the idle-tag
+    /// heuristic and record the stall if tracing.
+    fn note_kv_blocked(&mut self) {
+        self.kv_blocked_turn = true;
+        if self.trace_enabled {
+            self.trace_buf.push(EngineTraceEvent::KvBlocked { t: self.sim.now() });
+        }
     }
 
     /// Publish a finished prefill's full-block prompt KV into the prefix
@@ -905,6 +950,36 @@ impl EngineCore {
         self.pump(policy, Some(until));
     }
 
+    /// Absolute idle jump with ledger attribution: the span is charged
+    /// under `tag` (kv-blocked / repartition / free-residual).  The tag
+    /// is bracketed — set, jump, reset — so no stale tag can leak into
+    /// later jumps (in particular the cluster layer's drained-replica
+    /// fast-forward, which bypasses the pump entirely).
+    fn idle_jump(&mut self, target: f64, tag: IdleTag) {
+        self.sim.set_idle_tag(tag);
+        self.sim.advance_idle_to(target + 1e-9);
+        self.sim.set_idle_tag(IdleTag::Free);
+    }
+
+    /// Classify the idle span the pump is about to jump over.  Heuristic,
+    /// priority-ordered: no work anywhere → plain idle (the finalize
+    /// residual); a turn that saw a failed KV reservation → `KvBlocked`;
+    /// a plan that repartitioned the SM split but launched nothing →
+    /// `Repartition` (the transition gap); otherwise plain idle.
+    fn stall_tag(&self, policy_private: bool) -> IdleTag {
+        let has_work =
+            !self.waiting.is_empty() || !self.decode.is_empty() || !self.pending_join.is_empty() || policy_private;
+        if !has_work {
+            IdleTag::Free
+        } else if self.kv_blocked_turn {
+            IdleTag::KvBlocked
+        } else if self.rm.reconfig_count() > self.reconfigs_seen {
+            IdleTag::Repartition
+        } else {
+            IdleTag::Free
+        }
+    }
+
     fn pump<P: ServingPolicy + ?Sized>(&mut self, policy: &mut P, until: Option<f64>) {
         // Guard against a policy that spins without making progress.
         let mut idle_spins = 0u32;
@@ -928,7 +1003,17 @@ impl EngineCore {
             if self.finished() {
                 return;
             }
+            self.kv_blocked_turn = false;
+            self.reconfigs_seen = self.rm.reconfig_count();
             policy.plan(self);
+            if self.trace_enabled && self.rm.reconfig_count() > self.reconfigs_seen {
+                let p = self.rm.partition();
+                self.trace_buf.push(EngineTraceEvent::Repartition {
+                    t: self.sim.now(),
+                    prefill_sms: p.prefill_sms,
+                    decode_sms: p.decode_sms,
+                });
+            }
 
             if self.sim.idle() {
                 if self.next_arrival < self.trace.len() {
@@ -937,7 +1022,8 @@ impl EngineCore {
                     if let Some(t) = until {
                         target = target.min(t);
                     }
-                    self.sim.advance_idle_to(target + 1e-9);
+                    let tag = self.stall_tag(policy.has_private_work());
+                    self.idle_jump(target, tag);
                     continue;
                 }
                 // No pending arrivals.
@@ -966,7 +1052,8 @@ impl EngineCore {
                 }
                 if let Some(t) = until {
                     // Unrecoverable before the bound: idle up to it.
-                    self.sim.advance_idle_to(t + 1e-9);
+                    let tag = self.stall_tag(policy.has_private_work());
+                    self.idle_jump(t, tag);
                     return;
                 }
                 idle_spins += 1;
@@ -1001,12 +1088,16 @@ impl EngineCore {
     pub fn into_output(self) -> EngineOutput {
         let util = self.sim.total_util();
         let prefix = self.prefix.as_ref().map(|ix| *ix.stats()).unwrap_or_default();
+        let mut ledger = self.sim.ledger();
+        ledger.finalize(self.sim.gpu().num_sms as f64 * self.sim.now());
         EngineOutput {
             prefix,
             calibration: self.stats.calib,
             scale_events: Vec::new(),
             rate_memo: self.sim.rate_memo_counters(),
             predict_memo: self.stats.predict_memo,
+            ledger,
+            trace_events: self.trace_buf,
             records: self.records,
             outcomes: self.outcomes,
             timeline: self.timeline,
@@ -1451,5 +1542,127 @@ mod tests {
         core.run(&mut InstantPrefill);
         let out = core.into_output();
         assert_eq!(out.records[0].first_token_time, out.records[0].finish_time);
+    }
+
+    #[test]
+    fn output_ledger_conserves_gpu_time() {
+        let trace: Vec<Request> = (0..5)
+            .map(|i| Request {
+                id: i,
+                arrival: i as f64 * 0.01,
+                input_len: 64,
+                output_len: 4,
+                ..Default::default()
+            })
+            .collect();
+        let mut core = core_with(trace);
+        core.run(&mut InstantPrefill);
+        let sms = core.sim.gpu().num_sms as f64;
+        let out = core.into_output();
+        assert_eq!(out.ledger.total, sms * out.virtual_duration);
+        assert!(out.ledger.conserved(1e-9), "{:?}", out.ledger);
+        assert!(out.ledger.decode > 0.0, "decode-only policy: {:?}", out.ledger);
+        assert!(out.trace_events.is_empty(), "tracing defaults off");
+    }
+
+    #[test]
+    fn trace_on_records_launches_deterministically() {
+        use crate::obs::TraceSpec;
+        let mk = || {
+            let cfg = ServingConfig { trace: TraceSpec::on(), ..ServingConfig::default() };
+            let gt = GroundTruth::noiseless(GpuSpec::a100());
+            let trace: Vec<Request> = (0..3)
+                .map(|i| Request {
+                    id: i,
+                    arrival: i as f64 * 0.01,
+                    input_len: 64,
+                    output_len: 4,
+                    ..Default::default()
+                })
+                .collect();
+            let mut core = EngineCore::new(cfg, gt, trace, &CoreOptions::default());
+            core.run(&mut InstantPrefill);
+            core.into_output()
+        };
+        let a = mk();
+        let b = mk();
+        assert!(
+            a.trace_events.iter().any(|e| matches!(e, EngineTraceEvent::Launch { .. })),
+            "launches must be recorded with tracing on"
+        );
+        assert_eq!(a.trace_events, b.trace_events, "trace must be deterministic");
+        assert_eq!(a.ledger.to_bits(), b.ledger.to_bits());
+    }
+
+    /// Sees the queued request, probes for KV it can never get, and
+    /// launches nothing — a memory-wedged engine.
+    struct BlockedByKv;
+
+    impl ServingPolicy for BlockedByKv {
+        fn label(&self) -> String {
+            "blocked-by-kv".into()
+        }
+
+        fn plan(&mut self, core: &mut EngineCore) {
+            if let Some(w) = core.waiting.first() {
+                let (id, need) = (w.req.id, w.req.input_len + w.req.output_len);
+                assert!(!core.kv_room(id, need), "pool is sized to never fit");
+            }
+        }
+
+        fn on_drain(&mut self, _lane: Lane, _core: &mut EngineCore) {}
+    }
+
+    #[test]
+    fn kv_pressure_stall_charges_kv_blocked() {
+        let cfg = ServingConfig { kv_capacity_tokens: 64, ..ServingConfig::default() };
+        let gt = GroundTruth::noiseless(GpuSpec::a100());
+        let trace = vec![Request {
+            id: 0,
+            arrival: 0.0,
+            input_len: 4096,
+            output_len: 8,
+            ..Default::default()
+        }];
+        let mut core = EngineCore::new(cfg, gt, trace, &CoreOptions::default());
+        core.run_until(&mut BlockedByKv, 2.0);
+        let l = core.sim.ledger();
+        assert!(l.kv_blocked > 0.0, "blocked idle must be attributed: {l:?}");
+        assert_eq!(l.repartition, 0.0);
+    }
+
+    /// Flips the SM partition every turn without ever launching — pure
+    /// repartition-transition idle.
+    struct FlipFlop(bool);
+
+    impl ServingPolicy for FlipFlop {
+        fn label(&self) -> String {
+            "flip-flop".into()
+        }
+
+        fn plan(&mut self, core: &mut EngineCore) {
+            let sms = if self.0 { 60 } else { 54 };
+            self.0 = !self.0;
+            let p = crate::resource::Partition::split(&core.cfg.gpu, sms);
+            core.rm.reconfigure(p);
+        }
+
+        fn on_drain(&mut self, _lane: Lane, _core: &mut EngineCore) {}
+    }
+
+    #[test]
+    fn repartition_only_stall_charges_repartition() {
+        let trace = vec![Request {
+            id: 0,
+            arrival: 0.0,
+            input_len: 64,
+            output_len: 8,
+            ..Default::default()
+        }];
+        let mut core = core_with(trace);
+        core.run_until(&mut FlipFlop(true), 1.0);
+        let l = core.sim.ledger();
+        assert!(l.repartition > 0.0, "transition idle must be attributed: {l:?}");
+        assert_eq!(l.kv_blocked, 0.0);
     }
 }

@@ -103,6 +103,18 @@ pub struct GatewayOutput {
     pub virtual_duration: f64,
 }
 
+impl GatewayOutput {
+    /// Fleet-wide SM-second attribution ledger (summed over replicas;
+    /// per-replica ledgers are finalized, so the sum stays conserved).
+    pub fn ledger(&self) -> crate::obs::SmLedger {
+        let mut total = crate::obs::SmLedger::default();
+        for o in &self.per_replica {
+            total.merge(&o.ledger);
+        }
+        total
+    }
+}
+
 /// One gateway event: a scheduled failure or a trace arrival.  Failures
 /// sort before arrivals at the same instant — a request arriving exactly
 /// at a crash must not route to the corpse.

@@ -20,9 +20,62 @@ use crate::config::GpuSpec;
 use crate::gpu::kernel::KernelDesc;
 use crate::gpu::roofline::GroundTruth;
 use crate::gpu::stream::{SmMask, Stream, StreamId};
+use crate::gpu::wave::wave_quantization_idle_ratio;
+use crate::obs::ledger::{GpuTimeCategory, SmLedger};
 use crate::util::memo::MemoCounters;
 use crate::util::rng::Rng;
 use std::collections::VecDeque;
+
+/// Which serving phase a stream's kernels belong to, for SM-second
+/// attribution.  The resource manager tags its palette streams at
+/// creation; untagged (`Auto`) streams fall back to classifying each
+/// kernel by its [`crate::gpu::kernel::OpClass`].  Attribution only —
+/// never consulted by the physics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StreamPhase {
+    #[default]
+    Auto,
+    Prefill,
+    Decode,
+}
+
+/// Why a fully-idle clock advance is happening, for SM-second
+/// attribution.  `Free` (the default) charges nothing — plain idle is
+/// derived as the finalize residual; the engine sets a non-`Free` tag
+/// transiently around an idle jump it can attribute to a stall.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IdleTag {
+    #[default]
+    Free,
+    KvBlocked,
+    Repartition,
+}
+
+/// Ledger category for one running kernel (stream phase first, op
+/// class as the `Auto` fallback — decode launches include elementwise
+/// kernels, so op class alone cannot attribute them).
+fn attrib_category(phase: StreamPhase, op: crate::gpu::kernel::OpClass) -> GpuTimeCategory {
+    use crate::gpu::kernel::OpClass;
+    match phase {
+        StreamPhase::Decode => GpuTimeCategory::Decode,
+        StreamPhase::Prefill => {
+            if op == OpClass::AttnPrefill {
+                GpuTimeCategory::PrefillAttention
+            } else {
+                GpuTimeCategory::PrefillCompute
+            }
+        }
+        StreamPhase::Auto => {
+            if op.is_decode() {
+                GpuTimeCategory::Decode
+            } else if op == OpClass::AttnPrefill {
+                GpuTimeCategory::PrefillAttention
+            } else {
+                GpuTimeCategory::PrefillCompute
+            }
+        }
+    }
+}
 
 /// A completed-kernel record.
 #[derive(Debug, Clone)]
@@ -94,10 +147,14 @@ struct StreamState {
     stream: Stream,
     queue: VecDeque<KernelDesc>,
     running: Option<Running>,
+    /// Attribution phase tag (never consulted by the physics).
+    phase: StreamPhase,
 }
 
 /// Solo-time row for one running kernel (first pass of the rate
-/// computation); kept as reusable scratch in [`RateCache`].
+/// computation); kept as reusable scratch in [`RateCache`].  The
+/// trailing attribution fields (`eff`, `phase`, `op`, `grid`) feed the
+/// ledger sidecar only.
 #[derive(Debug, Clone, Copy)]
 struct SoloRow {
     idx: usize,
@@ -106,6 +163,22 @@ struct SoloRow {
     noise: f64,
     flops: f64,
     bytes: f64,
+    eff: f64,
+    phase: StreamPhase,
+    op: crate::gpu::kernel::OpClass,
+    grid: usize,
+}
+
+/// Ledger attribution for one rate-table row: where its `eff × dt`
+/// SM-seconds go while the row is in flight.  Built alongside the rate
+/// table (same rows, same order) and read by `advance_by`.
+#[derive(Debug, Clone, Copy)]
+struct AttribRow {
+    cat: GpuTimeCategory,
+    eff: f64,
+    /// Wave-quantization idle fraction of the row's partition (0 for
+    /// memory-bound rows).
+    pad: f64,
 }
 
 /// Memoized rate table plus the scratch buffers behind it.
@@ -124,6 +197,9 @@ struct RateCache {
     /// (stream idx, rate, flops_rate, bytes_rate) — same rows in the
     /// same order as the reference recomputation.
     rates: Vec<(usize, f64, f64, f64)>,
+    /// Ledger attribution per rate row (same order as `rates`; stays in
+    /// the cache while `rates` is lent out during an advance).
+    attrib: Vec<AttribRow>,
     /// Sum of effective SMs over running kernels.
     busy_sms: f64,
     valid: bool,
@@ -157,6 +233,13 @@ pub struct Simulator {
     /// bit-identical because the recomputation is the same code.
     memo: bool,
     cache: RateCache,
+    /// SM-second attribution (busy categories + tagged stalls; idle is
+    /// the engine-level finalize residual).  Pure side-channel: accrual
+    /// never touches the physics or the rng stream.
+    ledger: SmLedger,
+    /// Attribution for the NEXT fully-idle clock advance (see
+    /// [`IdleTag`]); reset to `Free` by the engine after each jump.
+    idle_tag: IdleTag,
 }
 
 impl Simulator {
@@ -186,7 +269,30 @@ impl Simulator {
             total: UtilSample::default(),
             memo: true,
             cache: RateCache::default(),
+            ledger: SmLedger::default(),
+            idle_tag: IdleTag::default(),
         }
+    }
+
+    /// Accrued (non-finalized) SM-second ledger: busy categories plus
+    /// tagged stall time.  The engine finalizes a copy with
+    /// `num_sms × makespan` at teardown.
+    pub fn ledger(&self) -> SmLedger {
+        self.ledger
+    }
+
+    /// Set how the NEXT fully-idle clock advance is attributed.  The
+    /// engine brackets each idle jump with a tag and resets to
+    /// [`IdleTag::Free`] afterwards so no stale tag can leak into the
+    /// cluster layer's drained-replica fast-forward.
+    pub fn set_idle_tag(&mut self, tag: IdleTag) {
+        self.idle_tag = tag;
+    }
+
+    /// Tag a stream's kernels with their serving phase (attribution
+    /// only; the physics never reads it).
+    pub fn set_stream_phase(&mut self, id: StreamId, phase: StreamPhase) {
+        self.streams[id.0].phase = phase;
     }
 
     /// Toggle rate-table memoization (`ServingConfig.memo`).  Off runs
@@ -252,6 +358,7 @@ impl Simulator {
             stream: Stream::new(id, mask, label),
             queue: VecDeque::new(),
             running: None,
+            phase: StreamPhase::Auto,
         });
         id
     }
@@ -401,6 +508,7 @@ impl Simulator {
         cache.busy_sms = cache.eff.iter().map(|(_, s)| s).sum();
         cache.rates.clear();
         if cache.eff.is_empty() {
+            cache.attrib.clear();
             return;
         }
         // First pass: solo times on effective SMs.
@@ -417,6 +525,10 @@ impl Simulator {
                 noise: r.noise,
                 flops: r.kernel.flops,
                 bytes: r.kernel.bytes,
+                eff: sms,
+                phase: streams[i].phase,
+                op: r.kernel.op,
+                grid: r.kernel.grid,
             });
         }
         // Bandwidth contention: (a) hard cap — if aggregate demand exceeds
@@ -441,14 +553,29 @@ impl Simulator {
         } else {
             1.0
         };
-        cache.rates.extend(cache.solo.iter().zip(&cache.demands).map(|(t, &demand)| {
+        cache.attrib.clear();
+        for (t, &demand) in cache.solo.iter().zip(&cache.demands) {
             let other = (total_demand - demand).max(0.0);
             let interference = 1.0 + GAMMA * other / gt.gpu.peak_bandwidth;
             let tb = t.tb * interference / bw_scale;
             let t_eff = ((t.tc * drift_c).max(tb)) * t.noise * run_noise * lottery;
             let rate = if t_eff > 0.0 { 1.0 / t_eff } else { f64::INFINITY };
-            (t.idx, rate, t.flops * rate, t.bytes * rate)
-        }));
+            cache.rates.push((t.idx, rate, t.flops * rate, t.bytes * rate));
+            // Attribution sidecar (same rows, same order as `rates`):
+            // a compute-bound row idles `pad` of its partition to wave
+            // quantization (Eq. 1); memory-bound rows pay none.  Never
+            // feeds back into the rate arithmetic above.
+            let pad = if t.tc * drift_c >= tb {
+                wave_quantization_idle_ratio(t.grid, t.eff.round().max(1.0) as usize)
+            } else {
+                0.0
+            };
+            cache.attrib.push(AttribRow {
+                cat: attrib_category(t.phase, t.op),
+                eff: t.eff,
+                pad,
+            });
+        }
     }
 
     /// Advance to the next kernel completion (or return false if idle).
@@ -484,6 +611,14 @@ impl Simulator {
             self.refresh_rates();
             if self.cache.rates.is_empty() {
                 // idle: jump straight to deadline
+                if self.idle_tag != IdleTag::Free {
+                    let cat = match self.idle_tag {
+                        IdleTag::KvBlocked => GpuTimeCategory::KvBlocked,
+                        _ => GpuTimeCategory::Repartition,
+                    };
+                    let span = (deadline - self.clock) * self.gt.gpu.num_sms as f64;
+                    self.ledger.charge(cat, span);
+                }
                 self.clock = deadline;
                 self.window.dt += 0.0;
                 return;
@@ -513,6 +648,16 @@ impl Simulator {
     pub fn advance_idle_to(&mut self, t: f64) {
         debug_assert!(self.idle(), "advance_idle_to on a busy simulator");
         if t > self.clock {
+            // Tagged idle (kv-blocked / repartition) accrues to the
+            // ledger; untagged idle stays unaccounted here and becomes
+            // the finalize residual, keeping this jump history-free.
+            if self.idle_tag != IdleTag::Free {
+                let cat = match self.idle_tag {
+                    IdleTag::KvBlocked => GpuTimeCategory::KvBlocked,
+                    _ => GpuTimeCategory::Repartition,
+                };
+                self.ledger.charge(cat, (t - self.clock) * self.gt.gpu.num_sms as f64);
+            }
             self.clock = t;
         }
     }
@@ -548,6 +693,16 @@ impl Simulator {
             r.remaining -= progress;
             if r.remaining <= 1e-12 {
                 finished.push(i);
+            }
+        }
+        // Ledger accrual: a pure side-channel over the attribution rows
+        // built alongside the rate table (same rows, same order).  Each
+        // row charges its effective SMs for `dt`, split between its
+        // category and the wave-quantization padding share.
+        for a in &self.cache.attrib {
+            self.ledger.charge(a.cat, a.eff * dt * (1.0 - a.pad));
+            if a.pad > 0.0 {
+                self.ledger.charge(GpuTimeCategory::WaveQuant, a.eff * dt * a.pad);
             }
         }
         self.clock += dt;
@@ -1000,5 +1155,80 @@ mod tests {
         let a = s1.take_completions()[0].end;
         let b = s2.take_completions()[0].end;
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn ledger_conserves_and_routes_phases() {
+        let mut s = sim();
+        let p = s.create_stream(SmMask::first(54), "prefill");
+        let d = s.create_stream(SmMask::last(54, 108), "decode");
+        s.set_stream_phase(p, StreamPhase::Prefill);
+        s.set_stream_phase(d, StreamPhase::Decode);
+        s.submit(p, KernelDesc::new(OpClass::AttnPrefill, 2e12, 2e9, 54));
+        s.submit(p, gemm(2e12));
+        s.submit(d, mem_kernel(4e9));
+        s.run_until_idle();
+        let mut l = s.ledger();
+        l.finalize(108.0 * s.now());
+        assert!(l.prefill_compute > 0.0, "gemm on prefill stream: {l:?}");
+        assert!(l.prefill_attention > 0.0, "attn-prefill op: {l:?}");
+        assert!(l.decode > 0.0, "decode-phase stream: {l:?}");
+        assert!(l.conserved(1e-9), "sum {} vs total {}", l.sum(), l.total);
+    }
+
+    #[test]
+    fn wave_quantization_charged_when_tail_wave_exists() {
+        // grid 1080 on 108 SMs: 10 exact waves, zero padding; grid 1081
+        // spills one block into an 11th wave and pays Eq. 1's idle share.
+        let mut s = sim();
+        let st = s.create_stream(SmMask::first(108), "full");
+        s.submit(st, KernelDesc::new(OpClass::GemmMlp, 4e12, 4e12 / 300.0, 1080));
+        s.run_until_idle();
+        assert_eq!(s.ledger().wave_quant, 0.0, "exact waves must pay nothing");
+        let mut s2 = sim();
+        let st2 = s2.create_stream(SmMask::first(108), "full");
+        s2.submit(st2, KernelDesc::new(OpClass::GemmMlp, 4e12, 4e12 / 300.0, 1081));
+        s2.run_until_idle();
+        assert!(s2.ledger().wave_quant > 0.0, "tail wave must charge: {:?}", s2.ledger());
+    }
+
+    #[test]
+    fn tagged_idle_accrues_and_free_idle_does_not() {
+        let mut s = sim();
+        s.run_for(0.25); // untagged idle: stays residual
+        s.set_idle_tag(IdleTag::KvBlocked);
+        s.run_for(0.5);
+        s.set_idle_tag(IdleTag::Repartition);
+        s.advance_idle_to(1.0);
+        s.set_idle_tag(IdleTag::Free);
+        s.advance_idle_to(1.5);
+        let l = s.ledger();
+        assert!((l.kv_blocked - 0.5 * 108.0).abs() < 1e-9, "{l:?}");
+        assert!((l.repartition - 0.25 * 108.0).abs() < 1e-9, "{l:?}");
+        assert_eq!(l.accrued(), l.kv_blocked + l.repartition);
+    }
+
+    #[test]
+    fn ledger_is_bit_identical_across_memo_settings() {
+        let run = |memo: bool| {
+            let mut s = Simulator::new(GroundTruth::new(GpuSpec::a100()), 7);
+            s.set_memo(memo);
+            let a = s.create_stream(SmMask::first(60), "a");
+            let b = s.create_stream(SmMask::last(48, 108), "b");
+            s.set_stream_phase(a, StreamPhase::Prefill);
+            s.set_stream_phase(b, StreamPhase::Decode);
+            for _ in 0..4 {
+                s.submit(a, gemm(2e12));
+                s.submit(b, mem_kernel(2e9));
+            }
+            for _ in 0..100 {
+                s.run_for(1e-4);
+            }
+            s.run_until_idle();
+            let mut l = s.ledger();
+            l.finalize(108.0 * s.now());
+            l.to_bits()
+        };
+        assert_eq!(run(true), run(false));
     }
 }

@@ -212,6 +212,24 @@
 //! cache-on vs cache-off TTFT and goodput win; run metrics land in
 //! `EngineOutput::prefix` (hit rate, cached-token ratio, tokens saved).
 //!
+//! **Observability** ([`obs`]).  Every simulated SM-second is charged to
+//! exactly one category — prefill compute / prefill attention / decode /
+//! wave-quantization padding / repartition transition / KV-blocked stall
+//! / idle — in an [`obs::SmLedger`] accrued inside [`gpu::Simulator`]'s
+//! advance path and finalized so the seven categories sum to
+//! `num_sms × makespan` (a tested invariant in `tests/scenario_matrix.rs`
+//! for every engine × workload cell).  The ledger surfaces per-engine on
+//! `EngineOutput::ledger`, aggregates on `ClusterOutput::ledger()` /
+//! `GatewayOutput::ledger()`, and prints as a CLI breakdown table for
+//! every [`baselines::System`].  A structured span/event trace
+//! ([`obs::TraceSpec`], off by default and bit-identical-off like the
+//! memo caches) records request lifecycle spans and engine instants
+//! (kernel launches, repartitions, KV stalls); `--trace out.json`
+//! exports it as Chrome trace-event JSON ([`obs::export`], loadable in
+//! Perfetto, byte-deterministic under fixed seed and any `sim_threads`),
+//! and `tools/trace_summary.py` validates the file shape and replays
+//! the ledger from the trace.
+//!
 //! ## Adding a serving policy (~100 lines)
 //!
 //! 1. Define a struct holding only your decision state (queues and KV
@@ -227,6 +245,7 @@
 
 pub mod util;
 pub mod config;
+pub mod obs;
 pub mod gpu;
 pub mod model;
 pub mod perf;

@@ -26,6 +26,8 @@ use bullet::gateway::{serve_gateway, FailureSpec, GatewayConfig, VirtualClock, W
 use bullet::kvcache::prefix::PrefixStats;
 use bullet::metrics::timeline::ScaleAction;
 use bullet::metrics::{summarize, RunSummary};
+use bullet::obs::export::write_chrome_trace;
+use bullet::obs::{SmLedger, TraceSpec};
 use bullet::perf::CalibrationStats;
 use bullet::runtime::{ModelMeta, ModelRuntime};
 use bullet::util::cli::Args;
@@ -98,7 +100,19 @@ serve flags:  --system bullet|vllm-1024|sglang-1024|sglang-2048|nanoflow|
                                        predictor and router-probe caches;
                                        off runs the reference paths —
                                        results are bit-identical either
-                                       way)";
+                                       way)
+              --decode-epoch N        (temporal-mux only: decode
+                                       iterations per all-SM decode
+                                       epoch; integer >= 1, default 8 —
+                                       small N favors TTFT, large N
+                                       favors TPOT)
+              --trace FILE            (export a Chrome trace-event JSON
+                                       of the run — request lifecycle
+                                       spans, launches, repartitions, KV
+                                       stalls, per-replica SM-second
+                                       ledger; load in Perfetto or
+                                       chrome://tracing, or summarize
+                                       with tools/trace_summary.py)";
 
 /// The metric rows every serve table shares (single-GPU and cluster).
 fn summary_rows(t: &mut Table, s: &RunSummary) {
@@ -158,6 +172,30 @@ fn memo_rows(
     if let Some(r) = router {
         t.row(&["router probe reuse".to_string(), cell(r)]);
     }
+}
+
+/// SM-second attribution breakdown: every simulated SM-second charged
+/// to exactly one category, summing to `num_sms × makespan`.  Printed
+/// for every system — it is the accounting evidence behind the paper's
+/// utilization claims (where each baseline's GPU time actually goes).
+fn print_ledger(title: &str, ledger: &SmLedger) {
+    let mut t = Table::new(&format!("GPU time attribution — {title}"))
+        .header(&["category", "SM·s", "share"]);
+    let denom = if ledger.total > 0.0 { ledger.total } else { 1.0 };
+    for (name, v) in ledger.entries() {
+        t.row(&[name.to_string(), f(v, 1), f(v / denom * 100.0, 1) + "%"]);
+    }
+    t.row(&["total".to_string(), f(ledger.total, 1), "100.0%".to_string()]);
+    t.print();
+}
+
+/// Export the Chrome trace-event JSON for `--trace FILE`.
+fn export_trace(path: &str, title: &str, per_replica: &[bullet::engine::core::EngineOutput]) {
+    if let Err(e) = write_chrome_trace(path, title, per_replica) {
+        eprintln!("failed to write trace '{path}': {e}");
+        std::process::exit(1);
+    }
+    eprintln!("wrote Chrome trace to {path} (Perfetto / chrome://tracing / tools/trace_summary.py)");
 }
 
 /// Parse a `--fail-replica ID@T` spec.
@@ -223,12 +261,23 @@ fn serve(args: &Args) {
         eprintln!("bad --pd-split '{pd_split}' (want a fraction in (0, 1))");
         std::process::exit(2);
     }
+    let decode_epoch_iters = args.get_usize("decode-epoch", 8);
+    if decode_epoch_iters < 1 {
+        eprintln!("bad --decode-epoch '{decode_epoch_iters}' (want an integer >= 1)");
+        std::process::exit(2);
+    }
+    let trace_path = args.get("trace").map(str::to_string);
     let cfg = ServingConfig {
         slo: workload_slo(&name),
         prefix_cache,
         calibration,
         memo,
         pd_split,
+        decode_epoch_iters,
+        // --trace needs the runtime instants recorded; without the flag
+        // tracing stays off and the run is bit-identical to pre-trace
+        // builds.
+        trace: if trace_path.is_some() { TraceSpec::on() } else { TraceSpec::default() },
         ..ServingConfig::default()
     };
 
@@ -318,14 +367,14 @@ fn serve(args: &Args) {
                 std::process::exit(2);
             }
         };
-        let mut t = Table::new(&format!(
+        let title = format!(
             "{} behind the {} gateway on {} @ {} req/s",
             sys.label(),
             live_mode,
             name,
             rate
-        ))
-        .header(&["metric", "value"]);
+        );
+        let mut t = Table::new(&title).header(&["metric", "value"]);
         if !out.records.is_empty() {
             let s = summarize(&out.records, &cfg.slo, Some(out.virtual_duration));
             summary_rows(&mut t, &s);
@@ -353,6 +402,10 @@ fn serve(args: &Args) {
             ]);
         }
         t.print();
+        print_ledger(&title, &out.ledger());
+        if let Some(path) = &trace_path {
+            export_trace(path, &title, &out.per_replica);
+        }
         return;
     }
 
@@ -373,15 +426,15 @@ fn serve(args: &Args) {
         // like the single-replica path below
         let out = serve_cluster(sys, &cfg, server.perf(), &gt, &trace, seed, &ccfg);
         let s = summarize(&out.records, &cfg.slo, Some(out.virtual_duration));
-        let mut t = Table::new(&format!(
+        let title = format!(
             "{} x{} ({}) on {} @ {} req/s",
             sys.label(),
             replicas,
             router.label(),
             name,
             rate
-        ))
-        .header(&["metric", "value"]);
+        );
+        let mut t = Table::new(&title).header(&["metric", "value"]);
         summary_rows(&mut t, &s);
         t.row(&["makespan (s)".to_string(), f(out.virtual_duration, 2)]);
         t.row(&[
@@ -438,6 +491,10 @@ fn serve(args: &Args) {
             );
         }
         t.print();
+        print_ledger(&title, &out.ledger());
+        if let Some(path) = &trace_path {
+            export_trace(path, &title, &out.per_replica);
+        }
         return;
     }
 
@@ -445,8 +502,8 @@ fn serve(args: &Args) {
     let out = run_system_output(sys, &cfg, server.perf(), &gt, &trace, seed);
     let s = summarize(&out.records, &cfg.slo, None);
 
-    let mut t = Table::new(&format!("{} on {} @ {} req/s", sys.label(), name, rate))
-        .header(&["metric", "value"]);
+    let title = format!("{} on {} @ {} req/s", sys.label(), name, rate);
+    let mut t = Table::new(&title).header(&["metric", "value"]);
     summary_rows(&mut t, &s);
     if cfg.prefix_cache {
         prefix_rows(&mut t, &out.prefix);
@@ -461,6 +518,10 @@ fn serve(args: &Args) {
         memo_rows(&mut t, &out.rate_memo, &out.predict_memo, None);
     }
     t.print();
+    print_ledger(&title, &out.ledger);
+    if let Some(path) = &trace_path {
+        export_trace(path, &title, std::slice::from_ref(&out));
+    }
 }
 
 fn live(args: &Args) {

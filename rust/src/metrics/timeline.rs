@@ -108,6 +108,11 @@ impl Timeline {
         if self.samples.is_empty() {
             return Vec::new();
         }
+        // A non-positive (or NaN) step would loop forever or never
+        // terminate the grid walk; there is no meaningful resampling.
+        if dt <= 0.0 || dt.is_nan() {
+            return Vec::new();
+        }
         let t0 = self.samples[0].t;
         let t1 = self.samples.last().unwrap().t;
         let mut out = Vec::new();
@@ -128,7 +133,9 @@ impl Timeline {
     /// Mean of a field over the recorded span (duration-weighted).
     pub fn mean_of(&self, f: impl Fn(&TimelineSample) -> f64) -> f64 {
         if self.samples.len() < 2 {
-            return self.samples.first().map(|s| f(s)).unwrap_or(f64::NAN);
+            // empty timeline → 0.0 (NaN would poison downstream
+            // aggregates that fold means together)
+            return self.samples.first().map(|s| f(s)).unwrap_or(0.0);
         }
         let mut num = 0.0;
         let mut den = 0.0;
@@ -185,6 +192,24 @@ mod tests {
         assert_eq!(r[1].prefill_sms, 20);
         assert_eq!(r[2].prefill_sms, 20); // holds previous value at t=2
         assert_eq!(r[3].prefill_sms, 30);
+    }
+
+    #[test]
+    fn resample_rejects_degenerate_steps() {
+        let mut tl = Timeline::new();
+        tl.push(s(0.0, 10, 0));
+        tl.push(s(1.0, 20, 1));
+        for bad in [0.0, -1.0, f64::NAN] {
+            assert!(tl.resample(bad).is_empty(), "dt={bad} must yield nothing");
+        }
+        assert!(Timeline::new().resample(1.0).is_empty());
+    }
+
+    #[test]
+    fn mean_of_empty_timeline_is_zero() {
+        let tl = Timeline::new();
+        let m = tl.mean_of(|s| s.compute_util);
+        assert_eq!(m, 0.0, "empty timeline must not produce NaN");
     }
 
     #[test]

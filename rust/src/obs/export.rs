@@ -1,0 +1,300 @@
+//! Chrome trace-event JSON exporter (`--trace out.json`).
+//!
+//! Emits the [trace-event format] consumed by Perfetto and
+//! chrome://tracing: one process track per replica, one thread track
+//! per request (spans: queued → prefill → decode), instants for
+//! terminal outcomes, fleet-lifecycle actions, launches, repartitions
+//! and KV stalls, plus a `bullet` summary block embedding each
+//! replica's finalized [`SmLedger`] so `tools/trace_summary.py` can
+//! re-check ledger conservation straight from the trace file.
+//!
+//! Built on the in-tree `util/json.rs` (no serde): `Value::Obj` is a
+//! `BTreeMap`, so keys serialize sorted, and events are emitted in a
+//! fixed construction order — the exported bytes are a deterministic
+//! function of the run output, which the trace-determinism tests
+//! assert across repeated runs and `sim_threads` settings.
+//!
+//! [trace-event format]: https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU
+
+use crate::engine::core::EngineOutput;
+use crate::metrics::timeline::ScaleAction;
+use crate::metrics::RequestOutcome;
+use crate::obs::ledger::SmLedger;
+use crate::obs::trace::EngineTraceEvent;
+use crate::util::json::Value;
+use std::collections::BTreeMap;
+
+/// Request thread-ids start here; tids 0..3 are engine/lane tracks.
+const REQ_TID_BASE: u64 = 16;
+
+fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    Value::Obj(
+        pairs
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<String, Value>>(),
+    )
+}
+
+fn num(x: f64) -> Value {
+    Value::Num(x)
+}
+
+fn txt(x: &str) -> Value {
+    Value::Str(x.to_string())
+}
+
+/// Virtual seconds → trace-event microseconds.
+fn us(t: f64) -> Value {
+    Value::Num(t * 1e6)
+}
+
+fn meta(pid: usize, tid: u64, kind: &str, name: &str) -> Value {
+    obj(vec![
+        ("ph", txt("M")),
+        ("pid", num(pid as f64)),
+        ("tid", num(tid as f64)),
+        ("name", txt(kind)),
+        ("args", obj(vec![("name", txt(name))])),
+    ])
+}
+
+fn span(pid: usize, tid: u64, name: &str, cat: &str, start: f64, end: f64) -> Value {
+    obj(vec![
+        ("ph", txt("X")),
+        ("pid", num(pid as f64)),
+        ("tid", num(tid as f64)),
+        ("name", txt(name)),
+        ("cat", txt(cat)),
+        ("ts", us(start)),
+        ("dur", us((end - start).max(0.0))),
+    ])
+}
+
+fn instant(pid: usize, tid: u64, name: &str, cat: &str, t: f64, args: Option<Value>) -> Value {
+    let mut pairs = vec![
+        ("ph", txt("i")),
+        ("pid", num(pid as f64)),
+        ("tid", num(tid as f64)),
+        ("name", txt(name)),
+        ("cat", txt(cat)),
+        ("ts", us(t)),
+        ("s", txt("t")),
+    ];
+    if let Some(a) = args {
+        pairs.push(("args", a));
+    }
+    obj(pairs)
+}
+
+fn scale_action_name(a: ScaleAction) -> &'static str {
+    match a {
+        ScaleAction::ScaleOut => "scale-out",
+        ScaleAction::ScaleIn => "scale-in",
+        ScaleAction::Retire => "retire",
+        ScaleAction::Reprofile => "reprofile",
+        ScaleAction::Crash => "crash",
+    }
+}
+
+fn outcome_name(o: RequestOutcome) -> &'static str {
+    match o {
+        RequestOutcome::Cancelled => "cancelled",
+        RequestOutcome::Expired => "expired",
+        RequestOutcome::Lost => "lost",
+    }
+}
+
+fn ledger_value(l: &SmLedger) -> Value {
+    let mut pairs: Vec<(&str, Value)> = l.entries().iter().map(|&(k, v)| (k, num(v))).collect();
+    pairs.push(("total", num(l.total)));
+    obj(pairs)
+}
+
+/// Build the full Chrome trace-event document for a run's per-replica
+/// outputs (a single-GPU run passes a one-element slice).
+pub fn chrome_trace(title: &str, per_replica: &[EngineOutput]) -> Value {
+    let mut events: Vec<Value> = Vec::new();
+    for (pid, o) in per_replica.iter().enumerate() {
+        events.push(meta(pid, 0, "process_name", &format!("replica {pid}")));
+        events.push(meta(pid, 0, "thread_name", "engine"));
+        events.push(meta(pid, 1, "thread_name", "prefill lane"));
+        events.push(meta(pid, 2, "thread_name", "decode lane"));
+        for r in &o.records {
+            let tid = REQ_TID_BASE + r.id;
+            events.push(meta(pid, tid, "thread_name", &format!("req {}", r.id)));
+            events.push(span(pid, tid, "queued", "request", r.arrival, r.prefill_start));
+            events.push(span(pid, tid, "prefill", "request", r.prefill_start, r.first_token_time));
+            if r.output_len > 1 {
+                events.push(span(pid, tid, "decode", "request", r.first_token_time, r.finish_time));
+            }
+        }
+        for oc in &o.outcomes {
+            let tid = REQ_TID_BASE + oc.id;
+            let args = obj(vec![("tokens_out", num(oc.tokens_out as f64))]);
+            events.push(instant(pid, tid, outcome_name(oc.outcome), "lifecycle", oc.t, Some(args)));
+        }
+        for e in &o.scale_events {
+            let args = obj(vec![
+                ("replica", num(e.replica as f64)),
+                ("fleet_after", num(e.fleet_after as f64)),
+            ]);
+            events.push(instant(pid, 0, scale_action_name(e.action), "fleet", e.t, Some(args)));
+        }
+        for e in &o.trace_events {
+            match *e {
+                EngineTraceEvent::Launch { t, lane, kernels } => {
+                    let args = obj(vec![("kernels", num(kernels as f64))]);
+                    events.push(instant(pid, 1 + lane as u64, "launch", "engine", t, Some(args)));
+                }
+                EngineTraceEvent::Repartition { t, prefill_sms, decode_sms } => {
+                    let args = obj(vec![
+                        ("prefill_sms", num(prefill_sms as f64)),
+                        ("decode_sms", num(decode_sms as f64)),
+                    ]);
+                    events.push(instant(pid, 0, "repartition", "engine", t, Some(args)));
+                }
+                EngineTraceEvent::KvBlocked { t } => {
+                    events.push(instant(pid, 0, "kv-blocked", "engine", t, None));
+                }
+            }
+        }
+    }
+    let mut agg = SmLedger::default();
+    let mut replicas: Vec<Value> = Vec::new();
+    for (pid, o) in per_replica.iter().enumerate() {
+        agg.merge(&o.ledger);
+        replicas.push(obj(vec![
+            ("id", num(pid as f64)),
+            ("makespan", num(o.virtual_duration)),
+            ("ledger", ledger_value(&o.ledger)),
+        ]));
+    }
+    obj(vec![
+        ("traceEvents", Value::Arr(events)),
+        ("displayTimeUnit", txt("ms")),
+        (
+            "bullet",
+            obj(vec![
+                ("title", txt(title)),
+                ("replicas", Value::Arr(replicas)),
+                ("ledger", ledger_value(&agg)),
+            ]),
+        ),
+    ])
+}
+
+/// Serialize [`chrome_trace`] to `path` (one line of compact JSON).
+pub fn write_chrome_trace(
+    path: &str,
+    title: &str,
+    per_replica: &[EngineOutput],
+) -> std::io::Result<()> {
+    std::fs::write(path, format!("{}\n", chrome_trace(title, per_replica)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::timeline::{ScaleEvent, Timeline};
+    use crate::metrics::{OutcomeRecord, RequestRecord};
+    use crate::obs::ledger::GpuTimeCategory;
+
+    fn output() -> EngineOutput {
+        let mut ledger = SmLedger::default();
+        ledger.charge(GpuTimeCategory::Decode, 54.0);
+        ledger.finalize(108.0);
+        EngineOutput {
+            records: vec![RequestRecord {
+                id: 0,
+                arrival: 0.0,
+                input_len: 64,
+                output_len: 4,
+                first_token_time: 0.2,
+                finish_time: 0.5,
+                prefill_start: 0.1,
+            }],
+            outcomes: vec![OutcomeRecord {
+                id: 1,
+                outcome: RequestOutcome::Cancelled,
+                t: 0.3,
+                tokens_out: 2,
+            }],
+            timeline: Timeline::new(),
+            reconfigs: 0,
+            decode_pauses: 0,
+            total_flops: 0.0,
+            total_bytes: 0.0,
+            virtual_duration: 1.0,
+            peak_kv_blocks: 0,
+            final_kv_blocks: 0,
+            prefix: Default::default(),
+            calibration: Default::default(),
+            scale_events: vec![ScaleEvent {
+                t: 0.4,
+                action: ScaleAction::Crash,
+                replica: 0,
+                fleet_after: 1,
+            }],
+            rate_memo: Default::default(),
+            predict_memo: Default::default(),
+            ledger,
+            trace_events: vec![
+                EngineTraceEvent::Launch { t: 0.1, lane: 0, kernels: 3 },
+                EngineTraceEvent::Repartition { t: 0.15, prefill_sms: 60, decode_sms: 48 },
+                EngineTraceEvent::KvBlocked { t: 0.2 },
+            ],
+        }
+    }
+
+    #[test]
+    fn document_shape_and_roundtrip() {
+        let doc = chrome_trace("unit", &[output()]);
+        // serialized bytes must re-parse to an identical tree
+        let text = doc.to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.to_string(), text, "serialization must round-trip");
+        let events = doc.get("traceEvents").and_then(Value::as_arr).unwrap();
+        // 4 meta + 1 req meta + 3 spans + 1 outcome + 1 scale + 3 engine
+        assert_eq!(events.len(), 13);
+        for e in events {
+            assert!(e.get("ph").and_then(Value::as_str).is_some());
+            assert!(e.get("pid").and_then(Value::as_f64).is_some());
+            assert!(e.get("tid").and_then(Value::as_f64).is_some());
+        }
+        let ledger = doc.path(&["bullet", "ledger"]).unwrap();
+        let total = ledger.get("total").and_then(Value::as_f64).unwrap();
+        let sum: f64 = [
+            "prefill-compute",
+            "prefill-attention",
+            "decode",
+            "wave-quant",
+            "repartition",
+            "kv-blocked",
+            "idle",
+        ]
+        .iter()
+        .map(|k| ledger.get(k).and_then(Value::as_f64).unwrap())
+        .sum();
+        assert!((sum - total).abs() <= 1e-9 * total.max(1.0));
+    }
+
+    #[test]
+    fn timestamps_are_microseconds() {
+        let doc = chrome_trace("unit", &[output()]);
+        let events = doc.get("traceEvents").and_then(Value::as_arr).unwrap();
+        let queued = events
+            .iter()
+            .find(|e| e.get("name").and_then(Value::as_str) == Some("queued"))
+            .unwrap();
+        assert_eq!(queued.get("ts").and_then(Value::as_f64).unwrap(), 0.0);
+        assert!((queued.get("dur").and_then(Value::as_f64).unwrap() - 1e5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn export_is_byte_deterministic() {
+        let a = chrome_trace("unit", &[output()]).to_string();
+        let b = chrome_trace("unit", &[output()]).to_string();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,189 @@
+//! SM-second attribution ledger.
+//!
+//! Charges every simulated SM-second of a run to exactly one category,
+//! so each `System` variant gets a comparable waste profile (the
+//! evidence layer behind the paper's Fig. 2 / Fig. 12).
+//!
+//! Accounting scheme: the simulator accrues the BUSY categories (and
+//! explicitly tagged stall time) online; plain idle is the residual
+//! `num_sms × makespan − accrued`, computed once at
+//! [`SmLedger::finalize`].  The residual form keeps the conservation
+//! invariant exact by construction and — crucially — keeps the engine's
+//! history-free idle jumps (`advance_idle_to`) free of per-segment
+//! floating-point sums that would differ between a replica that visited
+//! every dispatch horizon and one that skipped them while drained.
+
+/// Where one slice of GPU time went.  `Idle` has no variant here on
+/// purpose: it is never charged, only derived as the finalize residual.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GpuTimeCategory {
+    /// Prefill GEMMs / elementwise on a prefill-phase stream.
+    PrefillCompute,
+    /// Prefill self-attention (FlashAttention-style).
+    PrefillAttention,
+    /// Anything running on a decode-phase stream.
+    Decode,
+    /// Tail-wave SMs idled by wave quantization inside a compute-bound
+    /// kernel's partition (paper Eq. 1).
+    WaveQuant,
+    /// Fully-idle spans on a turn whose plan repartitioned the SM split
+    /// but could not launch (the transition gap of §3.4.2).
+    Repartition,
+    /// Fully-idle spans while admission/growth is blocked on KV memory.
+    KvBlocked,
+}
+
+/// Per-run SM-second totals by category.  All fields are in SM·seconds;
+/// `total` is `num_sms × makespan` and `idle` the finalize residual, so
+/// the seven categories always sum to `total` (within one rounding of
+/// the final subtraction — the conservation tests allow relative 1e-9).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SmLedger {
+    pub prefill_compute: f64,
+    pub prefill_attention: f64,
+    pub decode: f64,
+    pub wave_quant: f64,
+    pub repartition: f64,
+    pub kv_blocked: f64,
+    /// Residual idle time; zero until [`SmLedger::finalize`].
+    pub idle: f64,
+    /// `num_sms × makespan`; zero until [`SmLedger::finalize`].
+    pub total: f64,
+}
+
+impl SmLedger {
+    /// Accrue `sm_seconds` of GPU time to a category.
+    pub fn charge(&mut self, cat: GpuTimeCategory, sm_seconds: f64) {
+        match cat {
+            GpuTimeCategory::PrefillCompute => self.prefill_compute += sm_seconds,
+            GpuTimeCategory::PrefillAttention => self.prefill_attention += sm_seconds,
+            GpuTimeCategory::Decode => self.decode += sm_seconds,
+            GpuTimeCategory::WaveQuant => self.wave_quant += sm_seconds,
+            GpuTimeCategory::Repartition => self.repartition += sm_seconds,
+            GpuTimeCategory::KvBlocked => self.kv_blocked += sm_seconds,
+        }
+    }
+
+    /// Sum of the explicitly charged (non-idle) categories.
+    pub fn accrued(&self) -> f64 {
+        self.prefill_compute
+            + self.prefill_attention
+            + self.decode
+            + self.wave_quant
+            + self.repartition
+            + self.kv_blocked
+    }
+
+    /// Sum over all seven categories (idle included).
+    pub fn sum(&self) -> f64 {
+        self.accrued() + self.idle
+    }
+
+    /// Close the books: record `total = num_sms × makespan` and derive
+    /// idle as the residual (clamped at zero against rounding).
+    pub fn finalize(&mut self, total: f64) {
+        self.total = total;
+        self.idle = (total - self.accrued()).max(0.0);
+    }
+
+    /// Fold another (finalized) ledger in — the cluster/gateway
+    /// aggregation over per-replica ledgers.
+    pub fn merge(&mut self, other: &SmLedger) {
+        self.prefill_compute += other.prefill_compute;
+        self.prefill_attention += other.prefill_attention;
+        self.decode += other.decode;
+        self.wave_quant += other.wave_quant;
+        self.repartition += other.repartition;
+        self.kv_blocked += other.kv_blocked;
+        self.idle += other.idle;
+        self.total += other.total;
+    }
+
+    /// `(label, SM·seconds)` rows in display order — the CLI table and
+    /// the JSON export both iterate this, so their keys agree.
+    pub fn entries(&self) -> [(&'static str, f64); 7] {
+        [
+            ("prefill-compute", self.prefill_compute),
+            ("prefill-attention", self.prefill_attention),
+            ("decode", self.decode),
+            ("wave-quant", self.wave_quant),
+            ("repartition", self.repartition),
+            ("kv-blocked", self.kv_blocked),
+            ("idle", self.idle),
+        ]
+    }
+
+    /// Conservation check: categories sum to `total` within a relative
+    /// tolerance (absolute below 1 SM·s).
+    pub fn conserved(&self, rel_tol: f64) -> bool {
+        (self.sum() - self.total).abs() <= rel_tol * self.total.abs().max(1.0)
+    }
+
+    /// Bit pattern of every field, for bitwise parity assertions.
+    pub fn to_bits(&self) -> [u64; 8] {
+        [
+            self.prefill_compute.to_bits(),
+            self.prefill_attention.to_bits(),
+            self.decode.to_bits(),
+            self.wave_quant.to_bits(),
+            self.repartition.to_bits(),
+            self.kv_blocked.to_bits(),
+            self.idle.to_bits(),
+            self.total.to_bits(),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finalize_makes_categories_sum_to_total() {
+        let mut l = SmLedger::default();
+        l.charge(GpuTimeCategory::PrefillCompute, 30.0);
+        l.charge(GpuTimeCategory::PrefillAttention, 10.0);
+        l.charge(GpuTimeCategory::Decode, 40.0);
+        l.charge(GpuTimeCategory::WaveQuant, 5.0);
+        l.charge(GpuTimeCategory::Repartition, 1.0);
+        l.charge(GpuTimeCategory::KvBlocked, 2.0);
+        l.finalize(108.0);
+        assert!((l.idle - 20.0).abs() < 1e-12);
+        assert!(l.conserved(1e-9));
+        assert_eq!(l.entries().iter().map(|(_, v)| v).sum::<f64>(), l.sum());
+    }
+
+    #[test]
+    fn finalize_clamps_negative_residual() {
+        let mut l = SmLedger::default();
+        l.charge(GpuTimeCategory::Decode, 10.0);
+        l.finalize(10.0 - 1e-12);
+        assert_eq!(l.idle, 0.0);
+        assert!(l.conserved(1e-9), "clamped residual stays conserved");
+    }
+
+    #[test]
+    fn merge_adds_every_field() {
+        let mut a = SmLedger::default();
+        a.charge(GpuTimeCategory::Decode, 4.0);
+        a.finalize(10.0);
+        let mut b = SmLedger::default();
+        b.charge(GpuTimeCategory::PrefillCompute, 3.0);
+        b.finalize(5.0);
+        let mut m = a;
+        m.merge(&b);
+        assert_eq!(m.total, 15.0);
+        assert_eq!(m.decode, 4.0);
+        assert_eq!(m.prefill_compute, 3.0);
+        assert!((m.idle - 8.0).abs() < 1e-12);
+        assert!(m.conserved(1e-9));
+    }
+
+    #[test]
+    fn empty_run_is_all_idle() {
+        let mut l = SmLedger::default();
+        l.finalize(0.0);
+        assert_eq!(l.sum(), 0.0);
+        assert!(l.conserved(1e-9));
+    }
+}

@@ -1,0 +1,28 @@
+//! Observability: SM-second attribution and request tracing.
+//!
+//! The paper's whole argument is an accounting claim — prefill wastes
+//! compute to wave quantization, hybrid batches waste bandwidth — so
+//! this module makes every run answer "where did every SM-second go":
+//!
+//! - [`ledger`]: the [`SmLedger`] charges every simulated SM-second to
+//!   one category (prefill compute/attention, decode, wave-quantization
+//!   padding, repartition transition, kv-blocked stall, idle), with the
+//!   tested invariant that the categories sum to `num_sms × makespan`.
+//!   Accrual happens inside the simulator's `advance_by` as a pure
+//!   side-channel of the existing rate table, so it never perturbs the
+//!   physics, the rng stream, or bitwise determinism.
+//! - [`trace`]: [`TraceSpec`]-gated structured engine events (launches,
+//!   repartitions, KV stalls).  Off by default and bit-identical-off;
+//!   on, the recorded stream is deterministic under a fixed seed and
+//!   any `sim_threads` setting.
+//! - [`export`]: a Chrome trace-event JSON exporter (`--trace out.json`)
+//!   producing per-replica process tracks loadable in Perfetto /
+//!   chrome://tracing, built on the in-tree `util/json.rs` so the
+//!   output bytes are deterministic (sorted keys, stable event order).
+
+pub mod export;
+pub mod ledger;
+pub mod trace;
+
+pub use ledger::{GpuTimeCategory, SmLedger};
+pub use trace::{EngineTraceEvent, TraceSpec};

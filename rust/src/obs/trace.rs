@@ -1,0 +1,73 @@
+//! Structured request/engine tracing, gated behind [`TraceSpec`].
+//!
+//! The request lifecycle (queued → prefill → decode → terminal) is
+//! already fully determined by the run's `RequestRecord` /
+//! `OutcomeRecord` / `ScaleEvent` streams, so the exporter derives
+//! those spans at export time for free.  What the engine additionally
+//! records — only when tracing is enabled — are the instants those
+//! streams cannot reconstruct: kernel-group launches per lane, plan
+//! decisions that repartitioned the SM split, and KV-pressure stalls.
+//!
+//! Determinism contract: recording is a pure observer.  With
+//! `TraceSpec::enabled == false` (the default) no event is ever pushed
+//! and every output is bit-identical to a build without this module;
+//! with it on, the event stream is a deterministic function of the
+//! seed, identical across repeated runs and `sim_threads` settings.
+
+/// Trace configuration carried on `ServingConfig`.  Off by default.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TraceSpec {
+    /// Record engine trace events and enable span export.
+    pub enabled: bool,
+}
+
+impl TraceSpec {
+    /// Tracing on.
+    pub fn on() -> TraceSpec {
+        TraceSpec { enabled: true }
+    }
+}
+
+/// Engine-internal instants recorded while tracing is enabled.
+/// Timestamps are virtual-clock seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EngineTraceEvent {
+    /// A kernel group launched on a lane (0 = prefill, 1 = decode).
+    Launch { t: f64, lane: u8, kernels: usize },
+    /// The policy's plan switched the SM partition this turn.
+    Repartition { t: f64, prefill_sms: usize, decode_sms: usize },
+    /// A KV reservation attempt failed under memory pressure.
+    KvBlocked { t: f64 },
+}
+
+impl EngineTraceEvent {
+    /// Event timestamp (virtual seconds).
+    pub fn t(&self) -> f64 {
+        match *self {
+            EngineTraceEvent::Launch { t, .. }
+            | EngineTraceEvent::Repartition { t, .. }
+            | EngineTraceEvent::KvBlocked { t } => t,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_default_off() {
+        assert!(!TraceSpec::default().enabled);
+        assert!(TraceSpec::on().enabled);
+    }
+
+    #[test]
+    fn event_timestamps() {
+        assert_eq!(EngineTraceEvent::Launch { t: 1.5, lane: 0, kernels: 3 }.t(), 1.5);
+        assert_eq!(
+            EngineTraceEvent::Repartition { t: 2.0, prefill_sms: 60, decode_sms: 48 }.t(),
+            2.0
+        );
+        assert_eq!(EngineTraceEvent::KvBlocked { t: 0.25 }.t(), 0.25);
+    }
+}

@@ -13,7 +13,7 @@
 //! overlaps the middle SMs (non-strict isolation, §3.4.2).
 
 use crate::config::GpuSpec;
-use crate::gpu::simulator::Simulator;
+use crate::gpu::simulator::{Simulator, StreamPhase};
 use crate::gpu::stream::{SmMask, StreamId};
 
 /// An SM partition decision: (prefill SMs, decode SMs).
@@ -66,19 +66,24 @@ impl ResourceManager {
         let steps = gpu.num_sms / g;
         let mut prefill_streams = Vec::with_capacity(steps + 1);
         let mut decode_streams = Vec::with_capacity(steps + 1);
+        // Phase-tag every palette stream so the simulator's SM-second
+        // ledger attributes its kernels without inspecting op classes
+        // (decode launches include elementwise ops too).
+        let tag = |sim: &mut Simulator, id: StreamId, phase: StreamPhase| {
+            sim.set_stream_phase(id, phase);
+            id
+        };
         // index 0 = a 0-SM placeholder (never launched on); keep indices aligned.
-        prefill_streams.push(sim.create_stream(SmMask::empty(), "prefill-0sm"));
-        decode_streams.push(sim.create_stream(SmMask::empty(), "decode-0sm"));
+        let id = sim.create_stream(SmMask::empty(), "prefill-0sm");
+        prefill_streams.push(tag(sim, id, StreamPhase::Prefill));
+        let id = sim.create_stream(SmMask::empty(), "decode-0sm");
+        decode_streams.push(tag(sim, id, StreamPhase::Decode));
         for i in 1..=steps {
             let sms = i * g;
-            prefill_streams.push(sim.create_stream(
-                SmMask::first(sms),
-                &format!("prefill-{sms}sm"),
-            ));
-            decode_streams.push(sim.create_stream(
-                SmMask::last(sms, gpu.num_sms),
-                &format!("decode-{sms}sm"),
-            ));
+            let id = sim.create_stream(SmMask::first(sms), &format!("prefill-{sms}sm"));
+            prefill_streams.push(tag(sim, id, StreamPhase::Prefill));
+            let id = sim.create_stream(SmMask::last(sms, gpu.num_sms), &format!("decode-{sms}sm"));
+            decode_streams.push(tag(sim, id, StreamPhase::Decode));
         }
         ResourceManager {
             gpu: gpu.clone(),

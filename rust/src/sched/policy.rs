@@ -12,6 +12,13 @@
 //! - only TTFT violated        → `ReduceDecodeSM`, escalating to a
 //!   temporary decode *pause* when even the minimum decode allocation
 //!   cannot rescue TTFT while TPOT has slack (§3.3.3).
+//!
+//! Observability: the partition moves decided here are what the
+//! SM-second ledger ([`crate::obs::SmLedger`]) prices — each
+//! repartition's transition idle is charged to the `repartition`
+//! category, and with tracing on the engine stamps a
+//! `Repartition` instant per accepted move, so a Perfetto timeline of
+//! the partition trace lines up against the attribution table.
 
 use crate::config::ServingConfig;
 use crate::perf::{PerfModel, PerfPredictor};

@@ -1,0 +1,130 @@
+//! Observability suite: the SM-second attribution ledger and the
+//! Chrome trace exporter.
+//!
+//! The ledger's contract is conservation — every simulated SM-second
+//! lands in exactly one category and the seven categories sum to
+//! `num_sms × makespan` — for EVERY system, because all systems run on
+//! the shared serving core and the ledger accrues inside the simulator
+//! they all share.  The exporter's contract is byte determinism: the
+//! trace file is a pure function of the run output, so repeated runs
+//! and any `sim_threads` setting produce identical bytes.
+
+use bullet::baselines::{run_system_output, System};
+use bullet::cluster::{serve_cluster, ClusterConfig, RouterPolicy};
+use bullet::config::{GpuSpec, ModelSpec, ServingConfig};
+use bullet::gpu::roofline::GroundTruth;
+use bullet::obs::export::chrome_trace;
+use bullet::obs::TraceSpec;
+use bullet::perf::PerfModel;
+use bullet::workload::{generate_n_requests, Dataset};
+
+fn setup() -> (ServingConfig, PerfModel, GroundTruth) {
+    let cfg = ServingConfig::default();
+    let perf = PerfModel::analytical(GpuSpec::a100(), ModelSpec::llama31_8b());
+    let gt = GroundTruth::new(GpuSpec::a100());
+    (cfg, perf, gt)
+}
+
+/// Conservation holds for every cataloged system — baselines included —
+/// on a single engine, exactly (total is bit-equal to `num_sms ×
+/// makespan`) and category-complete (sum within 1e-9 relative).
+#[test]
+fn ledger_conserves_for_every_system() {
+    let (cfg, perf, gt) = setup();
+    let trace = generate_n_requests(&Dataset::sharegpt(), 8.0, 16, 71);
+    for sys in System::evaluation_set()
+        .into_iter()
+        .chain(System::ablation_set())
+        .chain([System::FixedSm(84)])
+    {
+        let out = run_system_output(sys, &cfg, &perf, &gt, &trace, 3);
+        let l = &out.ledger;
+        let expect = cfg.gpu.num_sms as f64 * out.virtual_duration;
+        assert_eq!(
+            l.total.to_bits(),
+            expect.to_bits(),
+            "{}: ledger total {} != num_sms × makespan {}",
+            sys.label(),
+            l.total,
+            expect
+        );
+        assert!(
+            l.conserved(1e-9),
+            "{}: categories leak: sum {} vs total {}",
+            sys.label(),
+            l.sum(),
+            l.total
+        );
+        // a served trace did real work: busy categories are non-empty
+        // and idle is a residual, never the whole budget
+        assert!(l.accrued() > 0.0, "{}: no busy time accrued", sys.label());
+        assert!(l.idle < l.total, "{}: everything idle", sys.label());
+        assert!(l.decode > 0.0, "{}: no decode time", sys.label());
+    }
+}
+
+/// The ledger actually discriminates between systems: temporal mux
+/// serializes phases (no co-scheduling), so its idle share must exceed
+/// Bullet's on the same trace — the Fig. 2 story in ledger form.
+#[test]
+fn ledger_tells_bullet_apart_from_temporal_mux() {
+    let (cfg, perf, gt) = setup();
+    let trace = generate_n_requests(&Dataset::sharegpt(), 10.0, 24, 73);
+    let idle_share = |sys: System| {
+        let out = run_system_output(sys, &cfg, &perf, &gt, &trace, 5);
+        out.ledger.idle / out.ledger.total
+    };
+    let bullet = idle_share(System::Bullet);
+    let mux = idle_share(System::TemporalMux);
+    assert!(
+        mux > bullet,
+        "temporal mux should idle more than Bullet: mux {mux} vs bullet {bullet}"
+    );
+}
+
+/// Satellite 3: the exported Chrome trace JSON is byte-identical across
+/// repeated identical runs and across `sim_threads` 1 vs 4.
+#[test]
+fn exported_trace_is_byte_identical_across_runs_and_threads() {
+    let (base, perf, gt) = setup();
+    let cfg = ServingConfig { trace: TraceSpec::on(), ..base };
+    let trace = generate_n_requests(&Dataset::sharegpt(), 10.0, 20, 77);
+    let export = |threads: usize| {
+        let ccfg = ClusterConfig {
+            replicas: 2,
+            router: RouterPolicy::LeastKv,
+            sim_threads: threads,
+            ..Default::default()
+        };
+        let out = serve_cluster(System::Bullet, &cfg, &perf, &gt, &trace, 9, &ccfg);
+        chrome_trace("determinism", &out.per_replica).to_string()
+    };
+    let a = export(1);
+    let b = export(1);
+    let c = export(4);
+    assert_eq!(a, b, "repeated runs must export identical bytes");
+    assert_eq!(a, c, "sim_threads must not leak into exported bytes");
+    assert!(a.contains("\"launch\""), "trace-on export should contain launch instants");
+}
+
+/// The single-engine export path (what `--trace` does without
+/// `--replicas`): a one-element slice produces a well-formed document
+/// whose embedded ledger matches the run's.
+#[test]
+fn single_engine_export_embeds_the_run_ledger() {
+    let (base, perf, gt) = setup();
+    let cfg = ServingConfig { trace: TraceSpec::on(), ..base };
+    let trace = generate_n_requests(&Dataset::sharegpt(), 8.0, 12, 79);
+    let out = run_system_output(System::Bullet, &cfg, &perf, &gt, &trace, 13);
+    let doc = chrome_trace("single", std::slice::from_ref(&out));
+    let total = doc
+        .path(&["bullet", "ledger", "total"])
+        .and_then(bullet::util::json::Value::as_f64)
+        .expect("aggregate ledger total");
+    assert_eq!(total.to_bits(), out.ledger.total.to_bits());
+    let n = doc
+        .path(&["bullet", "replicas"])
+        .and_then(bullet::util::json::Value::as_arr)
+        .map(|r| r.len());
+    assert_eq!(n, Some(1));
+}

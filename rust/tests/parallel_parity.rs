@@ -55,6 +55,8 @@ fn assert_identical(a: &ClusterOutput, b: &ClusterOutput, label: &str) {
         assert_eq!(x.decode_pauses, y.decode_pauses, "{l}: decode pauses");
         assert_eq!(x.prefix, y.prefix, "{l}: prefix stats");
         assert_eq!(x.calibration, y.calibration, "{l}: calibration");
+        assert_eq!(x.ledger.to_bits(), y.ledger.to_bits(), "{l}: SM-second ledger");
+        assert_eq!(x.trace_events, y.trace_events, "{l}: trace events");
     }
 }
 
@@ -233,6 +235,41 @@ fn memo_off_is_bit_identical_to_memo_on() {
     let on = run_cell(System::Bullet, &base, &trace, 17, &scaled, 4);
     let off = run_cell(System::Bullet, &cfg_off, &trace, 17, &scaled, 4);
     assert_identical(&on, &off, "memo on/off (autoscaled, 4 threads)");
+}
+
+/// PR 10 invariant: tracing is a pure observer.  `TraceSpec::on()` must
+/// reproduce every output bit of the default trace-off run — the only
+/// permitted difference is the `trace_events` stream itself, which must
+/// be non-empty, deterministic, and thread-invariant when enabled.
+#[test]
+fn trace_on_is_bit_identical_to_trace_off() {
+    use bullet::obs::TraceSpec;
+    let off_cfg = ServingConfig {
+        calibration: CalibrationConfig::on(),
+        ..ServingConfig::default()
+    };
+    let on_cfg = ServingConfig { trace: TraceSpec::on(), ..off_cfg.clone() };
+    let trace = generate_n_requests(&Dataset::sharegpt(), 12.0, 24, 61);
+    let ccfg = ClusterConfig { replicas: 3, router: RouterPolicy::SloSlack, ..Default::default() };
+
+    let off = run_cell(System::Bullet, &off_cfg, &trace, 19, &ccfg, 1);
+    let on = run_cell(System::Bullet, &on_cfg, &trace, 19, &ccfg, 1);
+    // strip the one permitted difference, then demand bit equality
+    let mut on_stripped = on.clone();
+    for r in &mut on_stripped.per_replica {
+        r.trace_events.clear();
+    }
+    assert_identical(&off, &on_stripped, "trace on/off");
+    let events: usize = on.per_replica.iter().map(|r| r.trace_events.len()).sum();
+    assert!(events > 0, "trace-on run recorded no events");
+    assert!(
+        off.per_replica.iter().all(|r| r.trace_events.is_empty()),
+        "trace-off run recorded events"
+    );
+
+    // the enabled event stream itself is thread-invariant
+    let on4 = run_cell(System::Bullet, &on_cfg, &trace, 19, &ccfg, 4);
+    assert_identical(&on, &on4, "trace on @ 1 vs 4 threads");
 }
 
 /// Oversubscription and odd shard shapes: more threads than replicas,

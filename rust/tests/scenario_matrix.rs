@@ -7,9 +7,11 @@
 //! every summary metric is finite, two identical runs are bitwise
 //! identical (records AND routing decisions), the parallel simulation
 //! backend (`sim_threads = 4`) reproduces the serial backend
-//! (`sim_threads = 1`) bit-for-bit, and the memoization-off reference
+//! (`sim_threads = 1`) bit-for-bit, the memoization-off reference
 //! paths (`ServingConfig::memo = false`) reproduce the memoized run
-//! bit-for-bit.
+//! bit-for-bit, tracing on (`TraceSpec::on()`) reproduces the trace-off
+//! run bit-for-bit, and every replica's SM-second ledger conserves GPU
+//! time exactly (categories sum to `num_sms × makespan`).
 //!
 //! The matrix is `#[ignore]`d in the default test run and executed by
 //! CI's dedicated `scenario-matrix` job (`cargo test --release --test
@@ -62,6 +64,12 @@ fn run_matrix(engines: &[System]) {
                 // caches must be invisible in every output bit
                 let cfg_off = ServingConfig { memo: false, ..cfg.clone() };
                 let d = serve_cluster(sys, &cfg_off, &perf, &gt, &trace, seed, &ccfg);
+                // leg e: tracing on — recording must be a pure observer
+                let cfg_trace = ServingConfig {
+                    trace: bullet::obs::TraceSpec::on(),
+                    ..cfg.clone()
+                };
+                let e = serve_cluster(sys, &cfg_trace, &perf, &gt, &trace, seed, &ccfg);
 
                 // non-empty completions, nothing lost
                 assert_eq!(a.records.len(), trace.len(), "{label}: lost records");
@@ -89,6 +97,34 @@ fn run_matrix(engines: &[System]) {
                     d.virtual_duration.to_bits(),
                     "{label}: memo-off makespan diverges"
                 );
+                // trace-on bitwise parity
+                assert_eq!(a.records, e.records, "{label}: trace-on records diverge");
+                assert_eq!(a.assignments, e.assignments, "{label}: trace-on routing diverges");
+                assert_eq!(
+                    a.virtual_duration.to_bits(),
+                    e.virtual_duration.to_bits(),
+                    "{label}: trace-on makespan diverges"
+                );
+
+                // SM-second ledger conservation: every replica's
+                // categories sum exactly to num_sms × makespan
+                for (i, o) in a.per_replica.iter().enumerate() {
+                    let l = &o.ledger;
+                    let expect = cfg.gpu.num_sms as f64 * o.virtual_duration;
+                    assert_eq!(
+                        l.total.to_bits(),
+                        expect.to_bits(),
+                        "{label}: replica {i} ledger total {} != {}",
+                        l.total,
+                        expect
+                    );
+                    assert!(
+                        l.conserved(1e-9),
+                        "{label}: replica {i} ledger leaks: sum {} vs total {}",
+                        l.sum(),
+                        l.total
+                    );
+                }
 
                 // finite metrics
                 let s = summarize(&a.records, &cfg.slo, Some(a.virtual_duration));

@@ -1,0 +1,115 @@
+#!/usr/bin/env python3
+"""Validate and summarize a Bullet Chrome trace-event export.
+
+Usage: trace_summary.py TRACE.json
+
+Hard checks (exit 1 on any failure — CI's observability smoke gate):
+
+1. **Document shape.** The file is valid JSON with a ``traceEvents``
+   list (every event carries ``ph``/``pid``/``tid``, and a numeric
+   ``ts`` unless it is an ``M`` metadata record) and a ``bullet``
+   summary block with per-replica ``makespan`` + ``ledger`` entries and
+   an aggregate ``ledger``.
+
+2. **Ledger conservation.** For the aggregate and every replica, the
+   seven attribution categories must sum to ``total`` (relative 1e-9,
+   absolute floor 1.0 SM-second) — i.e. every simulated SM-second the
+   run charged is present in the trace file, none double-counted, none
+   leaked.  ``total`` itself must be positive for a run that served
+   anything.
+
+On success, prints the aggregate SM-second breakdown (category,
+SM-seconds, share) so CI logs double as a utilization report.
+"""
+
+import json
+import sys
+
+CATEGORIES = [
+    "prefill-compute",
+    "prefill-attention",
+    "decode",
+    "wave-quant",
+    "repartition",
+    "kv-blocked",
+    "idle",
+]
+
+
+def fail(msg):
+    print(f"trace_summary: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_ledger(ledger, who):
+    if not isinstance(ledger, dict):
+        fail(f"{who}: ledger is not an object")
+    for k in CATEGORIES + ["total"]:
+        if k not in ledger:
+            fail(f"{who}: ledger missing '{k}'")
+        if not isinstance(ledger[k], (int, float)):
+            fail(f"{who}: ledger['{k}'] is not a number")
+        if ledger[k] != ledger[k]:  # NaN
+            fail(f"{who}: ledger['{k}'] is NaN")
+        if ledger[k] < 0:
+            fail(f"{who}: ledger['{k}'] is negative ({ledger[k]})")
+    total = ledger["total"]
+    s = sum(ledger[k] for k in CATEGORIES)
+    if abs(s - total) > 1e-9 * max(abs(total), 1.0):
+        fail(f"{who}: categories sum to {s!r}, total says {total!r}")
+    return total
+
+
+def main():
+    if len(sys.argv) != 2:
+        print(__doc__.strip().splitlines()[2], file=sys.stderr)
+        sys.exit(2)
+    path = sys.argv[1]
+    try:
+        with open(path) as fh:
+            doc = json.load(fh)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"cannot read '{path}': {e}")
+
+    if not isinstance(doc, dict):
+        fail("top level is not an object")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        fail("missing 'traceEvents' list")
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            fail(f"traceEvents[{i}] is not an object")
+        for k in ("ph", "pid", "tid"):
+            if k not in ev:
+                fail(f"traceEvents[{i}] missing '{k}'")
+        if ev["ph"] != "M" and not isinstance(ev.get("ts"), (int, float)):
+            fail(f"traceEvents[{i}] ({ev['ph']!r}) missing numeric 'ts'")
+
+    bullet = doc.get("bullet")
+    if not isinstance(bullet, dict):
+        fail("missing 'bullet' summary block")
+    replicas = bullet.get("replicas")
+    if not isinstance(replicas, list) or not replicas:
+        fail("bullet.replicas missing or empty")
+    for r in replicas:
+        rid = r.get("id")
+        if not isinstance(r.get("makespan"), (int, float)):
+            fail(f"replica {rid}: missing numeric 'makespan'")
+        check_ledger(r.get("ledger"), f"replica {rid}")
+    agg = bullet.get("ledger")
+    total = check_ledger(agg, "aggregate")
+    if total <= 0:
+        fail(f"aggregate ledger total is {total} — run served nothing?")
+
+    title = bullet.get("title", "?")
+    print(f"trace_summary: OK — {len(events)} events, {len(replicas)} replica(s)")
+    print(f"GPU time attribution — {title}")
+    width = max(len(c) for c in CATEGORIES + ["total"])
+    for c in CATEGORIES:
+        share = agg[c] / total * 100.0
+        print(f"  {c:<{width}}  {agg[c]:>14.1f} SM·s  {share:>5.1f}%")
+    print(f"  {'total':<{width}}  {total:>14.1f} SM·s  100.0%")
+
+
+if __name__ == "__main__":
+    main()
